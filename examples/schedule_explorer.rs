@@ -1,0 +1,36 @@
+//! Schedule explorer: render every scheduler's timeline for the paper's
+//! illustration setting (4 stages, 12 microbatches — Fig. 5 / Fig. 12) as
+//! ASCII art, plus Chrome traces under /tmp for Perfetto.
+//!
+//! ```text
+//! cargo run --release --example schedule_explorer [pp] [n_mb]
+//! ```
+
+use stp::cluster::{HardwareProfile, Topology};
+use stp::model::ModelConfig;
+use stp::schedule::{assert_valid, build_schedule, ScheduleKind};
+use stp::sim::{CostModel, Simulator};
+use stp::trace::{ascii_timeline, chrome_trace};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let pp: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let n_mb: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+
+    let topo = Topology::new(1, pp, 1);
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+
+    println!("pipeline schedules, p={pp}, m={n_mb} (paper Fig. 5 / Fig. 12 setting)\n");
+    for kind in ScheduleKind::all() {
+        let s = build_schedule(kind, &topo, n_mb);
+        assert_valid(&s);
+        let r = Simulator::new(&cost).run(&s);
+        println!("{}", ascii_timeline(&r, 150));
+        let path = format!("/tmp/stp-trace-{}.json", kind.name());
+        if std::fs::write(&path, chrome_trace(&r)).is_ok() {
+            println!("  chrome trace: {path}\n");
+        }
+    }
+}

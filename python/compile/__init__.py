@@ -1,0 +1,5 @@
+"""Build-time Python (L1 Pallas kernels + L2 JAX model + AOT lowering).
+
+Never imported at runtime: ``make artifacts`` runs once, emitting HLO
+text under ``artifacts/`` that the rust coordinator loads via PJRT.
+"""

@@ -1,0 +1,183 @@
+"""AOT lowering: JAX/Pallas units → HLO *text* artifacts + manifest.
+
+Interchange is HLO text, NOT serialized ``HloModuleProto``: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the rust crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --preset e2e --out ../artifacts
+    python -m compile.aot --preset test --out ../artifacts --golden
+
+Emits ``<out>/<preset>/<name>.hlo.txt`` per unit, a ``manifest.json``
+describing argument/output shapes and which outputs the rust coordinator
+must All-Reduce, and (with ``--golden``) known-answer vectors for the
+rust runtime integration tests. Python runs ONCE at build time; the rust
+binary is self-contained afterwards.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .config import PRESETS, Dims
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def unit_signatures(dims: Dims):
+    """Name → (callable, example arg specs, #outputs, AR'd output indices).
+
+    Shapes are per-TP-rank (the rust executor owns one HLO executable per
+    unit kind; layer weights are passed as arguments so one executable
+    serves every layer).
+    """
+    d = dims.d
+    mbs = (dims.mb, dims.seq, d)
+    dh = dims.head_dim
+    qr = dims.q_heads_per_rank * dh
+    kr = dims.kv_heads_per_rank * dh
+    fr = dims.ffn_per_rank
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    x = spec(mbs)
+    dy = spec(mbs)
+    g = spec((d,))
+    wq, wk, wv, wo = spec((d, qr)), spec((d, kr)), spec((d, kr)), spec((qr, d))
+    wg, wu, wd = spec((d, fr)), spec((d, fr)), spec((fr, d))
+    tok = spec((dims.mb, dims.seq), i32)
+    emb = spec((dims.vocab, d))
+    wh = spec((d, dims.vocab))
+
+    def with_dims(fn):
+        return functools.partial(fn, dims=dims)
+
+    return {
+        "attn_fwd": (with_dims(model.attn_fwd), [x, g, wq, wk, wv, wo], 1, [0]),
+        "attn_bwd_x": (with_dims(model.attn_bwd_x), [x, dy, g, wq, wk, wv, wo], 1, [0]),
+        "attn_bwd_w": (with_dims(model.attn_bwd_w), [x, dy, g, wq, wk, wv, wo], 5, [0]),
+        "mlp_fwd": (with_dims(model.mlp_fwd), [x, g, wg, wu, wd], 1, [0]),
+        "mlp_bwd_x": (with_dims(model.mlp_bwd_x), [x, dy, g, wg, wu, wd], 1, [0]),
+        "mlp_bwd_w": (with_dims(model.mlp_bwd_w), [x, dy, g, wg, wu, wd], 4, [0]),
+        "embed_fwd": (model.embed_fwd, [tok, emb], 1, []),
+        "embed_bwd": (
+            functools.partial(model.embed_bwd, vocab=dims.vocab),
+            [tok, dy],
+            1,
+            [],
+        ),
+        "head_loss_grad": (model.head_loss_grad, [x, wh, tok], 3, []),
+        "smoke": (model.smoke, [spec((2, 2), f32), spec((2, 2), f32)], 1, []),
+    }
+
+
+def describe(s: jax.ShapeDtypeStruct):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_all(preset: str, out_dir: str, golden: bool) -> None:
+    dims = PRESETS[preset]
+    sigs = unit_signatures(dims)
+    pdir = os.path.join(out_dir, preset)
+    os.makedirs(pdir, exist_ok=True)
+
+    manifest = {
+        "preset": preset,
+        "dims": dims.__dict__,
+        "params_count": dims.params_count(),
+        "artifacts": {},
+    }
+    for name, (fn, args, n_out, ar_outs) in sigs.items():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(pdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [describe(a) for a in args],
+            "n_outputs": n_out,
+            "ar_outputs": ar_outs,
+        }
+        print(f"lowered {preset}/{name}: {len(text)} chars")
+
+    if golden:
+        write_golden(dims, pdir)
+
+    with open(os.path.join(pdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {pdir}/manifest.json")
+
+
+def write_golden(dims: Dims, pdir: str) -> None:
+    """Known-answer vectors for the rust runtime integration test: run the
+    per-rank units here, record inputs/outputs flat, and let rust execute
+    the same HLO and compare."""
+    from .kernels import ref
+
+    key = jax.random.PRNGKey(0)
+    kx, kp = jax.random.split(key)
+    x = jax.random.normal(kx, (dims.mb, dims.seq, dims.d), jnp.float32) * 0.5
+    params = ref.init_layer(kp, dims)
+    shard = ref.shard_layer(params, dims)[0]
+
+    attn_out = model.attn_fwd(
+        x, shard["gamma1"], shard["wq"], shard["wk"], shard["wv"], shard["wo"], dims=dims
+    )
+    mlp_out = model.mlp_fwd(
+        x, shard["gamma2"], shard["wg"], shard["wu"], shard["wd"], dims=dims
+    )
+
+    def flat(a):
+        return np.asarray(a, dtype=np.float32).reshape(-1).tolist()
+
+    golden = {
+        "x": flat(x),
+        "gamma1": flat(shard["gamma1"]),
+        "wq": flat(shard["wq"]),
+        "wk": flat(shard["wk"]),
+        "wv": flat(shard["wv"]),
+        "wo": flat(shard["wo"]),
+        "gamma2": flat(shard["gamma2"]),
+        "wg": flat(shard["wg"]),
+        "wu": flat(shard["wu"]),
+        "wd": flat(shard["wd"]),
+        "attn_fwd_out": flat(attn_out),
+        "mlp_fwd_out": flat(mlp_out),
+    }
+    with open(os.path.join(pdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"wrote {pdir}/golden.json")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--preset", default="e2e", choices=sorted(PRESETS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--golden", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.preset, args.out, args.golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Model/topology configuration shared by the L1 kernels, the L2 model and
+the AOT lowering pipeline.
+
+The ``e2e`` preset is the ~100M-parameter Qwen2-style decoder trained by
+``examples/train_e2e.rs``; ``test`` is a miniature of the same architecture
+used by the pytest suites so kernel sweeps stay fast.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Dims:
+    """Architecture + partitioning dimensions.
+
+    Attributes mirror the rust `ModelConfig` (rust/src/model/mod.rs); the
+    AOT manifest carries these so the two sides cannot drift.
+    """
+
+    vocab: int
+    d: int          # hidden size
+    q_heads: int
+    kv_heads: int
+    ffn: int        # SwiGLU intermediate
+    layers: int
+    seq: int        # tokens per microbatch row
+    mb: int         # microbatch size (rows)
+    tp: int         # tensor-parallel size
+    pp: int = 2     # pipeline stages (metadata for the manifest)
+    vpp: int = 2    # virtual stages per device
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.q_heads == 0
+        return self.d // self.q_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.kv_heads * self.head_dim
+
+    @property
+    def q_heads_per_rank(self) -> int:
+        assert self.q_heads % self.tp == 0
+        return self.q_heads // self.tp
+
+    @property
+    def kv_heads_per_rank(self) -> int:
+        assert self.kv_heads % self.tp == 0
+        return self.kv_heads // self.tp
+
+    @property
+    def ffn_per_rank(self) -> int:
+        assert self.ffn % self.tp == 0
+        return self.ffn // self.tp
+
+    @property
+    def n_chunks(self) -> int:
+        return self.pp * self.vpp
+
+    @property
+    def layers_per_chunk(self) -> int:
+        assert self.layers % self.n_chunks == 0
+        return self.layers // self.n_chunks
+
+    def params_count(self) -> int:
+        """Total parameter count (embed + layers + head)."""
+        attn = self.d * self.d + 2 * self.d * self.kv_dim + self.d * self.d
+        mlp = 3 * self.d * self.ffn
+        norms = 2 * self.d
+        per_layer = attn + mlp + norms
+        return self.layers * per_layer + 2 * self.vocab * self.d
+
+
+# ~100M-parameter end-to-end training config (examples/train_e2e.rs).
+E2E = Dims(
+    vocab=8192,
+    d=512,
+    q_heads=8,
+    kv_heads=4,
+    ffn=2048,
+    layers=20,
+    seq=64,
+    mb=1,
+    tp=2,
+    pp=2,
+    vpp=2,
+)
+
+# Miniature config for pytest (same architecture family).
+TEST = Dims(
+    vocab=256,
+    d=64,
+    q_heads=4,
+    kv_heads=2,
+    ffn=96,
+    layers=4,
+    seq=16,
+    mb=2,
+    tp=2,
+    pp=2,
+    vpp=2,
+)
+
+PRESETS = {"e2e": E2E, "test": TEST}

@@ -1,0 +1,20 @@
+"""L1 — Pallas kernels for the paper's fine-grained computation units.
+
+Every kernel has a pure-jnp oracle in :mod:`.ref`; pytest sweeps shapes
+with hypothesis and asserts allclose. All kernels run ``interpret=True``
+(CPU PJRT cannot execute Mosaic custom-calls); see DESIGN.md section 2 for
+the GPU-to-TPU hardware adaptation and section Perf for the structural
+VMEM/MXU estimates.
+"""
+
+from . import ref
+from .attention import attention_core, attn_unit
+from .layernorm import rmsnorm
+from .matmul import matmul, matmul_3d
+from .mlp import mlp_unit, swiglu
+from .softmax_xent import head_loss, xent_nll
+
+__all__ = [
+    "ref", "attention_core", "attn_unit", "rmsnorm", "matmul", "matmul_3d",
+    "mlp_unit", "swiglu", "head_loss", "xent_nll",
+]

@@ -1,0 +1,91 @@
+"""L1 Pallas kernel: the Attn computation unit (paper §3, Eq. 1).
+
+The unit is the per-TP-rank slice of causal multi-head attention with the
+residual fused in *before* the All-Reduce boundary:
+
+    partial_r = Attention_r(x_ln) + x / t
+
+Hardware adaptation: instead of the paper's CUDA warp-level kernels, the
+softmax(QKᵀ)V core is a Pallas program gridded over (batch, head); each
+grid step holds one head's Q/K/V panels for the whole (short) sequence in
+VMEM and runs two MXU matmuls with a numerically-stable softmax between.
+The surrounding projections use the tiled MXU matmul building block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Dims
+from .layernorm import rmsnorm
+from .matmul import matmul_3d
+
+
+def _attn_core_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    """One (batch, head): softmax(QKᵀ·scale + causal)V.
+
+    q/k/v refs: [1, 1, S, dh] panels in VMEM; o ref: [1, 1, S, dh].
+    """
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Causal mask via 2D iota (TPU-friendly: no 1D iota).
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    scores = jnp.where(rows >= cols, scores, jnp.finfo(jnp.float32).min)
+    # Numerically-stable softmax.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(probs.astype(v.dtype), v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("q_heads", "kv_heads"))
+def attention_core(x_ln, wq, wk, wv, wo, q_heads: int, kv_heads: int):
+    """Causal GQA attention over the weights' head slice (see ref.py)."""
+    mb, s, d = x_ln.shape
+    dh = wq.shape[1] // q_heads
+    scale = 1.0 / (dh ** 0.5)
+    group = q_heads // kv_heads
+
+    q = matmul_3d(x_ln, wq).reshape(mb, s, q_heads, dh).transpose(0, 2, 1, 3)
+    k = matmul_3d(x_ln, wk).reshape(mb, s, kv_heads, dh).transpose(0, 2, 1, 3)
+    v = matmul_3d(x_ln, wv).reshape(mb, s, kv_heads, dh).transpose(0, 2, 1, 3)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+
+    ctx = pl.pallas_call(
+        functools.partial(_attn_core_kernel, scale=scale),
+        grid=(mb, q_heads),
+        in_specs=[
+            pl.BlockSpec((1, 1, s, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, s, dh), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, s, dh), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mb, q_heads, s, dh), x_ln.dtype),
+        interpret=True,
+    )(q, k, v)
+
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(mb, s, q_heads * dh)
+    return matmul_3d(ctx, wo)
+
+
+def attn_unit(x, gamma1, wq_r, wk_r, wv_r, wo_r, dims: Dims):
+    """The full per-rank Attn unit: RMSNorm -> attention -> +x/t.
+
+    This is what `aot.py` lowers to `attn_fwd.hlo.txt`; the rust
+    coordinator All-Reduces the outputs across the TP group.
+    """
+    x_ln = rmsnorm(x, gamma1)
+    attn = attention_core(
+        x_ln, wq_r, wk_r, wv_r, wo_r,
+        dims.q_heads_per_rank, dims.kv_heads_per_rank,
+    )
+    return attn + jax.lax.stop_gradient(x) / dims.tp

@@ -1,0 +1,42 @@
+"""L1 Pallas kernel: RMSNorm — the Pre-Attn / Pre-MLP computation units.
+
+The paper's fine-grained decomposition (§3) splits these out of the Attn
+and MLP units because they carry no TP communication: they are inserted
+into the compute stream purely by data dependency. Bandwidth-bound, so
+the BlockSpec tiles rows (tokens) and keeps the full hidden dim resident.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * g_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps"))
+def rmsnorm(x, gamma, block_rows: int = 128, eps: float = 1e-6):
+    """RMSNorm over the last axis. x: [mb, S, D], gamma: [D]."""
+    mb, s, d = x.shape
+    rows = mb * s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    while rows % br != 0:
+        br -= 1
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x2, gamma)
+    return out.reshape(mb, s, d)

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: the MLP computation unit (paper §3).
+
+Per-TP-rank SwiGLU with the residual fused before the All-Reduce:
+
+    partial_r = (silu(x_ln @ Wg_r) * (x_ln @ Wu_r)) @ Wd_r + x / t
+
+The fused kernel grids over token-row blocks; each grid step holds the
+rank's three weight panels in VMEM (column-parallel gate/up, row-parallel
+down) and performs three MXU matmuls plus the SwiGLU elementwise in one
+pass — the TPU rendition of the paper's fused MLP unit boundary.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import Dims
+from .layernorm import rmsnorm
+
+
+def _swiglu_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)
+    h = (g * jax.nn.sigmoid(g)) * u
+    o_ref[...] = jnp.dot(h.astype(x.dtype), wd_ref[...], preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def swiglu(x_ln, wg_r, wu_r, wd_r, block_rows: int = 128):
+    """Fused SwiGLU over row blocks. x_ln: [mb,S,D]; returns [mb,S,D]."""
+    mb, s, d = x_ln.shape
+    f = wg_r.shape[1]
+    rows = mb * s
+    br = min(block_rows, rows)
+    while rows % br != 0:
+        br -= 1
+    out = pl.pallas_call(
+        _swiglu_kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x_ln.dtype),
+        interpret=True,
+    )(x_ln.reshape(rows, d), wg_r, wu_r, wd_r)
+    return out.reshape(mb, s, d)
+
+
+def mlp_unit(x, gamma2, wg_r, wu_r, wd_r, dims: Dims):
+    """The full per-rank MLP unit: RMSNorm -> SwiGLU -> +x/t.
+
+    Lowered by `aot.py` to `mlp_fwd.hlo.txt`; outputs are All-Reduced by
+    the rust coordinator.
+    """
+    x_ln = rmsnorm(x, gamma2)
+    h = swiglu(x_ln, wg_r, wu_r, wd_r)
+    return h + jax.lax.stop_gradient(x) / dims.tp
+
+
+def vmem_bytes(block_rows: int, d: int, f: int, dtype_bytes: int = 4) -> int:
+    """Structural VMEM footprint of one grid step (x, 3 weights, h, out)."""
+    return (block_rows * d * 2 + 2 * d * f + f * d + block_rows * f) * dtype_bytes

@@ -1,0 +1,178 @@
+"""Pure-jnp reference oracles for every L1 kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+allclose against its oracle, and the TP-decomposition invariants
+(sum-over-ranks == dense layer, paper Eq. 1-2) are stated here once and
+checked for every shape the hypothesis sweeps generate.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from ..config import Dims
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / norm
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, gamma, eps: float = 1e-6):
+    """RMSNorm (Qwen2 uses RMSNorm, not LayerNorm)."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gamma
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Attention unit (paper Eq. 1): per-TP-rank partial with fused residual.
+# ---------------------------------------------------------------------------
+
+def attention_core(x_ln, wq, wk, wv, wo, q_heads, kv_heads, causal=True):
+    """Multi-head attention over whatever head slice the weights carry.
+
+    x_ln: [mb, S, D]; wq: [D, hq*dh]; wk/wv: [D, hkv*dh]; wo: [hq*dh, D].
+    GQA: each kv head serves q_heads//kv_heads query heads.
+    """
+    mb, s, _d = x_ln.shape
+    dh = wq.shape[1] // q_heads
+    q = x_ln @ wq  # [mb, S, hq*dh]
+    k = x_ln @ wk
+    v = x_ln @ wv
+    q = q.reshape(mb, s, q_heads, dh).transpose(0, 2, 1, 3)  # [mb,hq,S,dh]
+    k = k.reshape(mb, s, kv_heads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(mb, s, kv_heads, dh).transpose(0, 2, 1, 3)
+    group = q_heads // kv_heads
+    k = jnp.repeat(k, group, axis=1)  # [mb,hq,S,dh]
+    v = jnp.repeat(v, group, axis=1)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(dh))
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = probs @ v  # [mb,hq,S,dh]
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(mb, s, q_heads * dh)
+    return ctx @ wo
+
+
+def attn_unit_partial(x, gamma1, wq_r, wk_r, wv_r, wo_r, dims: Dims):
+    """Per-rank Attn unit forward (paper Eq. 1, pre-All-Reduce):
+
+        partial_r = Attention_r(RMSNorm(x)) + detach(x)/t
+
+    Summing ``partial_r`` over the ``t`` ranks (the All-Reduce the rust
+    coordinator performs) yields ``Attention(LN(x)) + x`` — the residual
+    attention block with the residual fused before the AR, so the unit
+    ends exactly at an AR boundary (what the braided blocks need).
+    """
+    x_ln = rmsnorm(x, gamma1)
+    attn = attention_core(
+        x_ln, wq_r, wk_r, wv_r, wo_r,
+        dims.q_heads_per_rank, dims.kv_heads_per_rank,
+    )
+    return attn + jax.lax.stop_gradient(x) / dims.tp
+
+
+def mlp_unit_partial(x, gamma2, wg_r, wu_r, wd_r, dims: Dims):
+    """Per-rank MLP (SwiGLU) unit forward with fused residual:
+
+        partial_r = (silu(x_ln @ Wg_r) * (x_ln @ Wu_r)) @ Wd_r + detach(x)/t
+    """
+    x_ln = rmsnorm(x, gamma2)
+    h = silu(x_ln @ wg_r) * (x_ln @ wu_r)
+    return h @ wd_r + jax.lax.stop_gradient(x) / dims.tp
+
+
+# ---------------------------------------------------------------------------
+# Dense (non-TP) layer for the sum-over-ranks invariant.
+# ---------------------------------------------------------------------------
+
+def dense_layer(x, params, dims: Dims):
+    """Unpartitioned transformer layer: what the TP ranks must sum to."""
+    x_ln = rmsnorm(x, params["gamma1"])
+    attn = attention_core(
+        x_ln, params["wq"], params["wk"], params["wv"], params["wo"],
+        dims.q_heads, dims.kv_heads,
+    )
+    y = attn + x
+    y_ln = rmsnorm(y, params["gamma2"])
+    h = silu(y_ln @ params["wg"]) * (y_ln @ params["wu"])
+    return h @ params["wd"] + y
+
+
+def shard_layer(params, dims: Dims):
+    """Megatron-slice full-layer params into per-rank params.
+
+    Q/K/V and gate/up are column-parallel (output split), O and down-proj
+    are row-parallel (input split); norms are replicated.
+    """
+    t = dims.tp
+    dh = dims.head_dim
+    out = []
+    for r in range(t):
+        qs = slice(r * dims.q_heads_per_rank * dh, (r + 1) * dims.q_heads_per_rank * dh)
+        ks = slice(r * dims.kv_heads_per_rank * dh, (r + 1) * dims.kv_heads_per_rank * dh)
+        fs = slice(r * dims.ffn_per_rank, (r + 1) * dims.ffn_per_rank)
+        out.append({
+            "gamma1": params["gamma1"],
+            "wq": params["wq"][:, qs],
+            "wk": params["wk"][:, ks],
+            "wv": params["wv"][:, ks],
+            "wo": params["wo"][qs, :],
+            "gamma2": params["gamma2"],
+            "wg": params["wg"][:, fs],
+            "wu": params["wu"][:, fs],
+            "wd": params["wd"][fs, :],
+        })
+    return out
+
+
+def init_layer(key, dims: Dims, dtype=jnp.float32):
+    """Random full-layer params (1/sqrt(fan_in) scaled)."""
+    ks = jax.random.split(key, 7)
+    d, kv, f = dims.d, dims.kv_dim, dims.ffn
+
+    def scaled(k, shape):
+        return jax.random.normal(k, shape, dtype) / jnp.sqrt(jnp.float32(shape[0]))
+
+    return {
+        "gamma1": jnp.ones((d,), dtype),
+        "wq": scaled(ks[0], (d, d)),
+        "wk": scaled(ks[1], (d, kv)),
+        "wv": scaled(ks[2], (d, kv)),
+        "wo": scaled(ks[3], (d, d)),
+        "gamma2": jnp.ones((d,), dtype),
+        "wg": scaled(ks[4], (d, f)),
+        "wu": scaled(ks[5], (d, f)),
+        "wd": scaled(ks[6], (f, d)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Endpoints
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits, targets):
+    """Mean token cross-entropy. logits [N, V], targets int32 [N]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def head_loss(x, w_head, targets):
+    """LM head + loss: x [mb,S,D] @ w_head [D,V] vs targets [mb,S]."""
+    mb, s, d = x.shape
+    logits = x.reshape(mb * s, d) @ w_head
+    return xent_loss(logits, targets.reshape(mb * s))
+
+
+def embed(tokens, emb):
+    """Token embedding lookup: tokens [mb,S] int32, emb [V,D]."""
+    return emb[tokens]
+
+
+def tiled_matmul(a, b):
+    """Oracle for the Pallas tiled matmul building block."""
+    return a @ b

@@ -1,0 +1,56 @@
+"""L1 Pallas kernel: LM-head cross-entropy loss (the last chunk's unit).
+
+Grids over token-row blocks; each step computes the block's logits panel
+(`x @ W_head`), a numerically-stable log-softmax, and gathers the target
+log-probs via a one-hot dot (gather is awkward on the VPU; one-hot matmul
+rides the MXU instead). The mean reduction happens outside the kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xent_kernel(x_ref, wh_ref, t_ref, nll_ref):
+    x = x_ref[...]                       # [br, D]
+    logits = jnp.dot(x, wh_ref[...], preferred_element_type=jnp.float32)  # [br, V]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1, keepdims=True)) + m
+    logp = logits - lse
+    v = logits.shape[-1]
+    tgt = t_ref[...]                     # [br] int32
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (tgt.shape[0], v), 1) == tgt[:, None]
+    ).astype(jnp.float32)
+    nll_ref[...] = -jnp.sum(logp * onehot, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def xent_nll(x, w_head, targets, block_rows: int = 64):
+    """Per-token negative log-likelihood. x: [N, D], targets: [N] int32."""
+    n, d = x.shape
+    v = w_head.shape[1]
+    br = min(block_rows, n)
+    while n % br != 0:
+        br -= 1
+    return pl.pallas_call(
+        _xent_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((br,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x, w_head, targets)
+
+
+def head_loss(x, w_head, targets):
+    """Mean cross-entropy for x [mb,S,D] against targets [mb,S]."""
+    mb, s, d = x.shape
+    nll = xent_nll(x.reshape(mb * s, d), w_head, targets.reshape(mb * s))
+    return jnp.mean(nll)

@@ -1,0 +1,145 @@
+"""L2 — the JAX model: per-TP-rank computation units with Zero-Bubble-style
+decomposed backwards.
+
+The paper's schedule operates on four unit kinds per layer (Pre-Attn,
+Attn, Pre-MLP, MLP) with backwards split into activation-gradient (`B`)
+and weight-gradient (`W`) parts. This module defines exactly those
+functions with **explicit parameters** (no closures over weights) so each
+lowers to a standalone HLO artifact the rust executor can call per
+(chunk, microbatch, unit):
+
+* forward units call the L1 Pallas kernels;
+* backward units are `jax.vjp` of the pure-jnp oracles (identical math;
+  Pallas interpret-mode primitives are not differentiable), recomputing
+  the unit forward internally — unit-level rematerialization keeps the
+  cross-HLO interface to plain `(saved input, upstream grad)` tensors.
+
+TP calculus (paper Eq. 1-2): every `*_fwd` / `*_bwd_x` output is a
+per-rank **partial** that the rust coordinator All-Reduces; `*_bwd_w`
+outputs are rank-local except the replicated RMSNorm gammas, which the
+coordinator also All-Reduces (see `manifest["ar_outputs"]`).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import Dims
+from .kernels import attn_unit, head_loss, mlp_unit, ref
+
+
+# ---------------------------------------------------------------------------
+# Forward units (Pallas, per rank)
+# ---------------------------------------------------------------------------
+
+def attn_fwd(x, gamma1, wq, wk, wv, wo, *, dims: Dims):
+    """Attn unit forward partial (lowers `attn_fwd.hlo.txt`)."""
+    return attn_unit(x, gamma1, wq, wk, wv, wo, dims)
+
+
+def mlp_fwd(x, gamma2, wg, wu, wd, *, dims: Dims):
+    """MLP unit forward partial (lowers `mlp_fwd.hlo.txt`)."""
+    return mlp_unit(x, gamma2, wg, wu, wd, dims)
+
+
+# ---------------------------------------------------------------------------
+# Backward units (vjp of the oracles, per rank)
+# ---------------------------------------------------------------------------
+
+def attn_bwd_x(x, dy, gamma1, wq, wk, wv, wo, *, dims: Dims):
+    """Attn unit activation-gradient partial (`B`, paper Eq. 2).
+
+    `dy` is the *reduced* gradient of the unit's post-AR output. The
+    returned partial satisfies `AR_r(out) = d(Attention(LN(x)) + x)/dx`:
+    the vjp covers the attention path (the fused residual was detached in
+    forward), and the `+ dy/t` term reconstitutes the residual's `+1`
+    across the All-Reduce.
+    """
+    def f(xx):
+        return ref.attn_unit_partial(xx, gamma1, wq, wk, wv, wo, dims)
+
+    _, vjp = jax.vjp(f, x)
+    (dx,) = vjp(dy)
+    return dx + dy / dims.tp
+
+
+def attn_bwd_w(x, dy, gamma1, wq, wk, wv, wo, *, dims: Dims):
+    """Attn unit weight-gradient (`W`): rank-local dW, replicated dγ."""
+    def f(g1, q, k, v, o):
+        return ref.attn_unit_partial(x, g1, q, k, v, o, dims)
+
+    _, vjp = jax.vjp(f, gamma1, wq, wk, wv, wo)
+    return vjp(dy)  # (dgamma1, dwq, dwk, dwv, dwo)
+
+
+def mlp_bwd_x(x, dy, gamma2, wg, wu, wd, *, dims: Dims):
+    """MLP unit activation-gradient partial (`B`)."""
+    def f(xx):
+        return ref.mlp_unit_partial(xx, gamma2, wg, wu, wd, dims)
+
+    _, vjp = jax.vjp(f, x)
+    (dx,) = vjp(dy)
+    return dx + dy / dims.tp
+
+
+def mlp_bwd_w(x, dy, gamma2, wg, wu, wd, *, dims: Dims):
+    """MLP unit weight-gradient (`W`)."""
+    def f(g2, g, u, d):
+        return ref.mlp_unit_partial(x, g2, g, u, d, dims)
+
+    _, vjp = jax.vjp(f, gamma2, wg, wu, wd)
+    return vjp(dy)  # (dgamma2, dwg, dwu, dwd)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline endpoints
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, emb):
+    """Token embedding (first chunk). Replicated across the TP group."""
+    return ref.embed(tokens, emb)
+
+
+def embed_bwd(tokens, dy, *, vocab: int):
+    """Embedding gradient: scatter-add of `dy` rows into token slots."""
+    mb, s, d = dy.shape
+    flat_t = tokens.reshape(mb * s)
+    flat_g = dy.reshape(mb * s, d)
+    return jnp.zeros((vocab, d), dy.dtype).at[flat_t].add(flat_g)
+
+
+def head_loss_grad(x, w_head, targets):
+    """LM head + loss, fused fwd+bwd (the head is small and terminal):
+    returns (loss, dx, dw_head). Uses the Pallas xent kernel forward and
+    the oracle's vjp backward.
+    """
+    loss = head_loss(x, w_head, targets)
+
+    def f(xx, wh):
+        return ref.head_loss(xx, wh, targets)
+
+    _, vjp = jax.vjp(f, x, w_head)
+    dx, dwh = vjp(jnp.float32(1.0))
+    return loss, dx, dwh
+
+
+# ---------------------------------------------------------------------------
+# Reference whole-model step (oracle for the rust pipeline's numerics)
+# ---------------------------------------------------------------------------
+
+def dense_forward(tokens, emb, layers_params, w_head, dims: Dims):
+    """Unpartitioned forward through all layers (test oracle)."""
+    x = ref.embed(tokens, emb)
+    for p in layers_params:
+        x = ref.dense_layer(x, p, dims)
+    return x
+
+
+def dense_loss(tokens, targets, emb, layers_params, w_head, dims: Dims):
+    x = dense_forward(tokens, emb, layers_params, w_head, dims)
+    return ref.head_loss(x, w_head, targets)
+
+
+def smoke(x, y):
+    """Tiny known-answer computation for the rust runtime smoke test:
+    matmul(x, y) + 2 over f32[2,2] (mirrors /opt/xla-example)."""
+    return jnp.matmul(x, y) + 2.0

@@ -1,0 +1,220 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+plus hypothesis sweeps over shapes/dtypes (the system's core correctness
+signal — see DESIGN.md §4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import TEST, Dims
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def allclose(a, b, rtol=RTOL, atol=ATOL):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+def rand(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul
+# ---------------------------------------------------------------------------
+
+class TestMatmul:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 32, 64]),
+        k=st.sampled_from([16, 32, 128]),
+        n=st.sampled_from([8, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, m, k, n, seed):
+        ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+        a, b = rand(ka, m, k), rand(kb, k, n)
+        allclose(kernels.matmul(a, b), ref.tiled_matmul(a, b), rtol=1e-4, atol=1e-4)
+
+    def test_non_square_blocks(self):
+        key = jax.random.PRNGKey(0)
+        a, b = rand(key, 24, 48), rand(key, 48, 40)
+        allclose(kernels.matmul(a, b, bm=8, bn=8, bk=16), a @ b, rtol=1e-4, atol=1e-4)
+
+    def test_3d_variant(self):
+        key = jax.random.PRNGKey(1)
+        x, w = rand(key, 2, 16, 32), rand(key, 32, 24)
+        allclose(kernels.matmul_3d(x, w), x @ w, rtol=1e-4, atol=1e-4)
+
+    def test_block_larger_than_dim(self):
+        key = jax.random.PRNGKey(2)
+        a, b = rand(key, 4, 4), rand(key, 4, 4)
+        allclose(kernels.matmul(a, b), a @ b)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm (Pre-Attn / Pre-MLP units)
+# ---------------------------------------------------------------------------
+
+class TestRmsNorm:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        mb=st.sampled_from([1, 2, 3]),
+        s=st.sampled_from([4, 16, 17]),
+        d=st.sampled_from([8, 64, 96]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, mb, s, d, seed):
+        kx, kg = jax.random.split(jax.random.PRNGKey(seed))
+        x = rand(kx, mb, s, d)
+        g = rand(kg, d)
+        allclose(kernels.rmsnorm(x, g), ref.rmsnorm(x, g))
+
+    def test_unit_gamma_preserves_rms(self):
+        x = rand(jax.random.PRNGKey(0), 2, 8, 64) * 3.0
+        y = kernels.rmsnorm(x, jnp.ones(64))
+        rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+        allclose(rms, jnp.ones_like(rms), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Attention unit (Eq. 1)
+# ---------------------------------------------------------------------------
+
+def make_dims(d, q_heads, kv_heads, ffn, seq, mb, tp):
+    return Dims(vocab=64, d=d, q_heads=q_heads, kv_heads=kv_heads, ffn=ffn,
+                seq=seq, mb=mb, tp=tp, layers=2)
+
+
+class TestAttentionUnit:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        seq=st.sampled_from([4, 8, 16]),
+        heads=st.sampled_from([(4, 2), (4, 4), (8, 2)]),
+        tp=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle_per_rank(self, seq, heads, tp, seed):
+        q_heads, kv_heads = heads
+        dims = make_dims(32, q_heads, kv_heads, 48, seq, 2, tp)
+        key = jax.random.PRNGKey(seed)
+        kx, kp = jax.random.split(key)
+        x = rand(kx, dims.mb, seq, dims.d)
+        params = ref.init_layer(kp, dims)
+        for r, p in enumerate(ref.shard_layer(params, dims)):
+            got = kernels.attn_unit(x, p["gamma1"], p["wq"], p["wk"], p["wv"], p["wo"], dims)
+            want = ref.attn_unit_partial(x, p["gamma1"], p["wq"], p["wk"], p["wv"], p["wo"], dims)
+            allclose(got, want)
+
+    def test_causality(self):
+        # Changing a future token must not change past outputs.
+        dims = TEST
+        key = jax.random.PRNGKey(0)
+        kx, kp = jax.random.split(key)
+        x = rand(kx, 1, dims.seq, dims.d)
+        p = ref.shard_layer(ref.init_layer(kp, dims), dims)[0]
+        y1 = kernels.attn_unit(x, p["gamma1"], p["wq"], p["wk"], p["wv"], p["wo"], dims)
+        x2 = x.at[0, -1].add(10.0)
+        y2 = kernels.attn_unit(x2, p["gamma1"], p["wq"], p["wk"], p["wv"], p["wo"], dims)
+        allclose(y1[0, :-1], y2[0, :-1])
+        assert not np.allclose(np.asarray(y1[0, -1]), np.asarray(y2[0, -1]))
+
+    def test_gqa_equals_repeated_mha(self):
+        # kv_heads=q_heads GQA must equal plain MHA math.
+        dims = make_dims(32, 4, 4, 48, 8, 1, 1)
+        key = jax.random.PRNGKey(3)
+        kx, kp = jax.random.split(key)
+        x = rand(kx, 1, 8, 32)
+        p = ref.init_layer(kp, dims)
+        got = kernels.attention_core(x, p["wq"], p["wk"], p["wv"], p["wo"], 4, 4)
+        want = ref.attention_core(x, p["wq"], p["wk"], p["wv"], p["wo"], 4, 4)
+        allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# MLP unit
+# ---------------------------------------------------------------------------
+
+class TestMlpUnit:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        d=st.sampled_from([16, 64]),
+        ffn=st.sampled_from([32, 96]),
+        tp=st.sampled_from([1, 2]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle_per_rank(self, d, ffn, tp, seed):
+        dims = make_dims(d, 4, 2, ffn, 8, 2, tp)
+        key = jax.random.PRNGKey(seed)
+        kx, kp = jax.random.split(key)
+        x = rand(kx, 2, 8, d)
+        params = ref.init_layer(kp, dims)
+        for p in ref.shard_layer(params, dims):
+            got = kernels.mlp_unit(x, p["gamma2"], p["wg"], p["wu"], p["wd"], dims)
+            want = ref.mlp_unit_partial(x, p["gamma2"], p["wg"], p["wu"], p["wd"], dims)
+            allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# TP decomposition invariant (the heart of Eq. 1)
+# ---------------------------------------------------------------------------
+
+class TestTpInvariant:
+    @settings(max_examples=6, deadline=None)
+    @given(tp=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+    def test_rank_sum_equals_dense_layer(self, tp, seed):
+        dims = make_dims(32, 4, 4, 64, 8, 1, tp)
+        key = jax.random.PRNGKey(seed)
+        kx, kp = jax.random.split(key)
+        x = rand(kx, 1, 8, 32)
+        params = ref.init_layer(kp, dims)
+        shards = ref.shard_layer(params, dims)
+        # "All-Reduce" = sum over ranks.
+        y = sum(
+            ref.attn_unit_partial(x, p["gamma1"], p["wq"], p["wk"], p["wv"], p["wo"], dims)
+            for p in shards
+        )
+        z = sum(
+            ref.mlp_unit_partial(y, p["gamma2"], p["wg"], p["wu"], p["wd"], dims)
+            for p in shards
+        )
+        allclose(z, ref.dense_layer(x, params, dims), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy head
+# ---------------------------------------------------------------------------
+
+class TestXent:
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n=st.sampled_from([4, 16, 32]),
+        v=st.sampled_from([16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_oracle(self, n, v, seed):
+        key = jax.random.PRNGKey(seed)
+        kx, kw, kt = jax.random.split(key, 3)
+        x = rand(kx, n, 8)
+        wh = rand(kw, 8, v)
+        t = jax.random.randint(kt, (n,), 0, v)
+        got = kernels.xent_nll(x, wh, t)
+        want = -jnp.take_along_axis(
+            jax.nn.log_softmax(x @ wh, axis=-1), t[:, None], axis=-1
+        )[:, 0]
+        allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_uniform_logits_loss_is_log_v(self):
+        v = 32
+        x = jnp.zeros((8, 4))
+        wh = jnp.zeros((4, v))
+        t = jnp.arange(8) % v
+        nll = kernels.xent_nll(x, wh, t)
+        allclose(nll, jnp.full(8, np.log(v)), rtol=1e-5, atol=1e-5)

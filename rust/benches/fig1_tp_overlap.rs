@@ -1,0 +1,32 @@
+//! Bench: regenerate paper Fig. 1 (TP communication share and braided
+//! overlap speedup vs TP size) and time the block machinery.
+//!
+//! `cargo bench --bench fig1_tp_overlap`
+
+use std::time::Instant;
+
+fn main() {
+    println!("{}", stp::bench::fig1());
+
+    // Micro-timing of the two-stream block machine itself (the simulator
+    // hot path): time_braided on a 10-layer chunk.
+    use stp::cluster::{HardwareProfile, Topology};
+    use stp::model::ModelConfig;
+    use stp::sim::CostModel;
+    let cost = CostModel::analytic(
+        &ModelConfig::qwen2_12b(),
+        &Topology::new(8, 2, 1),
+        &HardwareProfile::a800(),
+        6144,
+        1,
+    );
+    let c = &cost.chunks[0];
+    let iters = 20_000;
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..iters {
+        acc += c.time_braided(c, true).duration;
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("block-machine: time_braided x{iters} -> {:.2} us/call (acc {acc:.1})", per * 1e6);
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate the LLM evaluation — Fig. 7 (12.1B/16 GPU), Fig. 8
+//! (26.3B/32 GPU), Fig. 9 (peak activation memory), Table 1 (theory vs
+//! simulation) and the appendix Tables 5/6/7 grids.
+//!
+//! `cargo bench --bench llm_throughput`
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{}", stp::bench::table1());
+    println!("{}", stp::bench::fig7());
+    println!("{}", stp::bench::fig8());
+    println!("{}", stp::bench::fig9());
+    println!("{}", stp::bench::table567());
+    println!("{}", stp::bench::table4());
+    println!("{}", stp::bench::table8());
+    println!("{}", stp::bench::fig13());
+    println!("{}", stp::bench::table9());
+    println!("{}", stp::bench::table10());
+    println!("[llm_throughput completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

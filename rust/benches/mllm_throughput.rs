@@ -1,0 +1,14 @@
+//! Bench: regenerate the MLLM evaluation — Table 3 (Qwen2-VL throughput +
+//! peak memory across balanced/unbalanced splits) and Fig. 10 (offload
+//! variant).
+//!
+//! `cargo bench --bench mllm_throughput`
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    println!("{}", stp::bench::table3());
+    println!("{}", stp::bench::fig10());
+    println!("[mllm_throughput completed in {:.1}s]", t0.elapsed().as_secs_f64());
+}

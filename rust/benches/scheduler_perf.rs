@@ -1,0 +1,39 @@
+//! Bench: schedule-construction throughput (the L3 §Perf target —
+//! generation must be O(p·m)-ish and interactive at every paper scale).
+//!
+//! `cargo bench --bench scheduler_perf`
+
+use std::time::Instant;
+
+use stp::cluster::Topology;
+use stp::schedule::{build_schedule, ScheduleKind};
+
+fn main() {
+    println!("{:12} {:>4} {:>5} {:>8} {:>12} {:>12}", "schedule", "pp", "m", "ops", "build ms", "ops/ms");
+    for kind in ScheduleKind::all() {
+        for (pp, m) in [(2usize, 64usize), (4, 128), (8, 192), (8, 512)] {
+            let topo = Topology::new(4, pp, 1);
+            // Warm once, then time the median of 5.
+            let _ = build_schedule(kind, &topo, m);
+            let mut times = Vec::new();
+            let mut ops = 0;
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                let s = build_schedule(kind, &topo, m);
+                times.push(t0.elapsed().as_secs_f64());
+                ops = s.num_ops();
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ms = times[2] * 1e3;
+            println!(
+                "{:12} {:>4} {:>5} {:>8} {:>12.3} {:>12.0}",
+                kind.name(),
+                pp,
+                m,
+                ops,
+                ms,
+                ops as f64 / ms
+            );
+        }
+    }
+}

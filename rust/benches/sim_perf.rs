@@ -1,0 +1,42 @@
+//! Bench: simulator replay throughput (L3 §Perf target: ≥ 10^5 ops/s so
+//! the full table sweeps stay interactive).
+//!
+//! `cargo bench --bench sim_perf`
+
+use std::time::Instant;
+
+use stp::cluster::{HardwareProfile, Topology};
+use stp::model::ModelConfig;
+use stp::schedule::{build_schedule, ScheduleKind};
+use stp::sim::{CostModel, Simulator};
+
+fn main() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    println!("{:12} {:>4} {:>5} {:>8} {:>10} {:>12}", "schedule", "pp", "m", "ops", "sim ms", "ops/ms");
+    for kind in [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp] {
+        for (pp, m) in [(2usize, 64usize), (4, 192), (8, 512)] {
+            let topo = Topology::new(4, pp, 1);
+            let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+            let s = build_schedule(kind, &topo, m);
+            let _ = Simulator::new(&cost).run(&s); // warm
+            let mut times = Vec::new();
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                let _ = Simulator::new(&cost).run(&s);
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let ms = times[2] * 1e3;
+            println!(
+                "{:12} {:>4} {:>5} {:>8} {:>10.3} {:>12.0}",
+                kind.name(),
+                pp,
+                m,
+                s.num_ops(),
+                ms,
+                s.num_ops() as f64 / ms
+            );
+        }
+    }
+}

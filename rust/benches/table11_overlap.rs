@@ -1,0 +1,97 @@
+//! Bench: the MEASURED Table 11 — GEMM + All-Reduce, sequential vs
+//! overlapped, on real PJRT CPU compute and the real in-process
+//! all-reduce. (The two-stream-model counterpart is `stp bench table11`.)
+//!
+//! Scenario 1: GEMM dominates (communication fully hidden).
+//! Scenario 2: All-Reduce dominates (tail exposed, GEMM unaffected).
+//!
+//! `cargo bench --bench table11_overlap` (requires `make artifacts`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use stp::comm::TpGroup;
+use stp::config::Manifest;
+use stp::runtime::{Runtime, Tensor};
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let dir = std::path::Path::new("artifacts/test");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let d = manifest.dims.clone();
+    let mut rt = Runtime::load(&manifest, &["mlp_fwd"]).unwrap();
+
+    // The "GEMM": one MLP unit forward (three matmuls).
+    let x = Tensor::f32(vec![0.1; d.mb * d.seq * d.d], &[d.mb, d.seq, d.d]);
+    let g2 = Tensor::f32(vec![1.0; d.d], &[d.d]);
+    let wg = Tensor::f32(vec![0.01; d.d * d.ffn_per_rank()], &[d.d, d.ffn_per_rank()]);
+    let wu = wg.clone();
+    let wd = Tensor::f32(vec![0.01; d.ffn_per_rank() * d.d], &[d.ffn_per_rank(), d.d]);
+    let gemm_args = [x, g2, wg, wu, wd];
+
+    let reps = 30;
+    for (label, ar_elems) in [("GEMM dominates", 1usize << 14), ("AR dominates", 1usize << 22)] {
+        // Sequential: GEMM then a 2-rank all-reduce of `ar_elems` floats.
+        let mut seq_times = Vec::new();
+        let mut gemm_times = Vec::new();
+        let mut ar_times = Vec::new();
+        for _ in 0..reps {
+            let group = TpGroup::new(2);
+            let t0 = Instant::now();
+            rt.run("mlp_fwd", &gemm_args).unwrap();
+            let t_gemm = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            two_rank_allreduce(&group, ar_elems);
+            let t_ar = t1.elapsed().as_secs_f64();
+            seq_times.push(t_gemm + t_ar);
+            gemm_times.push(t_gemm);
+            ar_times.push(t_ar);
+        }
+
+        // Overlapped: the all-reduce runs on two helper threads while the
+        // GEMM executes on this one (the braided-block structure).
+        let mut ov_times = Vec::new();
+        for _ in 0..reps {
+            let group = TpGroup::new(2);
+            let g2c = group.clone();
+            let t0 = Instant::now();
+            let h = std::thread::spawn(move || two_rank_allreduce(&g2c, ar_elems));
+            rt.run("mlp_fwd", &gemm_args).unwrap();
+            h.join().unwrap();
+            ov_times.push(t0.elapsed().as_secs_f64());
+        }
+
+        let g = median(gemm_times) * 1e3;
+        let a = median(ar_times) * 1e3;
+        let s = median(seq_times) * 1e3;
+        let o = median(ov_times) * 1e3;
+        println!(
+            "{label:16} | GEMM {g:8.3} ms | AR {a:8.3} ms | sequential {s:8.3} ms | overlapped {o:8.3} ms | saving {:5.1}%",
+            100.0 * (1.0 - o / s)
+        );
+    }
+}
+
+/// Run a 2-rank all-reduce: both ranks on scratch threads.
+fn two_rank_allreduce(group: &Arc<TpGroup>, elems: usize) {
+    let g0 = group.clone();
+    let g1 = group.clone();
+    let h0 = std::thread::spawn(move || {
+        let mut buf = vec![1.0f32; elems];
+        g0.all_reduce(0, &mut buf).unwrap();
+    });
+    let h1 = std::thread::spawn(move || {
+        let mut buf = vec![2.0f32; elems];
+        g1.all_reduce(1, &mut buf).unwrap();
+    });
+    h0.join().unwrap();
+    h1.join().unwrap();
+}

@@ -1,0 +1,10 @@
+//! Cluster description: hardware profiles, parallel topology, and the
+//! layer→stage partitioner (LLM uniform split and MLLM ViT-first split).
+
+mod partition;
+mod profile;
+mod topology;
+
+pub use partition::{partition_llm, partition_mllm, StagePlan, ChunkContent};
+pub use profile::HardwareProfile;
+pub use topology::Topology;

@@ -1,0 +1,170 @@
+//! Layer → virtual-stage partitioner.
+//!
+//! Paper §5.1: for LLMs the model is split uniformly across `pp·vpp` chunks
+//! with the **last stage two layers short** to compensate for the output
+//! head over Qwen's 152k vocabulary. For MLLMs the ViT encoder occupies the
+//! first virtual stage on device 0 and the LM is distributed uniformly over
+//! the remaining chunks (again, last chunk two layers short).
+
+
+use crate::model::{MllmConfig, ModelConfig};
+
+/// What one virtual stage (model chunk) contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkContent {
+    /// Number of LM (decoder) layers in this chunk.
+    pub lm_layers: usize,
+    /// Number of ViT (encoder) layers in this chunk (MLLM only).
+    pub vit_layers: usize,
+    /// First chunk: owns the token embedding.
+    pub has_embed: bool,
+    /// Last chunk: owns the LM head + loss.
+    pub has_head: bool,
+}
+
+/// The partition of a model over `pp·vpp` chunks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StagePlan {
+    pub chunks: Vec<ChunkContent>,
+}
+
+impl StagePlan {
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn total_lm_layers(&self) -> usize {
+        self.chunks.iter().map(|c| c.lm_layers).sum()
+    }
+
+    pub fn total_vit_layers(&self) -> usize {
+        self.chunks.iter().map(|c| c.vit_layers).sum()
+    }
+}
+
+/// Uniform LLM split over `n_chunks` virtual stages, last stage two layers
+/// short (floored at 1). Remainder layers go to the earliest stages.
+pub fn partition_llm(model: &ModelConfig, n_chunks: usize) -> StagePlan {
+    assert!(n_chunks >= 1);
+    assert!(
+        model.layers >= n_chunks,
+        "{} layers cannot fill {} chunks",
+        model.layers,
+        n_chunks
+    );
+    let mut counts = vec![0usize; n_chunks];
+    if n_chunks == 1 {
+        counts[0] = model.layers;
+    } else {
+        // Give the last chunk (base - 2); spread the rest uniformly.
+        let base = (model.layers + 2) / n_chunks;
+        let last = base.saturating_sub(2).max(1);
+        let mut remaining = model.layers - last;
+        for c in counts.iter_mut().take(n_chunks - 1) {
+            *c = remaining / (n_chunks - 1);
+        }
+        let mut leftover = remaining - counts[..n_chunks - 1].iter().sum::<usize>();
+        for c in counts.iter_mut().take(n_chunks - 1) {
+            if leftover == 0 {
+                break;
+            }
+            *c += 1;
+            leftover -= 1;
+        }
+        counts[n_chunks - 1] = last;
+        remaining = 0;
+        let _ = remaining;
+    }
+    let chunks = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| ChunkContent {
+            lm_layers: n,
+            vit_layers: 0,
+            has_embed: i == 0,
+            has_head: i == n_chunks - 1,
+        })
+        .collect();
+    StagePlan { chunks }
+}
+
+/// MLLM split: the whole ViT on chunk 0 (first virtual stage of device 0),
+/// the LM uniformly over chunks `1..n_chunks` with the last two layers
+/// short (paper §5.1).
+pub fn partition_mllm(model: &MllmConfig, n_chunks: usize) -> StagePlan {
+    assert!(n_chunks >= 2, "MLLM needs at least 2 chunks (ViT + LM)");
+    let lm_chunks = n_chunks - 1;
+    let mut plan = partition_llm(&model.lm, lm_chunks);
+    let mut chunks = vec![ChunkContent {
+        lm_layers: 0,
+        vit_layers: model.vit.layers,
+        has_embed: true,
+        has_head: false,
+    }];
+    for (i, c) in plan.chunks.drain(..).enumerate() {
+        chunks.push(ChunkContent {
+            lm_layers: c.lm_layers,
+            vit_layers: 0,
+            has_embed: false,
+            has_head: i == lm_chunks - 1,
+        });
+    }
+    StagePlan { chunks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llm_partition_conserves_layers() {
+        let m = ModelConfig::qwen2_12b(); // 40 layers
+        for n in [1, 2, 4, 8] {
+            let p = partition_llm(&m, n);
+            assert_eq!(p.total_lm_layers(), m.layers, "n_chunks={n}");
+            assert_eq!(p.num_chunks(), n);
+        }
+    }
+
+    #[test]
+    fn llm_last_stage_two_short() {
+        let m = ModelConfig::qwen2_12b(); // 40 layers, 8 chunks (pp4 x v2)
+        let p = partition_llm(&m, 8);
+        let counts: Vec<usize> = p.chunks.iter().map(|c| c.lm_layers).collect();
+        let last = *counts.last().unwrap();
+        let first = counts[0];
+        assert!(first >= last + 2, "first={first} last={last}");
+    }
+
+    #[test]
+    fn llm_embed_and_head_placement() {
+        let p = partition_llm(&ModelConfig::qwen2_26b(), 8);
+        assert!(p.chunks[0].has_embed);
+        assert!(p.chunks[7].has_head);
+        assert_eq!(p.chunks.iter().filter(|c| c.has_embed).count(), 1);
+        assert_eq!(p.chunks.iter().filter(|c| c.has_head).count(), 1);
+    }
+
+    #[test]
+    fn mllm_vit_first_chunk() {
+        let m = MllmConfig::qwen2vl_14_9b();
+        let p = partition_mllm(&m, 8); // pp4 x v2
+        assert_eq!(p.chunks[0].vit_layers, m.vit.layers);
+        assert_eq!(p.chunks[0].lm_layers, 0);
+        assert_eq!(p.total_lm_layers(), m.lm.layers);
+        assert!(p.chunks[7].has_head);
+    }
+
+    #[test]
+    fn mllm_chunk_imbalance_exists() {
+        // Pattern-(1) braiding is defeated by exactly this imbalance
+        // (paper §4.1) — assert our partitioner actually produces it.
+        let m = MllmConfig::qwen2vl_28_8b();
+        let p = partition_mllm(&m, 4); // pp2 x v2
+        let unit_counts: Vec<usize> =
+            p.chunks.iter().map(|c| c.lm_layers * 4 + c.vit_layers * 4).collect();
+        let min = unit_counts.iter().min().unwrap();
+        let max = unit_counts.iter().max().unwrap();
+        assert!(max > min);
+    }
+}

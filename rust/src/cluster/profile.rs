@@ -1,0 +1,172 @@
+//! Hardware profiles.
+//!
+//! The paper's testbeds are NVIDIA A800 SXM4 80G (4 nodes × 8) and NVIDIA
+//! H20 96G (PCIe Gen5 hosts). Neither exists here (repro band 0/5), so the
+//! profile is the substitution: a small struct of peak FLOPs and bandwidths
+//! that the analytic cost model consumes. The A800/H20 asymmetry (H20 has
+//! ~2.1× the NVLink bandwidth at ~0.47× the BF16 FLOPs) is what reproduces
+//! Fig. 13 / Table 8's "TP bubbles matter less on H20".
+
+
+/// Peak capabilities of one accelerator plus its interconnect.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HardwareProfile {
+    pub name: String,
+    /// Peak dense BF16 TFLOPs of one device.
+    pub bf16_tflops: f64,
+    /// Achievable matmul efficiency (fraction of peak for large GEMMs).
+    pub matmul_efficiency: f64,
+    /// HBM bandwidth, GB/s (bounds the norm units).
+    pub hbm_gbps: f64,
+    /// Intra-node (NVLink/NVSwitch) per-direction bandwidth, GB/s.
+    pub nvlink_gbps: f64,
+    /// Achievable fraction of link bandwidth for ring all-reduce (NCCL
+    /// protocol overheads, chunking, SM contention).
+    pub allreduce_efficiency: f64,
+    /// Fixed launch/synchronization latency per collective, seconds.
+    pub collective_latency: f64,
+    /// Inter-node bandwidth per GPU, GB/s (IB HDR ≈ 25 GB/s).
+    pub internode_gbps: f64,
+    /// Host↔device (PCIe) bandwidth, GB/s — bounds activation offloading.
+    pub pcie_gbps: f64,
+    /// Device memory capacity, GiB (OOM detection for Table 4).
+    pub mem_gib: f64,
+    /// GPUs per node (TP groups larger than this pay inter-node AR).
+    pub gpus_per_node: usize,
+}
+
+impl HardwareProfile {
+    /// NVIDIA A800 SXM4 80G: A100 silicon with NVLink capped at 400 GB/s.
+    pub fn a800() -> Self {
+        Self {
+            name: "a800-sxm4-80g".into(),
+            bf16_tflops: 312.0,
+            matmul_efficiency: 0.62,
+            hbm_gbps: 2039.0,
+            nvlink_gbps: 400.0,
+            allreduce_efficiency: 0.55,
+            collective_latency: 25e-6,
+            internode_gbps: 25.0,
+            pcie_gbps: 32.0, // Gen4 x16
+            mem_gib: 80.0,
+            gpus_per_node: 8,
+        }
+    }
+
+    /// NVIDIA H20 96G: Hopper interconnect (900 GB/s) with heavily cut
+    /// compute (~148 TFLOPs BF16) and PCIe Gen5 hosts.
+    pub fn h20() -> Self {
+        Self {
+            name: "h20-96g".into(),
+            bf16_tflops: 148.0,
+            matmul_efficiency: 0.72,
+            hbm_gbps: 4000.0,
+            nvlink_gbps: 900.0,
+            allreduce_efficiency: 0.65,
+            collective_latency: 20e-6,
+            internode_gbps: 50.0,
+            pcie_gbps: 64.0, // Gen5 x16
+            mem_gib: 96.0,
+            gpus_per_node: 8,
+        }
+    }
+
+    /// The CPU host running the real executor (sanity profile for the
+    /// measured-cost path; numbers are per-core rough order).
+    pub fn cpu_sim() -> Self {
+        Self {
+            name: "cpu-sim".into(),
+            bf16_tflops: 0.05,
+            matmul_efficiency: 0.5,
+            hbm_gbps: 20.0,
+            nvlink_gbps: 10.0,
+            allreduce_efficiency: 0.8,
+            collective_latency: 5e-6,
+            internode_gbps: 10.0,
+            pcie_gbps: 10.0,
+            mem_gib: 16.0,
+            gpus_per_node: 64,
+        }
+    }
+
+    /// Effective per-device achievable matmul FLOPs (TFLOPs → FLOPs/s).
+    pub fn matmul_flops_per_sec(&self) -> f64 {
+        self.bf16_tflops * 1e12 * self.matmul_efficiency
+    }
+
+    /// Ring all-reduce time (seconds) for `bytes` over a TP group of size
+    /// `t`: `2·(t-1)/t · bytes / bw`, with the bandwidth picked by whether
+    /// the group fits in one node.
+    pub fn allreduce_secs(&self, bytes: usize, t: usize) -> f64 {
+        if t <= 1 {
+            return 0.0;
+        }
+        let bw = if t <= self.gpus_per_node { self.nvlink_gbps } else { self.internode_gbps };
+        let factor = 2.0 * (t as f64 - 1.0) / t as f64;
+        factor * bytes as f64 / (bw * self.allreduce_efficiency * 1e9) + self.collective_latency
+    }
+
+    /// Point-to-point transfer time (seconds) for `bytes`; `cross_node`
+    /// selects the interconnect tier.
+    pub fn p2p_secs(&self, bytes: usize, cross_node: bool) -> f64 {
+        let bw = if cross_node { self.internode_gbps } else { self.nvlink_gbps };
+        bytes as f64 / (bw * 1e9) + 5e-6 // small launch latency
+    }
+
+    /// Host offload/reload time for `bytes` over PCIe.
+    pub fn pcie_secs(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.pcie_gbps * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h20_has_more_bandwidth_less_compute_than_a800() {
+        let a = HardwareProfile::a800();
+        let h = HardwareProfile::h20();
+        assert!(h.nvlink_gbps > 2.0 * a.nvlink_gbps);
+        assert!(h.bf16_tflops < 0.5 * a.bf16_tflops);
+    }
+
+    #[test]
+    fn allreduce_zero_for_single_rank() {
+        assert_eq!(HardwareProfile::a800().allreduce_secs(1 << 20, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_with_group_size() {
+        let hw = HardwareProfile::a800();
+        let b = 64 << 20;
+        assert!(hw.allreduce_secs(b, 4) > hw.allreduce_secs(b, 2));
+        assert!(hw.allreduce_secs(b, 8) > hw.allreduce_secs(b, 4));
+    }
+
+    #[test]
+    fn allreduce_crossing_node_boundary_is_much_slower() {
+        let hw = HardwareProfile::a800();
+        let b = 64 << 20;
+        assert!(hw.allreduce_secs(b, 16) > 5.0 * hw.allreduce_secs(b, 8));
+    }
+
+    #[test]
+    fn ring_factor_approaches_two() {
+        let hw = HardwareProfile::a800();
+        let b = 1 << 30;
+        let t8 = hw.allreduce_secs(b, 8);
+        let expect = 2.0 * 7.0 / 8.0 * (b as f64)
+            / (hw.nvlink_gbps * hw.allreduce_efficiency * 1e9)
+            + hw.collective_latency;
+        assert!((t8 - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn collective_latency_dominates_tiny_messages() {
+        let hw = HardwareProfile::a800();
+        let t = hw.allreduce_secs(64, 8);
+        assert!(t >= hw.collective_latency);
+        assert!(t < 2.0 * hw.collective_latency);
+    }
+}

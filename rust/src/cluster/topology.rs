@@ -1,0 +1,146 @@
+//! Parallel topology: TP × PP × DP (× CP) device grid.
+
+
+/// A TP×PP×DP(×CP) device grid. Ranks are laid out TP-fastest (Megatron
+/// order): `global = ((dp * pp_size + pp) * cp_size + cp) * tp_size + tp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub cp: usize,
+    /// Virtual pipeline stages (model chunks) per PP rank. The paper fixes
+    /// this to 2 for all compared schedules.
+    pub vpp: usize,
+}
+
+impl Topology {
+    /// TP×PP×DP with 2 virtual stages per device (the paper's setting).
+    pub fn new(tp: usize, pp: usize, dp: usize) -> Self {
+        Self { tp, pp, dp, cp: 1, vpp: 2 }
+    }
+
+    pub fn with_cp(mut self, cp: usize) -> Self {
+        self.cp = cp;
+        self
+    }
+
+    pub fn with_vpp(mut self, vpp: usize) -> Self {
+        self.vpp = vpp;
+        self
+    }
+
+    /// Total devices.
+    pub fn world_size(&self) -> usize {
+        self.tp * self.pp * self.dp * self.cp
+    }
+
+    /// Total model chunks (virtual stages) across the pipeline.
+    pub fn chunks(&self) -> usize {
+        self.pp * self.vpp
+    }
+
+    /// Global rank from coordinates.
+    pub fn rank_of(&self, dp: usize, pp: usize, cp: usize, tp: usize) -> usize {
+        ((dp * self.pp + pp) * self.cp + cp) * self.tp + tp
+    }
+
+    /// (dp, pp, cp, tp) coordinates of a global rank.
+    pub fn coords_of(&self, rank: usize) -> (usize, usize, usize, usize) {
+        let tp = rank % self.tp;
+        let r = rank / self.tp;
+        let cp = r % self.cp;
+        let r = r / self.cp;
+        let pp = r % self.pp;
+        let dp = r / self.pp;
+        (dp, pp, cp, tp)
+    }
+
+    /// Device (PP-rank) that owns virtual-stage `chunk` under the **V-shape
+    /// dataflow** (paper §4.1, Fig. 4): chunk 0 runs stages 0..p-1
+    /// descending the grid, chunk 1 runs p-1..0 back up, so a microbatch
+    /// traverses devices `0,1,..,p-1,p-1,..,1,0`.
+    pub fn v_shape_device(&self, chunk: usize) -> usize {
+        assert!(chunk < self.chunks());
+        let round = chunk / self.pp;
+        let pos = chunk % self.pp;
+        if round % 2 == 0 {
+            pos
+        } else {
+            self.pp - 1 - pos
+        }
+    }
+
+    /// Device for `chunk` under the **parallel dataflow** of 1F1B-I
+    /// (Megatron interleaving): chunk `c` lives on device `c % pp`.
+    pub fn interleaved_device(&self, chunk: usize) -> usize {
+        assert!(chunk < self.chunks());
+        chunk % self.pp
+    }
+
+    /// Whether a pipeline hop between PP ranks `a` and `b` crosses a node
+    /// boundary, assuming nodes hold `gpus_per_node / tp` consecutive PP
+    /// ranks of one DP replica.
+    pub fn pp_hop_cross_node(&self, a: usize, b: usize, gpus_per_node: usize) -> bool {
+        let per_node = (gpus_per_node / (self.tp * self.cp)).max(1);
+        (a / per_node) != (b / per_node)
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tp{}-pp{}-dp{}", self.tp, self.pp, self.dp)?;
+        if self.cp > 1 {
+            write!(f, "-cp{}", self.cp)?;
+        }
+        write!(f, "-v{}", self.vpp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_coords_roundtrip() {
+        let t = Topology::new(4, 4, 2).with_cp(2);
+        for r in 0..t.world_size() {
+            let (dp, pp, cp, tp) = t.coords_of(r);
+            assert_eq!(t.rank_of(dp, pp, cp, tp), r);
+        }
+    }
+
+    #[test]
+    fn world_size() {
+        assert_eq!(Topology::new(8, 2, 1).world_size(), 16);
+        assert_eq!(Topology::new(4, 8, 1).world_size(), 32);
+    }
+
+    #[test]
+    fn v_shape_is_a_v() {
+        // p=4, vpp=2: chunks 0..3 on devices 0,1,2,3; chunks 4..7 on 3,2,1,0.
+        let t = Topology::new(1, 4, 1);
+        let path: Vec<usize> = (0..t.chunks()).map(|c| t.v_shape_device(c)).collect();
+        assert_eq!(path, vec![0, 1, 2, 3, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn v_shape_first_device_holds_first_and_last_chunk() {
+        // The early backward on device 0 (Fig. 4) requires chunk `2p-1` there.
+        let t = Topology::new(1, 4, 1);
+        assert_eq!(t.v_shape_device(0), 0);
+        assert_eq!(t.v_shape_device(t.chunks() - 1), 0);
+    }
+
+    #[test]
+    fn interleaved_is_parallel_flow() {
+        let t = Topology::new(1, 4, 1);
+        let path: Vec<usize> = (0..t.chunks()).map(|c| t.interleaved_device(c)).collect();
+        assert_eq!(path, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn display_compact() {
+        assert_eq!(Topology::new(8, 2, 1).to_string(), "tp8-pp2-dp1-v2");
+    }
+}

@@ -1,0 +1,194 @@
+//! In-process communication substrate.
+//!
+//! Substitutes NCCL (DESIGN.md §1): TP All-Reduce is a real
+//! rendezvous-and-sum across the rank threads of a TP group, and pipeline
+//! P2P is real channel transfer between stage threads — the same
+//! synchronization structure the paper's schedules manage, minus CUDA.
+
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+
+use crate::runtime::Tensor;
+use crate::Result;
+
+/// A tensor-parallel group: `t` rank threads all-reducing f32 buffers.
+///
+/// Implementation: two-phase rendezvous. Every rank deposits a reference
+/// copy of its buffer; the last one to arrive sums all contributions;
+/// everyone copies the sum out. Byte counters feed the metrics.
+pub struct TpGroup {
+    size: usize,
+    slots: Mutex<Slots>,
+    barrier: Barrier,
+    done: Condvar,
+    /// Total bytes all-reduced (for metrics / Table 11 style accounting).
+    bytes: Mutex<u64>,
+    /// Number of collectives executed.
+    ops: Mutex<u64>,
+}
+
+struct Slots {
+    bufs: Vec<Option<Vec<f32>>>,
+    sum: Option<Vec<f32>>,
+    arrived: usize,
+    generation: u64,
+}
+
+impl TpGroup {
+    pub fn new(size: usize) -> Arc<TpGroup> {
+        Arc::new(TpGroup {
+            size,
+            slots: Mutex::new(Slots {
+                bufs: (0..size).map(|_| None).collect(),
+                sum: None,
+                arrived: 0,
+                generation: 0,
+            }),
+            barrier: Barrier::new(size),
+            done: Condvar::new(),
+            bytes: Mutex::new(0),
+            ops: Mutex::new(0),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// All-reduce (sum) `buf` in place across the group. Call exactly once
+    /// per rank per collective; collectives must be issued in the same
+    /// order on every rank (the usual NCCL contract).
+    pub fn all_reduce(&self, rank: usize, buf: &mut [f32]) -> Result<()> {
+        if self.size == 1 {
+            return Ok(());
+        }
+        anyhow::ensure!(rank < self.size, "rank {rank} out of group size {}", self.size);
+        let mut slots = self.slots.lock().unwrap();
+        anyhow::ensure!(slots.bufs[rank].is_none(), "rank {rank} double-deposited");
+        slots.bufs[rank] = Some(buf.to_vec());
+        slots.arrived += 1;
+        if slots.arrived == self.size {
+            // Last arrival performs the reduction.
+            let mut sum = vec![0.0f32; buf.len()];
+            for b in slots.bufs.iter_mut() {
+                let b = b.take().unwrap();
+                anyhow::ensure!(b.len() == sum.len(), "all-reduce length mismatch");
+                for (s, v) in sum.iter_mut().zip(&b) {
+                    *s += v;
+                }
+            }
+            slots.sum = Some(sum);
+            slots.arrived = 0;
+            slots.generation += 1;
+            self.done.notify_all();
+        } else {
+            let gen = slots.generation;
+            while slots.generation == gen {
+                slots = self.done.wait(slots).unwrap();
+            }
+        }
+        buf.copy_from_slice(slots.sum.as_ref().unwrap());
+        drop(slots);
+        // Hold every rank until all have copied out; the next collective's
+        // reduction simply overwrites `sum` afterwards.
+        self.barrier.wait();
+        *self.bytes.lock().unwrap() += (buf.len() * 4) as u64;
+        *self.ops.lock().unwrap() += 1;
+        Ok(())
+    }
+
+    /// All-reduce a [`Tensor`] in place (f32 only).
+    pub fn all_reduce_tensor(&self, rank: usize, t: &mut Tensor) -> Result<()> {
+        self.all_reduce(rank, t.as_f32_mut()?)
+    }
+
+    /// Total bytes all-reduced so far (per-rank counting).
+    pub fn bytes_reduced(&self) -> u64 {
+        *self.bytes.lock().unwrap()
+    }
+
+    pub fn collectives(&self) -> u64 {
+        *self.ops.lock().unwrap()
+    }
+}
+
+/// A P2P pipeline channel endpoint pair (activations or gradients between
+/// adjacent stages of one TP rank).
+pub struct P2p;
+
+impl P2p {
+    /// Bounded channel: backpressure mirrors the finite buffering between
+    /// pipeline stages.
+    pub fn channel(depth: usize) -> (SyncSender<Tensor>, Receiver<Tensor>) {
+        std::sync::mpsc::sync_channel(depth)
+    }
+
+    /// Unbounded channel (metrics/loss reporting).
+    pub fn unbounded() -> (Sender<Tensor>, Receiver<Tensor>) {
+        std::sync::mpsc::channel()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        let g = TpGroup::new(4);
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let g = g.clone();
+            handles.push(thread::spawn(move || {
+                let mut buf = vec![r as f32; 8];
+                g.all_reduce(r, &mut buf).unwrap();
+                buf
+            }));
+        }
+        for h in handles {
+            let buf = h.join().unwrap();
+            assert_eq!(buf, vec![6.0; 8]); // 0+1+2+3
+        }
+        assert_eq!(g.collectives(), 4); // per-rank counting
+    }
+
+    #[test]
+    fn repeated_collectives_reuse_group() {
+        let g = TpGroup::new(2);
+        let mut handles = Vec::new();
+        for r in 0..2 {
+            let g = g.clone();
+            handles.push(thread::spawn(move || {
+                let mut out = Vec::new();
+                for round in 0..16 {
+                    let mut buf = vec![(r + round) as f32; 4];
+                    g.all_reduce(r, &mut buf).unwrap();
+                    out.push(buf[0]);
+                }
+                out
+            }));
+        }
+        for h in handles {
+            let out = h.join().unwrap();
+            let want: Vec<f32> = (0..16).map(|round| (2 * round + 1) as f32).collect();
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn single_rank_group_is_noop() {
+        let g = TpGroup::new(1);
+        let mut buf = vec![5.0; 3];
+        g.all_reduce(0, &mut buf).unwrap();
+        assert_eq!(buf, vec![5.0; 3]);
+    }
+
+    #[test]
+    fn p2p_channel_transfers_tensors() {
+        let (tx, rx) = P2p::channel(2);
+        let t = Tensor::f32(vec![1.0, 2.0], &[2]);
+        tx.send(t.clone()).unwrap();
+        assert_eq!(rx.recv().unwrap(), t);
+    }
+}

@@ -1,0 +1,207 @@
+//! Configuration: the AOT artifact manifest (written by
+//! `python/compile/aot.py`) and run configuration for the CLI.
+
+pub mod json;
+
+pub use json::Json;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// Element type of an artifact argument/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One argument/output tensor description.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    /// Output indices the coordinator must All-Reduce across the TP group.
+    pub ar_outputs: Vec<usize>,
+}
+
+/// Model dimensions as recorded by the AOT pipeline (mirrors
+/// `python/compile/config.py::Dims`).
+#[derive(Debug, Clone)]
+pub struct ManifestDims {
+    pub vocab: usize,
+    pub d: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub ffn: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub mb: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub vpp: usize,
+}
+
+impl ManifestDims {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.q_heads
+    }
+    pub fn q_heads_per_rank(&self) -> usize {
+        self.q_heads / self.tp
+    }
+    pub fn kv_heads_per_rank(&self) -> usize {
+        self.kv_heads / self.tp
+    }
+    pub fn ffn_per_rank(&self) -> usize {
+        self.ffn / self.tp
+    }
+    pub fn n_chunks(&self) -> usize {
+        self.pp * self.vpp
+    }
+    pub fn layers_per_chunk(&self) -> usize {
+        self.layers / self.n_chunks()
+    }
+}
+
+/// The AOT manifest: everything rust needs to load and call the artifacts.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub dims: ManifestDims,
+    pub params_count: usize,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from (artifact files live here).
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.json: {e}", dir.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+
+        let dims_v = v.get("dims").ok_or_else(|| anyhow::anyhow!("manifest missing dims"))?;
+        let u = |k: &str| -> Result<usize> {
+            dims_v
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("dims.{k} missing"))
+        };
+        let dims = ManifestDims {
+            vocab: u("vocab")?,
+            d: u("d")?,
+            q_heads: u("q_heads")?,
+            kv_heads: u("kv_heads")?,
+            ffn: u("ffn")?,
+            layers: u("layers")?,
+            seq: u("seq")?,
+            mb: u("mb")?,
+            tp: u("tp")?,
+            pp: u("pp")?,
+            vpp: u("vpp")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts"))?;
+        for (name, a) in arts {
+            let mut args = Vec::new();
+            for arg in a.get("args").and_then(Json::as_arr).unwrap_or(&[]) {
+                let shape = arg
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                let dtype =
+                    DType::parse(arg.get("dtype").and_then(Json::as_str).unwrap_or("float32"))?;
+                args.push(TensorSpec { shape, dtype });
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                    args,
+                    n_outputs: a.get("n_outputs").and_then(Json::as_usize).unwrap_or(1),
+                    ar_outputs: a
+                        .get("ar_outputs")
+                        .and_then(Json::as_arr)
+                        .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                        .unwrap_or_default(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            preset: v.get("preset").and_then(Json::as_str).unwrap_or("?").to_string(),
+            dims,
+            params_count: v.get("params_count").and_then(Json::as_usize).unwrap_or(0),
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("stp-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"preset":"test","params_count":123,
+                "dims":{"vocab":256,"d":64,"q_heads":4,"kv_heads":2,"ffn":96,
+                         "layers":4,"seq":16,"mb":2,"tp":2,"pp":2,"vpp":2},
+                "artifacts":{"smoke":{"file":"smoke.hlo.txt",
+                    "args":[{"shape":[2,2],"dtype":"float32"}],
+                    "n_outputs":1,"ar_outputs":[]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.preset, "test");
+        assert_eq!(m.dims.layers_per_chunk(), 1);
+        assert_eq!(m.artifact("smoke").unwrap().args[0].shape, vec![2, 2]);
+        assert!(m.artifact("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,252 @@
+//! Leader/CLI coordinator: parses arguments, builds topologies, dispatches
+//! to the simulator, the bench harness, the tracer, the validator or the
+//! real training executor. Hand-rolled argument parsing (no clap in this
+//! offline environment).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::cluster::{HardwareProfile, Topology};
+use crate::exec::{train, TrainConfig};
+use crate::model::ModelConfig;
+use crate::schedule::{build_schedule, build_schedule_scaled, validate, ScheduleKind};
+use crate::sim::{CostModel, Simulator};
+use crate::trace::{ascii_timeline, chrome_trace};
+use crate::Result;
+
+const USAGE: &str = "\
+stp — Synergistic Tensor and Pipeline Parallelism (NeurIPS 2025 reproduction)
+
+USAGE:
+  stp sim      --tp N --pp N [--model 12b|26b] [--seq N] [--mbsize N]
+               [--mb N] [--schedule KIND] [--hw a800|h20]
+  stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
+                table8|fig13|table9|table10|table11|all>
+  stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
+               [--chrome FILE] [--all-schedules]
+  stp validate [--schedule KIND] [--pp N] [--mb N]
+  stp train    [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
+               [--lr F] [--seed N] [--quiet]
+
+Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
+";
+
+/// Parse `--key value` pairs after the subcommand.
+pub fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str, default: T) -> T {
+    f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn model_by_name(name: &str) -> ModelConfig {
+    match name {
+        "26b" | "qwen2-26b" => ModelConfig::qwen2_26b(),
+        "tiny" => ModelConfig::tiny_100m(),
+        _ => ModelConfig::qwen2_12b(),
+    }
+}
+
+fn hw_by_name(name: &str) -> HardwareProfile {
+    match name {
+        "h20" => HardwareProfile::h20(),
+        "cpu" => HardwareProfile::cpu_sim(),
+        _ => HardwareProfile::a800(),
+    }
+}
+
+/// CLI entry point. Returns the process exit code.
+pub fn run_cli(args: Vec<String>) -> Result<i32> {
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd {
+        "sim" => {
+            let model = model_by_name(&flag::<String>(&flags, "model", "12b".into()));
+            let hw = hw_by_name(&flag::<String>(&flags, "hw", "a800".into()));
+            let topo = Topology::new(
+                flag(&flags, "tp", 8usize),
+                flag(&flags, "pp", 2usize),
+                flag(&flags, "dp", 1usize),
+            )
+            .with_cp(flag(&flags, "cp", 1usize));
+            let seq = flag(&flags, "seq", 6144usize);
+            let mb_size = flag(&flags, "mbsize", 1usize);
+            let n_mb = flag(&flags, "mb", 64usize);
+            let kind: ScheduleKind =
+                flag::<String>(&flags, "schedule", "stp".into()).parse().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let cost = CostModel::analytic(&model, &topo, &hw, seq, mb_size);
+            let s = build_schedule_scaled(kind, &topo, n_mb, cost.chunk_scales());
+            let r = Simulator::new(&cost).run(&s);
+            println!(
+                "{} | {} {} seq={seq} mbsize={mb_size} m={n_mb} hw={}\n\
+                 iteration      {:>10.3} s\n\
+                 throughput     {:>10.2} samples/s\n\
+                 MFU            {:>10.2} %\n\
+                 TP bubble/dev  {:>10.3} s\n\
+                 PP bubble/dev  {:>10.3} s\n\
+                 peak act mem   {:>10.1} GB\n\
+                 peak total mem {:>10.1} GB{}",
+                kind.name(),
+                model.name,
+                topo,
+                hw.name,
+                r.iteration_secs,
+                r.throughput(),
+                100.0 * r.mfu(),
+                r.tp_bubble_per_device(),
+                r.pp_bubble_per_device(),
+                r.peak_activation_gb(),
+                r.peak_memory_bytes() as f64 / 1e9,
+                if r.is_oom() { "  [OOM]" } else { "" },
+            );
+            Ok(0)
+        }
+        "bench" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            match crate::bench::by_name(which) {
+                Some(out) => {
+                    println!("{out}");
+                    Ok(0)
+                }
+                None => {
+                    eprintln!("unknown bench '{which}'\n{USAGE}");
+                    Ok(2)
+                }
+            }
+        }
+        "trace" => {
+            let topo = Topology::new(flag(&flags, "tp", 1usize), flag(&flags, "pp", 4usize), 1);
+            let n_mb = flag(&flags, "mb", 12usize);
+            let width = flag(&flags, "width", 160usize);
+            let model = model_by_name(&flag::<String>(&flags, "model", "12b".into()));
+            let hw = hw_by_name(&flag::<String>(&flags, "hw", "a800".into()));
+            let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+            let kinds: Vec<ScheduleKind> = if flags.contains_key("all-schedules") {
+                ScheduleKind::all().to_vec()
+            } else {
+                vec![flag::<String>(&flags, "schedule", "stp".into())
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("{e}"))?]
+            };
+            for kind in kinds {
+                let s = build_schedule(kind, &topo, n_mb);
+                let r = Simulator::new(&cost).run(&s);
+                println!("{}", ascii_timeline(&r, width));
+                if let Some(path) = flags.get("chrome") {
+                    let file = format!("{path}.{}.json", kind.name());
+                    std::fs::write(&file, chrome_trace(&r))?;
+                    println!("wrote {file}");
+                }
+            }
+            Ok(0)
+        }
+        "validate" => {
+            let topo = Topology::new(flag(&flags, "tp", 1usize), flag(&flags, "pp", 4usize), 1);
+            let n_mb = flag(&flags, "mb", 12usize);
+            let mut bad = 0;
+            let kinds: Vec<ScheduleKind> = match flags.get("schedule") {
+                Some(k) => vec![k.parse().map_err(|e| anyhow::anyhow!("{e}"))?],
+                None => ScheduleKind::all().to_vec(),
+            };
+            for kind in kinds {
+                let s = build_schedule(kind, &topo, n_mb);
+                let v = validate(&s);
+                if v.is_empty() {
+                    println!("{:12} OK ({} ops)", kind.name(), s.num_ops());
+                } else {
+                    bad += 1;
+                    println!("{:12} {} violations", kind.name(), v.len());
+                    for x in v.iter().take(5) {
+                        println!("    {x}");
+                    }
+                }
+            }
+            Ok(if bad == 0 { 0 } else { 1 })
+        }
+        "train" => {
+            let cfg = TrainConfig {
+                artifacts_dir: PathBuf::from(flag::<String>(
+                    &flags,
+                    "artifacts",
+                    "artifacts/e2e".into(),
+                )),
+                schedule: flag::<String>(&flags, "schedule", "stp".into())
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+                n_mb: flag(&flags, "mb", 4usize),
+                steps: flag(&flags, "steps", 20usize),
+                lr: flag(&flags, "lr", 0.1f32),
+                seed: flag(&flags, "seed", 42u64),
+                verbose: !flags.contains_key("quiet"),
+            };
+            let report = train(&cfg)?;
+            println!(
+                "trained {} steps ({} schedule): loss {:.4} -> {:.4}, {:.1}s wall, \
+                 {} PJRT execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
+                report.steps.len(),
+                cfg.schedule.name(),
+                report.first_loss(),
+                report.last_loss(),
+                report.wall_secs,
+                report.executions,
+                report.allreduce_bytes as f64 / 1e6,
+                report
+                    .peak_activation_bytes
+                    .iter()
+                    .map(|b| (b / 1_000_000).to_string())
+                    .collect::<Vec<_>>(),
+            );
+            Ok(0)
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_parsing() {
+        let args: Vec<String> =
+            ["--tp", "8", "--quiet", "--schedule", "zb-v"].iter().map(|s| s.to_string()).collect();
+        let f = parse_flags(&args);
+        assert_eq!(flag(&f, "tp", 0usize), 8);
+        assert_eq!(f.get("quiet").unwrap(), "true");
+        assert_eq!(f.get("schedule").unwrap(), "zb-v");
+        assert_eq!(flag(&f, "missing", 7usize), 7);
+    }
+
+    #[test]
+    fn validate_subcommand_all_green() {
+        let code = run_cli(vec!["validate".into(), "--pp".into(), "2".into(), "--mb".into(), "6".into()])
+            .unwrap();
+        assert_eq!(code, 0);
+    }
+}

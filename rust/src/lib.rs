@@ -1,0 +1,55 @@
+//! # STP — Synergistic Tensor and Pipeline Parallelism
+//!
+//! Production-quality reproduction of *"Synergistic Tensor and Pipeline
+//! Parallelism"* (NeurIPS 2025). The library is the L3 (rust) layer of a
+//! three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the fine-grained
+//!   computation units (Pre-Attn, Attn, Pre-MLP, MLP) with fused residuals
+//!   (paper Eq. 1–2), built once at compile time.
+//! * **L2** — JAX model (`python/compile/model.py`): per-TP-rank forward and
+//!   vjp-decomposed backward (activation-grad `B` / weight-grad `W`) of a
+//!   Qwen2-style transformer chunk, AOT-lowered to HLO text artifacts.
+//! * **L3** — this crate: schedule generators (GPipe, 1F1B, 1F1B-I, ZB-V,
+//!   and the paper's STP schedule with braided execution blocks), a
+//!   discrete-event cluster simulator that regenerates every table and
+//!   figure of the paper's evaluation, and a real multi-threaded pipeline
+//!   executor that runs the AOT artifacts through PJRT with in-process
+//!   All-Reduce.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use stp::model::ModelConfig;
+//! use stp::cluster::{HardwareProfile, Topology};
+//! use stp::schedule::{ScheduleKind, build_schedule};
+//! use stp::sim::{CostModel, Simulator};
+//!
+//! let model = ModelConfig::qwen2_12b();
+//! let topo = Topology::new(8, 2, 1); // TP=8, PP=2, DP=1
+//! let hw = HardwareProfile::a800();
+//! let sched = build_schedule(ScheduleKind::Stp, &topo, 64);
+//! let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+//! let report = Simulator::new(&cost).run(&sched);
+//! println!("throughput = {:.2} samples/s", report.throughput());
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to its regenerator.
+
+pub mod bench;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod exec;
+pub mod memory;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod trace;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,12 @@
+//! `stp` — leader entrypoint. See `stp help` for subcommands.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match stp::coordinator::run_cli(args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! Activation memory management for the real executor.
+//!
+//! [`ActivationStore`] holds the per-(chunk, microbatch, layer, tag)
+//! tensors the backward units consume, with byte accounting that mirrors
+//! the simulator's tracker. [`OffloadManager`] is the §4.4 enhanced
+//! variant's substrate: activations move to a host arena ("CPU" side of
+//! the paper's PCIe link; here a separate accounting domain) and return on
+//! reload — the policy (what, when, ratio α) lives in the schedule IR.
+
+use std::collections::HashMap;
+
+use crate::runtime::Tensor;
+use crate::Result;
+
+/// Key of a stored activation: (chunk, microbatch, layer-in-chunk, tag).
+/// Tags distinguish the unit inputs within a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ActKey {
+    pub chunk: usize,
+    pub mb: usize,
+    pub layer: usize,
+    pub tag: ActTag,
+}
+
+/// Which saved tensor within a layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActTag {
+    /// Input to the Attn unit (pre-LN residual stream).
+    AttnIn,
+    /// Input to the MLP unit.
+    MlpIn,
+    /// Output of the chunk (input to the head for the last chunk).
+    ChunkOut,
+    /// Upstream gradient stashed for a deferred weight pass.
+    AttnGrad,
+    MlpGrad,
+}
+
+/// Byte-accounted activation storage for one device thread.
+#[derive(Default)]
+pub struct ActivationStore {
+    map: HashMap<ActKey, Tensor>,
+    live_bytes: usize,
+    peak_bytes: usize,
+}
+
+impl ActivationStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, key: ActKey, t: Tensor) {
+        self.live_bytes += t.bytes();
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+        if let Some(old) = self.map.insert(key, t) {
+            self.live_bytes -= old.bytes();
+        }
+    }
+
+    /// Remove and return (backward consumes its stash exactly once).
+    pub fn take(&mut self, key: &ActKey) -> Result<Tensor> {
+        let t = self
+            .map
+            .remove(key)
+            .ok_or_else(|| anyhow::anyhow!("activation {key:?} not stashed"))?;
+        self.live_bytes -= t.bytes();
+        Ok(t)
+    }
+
+    /// Borrow without consuming (weight pass may follow activation pass).
+    pub fn get(&self, key: &ActKey) -> Result<&Tensor> {
+        self.map.get(key).ok_or_else(|| anyhow::anyhow!("activation {key:?} not stashed"))
+    }
+
+    pub fn contains(&self, key: &ActKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Move every stored tensor for (chunk, mb) matching `pred` out to the
+    /// offload manager, returning how many bytes moved.
+    pub fn offload_matching(
+        &mut self,
+        off: &mut OffloadManager,
+        chunk: usize,
+        mb: usize,
+        ratio: f32,
+    ) -> usize {
+        let keys: Vec<ActKey> = self
+            .map
+            .keys()
+            .filter(|k| k.chunk == chunk && k.mb == mb)
+            .copied()
+            .collect();
+        // α selects a prefix of the layer stashes (the paper offloads a
+        // tunable fraction of each microbatch's activations).
+        let n = ((keys.len() as f32) * ratio).round() as usize;
+        let mut moved = 0;
+        for k in keys.into_iter().take(n) {
+            let t = self.take(&k).expect("key just listed");
+            moved += t.bytes();
+            off.put(k, t);
+        }
+        moved
+    }
+
+    /// Reload everything the manager holds for (chunk, mb).
+    pub fn reload_all(&mut self, off: &mut OffloadManager, chunk: usize, mb: usize) -> usize {
+        let mut moved = 0;
+        for (k, t) in off.take_matching(chunk, mb) {
+            moved += t.bytes();
+            self.put(k, t);
+        }
+        moved
+    }
+}
+
+/// Host-side arena for offloaded activations (the paper's CPU memory).
+#[derive(Default)]
+pub struct OffloadManager {
+    arena: HashMap<ActKey, Tensor>,
+    host_bytes: usize,
+    peak_host_bytes: usize,
+    /// Cumulative traffic in each direction (PCIe accounting).
+    pub offloaded_bytes: u64,
+    pub reloaded_bytes: u64,
+}
+
+impl OffloadManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn put(&mut self, key: ActKey, t: Tensor) {
+        self.host_bytes += t.bytes();
+        self.offloaded_bytes += t.bytes() as u64;
+        self.peak_host_bytes = self.peak_host_bytes.max(self.host_bytes);
+        self.arena.insert(key, t);
+    }
+
+    fn take_matching(&mut self, chunk: usize, mb: usize) -> Vec<(ActKey, Tensor)> {
+        let keys: Vec<ActKey> = self
+            .arena
+            .keys()
+            .filter(|k| k.chunk == chunk && k.mb == mb)
+            .copied()
+            .collect();
+        keys.into_iter()
+            .map(|k| {
+                let t = self.arena.remove(&k).unwrap();
+                self.host_bytes -= t.bytes();
+                self.reloaded_bytes += t.bytes() as u64;
+                (k, t)
+            })
+            .collect()
+    }
+
+    pub fn host_bytes(&self) -> usize {
+        self.host_bytes
+    }
+
+    pub fn peak_host_bytes(&self) -> usize {
+        self.peak_host_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(chunk: usize, mb: usize, layer: usize) -> ActKey {
+        ActKey { chunk, mb, layer, tag: ActTag::AttnIn }
+    }
+
+    #[test]
+    fn put_take_accounting() {
+        let mut s = ActivationStore::new();
+        s.put(key(0, 0, 0), Tensor::zeros(&[4, 4]));
+        s.put(key(0, 0, 1), Tensor::zeros(&[4, 4]));
+        assert_eq!(s.live_bytes(), 2 * 64);
+        let _ = s.take(&key(0, 0, 0)).unwrap();
+        assert_eq!(s.live_bytes(), 64);
+        assert_eq!(s.peak_bytes(), 128);
+        assert!(s.take(&key(0, 0, 0)).is_err());
+    }
+
+    #[test]
+    fn offload_reload_roundtrip() {
+        let mut s = ActivationStore::new();
+        let mut off = OffloadManager::new();
+        for l in 0..4 {
+            s.put(key(1, 2, l), Tensor::f32(vec![l as f32; 8], &[8]));
+        }
+        let moved = s.offload_matching(&mut off, 1, 2, 0.5);
+        assert_eq!(moved, 2 * 32);
+        assert_eq!(s.len(), 2);
+        assert_eq!(off.host_bytes(), 64);
+        let back = s.reload_all(&mut off, 1, 2);
+        assert_eq!(back, 64);
+        assert_eq!(s.len(), 4);
+        assert_eq!(off.host_bytes(), 0);
+        assert_eq!(off.offloaded_bytes, 64);
+        assert_eq!(off.reloaded_bytes, 64);
+    }
+
+    #[test]
+    fn offload_only_touches_requested_microbatch() {
+        let mut s = ActivationStore::new();
+        let mut off = OffloadManager::new();
+        s.put(key(0, 0, 0), Tensor::zeros(&[2]));
+        s.put(key(0, 1, 0), Tensor::zeros(&[2]));
+        s.offload_matching(&mut off, 0, 0, 1.0);
+        assert!(!s.contains(&key(0, 0, 0)));
+        assert!(s.contains(&key(0, 1, 0)));
+    }
+}

@@ -1,0 +1,155 @@
+//! Per-unit FLOP accounting for the fine-grained computation units.
+//!
+//! The paper decomposes each transformer layer into **Pre-Attn**, **Attn**,
+//! **Pre-MLP**, **MLP** units (Fig. 2/3), with the backward of Attn/MLP
+//! further split into activation-gradient (`B`) and weight-gradient (`W`)
+//! components. The cost model needs FLOPs for each so it can derive
+//! `T_F`, `T_B`, `T_W` (per chunk) and per-unit times for braided-block
+//! duration computation.
+
+use super::ModelConfig;
+
+/// FLOPs of a single computation unit, split by backward component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitFlops {
+    /// Forward FLOPs.
+    pub fwd: f64,
+    /// Backward activation-gradient FLOPs (`B`: dX path).
+    pub bwd_x: f64,
+    /// Backward weight-gradient FLOPs (`W`: dW path; zero for norm units).
+    pub bwd_w: f64,
+}
+
+impl UnitFlops {
+    pub const ZERO: UnitFlops = UnitFlops { fwd: 0.0, bwd_x: 0.0, bwd_w: 0.0 };
+
+    pub fn total_bwd(&self) -> f64 {
+        self.bwd_x + self.bwd_w
+    }
+}
+
+impl std::ops::Add for UnitFlops {
+    type Output = UnitFlops;
+    fn add(self, o: UnitFlops) -> UnitFlops {
+        UnitFlops { fwd: self.fwd + o.fwd, bwd_x: self.bwd_x + o.bwd_x, bwd_w: self.bwd_w + o.bwd_w }
+    }
+}
+
+/// FLOPs of the four units of one transformer layer for one microbatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerFlops {
+    pub pre_attn: UnitFlops,
+    pub attn: UnitFlops,
+    pub pre_mlp: UnitFlops,
+    pub mlp: UnitFlops,
+}
+
+impl LayerFlops {
+    /// FLOP breakdown of one layer for a microbatch of `mbs` samples of
+    /// `seq` tokens (whole layer, before TP division).
+    ///
+    /// Matmul convention: `C[m,n] = A[m,k]·B[k,n]` costs `2·m·n·k` FLOPs
+    /// forward; backward costs the same for each of dA and dB (so matmul
+    /// bwd_x = fwd, bwd_w = fwd). Attention score/AV matmuls have no
+    /// weights: their backward (two matmuls each) lands entirely in `B`.
+    /// RMSNorm is modelled as ~8 flops/element fwd, 12 bwd (no weight-grad
+    /// matmul; the tiny dγ reduction is folded into bwd_x).
+    pub fn of(cfg: &ModelConfig, seq: usize, mbs: usize) -> LayerFlops {
+        let t = (seq * mbs) as f64; // tokens
+        let d = cfg.hidden as f64;
+        let kv = cfg.kv_dim() as f64;
+        let f = cfg.ffn as f64;
+        let s = seq as f64;
+
+        // Norm units: bandwidth-bound; flop counts kept for completeness.
+        let norm = UnitFlops { fwd: 8.0 * t * d, bwd_x: 12.0 * t * d, bwd_w: 0.0 };
+
+        // Attention unit: qkv proj + scores + AV + out proj (+residual add).
+        let qkv = 2.0 * t * d * (d + 2.0 * kv);
+        let score_av = 2.0 * 2.0 * t * s * d; // QK^T and AV, full causal cost
+        let out = 2.0 * t * d * d;
+        let resid = t * d;
+        let attn = UnitFlops {
+            fwd: qkv + score_av + out + resid,
+            bwd_x: qkv + 2.0 * score_av + out + resid,
+            bwd_w: qkv + out,
+        };
+
+        // MLP unit (SwiGLU: gate, up, down) + residual add.
+        let mlp_mm = 3.0 * 2.0 * t * d * f;
+        let act = 4.0 * t * f;
+        let mlp = UnitFlops {
+            fwd: mlp_mm + act + resid,
+            bwd_x: mlp_mm + 2.0 * act + resid,
+            bwd_w: mlp_mm,
+        };
+
+        LayerFlops { pre_attn: norm, attn, pre_mlp: norm, mlp }
+    }
+
+    /// Total forward FLOPs of the layer.
+    pub fn fwd_flops(&self) -> f64 {
+        self.pre_attn.fwd + self.attn.fwd + self.pre_mlp.fwd + self.mlp.fwd
+    }
+
+    /// Forward matmul-only FLOPs (used for MFU — norms excluded).
+    pub fn fwd_matmul_flops(&self) -> f64 {
+        self.attn.fwd + self.mlp.fwd
+    }
+
+    /// Total activation-gradient FLOPs.
+    pub fn bwd_x_flops(&self) -> f64 {
+        self.pre_attn.bwd_x + self.attn.bwd_x + self.pre_mlp.bwd_x + self.mlp.bwd_x
+    }
+
+    /// Total weight-gradient FLOPs.
+    pub fn bwd_w_flops(&self) -> f64 {
+        self.attn.bwd_w + self.mlp.bwd_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::qwen2_12b()
+    }
+
+    #[test]
+    fn backward_roughly_twice_forward() {
+        let lf = LayerFlops::of(&cfg(), 4096, 1);
+        let ratio = (lf.bwd_x_flops() + lf.bwd_w_flops()) / lf.fwd_flops();
+        assert!((1.7..2.3).contains(&ratio), "bwd/fwd = {ratio:.2}");
+    }
+
+    #[test]
+    fn activation_grad_exceeds_weight_grad() {
+        // Paper appendix B: T_B > T_W — attention scores have no weights.
+        let lf = LayerFlops::of(&cfg(), 4096, 1);
+        assert!(lf.bwd_x_flops() > lf.bwd_w_flops());
+    }
+
+    #[test]
+    fn flops_scale_linearly_in_mbs() {
+        let a = LayerFlops::of(&cfg(), 1024, 1).fwd_flops();
+        let b = LayerFlops::of(&cfg(), 1024, 4).fwd_flops();
+        assert!((b / a - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn attention_quadratic_in_seq() {
+        // Doubling seq more than doubles attention-unit flops.
+        let a = LayerFlops::of(&cfg(), 2048, 1).attn.fwd;
+        let b = LayerFlops::of(&cfg(), 4096, 1).attn.fwd;
+        assert!(b > 2.0 * a);
+        assert!(b < 4.0 * a);
+    }
+
+    #[test]
+    fn norm_units_have_no_weight_grad_matmul() {
+        let lf = LayerFlops::of(&cfg(), 1024, 1);
+        assert_eq!(lf.pre_attn.bwd_w, 0.0);
+        assert_eq!(lf.pre_mlp.bwd_w, 0.0);
+    }
+}

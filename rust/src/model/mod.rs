@@ -1,0 +1,293 @@
+//! Model configurations and analytic accounting (FLOPs, bytes, parameters).
+//!
+//! These drive the cost model of the discrete-event simulator
+//! ([`crate::sim`]) and the MFU computation of [`crate::metrics`]. The
+//! configurations mirror the paper's Table 2 (Qwen2 12.1B / 26.3B LLMs and
+//! Qwen2-VL 14.9B / 28.8B MLLMs); where the published table is ambiguous we
+//! pick the self-consistent variant whose parameter count matches the
+//! headline scale (documented per constructor).
+
+mod flops;
+pub use flops::{LayerFlops, UnitFlops};
+
+
+/// Transformer (decoder) model configuration, Qwen2-style: GQA attention,
+/// SwiGLU MLP, RMSNorm, tied large vocabulary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    /// Human-readable name ("qwen2-12.1b").
+    pub name: String,
+    /// Number of transformer layers.
+    pub layers: usize,
+    /// Hidden dimension.
+    pub hidden: usize,
+    /// Number of query heads.
+    pub q_heads: usize,
+    /// Number of key/value heads (GQA).
+    pub kv_heads: usize,
+    /// MLP intermediate (SwiGLU, 3 matmuls of `hidden x ffn`).
+    pub ffn: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Bytes per parameter / activation element (2 = bf16).
+    pub dtype_bytes: usize,
+}
+
+impl ModelConfig {
+    /// Paper Table 2 row 1: 12.1B LLM (40 layers, 40 Q heads, 8 KV heads,
+    /// hidden 5120, SwiGLU ffn 13824, vocab 152064 — ≈12.2B params).
+    pub fn qwen2_12b() -> Self {
+        Self {
+            name: "qwen2-12.1b".into(),
+            layers: 40,
+            hidden: 5120,
+            q_heads: 40,
+            kv_heads: 8,
+            ffn: 13824,
+            vocab: 152_064,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Paper Table 2 row 2: 26.3B LLM (46 layers, 56 Q heads, 8 KV heads,
+    /// hidden 7168, ffn 18944, vocab 152064 — ≈26.3B params).
+    pub fn qwen2_26b() -> Self {
+        Self {
+            name: "qwen2-26.3b".into(),
+            layers: 46,
+            hidden: 7168,
+            q_heads: 56,
+            kv_heads: 8,
+            ffn: 18944,
+            vocab: 152_064,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Tiny (~100M param) config for the real end-to-end training example —
+    /// same architecture family, sized for CPU PJRT execution. Must stay in
+    /// sync with `python/compile/config.py::E2E`.
+    pub fn tiny_100m() -> Self {
+        Self {
+            name: "tiny-100m".into(),
+            layers: 20,
+            hidden: 512,
+            q_heads: 8,
+            kv_heads: 4,
+            ffn: 2048,
+            vocab: 8192,
+            dtype_bytes: 4, // f32 on CPU
+        }
+    }
+
+    /// Head dimension (= hidden / q_heads).
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.q_heads
+    }
+
+    /// KV projection width (GQA): kv_heads * head_dim.
+    pub fn kv_dim(&self) -> usize {
+        self.kv_heads * self.head_dim()
+    }
+
+    /// Parameters of one transformer layer.
+    pub fn layer_params(&self) -> usize {
+        let d = self.hidden;
+        let attn = d * d + 2 * d * self.kv_dim() + d * d; // q, kv, o
+        let mlp = 3 * d * self.ffn; // gate, up, down
+        let norms = 2 * d;
+        attn + mlp + norms
+    }
+
+    /// Total parameters (layers + tied embedding + final norm).
+    pub fn total_params(&self) -> usize {
+        self.layers * self.layer_params() + 2 * self.vocab * self.hidden + self.hidden
+    }
+
+    /// Megatron-style activation bytes of one layer for one microbatch
+    /// (FlashAttention-style: the `5·s·a/h` score term is dropped).
+    /// ≈ `s·b·h·34` bytes at bf16; scaled by dtype and the SwiGLU widening.
+    pub fn activation_bytes_per_layer(&self, seq: usize, mbs: usize) -> usize {
+        // inputs to: ln1, qkv, attn-out, ln2, gate, up, down + residuals
+        let d = self.hidden;
+        let per_tok =
+            (2 * d)              // ln1 in + attn in
+            + (d + 2 * self.kv_dim()) // q,k,v
+            + d                  // attn out (proj in)
+            + (2 * d)            // ln2 in + mlp in
+            + (2 * self.ffn)     // gate, up
+            + self.ffn           // act (down in)
+            + (2 * d); // residual streams
+        seq * mbs * per_tok * self.dtype_bytes
+    }
+
+    /// Bytes all-reduced per layer per direction per microbatch: two ARs
+    /// (post-Attn, post-MLP) of a `[mbs, seq, hidden]` tensor each.
+    pub fn ar_bytes_per_layer(&self, seq: usize, mbs: usize) -> usize {
+        2 * mbs * seq * self.hidden * self.dtype_bytes
+    }
+
+    /// Model FLOPs per token for one full fwd+bwd pass (the MFU numerator),
+    /// including the attention quadratic term; standard 3x-forward rule
+    /// applied to matmul FLOPs.
+    pub fn train_flops_per_token(&self, seq: usize) -> f64 {
+        let lf = LayerFlops::of(self, seq, 1);
+        let per_layer = 3.0 * (lf.fwd_matmul_flops() / (seq as f64));
+        let head = 3.0 * 2.0 * (self.hidden as f64) * (self.vocab as f64);
+        (self.layers as f64) * per_layer + head
+    }
+}
+
+/// Vision encoder configuration (MLLM front-end, ViT).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VitConfig {
+    pub layers: usize,
+    pub hidden: usize,
+    pub heads: usize,
+    /// MLP ratio (classic 4x GeLU MLP, 2 matmuls).
+    pub mlp_ratio: usize,
+    pub dtype_bytes: usize,
+}
+
+impl VitConfig {
+    /// 1.7B ViT of the 14.9B MLLM (32 layers, 16 heads, hidden 2048).
+    pub fn vit_1_7b() -> Self {
+        Self { layers: 32, hidden: 2048, heads: 16, mlp_ratio: 4, dtype_bytes: 2 }
+    }
+
+    /// 5.6B ViT of the 28.8B / 30.3B MLLMs (26 layers, 16 heads, hidden 4096).
+    pub fn vit_5_6b() -> Self {
+        Self { layers: 26, hidden: 4096, heads: 16, mlp_ratio: 4, dtype_bytes: 2 }
+    }
+
+    pub fn layer_params(&self) -> usize {
+        let d = self.hidden;
+        4 * d * d + 2 * d * (self.mlp_ratio * d) + 2 * d
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers * self.layer_params()
+    }
+
+    /// Forward matmul FLOPs of one ViT layer for `tokens` patch tokens.
+    pub fn layer_fwd_flops(&self, tokens: usize) -> f64 {
+        let d = self.hidden as f64;
+        let t = tokens as f64;
+        let proj = 2.0 * t * d * d * 4.0; // qkv + o
+        let score = 4.0 * t * t * d;
+        let mlp = 2.0 * t * d * (self.mlp_ratio as f64 * d) * 2.0;
+        proj + score + mlp
+    }
+
+    /// Activation bytes per ViT layer per microbatch of `tokens` tokens.
+    pub fn activation_bytes_per_layer(&self, tokens: usize, mbs: usize) -> usize {
+        let d = self.hidden;
+        let per_tok = 2 * d + 3 * d + d + 2 * d + 2 * self.mlp_ratio * d + 2 * d;
+        tokens * mbs * per_tok * self.dtype_bytes
+    }
+
+    /// AR bytes per ViT layer per direction per microbatch.
+    pub fn ar_bytes_per_layer(&self, tokens: usize, mbs: usize) -> usize {
+        2 * mbs * tokens * self.hidden * self.dtype_bytes
+    }
+}
+
+/// Multimodal model = ViT encoder + LM decoder (paper Table 2 bottom rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MllmConfig {
+    pub name: String,
+    pub vit: VitConfig,
+    pub lm: ModelConfig,
+}
+
+impl MllmConfig {
+    /// 14.9B MLLM = 1.7B ViT + 13.2B LM (42-layer, hidden-5120 decoder).
+    pub fn qwen2vl_14_9b() -> Self {
+        let mut lm = ModelConfig::qwen2_12b();
+        lm.name = "qwen2vl-lm-13.2b".into();
+        lm.layers = 42;
+        Self { name: "qwen2vl-14.9b".into(), vit: VitConfig::vit_1_7b(), lm }
+    }
+
+    /// 28.8B MLLM = 5.6B ViT + 23.2B LM (40-layer, hidden-7168 decoder).
+    pub fn qwen2vl_28_8b() -> Self {
+        let mut lm = ModelConfig::qwen2_26b();
+        lm.name = "qwen2vl-lm-23.2b".into();
+        lm.layers = 40;
+        Self { name: "qwen2vl-28.8b".into(), vit: VitConfig::vit_5_6b(), lm }
+    }
+
+    /// 30.3B MLLM variant (Table 3 bottom block): 5.6B ViT + 24.7B LM (43 layers).
+    pub fn qwen2vl_30_3b() -> Self {
+        let mut lm = ModelConfig::qwen2_26b();
+        lm.name = "qwen2vl-lm-24.7b".into();
+        lm.layers = 43;
+        Self { name: "qwen2vl-30.3b".into(), vit: VitConfig::vit_5_6b(), lm }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.vit.total_params() + self.lm.total_params()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen2_12b_param_count_matches_headline() {
+        let p = ModelConfig::qwen2_12b().total_params() as f64 / 1e9;
+        assert!((11.5..13.0).contains(&p), "12.1B config has {p:.2}B params");
+    }
+
+    #[test]
+    fn qwen2_26b_param_count_matches_headline() {
+        let p = ModelConfig::qwen2_26b().total_params() as f64 / 1e9;
+        assert!((25.0..27.5).contains(&p), "26.3B config has {p:.2}B params");
+    }
+
+    #[test]
+    fn tiny_config_is_about_100m() {
+        let p = ModelConfig::tiny_100m().total_params() as f64 / 1e6;
+        assert!((50.0..150.0).contains(&p), "tiny config has {p:.1}M params");
+    }
+
+    #[test]
+    fn vit_param_counts() {
+        let v17 = VitConfig::vit_1_7b().total_params() as f64 / 1e9;
+        assert!((1.3..2.1).contains(&v17), "1.7B ViT has {v17:.2}B");
+        let v56 = VitConfig::vit_5_6b().total_params() as f64 / 1e9;
+        assert!((4.5..6.5).contains(&v56), "5.6B ViT has {v56:.2}B");
+    }
+
+    #[test]
+    fn mllm_total_params() {
+        let m = MllmConfig::qwen2vl_14_9b().total_params() as f64 / 1e9;
+        assert!((13.5..16.5).contains(&m), "14.9B MLLM has {m:.2}B");
+        let m = MllmConfig::qwen2vl_28_8b().total_params() as f64 / 1e9;
+        assert!((26.5..31.0).contains(&m), "28.8B MLLM has {m:.2}B");
+    }
+
+    #[test]
+    fn gqa_dims_consistent() {
+        let c = ModelConfig::qwen2_12b();
+        assert_eq!(c.head_dim(), 128);
+        assert_eq!(c.kv_dim(), 1024);
+    }
+
+    #[test]
+    fn activation_bytes_scale_linearly_in_tokens() {
+        let c = ModelConfig::qwen2_12b();
+        let a = c.activation_bytes_per_layer(1024, 1);
+        let b = c.activation_bytes_per_layer(2048, 1);
+        assert_eq!(2 * a, b);
+        let d = c.activation_bytes_per_layer(1024, 2);
+        assert_eq!(2 * a, d);
+    }
+
+    #[test]
+    fn ar_bytes_two_allreduces_per_layer() {
+        let c = ModelConfig::qwen2_12b();
+        assert_eq!(c.ar_bytes_per_layer(10, 1), 2 * 10 * 5120 * 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! One [`Runtime`] per OS thread (PJRT wrapper types hold raw pointers and
+//! are `!Send`): `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Interchange is HLO **text** — the crate's
+//! xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit ids).
+//! Adapted from /opt/xla-example/load_hlo.
+
+use std::collections::HashMap;
+
+use crate::config::{DType, Manifest};
+use crate::Result;
+
+/// A host tensor crossing the rust↔PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            Tensor::I32 { .. } => anyhow::bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        anyhow::ensure!(!d.is_empty(), "empty tensor");
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Tensor::F32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Tensor::I32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { data: lit.to_vec::<f32>()?, shape: dims }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { data: lit.to_vec::<i32>()?, shape: dims }),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// A per-thread PJRT runtime holding compiled executables by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+    /// Cumulative executions (metrics).
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Create a runtime for `manifest`, compiling the named artifacts
+    /// (or every artifact if `names` is empty).
+    pub fn load(manifest: &Manifest, names: &[&str]) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut execs = HashMap::new();
+        let all: Vec<String> = if names.is_empty() {
+            manifest.artifacts.keys().cloned().collect()
+        } else {
+            names.iter().map(|s| s.to_string()).collect()
+        };
+        for name in all {
+            let path = manifest.artifact_path(&name)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            execs.insert(name, client.compile(&comp)?);
+        }
+        Ok(Runtime { client, execs, manifest: manifest.clone(), executions: 0 })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.execs.contains_key(name)
+    }
+
+    /// Execute artifact `name`. Inputs are validated against the manifest;
+    /// the lowered module returns a tuple (return_tuple=True) which is
+    /// decomposed into per-output tensors.
+    pub fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        anyhow::ensure!(
+            args.len() == spec.args.len(),
+            "{name}: got {} args, manifest says {}",
+            args.len(),
+            spec.args.len()
+        );
+        for (i, (a, s)) in args.iter().zip(&spec.args).enumerate() {
+            anyhow::ensure!(
+                a.shape() == &s.shape[..],
+                "{name} arg {i}: shape {:?} != manifest {:?}",
+                a.shape(),
+                s.shape
+            );
+            let ok = matches!(
+                (a, s.dtype),
+                (Tensor::F32 { .. }, DType::F32) | (Tensor::I32 { .. }, DType::I32)
+            );
+            anyhow::ensure!(ok, "{name} arg {i}: dtype mismatch");
+        }
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not compiled in this runtime"))?;
+        let lits: Vec<xla::Literal> =
+            args.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        self.executions += 1;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.n_outputs,
+            "{name}: {} outputs, manifest says {}",
+            parts.len(),
+            spec.n_outputs
+        );
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.bytes(), 16);
+        assert!(t.as_f32().is_ok());
+        let i = Tensor::i32(vec![1, 2], &[2]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(&[3, 5]);
+        assert_eq!(t.len(), 15);
+        assert_eq!(t.scalar_f32().unwrap(), 0.0);
+    }
+}

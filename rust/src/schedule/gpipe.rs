@@ -1,0 +1,61 @@
+//! GPipe schedule (Huang et al., 2019): all forwards, then all backwards.
+//!
+//! Baseline of historical interest (paper §2); used by tests as the
+//! maximally-simple legal schedule and by the ablation benches.
+
+use crate::cluster::Topology;
+
+use super::ir::{Op, Placement, Schedule, ScheduleKind};
+
+/// Build a GPipe schedule: every device runs all microbatch forwards of its
+/// chunks (in chunk order), then all full backwards (reverse order).
+pub fn build(topo: &Topology, n_mb: usize) -> Schedule {
+    let placement = Placement::Interleaved;
+    let n_chunks = topo.chunks();
+    let mut devices: Vec<Vec<Op>> = vec![Vec::new(); topo.pp];
+
+    // Forwards: chunk-major so chunk c+1 never waits on unscheduled work.
+    for c in 0..n_chunks {
+        let d = placement.device_of(c, topo);
+        for mb in 0..n_mb {
+            devices[d].push(Op::f(c, mb));
+        }
+    }
+    // Backwards: reverse chunk-major, full (B+W fused).
+    for c in (0..n_chunks).rev() {
+        let d = placement.device_of(c, topo);
+        for mb in 0..n_mb {
+            devices[d].push(Op::b_full(c, mb));
+        }
+    }
+
+    Schedule { kind: ScheduleKind::GPipe, topo: *topo, n_mb, placement, devices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_counts() {
+        let topo = Topology::new(1, 4, 1);
+        let s = build(&topo, 8);
+        // Each device: 2 chunks x 8 mb forwards + same backwards.
+        assert_eq!(s.count_forwards(), 8 * topo.chunks());
+        assert_eq!(s.count_backwards(), 8 * topo.chunks());
+        assert_eq!(s.count_weight_grads(), 8 * topo.chunks());
+        for d in &s.devices {
+            assert_eq!(d.len(), 2 * 8 * topo.vpp);
+        }
+    }
+
+    #[test]
+    fn all_forwards_before_any_backward_per_device() {
+        let s = build(&Topology::new(1, 2, 1), 4);
+        for ops in &s.devices {
+            let first_b = ops.iter().position(|o| o.backward_part().is_some()).unwrap();
+            let last_f = ops.iter().rposition(|o| o.forward_part().is_some()).unwrap();
+            assert!(last_f < first_b);
+        }
+    }
+}

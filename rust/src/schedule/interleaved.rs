@@ -1,0 +1,133 @@
+//! Interleaved 1F1B (1F1B-I) — Megatron-LM's virtual-stage schedule
+//! (Narayanan et al. 2021), the paper's baseline (a).
+//!
+//! Faithful port of `forward_backward_pipelining_with_interleaving`:
+//! device `r` warms up with `min((p-r-1)·2 + (vpp-1)·p, m·vpp)` forward
+//! *virtual microbatches*, runs 1F1B over virtual microbatches, then drains
+//! backwards. Chunk placement is the parallel flow (`chunk c` on device
+//! `c % p`), which is exactly what gives the first device its
+//! `(3p-2)·M_a` activation peak (paper Table 1 / Fig. 4).
+
+use crate::cluster::Topology;
+
+use super::ir::{Op, Placement, Schedule, ScheduleKind};
+
+/// Map a forward virtual-microbatch index to `(chunk_on_device, mb)`.
+/// Virtual ids walk `p` microbatches of chunk-slot 0, then `p` of slot 1,
+/// …, then the next group of `p` microbatches.
+fn fwd_item(vid: usize, p: usize, vpp: usize) -> (usize, usize) {
+    let group = p * vpp;
+    let slot = (vid % group) / p;
+    let mb = (vid / group) * p + vid % p;
+    (slot, mb)
+}
+
+/// Backward virtual-microbatch index → `(chunk_slot, mb)` (slots reversed).
+fn bwd_item(vid: usize, p: usize, vpp: usize) -> (usize, usize) {
+    let (slot, mb) = fwd_item(vid, p, vpp);
+    (vpp - 1 - slot, mb)
+}
+
+/// Build the 1F1B-I schedule. Requires `n_mb % p == 0` (Megatron's own
+/// constraint for interleaving) and `n_mb >= p`.
+pub fn build(topo: &Topology, n_mb: usize) -> Schedule {
+    let p = topo.pp;
+    let vpp = topo.vpp;
+    assert!(n_mb % p == 0, "1F1B-I requires n_mb % pp == 0 (got {n_mb} % {p})");
+    assert!(n_mb >= p);
+    let total = n_mb * vpp;
+    let placement = Placement::Interleaved;
+    let mut devices: Vec<Vec<Op>> = vec![Vec::new(); p];
+
+    for r in 0..p {
+        let ops = &mut devices[r];
+        let warmup = if n_mb == p { total } else { ((p - r - 1) * 2 + (vpp - 1) * p).min(total) };
+        // Device r owns chunk slots {0..vpp} → global chunk = slot*p + r.
+        let chunk_of = |slot: usize| slot * p + r;
+
+        for vid in 0..warmup {
+            let (slot, mb) = fwd_item(vid, p, vpp);
+            ops.push(Op::f(chunk_of(slot), mb));
+        }
+        let mut bwd_vid = 0usize;
+        for vid in warmup..total {
+            let (fslot, fmb) = fwd_item(vid, p, vpp);
+            ops.push(Op::f(chunk_of(fslot), fmb));
+            let (bslot, bmb) = bwd_item(bwd_vid, p, vpp);
+            ops.push(Op::b_full(chunk_of(bslot), bmb));
+            bwd_vid += 1;
+        }
+        while bwd_vid < total {
+            let (bslot, bmb) = bwd_item(bwd_vid, p, vpp);
+            ops.push(Op::b_full(chunk_of(bslot), bmb));
+            bwd_vid += 1;
+        }
+    }
+
+    Schedule { kind: ScheduleKind::OneF1BInterleaved, topo: *topo, n_mb, placement, devices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_id_mapping() {
+        // p=4, vpp=2: vids 0..3 -> slot0 mbs 0..3; 4..7 -> slot1 mbs 0..3;
+        // 8..11 -> slot0 mbs 4..7.
+        assert_eq!(fwd_item(0, 4, 2), (0, 0));
+        assert_eq!(fwd_item(3, 4, 2), (0, 3));
+        assert_eq!(fwd_item(4, 4, 2), (1, 0));
+        assert_eq!(fwd_item(7, 4, 2), (1, 3));
+        assert_eq!(fwd_item(8, 4, 2), (0, 4));
+        assert_eq!(bwd_item(0, 4, 2), (1, 0));
+    }
+
+    #[test]
+    fn op_counts_complete() {
+        let topo = Topology::new(1, 4, 1);
+        let s = build(&topo, 8);
+        assert_eq!(s.count_forwards(), 8 * topo.chunks());
+        assert_eq!(s.count_backwards(), 8 * topo.chunks());
+    }
+
+    #[test]
+    fn warmup_matches_megatron_formula() {
+        let topo = Topology::new(1, 4, 1);
+        let s = build(&topo, 8);
+        for (r, ops) in s.devices.iter().enumerate() {
+            // Leading forwards = warmup Fs plus the first steady-phase F
+            // (1F1B runs F-then-B).
+            let leading_f = ops.iter().take_while(|o| o.backward_part().is_none()).count();
+            assert_eq!(leading_f, (4 - r - 1) * 2 + 4 + 1, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn first_device_peak_in_flight_is_about_3p_minus_2() {
+        // Paper Table 1: 1F1B-I peak activation memory (3p-2)·M_a on dev 0.
+        // The F-before-B steady ordering transiently holds one more.
+        let p = 4;
+        let topo = Topology::new(1, p, 1);
+        let s = build(&topo, 16);
+        let mut in_flight = 0i64;
+        let mut peak = 0i64;
+        for op in &s.devices[0] {
+            if op.forward_part().is_some() {
+                in_flight += 1;
+            }
+            if op.backward_part().is_some() {
+                in_flight -= 1;
+            }
+            peak = peak.max(in_flight);
+        }
+        let peak = peak as usize;
+        assert!((3 * p - 2..=3 * p - 1).contains(&peak), "peak={peak}");
+    }
+
+    #[test]
+    #[should_panic(expected = "n_mb % pp")]
+    fn rejects_ragged_microbatch_count() {
+        build(&Topology::new(1, 4, 1), 6);
+    }
+}

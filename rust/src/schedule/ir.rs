@@ -1,0 +1,314 @@
+//! Schedule intermediate representation.
+//!
+//! Every scheduler (GPipe, 1F1B, 1F1B-I, ZB-V, STP and its variants) emits
+//! the same IR: an ordered list of [`Op`]s per PP device. The discrete-event
+//! simulator ([`crate::sim`]), the real multi-threaded executor
+//! ([`crate::exec`]), the legality validator ([`super::validate`]) and the
+//! timeline tracer ([`crate::trace`]) all consume this one representation —
+//! that is what makes baselines, variants and property tests cheap
+//! (DESIGN.md §6.1).
+//!
+//! Communication is *implicit*: cross-stage dependencies (`F(c,m)` needs
+//! `F(c-1,m)`, `B(c,m)` needs `B(c+1,m)`) are derived from the chunk
+//! placement; consumers charge P2P transfer cost on those edges. TP
+//! All-Reduce is a property of the op (every F carries a forward AR, every
+//! B an activation-backward AR) whose *exposure* is determined by the op
+//! shape: braided blocks hide it, full backwards hide the backward AR under
+//! `W`, bare `F`/`B` expose it. This single rule is the paper's Table 1.
+
+
+use crate::cluster::Topology;
+
+/// Which pass a plain op performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PassKind {
+    /// Forward pass of one chunk for one microbatch.
+    F,
+    /// Activation-gradient backward only (Zero-Bubble decoupling): the
+    /// weight-gradient is deferred to a separate [`PassKind::W`] op.
+    B,
+    /// Deferred weight-gradient computation.
+    W,
+    /// Full backward (B and W fused) — the classic 1F1B/GPipe backward.
+    /// Its backward All-Reduce overlaps naturally with the W part
+    /// (paper Fig. 3a, blue blocks).
+    BFull,
+}
+
+/// One scheduled item on a device's compute stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    /// A plain (non-braided) pass.
+    Pass { kind: PassKind, chunk: usize, mb: usize },
+    /// A **braided execution block** (paper §3, Fig. 3): the forward units
+    /// of `(f_chunk, f_mb)` interleaved with the backward units of
+    /// `(b_chunk, b_mb)` so each stream's All-Reduce overlaps the other
+    /// stream's compute. `b_full` selects Fig. 3a (backward includes weight
+    /// grad) vs Fig. 3b (weight grads separated out as later `W` ops).
+    Braided { f_chunk: usize, f_mb: usize, b_chunk: usize, b_mb: usize, b_full: bool },
+    /// A forward braided with a *stored* weight-gradient computation
+    /// (the warm-up phase's F&W blocks).
+    BraidedFW { f_chunk: usize, f_mb: usize, w_chunk: usize, w_mb: usize },
+    /// Offload a fraction of `(chunk, mb)`'s activations to host, in
+    /// parallel with subsequent compute (enhanced variant, §4.4).
+    /// `ratio` is the paper's α in [0,1].
+    Offload { chunk: usize, mb: usize, ratio: f32 },
+    /// Reload previously offloaded activations (must complete before the
+    /// corresponding backward).
+    Reload { chunk: usize, mb: usize },
+}
+
+impl Op {
+    pub fn f(chunk: usize, mb: usize) -> Op {
+        Op::Pass { kind: PassKind::F, chunk, mb }
+    }
+    pub fn b(chunk: usize, mb: usize) -> Op {
+        Op::Pass { kind: PassKind::B, chunk, mb }
+    }
+    pub fn w(chunk: usize, mb: usize) -> Op {
+        Op::Pass { kind: PassKind::W, chunk, mb }
+    }
+    pub fn b_full(chunk: usize, mb: usize) -> Op {
+        Op::Pass { kind: PassKind::BFull, chunk, mb }
+    }
+
+    /// The forward work this op performs, if any: `(chunk, mb)`.
+    pub fn forward_part(&self) -> Option<(usize, usize)> {
+        match *self {
+            Op::Pass { kind: PassKind::F, chunk, mb } => Some((chunk, mb)),
+            Op::Braided { f_chunk, f_mb, .. } => Some((f_chunk, f_mb)),
+            Op::BraidedFW { f_chunk, f_mb, .. } => Some((f_chunk, f_mb)),
+            _ => None,
+        }
+    }
+
+    /// The activation-backward work this op performs, if any.
+    pub fn backward_part(&self) -> Option<(usize, usize)> {
+        match *self {
+            Op::Pass { kind: PassKind::B | PassKind::BFull, chunk, mb } => Some((chunk, mb)),
+            Op::Braided { b_chunk, b_mb, .. } => Some((b_chunk, b_mb)),
+            _ => None,
+        }
+    }
+
+    /// The weight-gradient work this op performs, if any.
+    pub fn weight_part(&self) -> Option<(usize, usize)> {
+        match *self {
+            Op::Pass { kind: PassKind::W | PassKind::BFull, chunk, mb } => Some((chunk, mb)),
+            Op::Braided { b_chunk, b_mb, b_full: true, .. } => Some((b_chunk, b_mb)),
+            Op::BraidedFW { w_chunk, w_mb, .. } => Some((w_chunk, w_mb)),
+            _ => None,
+        }
+    }
+
+    /// Whether this op hides its forward All-Reduce (braided blocks do).
+    pub fn fwd_ar_overlapped(&self) -> bool {
+        matches!(self, Op::Braided { .. } | Op::BraidedFW { .. })
+    }
+
+    /// Whether this op hides its activation-backward All-Reduce: braided
+    /// blocks hide it under forward compute; full backwards hide it under
+    /// the fused weight-gradient compute.
+    pub fn bwd_ar_overlapped(&self) -> bool {
+        matches!(
+            self,
+            Op::Braided { .. } | Op::Pass { kind: PassKind::BFull, .. }
+        )
+    }
+}
+
+/// Chunk → device placement strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Megatron interleaving: chunk `c` on device `c % pp` (parallel flow).
+    Interleaved,
+    /// "V"-shape: chunk path descends then ascends the device grid
+    /// (paper §4.1; used by ZB-V and STP).
+    VShape,
+}
+
+impl Placement {
+    pub fn device_of(&self, chunk: usize, topo: &Topology) -> usize {
+        match self {
+            Placement::Interleaved => topo.interleaved_device(chunk),
+            Placement::VShape => topo.v_shape_device(chunk),
+        }
+    }
+}
+
+/// Which scheduling algorithm produced a schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScheduleKind {
+    GPipe,
+    OneF1B,
+    /// Interleaved 1F1B (Megatron-LM) — paper baseline (a).
+    OneF1BInterleaved,
+    /// Zero Bubble V — paper baseline (b).
+    ZbV,
+    /// Zero Bubble H1 (ablation baseline).
+    ZbH1,
+    /// The paper's synergistic schedule.
+    Stp,
+    /// STP with the memory-efficient warm-up (appendix Fig. 11(b)/12(d)).
+    StpMemEff,
+    /// STP enhanced variant with activation offloading (§4.4).
+    StpOffload,
+}
+
+impl ScheduleKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScheduleKind::GPipe => "gpipe",
+            ScheduleKind::OneF1B => "1f1b",
+            ScheduleKind::OneF1BInterleaved => "1f1b-i",
+            ScheduleKind::ZbV => "zb-v",
+            ScheduleKind::ZbH1 => "zb-h1",
+            ScheduleKind::Stp => "stp",
+            ScheduleKind::StpMemEff => "stp-memeff",
+            ScheduleKind::StpOffload => "stp-offload",
+        }
+    }
+
+    pub fn all() -> [ScheduleKind; 8] {
+        [
+            ScheduleKind::GPipe,
+            ScheduleKind::OneF1B,
+            ScheduleKind::OneF1BInterleaved,
+            ScheduleKind::ZbV,
+            ScheduleKind::ZbH1,
+            ScheduleKind::Stp,
+            ScheduleKind::StpMemEff,
+            ScheduleKind::StpOffload,
+        ]
+    }
+
+    /// The paper's three compared schedules (Figures 7–10, Tables 3–8).
+    pub fn paper_trio() -> [ScheduleKind; 3] {
+        [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp]
+    }
+}
+
+impl std::str::FromStr for ScheduleKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpipe" => Ok(ScheduleKind::GPipe),
+            "1f1b" => Ok(ScheduleKind::OneF1B),
+            "1f1b-i" | "1f1bi" | "interleaved" => Ok(ScheduleKind::OneF1BInterleaved),
+            "zb-v" | "zbv" => Ok(ScheduleKind::ZbV),
+            "zb-h1" | "zbh1" => Ok(ScheduleKind::ZbH1),
+            "stp" | "ours" => Ok(ScheduleKind::Stp),
+            "stp-memeff" | "memeff" => Ok(ScheduleKind::StpMemEff),
+            "stp-offload" | "offload" | "ours*" => Ok(ScheduleKind::StpOffload),
+            other => Err(format!("unknown schedule '{other}'")),
+        }
+    }
+}
+
+/// A complete schedule: per-device op lists plus the metadata consumers
+/// need to derive dependencies.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub kind: ScheduleKind,
+    pub topo: Topology,
+    /// Number of microbatches per iteration.
+    pub n_mb: usize,
+    pub placement: Placement,
+    /// `devices[d]` = ordered ops for PP rank `d`.
+    pub devices: Vec<Vec<Op>>,
+}
+
+impl Schedule {
+    /// Total chunks (virtual stages).
+    pub fn n_chunks(&self) -> usize {
+        self.topo.chunks()
+    }
+
+    /// Device owning a chunk under this schedule's placement.
+    pub fn device_of(&self, chunk: usize) -> usize {
+        self.placement.device_of(chunk, &self.topo)
+    }
+
+    /// Total op count across devices.
+    pub fn num_ops(&self) -> usize {
+        self.devices.iter().map(|d| d.len()).sum()
+    }
+
+    /// Iterate all ops with their device.
+    pub fn iter_ops(&self) -> impl Iterator<Item = (usize, &Op)> + '_ {
+        self.devices.iter().enumerate().flat_map(|(d, ops)| ops.iter().map(move |op| (d, op)))
+    }
+
+    /// Count of forward passes scheduled (including braided forwards).
+    pub fn count_forwards(&self) -> usize {
+        self.iter_ops().filter(|(_, op)| op.forward_part().is_some()).count()
+    }
+
+    /// Count of activation-backward passes scheduled.
+    pub fn count_backwards(&self) -> usize {
+        self.iter_ops().filter(|(_, op)| op.backward_part().is_some()).count()
+    }
+
+    /// Count of weight-gradient computations scheduled.
+    pub fn count_weight_grads(&self) -> usize {
+        self.iter_ops().filter(|(_, op)| op.weight_part().is_some()).count()
+    }
+
+    /// Number of *exposed* forward All-Reduce instances (non-braided F ops).
+    pub fn exposed_fwd_ars(&self) -> usize {
+        self.iter_ops()
+            .filter(|(_, op)| op.forward_part().is_some() && !op.fwd_ar_overlapped())
+            .count()
+    }
+
+    /// Number of exposed activation-backward All-Reduce instances.
+    pub fn exposed_bwd_ars(&self) -> usize {
+        self.iter_ops()
+            .filter(|(_, op)| op.backward_part().is_some() && !op.bwd_ar_overlapped())
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_parts() {
+        let f = Op::f(1, 2);
+        assert_eq!(f.forward_part(), Some((1, 2)));
+        assert_eq!(f.backward_part(), None);
+        assert_eq!(f.weight_part(), None);
+
+        let bf = Op::b_full(3, 4);
+        assert_eq!(bf.backward_part(), Some((3, 4)));
+        assert_eq!(bf.weight_part(), Some((3, 4)));
+
+        let br = Op::Braided { f_chunk: 0, f_mb: 5, b_chunk: 0, b_mb: 2, b_full: false };
+        assert_eq!(br.forward_part(), Some((0, 5)));
+        assert_eq!(br.backward_part(), Some((0, 2)));
+        assert_eq!(br.weight_part(), None);
+    }
+
+    #[test]
+    fn ar_exposure_rules_match_paper_table1() {
+        // Bare F exposes fwd AR (1F1B-I / ZB-V forward).
+        assert!(!Op::f(0, 0).fwd_ar_overlapped());
+        // Full backward hides bwd AR under W (1F1B-I backward).
+        assert!(Op::b_full(0, 0).bwd_ar_overlapped());
+        // Decoupled B exposes bwd AR (ZB-V's 4m·T_AR).
+        assert!(!Op::b(0, 0).bwd_ar_overlapped());
+        // Braided blocks hide both (STP's near-zero TP bubble).
+        let br = Op::Braided { f_chunk: 0, f_mb: 1, b_chunk: 0, b_mb: 0, b_full: true };
+        assert!(br.fwd_ar_overlapped() && br.bwd_ar_overlapped());
+    }
+
+    #[test]
+    fn schedule_kind_parse_roundtrip() {
+        for k in ScheduleKind::all() {
+            let parsed: ScheduleKind = k.name().parse().unwrap();
+            assert_eq!(parsed, k);
+        }
+        assert!("bogus".parse::<ScheduleKind>().is_err());
+    }
+}

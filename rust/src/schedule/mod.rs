@@ -1,0 +1,78 @@
+//! Pipeline-parallel schedule generators — the paper's L3 contribution.
+//!
+//! All generators emit the common IR of [`ir`]; see `DESIGN.md` §4 for the
+//! inventory. [`build_schedule`] is the one-stop entry point used by the
+//! CLI, the benches and the executor.
+
+pub mod builder;
+mod gpipe;
+mod interleaved;
+pub mod ir;
+mod one_f1b;
+pub mod stp;
+pub mod theory;
+pub mod validate;
+pub mod zbv;
+
+pub use builder::ShapeCosts;
+pub use ir::{Op, PassKind, Placement, Schedule, ScheduleKind};
+pub use stp::OffloadParams;
+pub use theory::{theory, TheoryInputs, TheoryRow};
+pub use validate::{assert_valid, validate, Violation};
+
+use crate::cluster::Topology;
+
+/// Build a schedule of the given kind with uniform chunk costs.
+pub fn build_schedule(kind: ScheduleKind, topo: &Topology, n_mb: usize) -> Schedule {
+    build_schedule_scaled(kind, topo, n_mb, vec![1.0; topo.chunks()])
+}
+
+/// Build a schedule with per-chunk relative compute scales (MLLM chunk
+/// imbalance). `chunk_scale.len()` must equal `topo.chunks()` (for the
+/// single-chunk-per-device schedules the scales are averaged pairwise).
+pub fn build_schedule_scaled(
+    kind: ScheduleKind,
+    topo: &Topology,
+    n_mb: usize,
+    chunk_scale: Vec<f64>,
+) -> Schedule {
+    let costs = ShapeCosts::default();
+    match kind {
+        ScheduleKind::GPipe => gpipe::build(topo, n_mb),
+        ScheduleKind::OneF1B => one_f1b::build(topo, n_mb),
+        ScheduleKind::OneF1BInterleaved => interleaved::build(topo, n_mb),
+        ScheduleKind::ZbV => zbv::build_zbv(topo, n_mb, costs, chunk_scale),
+        ScheduleKind::ZbH1 => zbv::build_zbh1(topo, n_mb, costs),
+        ScheduleKind::Stp => stp::build_stp(topo, n_mb, costs, chunk_scale),
+        ScheduleKind::StpMemEff => stp::build_stp_memeff(topo, n_mb, costs, chunk_scale),
+        ScheduleKind::StpOffload => {
+            stp::build_stp_offload(topo, n_mb, costs, chunk_scale, OffloadParams::default())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_builds_and_validates() {
+        let topo = Topology::new(2, 4, 1);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 8);
+            assert_valid(&s);
+        }
+    }
+
+    #[test]
+    fn every_kind_schedules_complete_work() {
+        let topo = Topology::new(1, 2, 1);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 6);
+            let chunks = s.n_chunks();
+            assert_eq!(s.count_forwards(), 6 * chunks, "{kind:?}");
+            assert_eq!(s.count_backwards(), 6 * chunks, "{kind:?}");
+            assert_eq!(s.count_weight_grads(), 6 * chunks, "{kind:?}");
+        }
+    }
+}

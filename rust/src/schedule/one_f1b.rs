@@ -1,0 +1,86 @@
+//! Classic non-interleaved 1F1B (PipeDream-flush, Narayanan et al. 2019).
+//!
+//! One chunk per device (`vpp` is ignored: the model is split into exactly
+//! `pp` stages). Device `d` warms up with `p-1-d` forwards, then alternates
+//! 1F1B, then drains backwards.
+
+use crate::cluster::Topology;
+
+use super::ir::{Op, Placement, Schedule, ScheduleKind};
+
+/// Build the classic 1F1B schedule (one chunk per device).
+pub fn build(topo: &Topology, n_mb: usize) -> Schedule {
+    let mut topo1 = *topo;
+    topo1.vpp = 1;
+    let p = topo1.pp;
+    assert!(n_mb >= p, "1F1B needs at least p microbatches (got {n_mb} < {p})");
+    let mut devices: Vec<Vec<Op>> = vec![Vec::new(); p];
+
+    for d in 0..p {
+        let chunk = d;
+        let warmup = p - 1 - d;
+        let ops = &mut devices[d];
+        for mb in 0..warmup {
+            ops.push(Op::f(chunk, mb));
+        }
+        // Steady: 1F1B.
+        let mut next_f = warmup;
+        let mut next_b = 0;
+        while next_f < n_mb {
+            ops.push(Op::f(chunk, next_f));
+            next_f += 1;
+            ops.push(Op::b_full(chunk, next_b));
+            next_b += 1;
+        }
+        // Cool-down.
+        while next_b < n_mb {
+            ops.push(Op::b_full(chunk, next_b));
+            next_b += 1;
+        }
+    }
+
+    Schedule { kind: ScheduleKind::OneF1B, topo: topo1, n_mb, placement: Placement::Interleaved, devices }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_chunk_per_device() {
+        let s = build(&Topology::new(1, 4, 1), 8);
+        assert_eq!(s.topo.vpp, 1);
+        assert_eq!(s.n_chunks(), 4);
+        assert_eq!(s.count_forwards(), 4 * 8);
+        assert_eq!(s.count_backwards(), 4 * 8);
+    }
+
+    #[test]
+    fn warmup_depth_decreases_with_rank() {
+        let s = build(&Topology::new(1, 4, 1), 8);
+        for (d, ops) in s.devices.iter().enumerate() {
+            let warmup = ops.iter().take_while(|o| o.backward_part().is_none()).count();
+            assert_eq!(warmup, 4 - d, "device {d}");
+        }
+    }
+
+    #[test]
+    fn in_flight_never_exceeds_p() {
+        // 1F1B's defining property: at most p microbatches in flight.
+        let s = build(&Topology::new(1, 4, 1), 16);
+        for ops in &s.devices {
+            let mut in_flight = 0i64;
+            let mut peak = 0i64;
+            for op in ops {
+                if op.forward_part().is_some() {
+                    in_flight += 1;
+                }
+                if op.backward_part().is_some() {
+                    in_flight -= 1;
+                }
+                peak = peak.max(in_flight);
+            }
+            assert!(peak <= 4);
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! STP — the paper's Synergistic Tensor and Pipeline schedule (§4).
+//!
+//! Construction follows the paper's three phases:
+//!
+//! * **Warm-up** — the maximum feasible number of in-flight microbatches
+//!   (cap `3p` activations per device, Table 1's `3p·M_a` peak) is admitted
+//!   before the first backward. The first overlapped F&B braids the second
+//!   microbatch's forward with the first's backward, with **weight-grad
+//!   separation active** (except where there is no next stage to feed) so
+//!   gradients propagate quickly; the deferred `W`s are drained by braided
+//!   **F&W** blocks.
+//! * **Steady** — weight separation is deactivated: full-backward braids
+//!   (`F&B`, Fig. 3a) alternate between the device's chunk 1 and chunk 0.
+//! * **Degraded/cool-down** — when microbatches run out, full backwards and
+//!   separated F&B re-appear; remaining PP bubbles are filled with the
+//!   stored weight-gradient computations.
+//!
+//! Placement is the **V-shape** (paper §4.1), so braiding pattern (2)
+//! (same chunk, forward microbatch index > backward index — always true
+//! because `B(c,m)` requires `F(c,m)` scheduled) is available on every
+//! device; pattern (1) cross-chunk braids are used as a fallback, which is
+//! exactly what keeps the schedule universal for MLLM-imbalanced chunks.
+
+use crate::cluster::Topology;
+
+use super::builder::{run_builder, BuildState, Policy, Proposal, ShapeCosts};
+use super::ir::{Op, Placement, Schedule, ScheduleKind};
+
+/// STP construction policy.
+pub struct StpPolicy {
+    /// In-flight activation caps per device and chunk class
+    /// (descending leg / ascending leg). Standard STP admits `2p + p = 3p`
+    /// (Table 1's `3p·M_a` peak); the memory-efficient warm-up variant
+    /// admits `p + p = 2p`.
+    pub caps: [i64; 2],
+    /// Memory-efficient warm-up (appendix Fig. 11b / schedule (d)): keep
+    /// weight separation on through a longer warm-up window.
+    pub mem_eff: bool,
+    /// Per-device: chunk used by the previous braid (for the steady-phase
+    /// chunk-1/chunk-0 alternation).
+    last_braid_chunk: Vec<Option<usize>>,
+}
+
+impl StpPolicy {
+    pub fn new(topo: &Topology, mem_eff: bool) -> Self {
+        let p = topo.pp as i64;
+        let caps = if mem_eff { [p, p] } else { [2 * p, p] };
+        StpPolicy { caps, mem_eff, last_braid_chunk: vec![None; topo.pp] }
+    }
+
+    fn cap_ok(&self, dev: usize, chunk: usize, st: &BuildState) -> bool {
+        let cls = st.class_of(chunk);
+        st.in_flight_class[dev][cls] < self.caps[cls]
+    }
+
+    /// Cap check for cross-class braids: one slot of headroom. Steady-state
+    /// braiding at the V's turn-around pairs (F₀,B₁) with (F₁,B₀); the
+    /// first braid of the pair transiently holds one extra activation that
+    /// the second returns, so the net peak cost is a single `M_a`.
+    fn braid_cap_ok(&self, dev: usize, chunk: usize, st: &BuildState) -> bool {
+        let cls = st.class_of(chunk);
+        st.in_flight_class[dev][cls] < self.caps[cls] + 1
+    }
+
+    /// Should this braid separate the weight grad (`b_full = false`)?
+    ///
+    /// Warm-up rule: the first backward of each chunk propagates with
+    /// separation so the next stage unblocks early — unless the backward
+    /// has no downstream stage (chunk 0 ends the backward chain). The
+    /// degraded phase (forwards nearly exhausted on this device) also
+    /// reactivates separation so F&B blocks align with full backwards.
+    fn separate_w(&self, dev: usize, st: &BuildState, b_chunk: usize, b_mb: usize) -> bool {
+        if b_chunk == 0 {
+            return false; // "except for the last stage"
+        }
+        let warmup_window = if self.mem_eff { st.topo.pp } else { 1 };
+        let in_warmup = b_mb < warmup_window;
+        let degraded = st.fwd_remaining(dev) <= 1;
+        in_warmup || degraded
+    }
+}
+
+impl Policy for StpPolicy {
+    fn propose(&mut self, dev: usize, st: &BuildState) -> Option<Proposal> {
+        let chunks = st.chunks_of(dev);
+        let now = st.dev_time[dev];
+        let eps = 1e-9;
+
+        // Braiding look-ahead: a braid starts at max(f_ready, b_ready), so
+        // pairing with a partner that arrives a fraction of a pass later
+        // still beats emitting a bare op now and exposing an All-Reduce.
+        let slack = st.costs.t_f * 1.0;
+
+        let b_soon: Vec<_> = chunks
+            .iter()
+            .filter_map(|&c| st.b_ready(c))
+            .filter(|(_, t)| *t <= now + slack + eps)
+            .collect();
+        let b_now_exists = b_soon.iter().any(|(_, t)| *t <= now + eps);
+        // Braid F candidates are *not* cap-checked: a braided block is
+        // memory-neutral (its F admits one activation, its B retires one).
+        let mut f_soon: Vec<_> = chunks
+            .iter()
+            .filter_map(|&c| st.f_ready(c))
+            .filter(|(_, t)| *t <= now + slack + eps)
+            .collect();
+        // Higher chunk first: completing the V's return leg unblocks the
+        // backward chain soonest.
+        f_soon.sort_by(|a, b| b.0.chunk.cmp(&a.0.chunk));
+        let f_now: Vec<_> = f_soon
+            .iter()
+            .filter(|(i, t)| *t <= now + eps && self.cap_ok(dev, i.chunk, st))
+            .copied()
+            .collect();
+
+        // 1. Braid a (soon-)ready backward with a (soon-)ready forward.
+        //    Pattern (2) (same chunk) is preferred and cap-exempt: its F
+        //    admits one activation exactly as its B retires one of the
+        //    same chunk, so the braid is memory-neutral per class.
+        //    Pattern (1) (cross-chunk) shifts memory between the V's legs
+        //    and therefore must respect the F-class cap.
+        if let Some((b, _)) = pick_b(&b_soon, self.last_braid_chunk[dev]) {
+            // Choose the forward partner that keeps the per-class
+            // activation balance lowest (the braid's B retires one unit of
+            // its own class); ties prefer pattern (2) (same chunk), then
+            // the V's return leg.
+            let b_cls = st.class_of(b.chunk);
+            let f = f_soon
+                .iter()
+                .filter(|(f, _)| {
+                    st.class_of(f.chunk) == b_cls || self.braid_cap_ok(dev, f.chunk, st)
+                })
+                .min_by_key(|(f, _)| {
+                    let cls = st.class_of(f.chunk);
+                    let net = st.in_flight_class[dev][cls] - i64::from(cls == b_cls);
+                    (net, usize::from(f.chunk != b.chunk), usize::MAX - f.chunk)
+                })
+                .map(|(f, _)| *f);
+            if let Some(f) = f {
+                let b_full = !self.separate_w(dev, st, b.chunk, b.mb);
+                self.last_braid_chunk[dev] = Some(b.chunk);
+                return Some(Proposal::Fb { f, b, b_full });
+            }
+            if b_now_exists {
+                // 2. Backward alone. Degraded phase: full backward;
+                //    cool-down (no forwards left on this device):
+                //    separated B — stored W fills the remaining bubbles.
+                if st.fwd_remaining(dev) == 0 {
+                    return Some(Proposal::B(b));
+                }
+                return Some(Proposal::BFull(b));
+            }
+        }
+
+        // 3. Forward alone; drain a stored weight-grad under it if any
+        //    (warm-up F&W blocks).
+        if let Some((f, _)) = f_now.first() {
+            if let Some(&w) = st.w_queue[dev].first() {
+                return Some(Proposal::Fw { f: *f, w });
+            }
+            return Some(Proposal::F(*f));
+        }
+
+        // 4. Nothing ready now: fill the bubble with a stored weight-grad.
+        if let Some(&w) = st.w_queue[dev].first() {
+            return Some(Proposal::W(w));
+        }
+
+        // 5. Idle: wait on the earliest future candidate (backward first).
+        let mut best: Option<(Proposal, f64)> = None;
+        for &c in &chunks {
+            if let Some((i, t)) = st.b_ready(c) {
+                if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+                    let p = if st.fwd_remaining(dev) == 0 { Proposal::B(i) } else { Proposal::BFull(i) };
+                    best = Some((p, t));
+                }
+            }
+        }
+        for &c in &chunks {
+            if let Some((i, t)) = st.f_ready(c) {
+                if self.cap_ok(dev, i.chunk, st) && best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+                    best = Some((Proposal::F(i), t));
+                }
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+}
+
+/// Steady-phase alternation: prefer the chunk that was *not* braided last
+/// ("one F&B for chunk 1, followed by one F&B for chunk 0"); fall back to
+/// the highest ready chunk (unblocks the backward chain soonest).
+fn pick_b(
+    b_now: &[(super::builder::Item, f64)],
+    last: Option<usize>,
+) -> Option<(super::builder::Item, f64)> {
+    if b_now.is_empty() {
+        return None;
+    }
+    if let Some(last_c) = last {
+        if let Some(x) = b_now.iter().find(|(i, _)| i.chunk != last_c) {
+            return Some(*x);
+        }
+    }
+    b_now.iter().max_by_key(|(i, _)| i.chunk).copied()
+}
+
+/// Build the standard STP schedule (paper Fig. 5).
+pub fn build_stp(topo: &Topology, n_mb: usize, costs: ShapeCosts, chunk_scale: Vec<f64>) -> Schedule {
+    assert!(topo.vpp == 2, "STP is defined for 2 virtual stages per device");
+    let mut policy = StpPolicy::new(topo, false);
+    run_builder(ScheduleKind::Stp, topo, n_mb, Placement::VShape, costs, chunk_scale, &mut policy)
+}
+
+/// Build the memory-efficient-warm-up variant (appendix schedule (d)).
+pub fn build_stp_memeff(topo: &Topology, n_mb: usize, costs: ShapeCosts, chunk_scale: Vec<f64>) -> Schedule {
+    assert!(topo.vpp == 2);
+    let mut policy = StpPolicy::new(topo, true);
+    let mut s =
+        run_builder(ScheduleKind::StpMemEff, topo, n_mb, Placement::VShape, costs, chunk_scale, &mut policy);
+    s.kind = ScheduleKind::StpMemEff;
+    s
+}
+
+/// Offloading parameters for the enhanced variant (§4.4).
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadParams {
+    /// Warm-up offload ratio (constrained so `T_o < T_F`).
+    pub alpha_warmup: f32,
+    /// Steady-phase offload ratio (may be higher — braided blocks give the
+    /// PCIe stream more time to hide under).
+    pub alpha_steady: f32,
+    /// How many ops before the backward to issue the reload (prefetch).
+    pub reload_lead: usize,
+}
+
+impl Default for OffloadParams {
+    fn default() -> Self {
+        OffloadParams { alpha_warmup: 0.3, alpha_steady: 0.7, reload_lead: 2 }
+    }
+}
+
+/// Build the enhanced STP variant with activation offloading: the standard
+/// schedule decorated with `Offload` after each *descending-leg* (chunk 0
+/// class, chunk id < p) forward and a prefetched `Reload` before the
+/// matching backward. Chunk-1-class activations have short lifespans and
+/// are never offloaded (paper §4.4: avoids dual PCIe contention).
+pub fn build_stp_offload(
+    topo: &Topology,
+    n_mb: usize,
+    costs: ShapeCosts,
+    chunk_scale: Vec<f64>,
+    params: OffloadParams,
+) -> Schedule {
+    let mut s = build_stp(topo, n_mb, costs, chunk_scale);
+    s.kind = ScheduleKind::StpOffload;
+    let p = topo.pp;
+
+    for ops in s.devices.iter_mut() {
+        let mut out: Vec<Op> = Vec::with_capacity(ops.len() * 2);
+        // First pass: insert Offload right after qualifying forwards.
+        for (idx, op) in ops.iter().enumerate() {
+            out.push(*op);
+            if let Some((c, mb)) = op.forward_part() {
+                if c < p {
+                    // Warm-up = before this device's first backward.
+                    let warmup = ops[..=idx].iter().all(|o| o.backward_part().is_none());
+                    let ratio = if warmup { params.alpha_warmup } else { params.alpha_steady };
+                    out.push(Op::Offload { chunk: c, mb, ratio });
+                }
+            }
+        }
+        // Second pass: insert Reload `reload_lead` compute-ops before the
+        // backward that consumes each offloaded activation.
+        let mut with_reloads: Vec<Op> = Vec::with_capacity(out.len() * 2);
+        let mut pending: Vec<(usize, Op)> = Vec::new(); // (insert_before_idx, reload)
+        for (idx, op) in out.iter().enumerate() {
+            if let Some((c, mb)) = op.backward_part() {
+                if c < p && out.iter().any(|o| matches!(o, Op::Offload { chunk, mb: m, .. } if *chunk == c && *m == mb)) {
+                    let at = idx.saturating_sub(params.reload_lead);
+                    pending.push((at, Op::Reload { chunk: c, mb }));
+                }
+            }
+        }
+        for (idx, op) in out.iter().enumerate() {
+            for (at, r) in &pending {
+                if *at == idx {
+                    with_reloads.push(*r);
+                }
+            }
+            with_reloads.push(*op);
+        }
+        *ops = with_reloads;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo4() -> Topology {
+        Topology::new(1, 4, 1)
+    }
+
+    fn scale(topo: &Topology) -> Vec<f64> {
+        vec![1.0; topo.chunks()]
+    }
+
+    #[test]
+    fn stp_completes_all_work() {
+        let t = topo4();
+        let s = build_stp(&t, 12, ShapeCosts::default(), scale(&t));
+        assert_eq!(s.count_forwards(), 12 * 8);
+        assert_eq!(s.count_backwards(), 12 * 8);
+        assert_eq!(s.count_weight_grads(), 12 * 8);
+    }
+
+    #[test]
+    fn stp_braids_dominate_steady_state() {
+        // Most backwards should ride inside braided blocks: the TP bubble
+        // must be O(p), not O(m) (paper Table 1: (2p+1)·T_AR vs 4m·T_AR).
+        let t = topo4();
+        let m = 64;
+        let s = build_stp(&t, m, ShapeCosts::default(), scale(&t));
+        let braided = s
+            .iter_ops()
+            .filter(|(_, op)| matches!(op, Op::Braided { .. }))
+            .count();
+        let total_b = s.count_backwards();
+        assert!(
+            braided as f64 > 0.75 * total_b as f64,
+            "only {braided}/{total_b} backwards braided"
+        );
+        // The braided fraction grows with m (bare ops are O(p) ramps).
+        let small = build_stp(&t, 16, ShapeCosts::default(), scale(&t));
+        let frac = |s: &Schedule| {
+            s.iter_ops().filter(|(_, op)| matches!(op, Op::Braided { .. })).count() as f64
+                / s.count_backwards() as f64
+        };
+        assert!(frac(&s) > frac(&small) - 0.05);
+    }
+
+    #[test]
+    fn stp_exposed_ars_scale_with_p_not_m() {
+        let t = topo4();
+        let costs = ShapeCosts::default();
+        let small = build_stp(&t, 16, costs, scale(&t));
+        let large = build_stp(&t, 64, costs, scale(&t));
+        let exposed = |s: &Schedule| s.exposed_fwd_ars() + s.exposed_bwd_ars();
+        // Exposure grows sub-linearly in m (paper: constant in m).
+        let e_small = exposed(&small) as f64;
+        let e_large = exposed(&large) as f64;
+        assert!(
+            e_large < 2.0 * e_small,
+            "exposed ARs grew {e_small} -> {e_large} for 4x microbatches"
+        );
+    }
+
+    #[test]
+    fn stp_same_chunk_braids_have_later_forward_mb() {
+        // Fig. 11(a): the braiding constraint f_mb > b_mb for pattern (2).
+        let t = topo4();
+        let s = build_stp(&t, 12, ShapeCosts::default(), scale(&t));
+        for (_, op) in s.iter_ops() {
+            if let Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } = op {
+                if f_chunk == b_chunk {
+                    assert!(f_mb > b_mb, "braid {op:?} violates f_mb > b_mb");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stp_peak_in_flight_about_3p() {
+        let p = 4;
+        let t = Topology::new(1, p, 1);
+        let s = build_stp(&t, 24, ShapeCosts::default(), scale(&t));
+        for (d, ops) in s.devices.iter().enumerate() {
+            let mut live = 0i64;
+            let mut peak = 0i64;
+            for op in ops {
+                if op.forward_part().is_some() {
+                    live += 1;
+                }
+                if op.weight_part().is_some() {
+                    live -= 1;
+                }
+                peak = peak.max(live);
+            }
+            // Cross-class braids may transiently hold one extra activation
+            // (see `braid_cap_ok`).
+            assert!(peak <= 3 * p as i64 + 2, "device {d} peak {peak} > 3p+2");
+            if d == 0 {
+                assert!(peak >= 2 * p as i64, "device 0 peak {peak} below 2p — warm-up too shy");
+            }
+        }
+    }
+
+    #[test]
+    fn memeff_has_lower_peak_than_standard() {
+        let t = topo4();
+        let m = 16;
+        let peak0 = |s: &Schedule| {
+            let mut live = 0i64;
+            let mut peak = 0i64;
+            for op in &s.devices[0] {
+                if op.forward_part().is_some() {
+                    live += 1;
+                }
+                if op.weight_part().is_some() {
+                    live -= 1;
+                }
+                peak = peak.max(live);
+            }
+            peak
+        };
+        let std = build_stp(&t, m, ShapeCosts::default(), scale(&t));
+        let eff = build_stp_memeff(&t, m, ShapeCosts::default(), scale(&t));
+        assert!(peak0(&eff) <= peak0(&std));
+    }
+
+    #[test]
+    fn offload_variant_pairs_offloads_with_reloads() {
+        let t = topo4();
+        let s = build_stp_offload(&t, 8, ShapeCosts::default(), scale(&t), OffloadParams::default());
+        let offloads: Vec<(usize, usize)> = s
+            .iter_ops()
+            .filter_map(|(_, op)| match op {
+                Op::Offload { chunk, mb, .. } => Some((*chunk, *mb)),
+                _ => None,
+            })
+            .collect();
+        assert!(!offloads.is_empty());
+        for (c, mb) in &offloads {
+            assert!(*c < t.pp, "only descending-leg chunks are offloaded");
+            let has_reload = s
+                .iter_ops()
+                .any(|(_, op)| matches!(op, Op::Reload { chunk, mb: m } if chunk == c && m == mb));
+            assert!(has_reload, "offloaded ({c},{mb}) never reloaded");
+        }
+        // Chunk-1-class activations are never offloaded.
+        assert!(offloads.iter().all(|(c, _)| *c < t.pp));
+    }
+
+    #[test]
+    fn reload_precedes_backward() {
+        let t = topo4();
+        let s = build_stp_offload(&t, 8, ShapeCosts::default(), scale(&t), OffloadParams::default());
+        for ops in &s.devices {
+            for (c, mb) in ops.iter().filter_map(|o| match o {
+                Op::Reload { chunk, mb } => Some((*chunk, *mb)),
+                _ => None,
+            }) {
+                let rl = ops
+                    .iter()
+                    .position(|o| matches!(o, Op::Reload { chunk, mb: m } if *chunk == c && *m == mb))
+                    .unwrap();
+                let bw = ops.iter().position(|o| o.backward_part() == Some((c, mb)));
+                if let Some(bw) = bw {
+                    assert!(rl < bw, "reload of ({c},{mb}) after its backward");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,384 @@
+//! Schedule legality validator.
+//!
+//! Independent of both the builder and the simulator: replays a schedule's
+//! per-device op lists against the dependency rules and reports every
+//! violation. Used by unit/property tests and by the CLI (`stp validate`).
+//!
+//! Rules checked:
+//! 1. **Completeness** — every `(chunk, mb)` has exactly one F, one B and
+//!    one W (W possibly fused via `BFull`/braided-full).
+//! 2. **Placement** — ops only appear on the device owning their chunk.
+//! 3. **Dependency order** — a global topological replay succeeds:
+//!    `F(c,m)` after `F(c-1,m)`; `B(c,m)` after `F(c,m)` and `B(c+1,m)`;
+//!    `W(c,m)` after `B(c,m)`.
+//! 4. **Braiding constraint** (paper Fig. 11a): same-chunk braids have
+//!    `f_mb > b_mb`.
+//! 5. **Offload pairing** — every `Reload` has a preceding `Offload`; every
+//!    offloaded activation is reloaded before its backward.
+//! 6. **Per-chunk microbatch order** — F (and B) of a chunk run in
+//!    ascending microbatch order (required by the FIFO activation queues
+//!    of the real executor).
+
+use std::collections::HashSet;
+
+use super::ir::{Op, Schedule};
+
+/// A single validation failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub device: usize,
+    pub index: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "dev {} op#{}: {}", self.device, self.index, self.message)
+    }
+}
+
+/// Validate a schedule; empty vec = legal.
+pub fn validate(s: &Schedule) -> Vec<Violation> {
+    let mut v = Vec::new();
+    check_completeness(s, &mut v);
+    check_placement(s, &mut v);
+    check_braiding(s, &mut v);
+    check_mb_order(s, &mut v);
+    check_dependencies(s, &mut v);
+    check_offload(s, &mut v);
+    v
+}
+
+/// Convenience: panic with a readable report if the schedule is illegal.
+pub fn assert_valid(s: &Schedule) {
+    let v = validate(s);
+    assert!(
+        v.is_empty(),
+        "schedule {:?} (p={}, m={}) has {} violations:\n{}",
+        s.kind,
+        s.topo.pp,
+        s.n_mb,
+        v.len(),
+        v.iter().take(20).map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+fn check_completeness(s: &Schedule, v: &mut Vec<Violation>) {
+    let n_chunks = s.n_chunks();
+    let mut f = vec![vec![0usize; s.n_mb]; n_chunks];
+    let mut b = vec![vec![0usize; s.n_mb]; n_chunks];
+    let mut w = vec![vec![0usize; s.n_mb]; n_chunks];
+    for (d, op) in s.iter_ops() {
+        let mut tag = |table: &mut Vec<Vec<usize>>, part: Option<(usize, usize)>, what: &str| {
+            if let Some((c, m)) = part {
+                if c >= n_chunks || m >= s.n_mb {
+                    v.push(Violation {
+                        device: d,
+                        index: 0,
+                        message: format!("{what} ({c},{m}) out of range"),
+                    });
+                } else {
+                    table[c][m] += 1;
+                }
+            }
+        };
+        tag(&mut f, op.forward_part(), "F");
+        tag(&mut b, op.backward_part(), "B");
+        tag(&mut w, op.weight_part(), "W");
+    }
+    for c in 0..n_chunks {
+        for m in 0..s.n_mb {
+            for (table, what) in [(&f, "F"), (&b, "B"), (&w, "W")] {
+                if table[c][m] != 1 {
+                    v.push(Violation {
+                        device: s.device_of(c),
+                        index: 0,
+                        message: format!("{what}({c},{m}) scheduled {} times", table[c][m]),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn check_placement(s: &Schedule, v: &mut Vec<Violation>) {
+    for (d, ops) in s.devices.iter().enumerate() {
+        for (i, op) in ops.iter().enumerate() {
+            for part in [op.forward_part(), op.backward_part(), op.weight_part()] {
+                if let Some((c, _)) = part {
+                    if s.device_of(c) != d {
+                        v.push(Violation {
+                            device: d,
+                            index: i,
+                            message: format!("chunk {c} belongs to device {}", s.device_of(c)),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_braiding(s: &Schedule, v: &mut Vec<Violation>) {
+    for (d, ops) in s.devices.iter().enumerate() {
+        for (i, op) in ops.iter().enumerate() {
+            if let Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } = op {
+                if f_chunk == b_chunk && f_mb <= b_mb {
+                    v.push(Violation {
+                        device: d,
+                        index: i,
+                        message: format!(
+                            "braid F({f_chunk},{f_mb}) with B({b_chunk},{b_mb}): needs f_mb > b_mb"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+fn check_mb_order(s: &Schedule, v: &mut Vec<Violation>) {
+    let n_chunks = s.n_chunks();
+    let mut next_f = vec![0usize; n_chunks];
+    let mut next_b = vec![0usize; n_chunks];
+    // Per-device in-order walk; chunk streams are per-chunk so a global
+    // interleave across devices is fine to check per device op order.
+    for (d, ops) in s.devices.iter().enumerate() {
+        for (i, op) in ops.iter().enumerate() {
+            if let Some((c, m)) = op.forward_part() {
+                if m != next_f[c] {
+                    v.push(Violation {
+                        device: d,
+                        index: i,
+                        message: format!("F({c},{m}) out of order (expected mb {})", next_f[c]),
+                    });
+                }
+                next_f[c] = m + 1;
+            }
+            if let Some((c, m)) = op.backward_part() {
+                if m != next_b[c] {
+                    v.push(Violation {
+                        device: d,
+                        index: i,
+                        message: format!("B({c},{m}) out of order (expected mb {})", next_b[c]),
+                    });
+                }
+                next_b[c] = m + 1;
+            }
+        }
+    }
+}
+
+/// Topological replay: repeatedly scan device cursors, executing any head
+/// op whose dependencies are satisfied. If no cursor can advance and work
+/// remains, the schedule deadlocks.
+fn check_dependencies(s: &Schedule, v: &mut Vec<Violation>) {
+    let n_chunks = s.n_chunks();
+    let mut cursor = vec![0usize; s.devices.len()];
+    let mut f_done = vec![vec![false; s.n_mb]; n_chunks];
+    let mut b_done = vec![vec![false; s.n_mb]; n_chunks];
+
+    let ready = |op: &Op, f_done: &Vec<Vec<bool>>, b_done: &Vec<Vec<bool>>| -> bool {
+        let f_ok = |c: usize, m: usize| c == 0 || f_done[c - 1][m];
+        let b_ok =
+            |c: usize, m: usize| f_done[c][m] && (c + 1 == n_chunks || b_done[c + 1][m]);
+        match *op {
+            Op::Pass { kind: super::ir::PassKind::F, chunk, mb } => f_ok(chunk, mb),
+            Op::Pass { kind: super::ir::PassKind::B | super::ir::PassKind::BFull, chunk, mb } => {
+                b_ok(chunk, mb)
+            }
+            Op::Pass { kind: super::ir::PassKind::W, chunk, mb } => b_done[chunk][mb],
+            Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } => {
+                f_ok(f_chunk, f_mb) && b_ok(b_chunk, b_mb)
+            }
+            Op::BraidedFW { f_chunk, f_mb, w_chunk, w_mb } => {
+                f_ok(f_chunk, f_mb) && b_done[w_chunk][w_mb]
+            }
+            Op::Offload { .. } | Op::Reload { .. } => true,
+        }
+    };
+
+    loop {
+        let mut advanced = false;
+        for d in 0..s.devices.len() {
+            while cursor[d] < s.devices[d].len() {
+                let op = &s.devices[d][cursor[d]];
+                if !ready(op, &f_done, &b_done) {
+                    break;
+                }
+                if let Some((c, m)) = op.forward_part() {
+                    f_done[c][m] = true;
+                }
+                if let Some((c, m)) = op.backward_part() {
+                    b_done[c][m] = true;
+                }
+                cursor[d] += 1;
+                advanced = true;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    for (d, ops) in s.devices.iter().enumerate() {
+        if cursor[d] < ops.len() {
+            v.push(Violation {
+                device: d,
+                index: cursor[d],
+                message: format!("deadlock: op {:?} never becomes ready", ops[cursor[d]]),
+            });
+        }
+    }
+}
+
+fn check_offload(s: &Schedule, v: &mut Vec<Violation>) {
+    for (d, ops) in s.devices.iter().enumerate() {
+        let mut offloaded: HashSet<(usize, usize)> = HashSet::new();
+        let mut reloaded: HashSet<(usize, usize)> = HashSet::new();
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Offload { chunk, mb, ratio } => {
+                    if !(0.0..=1.0).contains(&ratio) {
+                        v.push(Violation {
+                            device: d,
+                            index: i,
+                            message: format!("offload ratio {ratio} outside [0,1]"),
+                        });
+                    }
+                    offloaded.insert((chunk, mb));
+                }
+                Op::Reload { chunk, mb } => {
+                    if !offloaded.contains(&(chunk, mb)) {
+                        v.push(Violation {
+                            device: d,
+                            index: i,
+                            message: format!("reload of ({chunk},{mb}) without offload"),
+                        });
+                    }
+                    reloaded.insert((chunk, mb));
+                }
+                _ => {
+                    if let Some((c, m)) = op.backward_part() {
+                        if offloaded.contains(&(c, m)) && !reloaded.contains(&(c, m)) {
+                            v.push(Violation {
+                                device: d,
+                                index: i,
+                                message: format!("backward of ({c},{m}) before reload"),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::schedule::ir::{Placement, ScheduleKind};
+
+    fn tiny_legal() -> Schedule {
+        // p=1, vpp=2, m=1: F0 F1 B1 B0 with fused W on one device.
+        let topo = Topology::new(1, 1, 1);
+        Schedule {
+            kind: ScheduleKind::GPipe,
+            topo,
+            n_mb: 1,
+            placement: Placement::Interleaved,
+            devices: vec![vec![Op::f(0, 0), Op::f(1, 0), Op::b_full(1, 0), Op::b_full(0, 0)]],
+        }
+    }
+
+    #[test]
+    fn legal_schedule_passes() {
+        assert!(validate(&tiny_legal()).is_empty());
+    }
+
+    #[test]
+    fn missing_backward_detected() {
+        let mut s = tiny_legal();
+        s.devices[0].pop();
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("scheduled 0 times")));
+    }
+
+    #[test]
+    fn double_forward_detected() {
+        let mut s = tiny_legal();
+        s.devices[0].insert(0, Op::f(0, 0));
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("scheduled 2 times")));
+    }
+
+    #[test]
+    fn deadlock_detected() {
+        let topo = Topology::new(1, 1, 1);
+        // B before its F.
+        let s = Schedule {
+            kind: ScheduleKind::GPipe,
+            topo,
+            n_mb: 1,
+            placement: Placement::Interleaved,
+            devices: vec![vec![Op::b_full(1, 0), Op::f(0, 0), Op::f(1, 0), Op::b_full(0, 0)]],
+        };
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("deadlock")));
+    }
+
+    #[test]
+    fn illegal_braid_detected() {
+        let topo = Topology::new(1, 1, 1);
+        let s = Schedule {
+            kind: ScheduleKind::Stp,
+            topo,
+            n_mb: 2,
+            placement: Placement::VShape,
+            devices: vec![vec![
+                Op::f(0, 0),
+                Op::f(1, 0),
+                // Same chunk, f_mb <= b_mb: illegal (Fig. 11a).
+                Op::Braided { f_chunk: 1, f_mb: 1, b_chunk: 1, b_mb: 1, b_full: true },
+                Op::f(0, 1),
+                Op::b_full(1, 0),
+                Op::b_full(0, 1),
+                Op::b_full(0, 0),
+            ]],
+        };
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("needs f_mb > b_mb")));
+    }
+
+    #[test]
+    fn wrong_device_detected() {
+        let topo = Topology::new(1, 2, 1);
+        let mut devices = vec![Vec::new(), Vec::new()];
+        // chunk 1 belongs to device 1 under VShape(p=2): path 0,1,1,0.
+        devices[0].push(Op::f(0, 0));
+        devices[0].push(Op::f(1, 0)); // wrong device
+        devices[0].push(Op::f(2, 0)); // wrong device (chunk2 -> dev1)
+        devices[0].push(Op::f(3, 0));
+        devices[0].push(Op::b_full(3, 0));
+        devices[1].push(Op::b_full(2, 0));
+        devices[0].push(Op::b_full(1, 0));
+        devices[0].push(Op::b_full(0, 0));
+        let s = Schedule {
+            kind: ScheduleKind::Stp,
+            topo,
+            n_mb: 1,
+            placement: Placement::VShape,
+            devices,
+        };
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("belongs to device")));
+    }
+
+    #[test]
+    fn reload_without_offload_detected() {
+        let mut s = tiny_legal();
+        s.devices[0].insert(2, Op::Reload { chunk: 1, mb: 0 });
+        let v = validate(&s);
+        assert!(v.iter().any(|x| x.message.contains("without offload")));
+    }
+}

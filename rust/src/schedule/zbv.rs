@@ -1,0 +1,150 @@
+//! Zero-Bubble V (ZB-V, Qi et al. 2024 "Pipeline Parallelism with
+//! Controllable Memory") — the paper's baseline (b), plus ZB-H1.
+//!
+//! ZB-V decouples every backward into activation-grad `B` and deferred
+//! weight-grad `W`, places chunks on the **V-shape** path, prioritizes
+//! `B > F > W` (W fills what would otherwise be bubbles), and caps
+//! in-flight activations at `2p` per device — giving the `2p·M_a` peak of
+//! paper Table 1 at the cost of *exposing* the backward All-Reduce
+//! (`4m·T_AR` total TP bubble, the effect the paper's Fig. 8 discussion
+//! attributes ZB-V's losses to).
+
+use crate::cluster::Topology;
+
+use super::builder::{run_builder, BuildState, Policy, Proposal, ShapeCosts};
+use super::ir::{Placement, Schedule, ScheduleKind};
+
+/// B > F > W priority with per-leg in-flight caps.
+pub struct ZbPolicy {
+    /// Max live activations per device for the descending (`chunk < p`)
+    /// and ascending chunk classes. Separate caps guarantee the warm-up
+    /// can never starve the V's return leg (deadlock-freedom).
+    pub caps: [i64; 2],
+}
+
+impl ZbPolicy {
+    fn cap_ok(&self, dev: usize, chunk: usize, st: &BuildState) -> bool {
+        let cls = st.class_of(chunk);
+        st.in_flight_class[dev][cls] < self.caps[cls]
+    }
+}
+
+impl Policy for ZbPolicy {
+    fn propose(&mut self, dev: usize, st: &BuildState) -> Option<Proposal> {
+        let chunks = st.chunks_of(dev);
+        let now = st.dev_time[dev];
+        let eps = 1e-9;
+
+        // 1. A backward that is ready by the device clock — highest chunk
+        //    first (closest to the loss; unblocks downstream soonest).
+        let mut b_cands: Vec<_> = chunks.iter().filter_map(|&c| st.b_ready(c)).collect();
+        b_cands.sort_by(|a, b| b.0.chunk.cmp(&a.0.chunk));
+        for (i, t) in &b_cands {
+            if *t <= now + eps {
+                return Some(Proposal::B(*i));
+            }
+        }
+        // 2. A forward ready by the clock, if the memory cap allows.
+        //    Higher chunk first: completing the V's return leg unblocks
+        //    the backward chain soonest.
+        let mut f_cands: Vec<_> = chunks
+            .iter()
+            .filter_map(|&c| st.f_ready(c))
+            .filter(|(i, _)| self.cap_ok(dev, i.chunk, st))
+            .collect();
+        f_cands.sort_by(|a, b| b.0.chunk.cmp(&a.0.chunk));
+        for (i, t) in &f_cands {
+            if *t <= now + eps {
+                return Some(Proposal::F(*i));
+            }
+        }
+        // 3. Fill the bubble with a stored weight-grad.
+        if let Some(&w) = st.w_queue[dev].first() {
+            return Some(Proposal::W(w));
+        }
+        // 4. Nothing ready now: wait for the earliest B or (cap allowing) F.
+        let mut best: Option<(Proposal, f64)> = None;
+        for (i, t) in b_cands {
+            if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+                best = Some((Proposal::B(i), t));
+            }
+        }
+        for (i, t) in f_cands {
+            if best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+                best = Some((Proposal::F(i), t));
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+}
+
+/// Build ZB-V: V-shape placement, `2p` in-flight cap.
+pub fn build_zbv(topo: &Topology, n_mb: usize, costs: ShapeCosts, chunk_scale: Vec<f64>) -> Schedule {
+    assert!(topo.vpp == 2, "ZB-V is defined for 2 virtual stages per device");
+    let p = topo.pp as i64;
+    let mut policy = ZbPolicy { caps: [p, p] };
+    run_builder(ScheduleKind::ZbV, topo, n_mb, Placement::VShape, costs, chunk_scale, &mut policy)
+}
+
+/// Build ZB-H1 (Zero Bubble, handcrafted-1): one chunk per device
+/// (vpp = 1), decoupled B/W, 1F1B-like `p` in-flight cap. Ablation
+/// baseline showing decoupling without the V placement.
+pub fn build_zbh1(topo: &Topology, n_mb: usize, costs: ShapeCosts) -> Schedule {
+    let mut topo1 = *topo;
+    topo1.vpp = 1;
+    let mut policy = ZbPolicy { caps: [topo1.pp as i64, topo1.pp as i64] };
+    let scale = vec![1.0; topo1.chunks()];
+    run_builder(ScheduleKind::ZbH1, &topo1, n_mb, Placement::Interleaved, costs, scale, &mut policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zbv_completes_all_work() {
+        let topo = Topology::new(1, 4, 1);
+        let s = build_zbv(&topo, 12, ShapeCosts::default(), vec![1.0; topo.chunks()]);
+        assert_eq!(s.count_forwards(), 12 * 8);
+        assert_eq!(s.count_backwards(), 12 * 8);
+        assert_eq!(s.count_weight_grads(), 12 * 8);
+    }
+
+    #[test]
+    fn zbv_exposes_all_ars() {
+        // Table 1: ZB-V TP bubble = 4·m·T_AR — every F and every B exposed.
+        let topo = Topology::new(4, 4, 1);
+        let s = build_zbv(&topo, 8, ShapeCosts::default(), vec![1.0; topo.chunks()]);
+        assert_eq!(s.exposed_fwd_ars(), s.count_forwards());
+        assert_eq!(s.exposed_bwd_ars(), s.count_backwards());
+    }
+
+    #[test]
+    fn zbv_respects_memory_cap() {
+        let p = 4;
+        let topo = Topology::new(1, p, 1);
+        let s = build_zbv(&topo, 16, ShapeCosts::default(), vec![1.0; topo.chunks()]);
+        // Replay in-flight per device: +1 at F, -1 at W (weight grad frees).
+        for (d, ops) in s.devices.iter().enumerate() {
+            let mut live = 0i64;
+            let mut peak = 0i64;
+            for op in ops {
+                if op.forward_part().is_some() {
+                    live += 1;
+                }
+                if op.weight_part().is_some() {
+                    live -= 1;
+                }
+                peak = peak.max(live);
+            }
+            assert!(peak <= 2 * p as i64, "device {d}: peak {peak} > 2p");
+        }
+    }
+
+    #[test]
+    fn zbh1_single_chunk_per_device() {
+        let s = build_zbh1(&Topology::new(1, 4, 1), 8, ShapeCosts::default());
+        assert_eq!(s.topo.vpp, 1);
+        assert_eq!(s.count_forwards(), 4 * 8);
+    }
+}

@@ -1,0 +1,271 @@
+//! Two-stream (compute + communication) timing of execution blocks.
+//!
+//! This is the paper's Fig. 3 at timing granularity: a device owns one
+//! compute stream and one TP-communication stream. Every fine-grained unit
+//! (Pre-Attn, Attn, Pre-MLP, MLP and their backward counterparts) runs on
+//! the compute stream; the All-Reduce a unit emits runs on the comm stream;
+//! and the next unit *of the same direction* after an AR must wait for that
+//! AR (data dependency), while units of the braided partner direction keep
+//! the compute stream busy. Exactly this rule makes the braided blocks
+//! hide TP communication and exposes it for bare F/B passes.
+
+/// One compute unit: `compute` seconds on the compute stream, then an
+/// optional All-Reduce of `ar` seconds on the comm stream. `stream` tags
+/// the direction (0 = forward, 1 = backward, 2 = weight-grad) so the
+/// AR-waiting rule can be applied per direction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Unit {
+    pub compute: f64,
+    pub ar: f64,
+    pub stream: u8,
+}
+
+impl Unit {
+    pub fn f(compute: f64, ar: f64) -> Unit {
+        Unit { compute, ar, stream: 0 }
+    }
+    pub fn b(compute: f64, ar: f64) -> Unit {
+        Unit { compute, ar, stream: 1 }
+    }
+    pub fn w(compute: f64) -> Unit {
+        Unit { compute, ar: 0.0, stream: 2 }
+    }
+}
+
+/// Result of timing a block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockTiming {
+    /// Wall-clock duration of the block.
+    pub duration: f64,
+    /// Total compute time (lower bound on duration).
+    pub compute: f64,
+    /// Comm time that did **not** overlap compute (the block's TP bubble).
+    pub exposed_ar: f64,
+    /// Completion offset of the forward sub-stream (last F unit + its AR).
+    /// Downstream consumers (the next pipeline stage) can start here, not
+    /// at `duration` — braids do not serialize the pipeline chain.
+    pub f_done: f64,
+    /// Completion offset of the backward sub-stream.
+    pub b_done: f64,
+}
+
+/// Execute a unit sequence on the two-stream machine.
+///
+/// `units` is the braided order in which the compute stream runs the
+/// units. Each unit may start only after (a) the compute stream is free
+/// and (b) the previous AR *of its own stream* has finished (the AR carries
+/// the activations/gradients the unit consumes). ARs are serialized on the
+/// comm stream in emission order. The block's `duration` includes any
+/// trailing AR (it must finish before the block's results are usable).
+pub fn time_block(units: &[Unit]) -> BlockTiming {
+    let mut t_compute = 0.0f64; // compute stream frontier
+    let mut t_comm = 0.0f64; // comm stream frontier
+    let mut stream_gate = [0.0f64; 3]; // per-direction AR barrier
+    let mut stream_done = [0.0f64; 3]; // per-direction completion
+    let mut compute_total = 0.0f64;
+    let mut busy_until = 0.0f64; // last compute finish
+
+    for u in units {
+        let start = t_compute.max(stream_gate[u.stream as usize]);
+        let finish = start + u.compute;
+        t_compute = finish;
+        busy_until = finish;
+        compute_total += u.compute;
+        stream_done[u.stream as usize] = finish;
+        if u.ar > 0.0 {
+            let ar_start = t_comm.max(finish);
+            let ar_finish = ar_start + u.ar;
+            t_comm = ar_finish;
+            stream_gate[u.stream as usize] = ar_finish;
+            stream_done[u.stream as usize] = ar_finish;
+        }
+    }
+    let duration = busy_until.max(t_comm);
+    BlockTiming {
+        duration,
+        compute: compute_total,
+        exposed_ar: duration - compute_total,
+        f_done: if stream_done[0] > 0.0 { stream_done[0] } else { duration },
+        b_done: if stream_done[1] > 0.0 { stream_done[1] } else { duration },
+    }
+}
+
+/// Interleave two unit sequences one-for-one (the braided order of
+/// Fig. 3a): `a0 b0 a1 b1 …` with the tail of the longer sequence
+/// appended. The compute stream alternates directions, so each stream's
+/// AR hides under the other stream's next unit.
+pub fn braid(a: &[Unit], b: &[Unit]) -> Vec<Unit> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let n = a.len().max(b.len());
+    for i in 0..n {
+        if i < a.len() {
+            out.push(a[i]);
+        }
+        if i < b.len() {
+            out.push(b[i]);
+        }
+    }
+    out
+}
+
+/// Per-chunk unit sequences (built by the cost model).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ChunkUnits {
+    /// Forward units in execution order.
+    pub fwd: Vec<Unit>,
+    /// Activation-backward units in execution order.
+    pub bwd: Vec<Unit>,
+    /// Weight-gradient units (no ARs).
+    pub wgrad: Vec<Unit>,
+}
+
+impl ChunkUnits {
+    /// Bare forward pass: serialized units → every AR exposed.
+    pub fn time_f(&self) -> BlockTiming {
+        time_block(&self.fwd)
+    }
+
+    /// Bare decoupled backward: every AR exposed (the ZB-V penalty).
+    pub fn time_b(&self) -> BlockTiming {
+        time_block(&self.bwd)
+    }
+
+    /// Weight-gradient pass.
+    pub fn time_w(&self) -> BlockTiming {
+        time_block(&self.wgrad)
+    }
+
+    /// Full backward (B+W fused): W units braided after each B unit so the
+    /// backward ARs hide under weight-grad compute (paper Fig. 3a, blue).
+    pub fn time_b_full(&self) -> BlockTiming {
+        time_block(&braid(&self.bwd, &self.wgrad))
+    }
+
+    /// Braided F&B block (Fig. 3a/3b). `self` provides the forward units;
+    /// `b_chunk` the backward (possibly a different chunk); `b_full`
+    /// appends the weight-grad units into the braid.
+    pub fn time_braided(&self, b_chunk: &ChunkUnits, b_full: bool) -> BlockTiming {
+        if b_full {
+            let bw = braid(&b_chunk.bwd, &b_chunk.wgrad);
+            time_block(&braid(&self.fwd, &bw))
+        } else {
+            time_block(&braid(&self.fwd, &b_chunk.bwd))
+        }
+    }
+
+    /// Braided F&W block (warm-up): forward ARs hide under W compute.
+    pub fn time_braided_fw(&self, w_chunk: &ChunkUnits) -> BlockTiming {
+        time_block(&braid(&self.fwd, &w_chunk.wgrad))
+    }
+
+    /// Sum of forward compute (no ARs) — `T_F` in the paper's notation.
+    pub fn t_f(&self) -> f64 {
+        self.fwd.iter().map(|u| u.compute).sum()
+    }
+    /// `T_B`.
+    pub fn t_b(&self) -> f64 {
+        self.bwd.iter().map(|u| u.compute).sum()
+    }
+    /// `T_W`.
+    pub fn t_w(&self) -> f64 {
+        self.wgrad.iter().map(|u| u.compute).sum()
+    }
+    /// One-direction TP communication `T_AR` (forward total).
+    pub fn t_ar_fwd(&self) -> f64 {
+        self.fwd.iter().map(|u| u.ar).sum()
+    }
+    pub fn t_ar_bwd(&self) -> f64 {
+        self.bwd.iter().map(|u| u.ar).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer_units() -> ChunkUnits {
+        // Two layers: pre-attn, attn(+AR), pre-mlp, mlp(+AR) each — a
+        // chunk-sized block (single-layer blocks keep an unavoidable AR
+        // tail; multi-layer chunks amortize it, as in the paper's chunks).
+        let f = vec![Unit::f(0.1, 0.0), Unit::f(1.0, 0.5), Unit::f(0.1, 0.0), Unit::f(1.0, 0.5)];
+        let b = vec![Unit::b(1.1, 0.5), Unit::b(0.15, 0.0), Unit::b(1.1, 0.5), Unit::b(0.15, 0.0)];
+        let w = vec![Unit::w(0.8), Unit::w(0.8)];
+        ChunkUnits {
+            fwd: [f.clone(), f].concat(),
+            bwd: [b.clone(), b].concat(),
+            wgrad: [w.clone(), w].concat(),
+        }
+    }
+
+    #[test]
+    fn bare_forward_exposes_all_ar() {
+        let c = layer_units();
+        let t = c.time_f();
+        assert!((t.duration - (c.t_f() + c.t_ar_fwd())).abs() < 1e-9);
+        assert!((t.exposed_ar - c.t_ar_fwd()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn braided_block_hides_ar() {
+        let c = layer_units();
+        let braided = c.time_braided(&c, true);
+        let serial = c.time_f().duration + c.time_b_full().duration;
+        assert!(braided.duration < serial, "braided {} !< serial {serial}", braided.duration);
+        // Compute dominates: most AR hidden (a short tail AR per block is
+        // unavoidable — see paper Fig. 3).
+        assert!(
+            braided.exposed_ar < 0.35 * (c.t_ar_fwd() + c.t_ar_bwd()),
+            "exposed {} of {}",
+            braided.exposed_ar,
+            c.t_ar_fwd() + c.t_ar_bwd()
+        );
+    }
+
+    #[test]
+    fn braided_substreams_complete_before_block_end() {
+        let c = layer_units();
+        let t = c.time_braided(&c, true);
+        assert!(t.b_done <= t.duration + 1e-12);
+        assert!(t.f_done <= t.duration + 1e-12);
+    }
+
+    #[test]
+    fn full_backward_hides_bwd_ar_under_w() {
+        let c = layer_units();
+        let fused = c.time_b_full();
+        let decoupled = c.time_b().duration + c.time_w().duration;
+        assert!(fused.duration < decoupled);
+    }
+
+    #[test]
+    fn empty_block() {
+        let t = time_block(&[]);
+        assert_eq!(t.duration, 0.0);
+        assert_eq!(t.exposed_ar, 0.0);
+    }
+
+    #[test]
+    fn trailing_ar_counts_toward_duration() {
+        let t = time_block(&[Unit::f(1.0, 2.0)]);
+        assert!((t.duration - 3.0).abs() < 1e-9);
+        assert!((t.exposed_ar - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ar_dependency_gates_same_stream_only() {
+        // F-unit AR gates the next F unit, but a B unit may run meanwhile.
+        let units = vec![Unit::f(1.0, 1.0), Unit::b(1.0, 0.0), Unit::f(1.0, 0.0)];
+        let t = time_block(&units);
+        // timeline: F0 [0,1], AR [1,2], B [1,2], F1 waits AR -> [2,3].
+        assert!((t.duration - 3.0).abs() < 1e-9);
+        assert!((t.exposed_ar - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_stream_serializes_ars() {
+        let units = vec![Unit::f(0.1, 1.0), Unit::b(0.1, 1.0)];
+        let t = time_block(&units);
+        // F [0,.1], AR_f [.1,1.1]; B [.1,.2], AR_b [1.1,2.1].
+        assert!((t.duration - 2.1).abs() < 1e-9);
+    }
+}

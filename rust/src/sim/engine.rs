@@ -1,0 +1,421 @@
+//! Discrete-event replay of a schedule under a cost model.
+//!
+//! Each device executes its op list **in order** (the IR is an explicit
+//! per-device program); cross-device edges (pipeline activations/gradients)
+//! and intra-device structures (activation memory, PCIe offload stream)
+//! are resolved during the replay. The output [`SimReport`] carries the
+//! iteration time, the TP/PP bubble decomposition and per-device peak
+//! memory — the quantities every paper table and figure is built from.
+
+use crate::schedule::{Op, PassKind, Schedule, ScheduleKind};
+
+use super::cost::CostModel;
+use super::report::{DeviceReport, SimReport};
+
+/// Fraction of a pipeline hop that blocks the producer's compute stream
+/// under STP's explicit (non-overlapped-launch) P2P communication; the
+/// remainder is pure link time that only delays the consumer.
+const EXPLICIT_PRODUCER_FRAC: f64 = 0.5;
+
+/// The simulator: replays schedules under a cost model.
+pub struct Simulator<'a> {
+    cost: &'a CostModel,
+    /// Charge P2P sends on the producer's compute stream (the paper notes
+    /// STP's explicit pipeline communication "is executed immediately after
+    /// computation and cannot be overlapped", §5.2).
+    explicit_p2p: Option<bool>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cost: &'a CostModel) -> Self {
+        Simulator { cost, explicit_p2p: None }
+    }
+
+    /// Override the explicit-P2P rule (default: STP-family schedules only).
+    pub fn with_explicit_p2p(mut self, v: bool) -> Self {
+        self.explicit_p2p = Some(v);
+        self
+    }
+
+    /// Replay `s` and produce the report.
+    pub fn run(&self, s: &Schedule) -> SimReport {
+        let n_chunks = s.n_chunks();
+        let n_dev = s.devices.len();
+        let explicit_p2p = self.explicit_p2p.unwrap_or(matches!(
+            s.kind,
+            ScheduleKind::Stp | ScheduleKind::StpMemEff | ScheduleKind::StpOffload
+        ));
+
+        let mut events: Vec<super::report::TraceEvent> = Vec::with_capacity(s.num_ops());
+        let mut done_f = vec![vec![f64::NAN; s.n_mb]; n_chunks];
+        let mut done_b = vec![vec![f64::NAN; s.n_mb]; n_chunks];
+        let mut cursor = vec![0usize; n_dev];
+        let mut dev_time = vec![0.0f64; n_dev];
+        let mut busy = vec![0.0f64; n_dev];
+        let mut exposed_ar = vec![0.0f64; n_dev];
+        let mut compute_time = vec![0.0f64; n_dev];
+
+        // Memory tracking (bytes of live activations per device).
+        let mut mem = vec![0i64; n_dev];
+        let mut mem_peak = vec![0i64; n_dev];
+        // Offloaded fraction per (chunk, mb): ratio actually moved to host.
+        let mut offloaded = vec![vec![0f32; s.n_mb]; n_chunks];
+        // PCIe stream frontier and reload-finish gate per (chunk, mb).
+        let mut pcie_time = vec![0.0f64; n_dev];
+        let mut reload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
+        let mut offload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
+        let mut pcie_busy = vec![0.0f64; n_dev];
+
+        let dev_of = |c: usize| s.device_of(c);
+        let w_frac = self.cost.w_frac;
+
+        loop {
+            let mut advanced = false;
+            for d in 0..n_dev {
+                while cursor[d] < s.devices[d].len() {
+                    let op = s.devices[d][cursor[d]];
+                    // --- readiness ---------------------------------------
+                    // STP's explicit sends block the producer's compute
+                    // stream for the launch + part of the DMA (charged in
+                    // `explicit_hop_cost`); the rest of the transfer rides
+                    // the link and delays only the consumer edge.
+                    let edge_frac = if explicit_p2p { 1.0 - EXPLICIT_PRODUCER_FRAC } else { 1.0 };
+                    let f_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>| -> Option<f64> {
+                        if c == 0 {
+                            Some(0.0)
+                        } else {
+                            let t = done_f[c - 1][m];
+                            if t.is_nan() {
+                                None
+                            } else {
+                                Some(t + edge_frac * self.cost.p2p_secs(dev_of(c - 1), dev_of(c)))
+                            }
+                        }
+                    };
+                    let b_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>, done_b: &Vec<Vec<f64>>| -> Option<f64> {
+                        let own = done_f[c][m];
+                        if own.is_nan() {
+                            return None;
+                        }
+                        if c + 1 == n_chunks {
+                            Some(own)
+                        } else {
+                            let t = done_b[c + 1][m];
+                            if t.is_nan() {
+                                None
+                            } else {
+                                Some(own.max(t + edge_frac * self.cost.p2p_secs(dev_of(c + 1), dev_of(c))))
+                            }
+                        }
+                    };
+
+                    let ready: Option<f64> = match op {
+                        Op::Pass { kind: PassKind::F, chunk, mb } => f_ready(chunk, mb, &done_f),
+                        Op::Pass { kind: PassKind::B | PassKind::BFull, chunk, mb } => {
+                            b_ready(chunk, mb, &done_f, &done_b)
+                                .map(|t| t.max(reload_done[chunk][mb]))
+                        }
+                        Op::Pass { kind: PassKind::W, .. } => Some(0.0), // B precedes in-order
+                        Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } => {
+                            match (
+                                f_ready(f_chunk, f_mb, &done_f),
+                                b_ready(b_chunk, b_mb, &done_f, &done_b),
+                            ) {
+                                (Some(a), Some(b)) => {
+                                    Some(a.max(b).max(reload_done[b_chunk][b_mb]))
+                                }
+                                _ => None,
+                            }
+                        }
+                        Op::BraidedFW { f_chunk, f_mb, .. } => f_ready(f_chunk, f_mb, &done_f),
+                        Op::Offload { .. } | Op::Reload { .. } => Some(0.0),
+                    };
+                    let Some(ready) = ready else { break };
+
+                    // --- duration & bookkeeping --------------------------
+                    let start = dev_time[d].max(ready);
+                    match op {
+                        Op::Offload { chunk, mb, ratio } => {
+                            // Runs on the PCIe stream in parallel with
+                            // compute; clamp the ratio so the transfer fits
+                            // under one forward (paper §4.4: T_o < T_F).
+                            let t_f = self.cost.chunks[chunk].t_f();
+                            let full = self.cost.offload_secs(chunk, 1.0);
+                            let eff = if full > 0.0 {
+                                (ratio as f64).min(t_f / full).max(0.0) as f32
+                            } else {
+                                ratio
+                            };
+                            let dur = self.cost.offload_secs(chunk, eff);
+                            let t0 = pcie_time[d].max(dev_time[d]);
+                            pcie_time[d] = t0 + dur;
+                            pcie_busy[d] += dur;
+                            offload_done[chunk][mb] = pcie_time[d];
+                            offloaded[chunk][mb] = eff;
+                            // Memory freed once the transfer completes;
+                            // conservatively count it as freed at completion
+                            // by subtracting now (peak sampled at op starts).
+                            mem[d] -= (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                            cursor[d] += 1;
+                            advanced = true;
+                            continue;
+                        }
+                        Op::Reload { chunk, mb } => {
+                            let eff = offloaded[chunk][mb];
+                            let dur = self.cost.offload_secs(chunk, eff);
+                            let t0 = pcie_time[d].max(dev_time[d]).max(offload_done[chunk][mb]);
+                            pcie_time[d] = t0 + dur;
+                            pcie_busy[d] += dur;
+                            reload_done[chunk][mb] = pcie_time[d];
+                            mem[d] += (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                            mem_peak[d] = mem_peak[d].max(mem[d]);
+                            // Data is back on device: the backward frees it
+                            // like any resident activation.
+                            offloaded[chunk][mb] = 0.0;
+                            cursor[d] += 1;
+                            advanced = true;
+                            continue;
+                        }
+                        _ => {}
+                    }
+
+                    let timing = self.op_timing(&op);
+                    let mut finish = start + timing.duration;
+
+                    // Explicit (non-overlapped) pipeline sends: the
+                    // producer's compute stream pays the hop right after
+                    // the op (STP-family).
+                    let mut hop = 0.0;
+                    if explicit_p2p {
+                        hop = self.explicit_hop_cost(s, &op);
+                        finish += hop;
+                    }
+
+                    dev_time[d] = finish;
+                    busy[d] += finish - start;
+                    compute_time[d] += timing.compute;
+                    exposed_ar[d] += timing.exposed_ar;
+                    events.push(super::report::TraceEvent { device: d, op, start, end: finish });
+
+                    // Completion bookkeeping + memory events. Inside a
+                    // braided block each direction completes at its own
+                    // sub-stream time — a braid does not serialize the
+                    // pipeline chain behind its full duration.
+                    if let Some((c, m)) = op.forward_part() {
+                        done_f[c][m] = start + timing.f_done + hop;
+                        mem[d] += self.cost.act_bytes[c] as i64;
+                        mem_peak[d] = mem_peak[d].max(mem[d]);
+                    }
+                    if let Some((c, m)) = op.backward_part() {
+                        done_b[c][m] = start + timing.b_done + hop;
+                        let act = self.cost.act_bytes[c] as f64;
+                        let kept = offloaded[c][m] as f64; // already subtracted
+                        if op.weight_part() == Some((c, m)) {
+                            mem[d] -= (act * (1.0 - kept)) as i64;
+                        } else {
+                            mem[d] -= (act * (1.0 - w_frac - kept).max(0.0)) as i64;
+                        }
+                    }
+                    if let Some((c, m)) = op.weight_part() {
+                        if op.backward_part() != Some((c, m)) {
+                            // Deferred W frees the retained weight-grad inputs.
+                            let _ = m;
+                            mem[d] -= (self.cost.act_bytes[c] as f64 * w_frac) as i64;
+                        }
+                    }
+                    cursor[d] += 1;
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+
+        // Any stuck device means an illegal schedule — surface loudly.
+        for d in 0..n_dev {
+            assert!(
+                cursor[d] == s.devices[d].len(),
+                "simulator deadlock: device {d} stuck at op {:?} ({}/{} ops)",
+                s.devices[d].get(cursor[d]),
+                cursor[d],
+                s.devices[d].len()
+            );
+        }
+
+        let iteration = dev_time.iter().cloned().fold(0.0, f64::max);
+        let devices: Vec<DeviceReport> = (0..n_dev)
+            .map(|d| DeviceReport {
+                busy: busy[d],
+                compute: compute_time[d],
+                exposed_ar: exposed_ar[d],
+                idle: iteration - busy[d],
+                peak_activation_bytes: mem_peak[d].max(0) as usize,
+                pcie_busy: pcie_busy[d],
+            })
+            .collect();
+
+        SimReport {
+            kind: s.kind,
+            iteration_secs: iteration,
+            devices,
+            events,
+            n_mb: s.n_mb,
+            mb_size: self.cost.mb_size,
+            static_bytes: self.cost.static_bytes,
+            mem_capacity_bytes: (self.cost.hw.mem_gib * (1u64 << 30) as f64) as usize,
+            world_size: self.cost.topo.world_size(),
+            peak_flops_per_dev: self.cost.hw.bf16_tflops * 1e12,
+            model_flops_per_sample: self.cost.model_flops_per_sample,
+        }
+    }
+
+    /// Two-stream timing of one op.
+    fn op_timing(&self, op: &Op) -> super::block::BlockTiming {
+        let ch = &self.cost.chunks;
+        match *op {
+            Op::Pass { kind: PassKind::F, chunk, .. } => ch[chunk].time_f(),
+            Op::Pass { kind: PassKind::B, chunk, .. } => ch[chunk].time_b(),
+            Op::Pass { kind: PassKind::W, chunk, .. } => ch[chunk].time_w(),
+            Op::Pass { kind: PassKind::BFull, chunk, .. } => ch[chunk].time_b_full(),
+            Op::Braided { f_chunk, b_chunk, b_full, .. } => {
+                ch[f_chunk].time_braided(&ch[b_chunk], b_full)
+            }
+            Op::BraidedFW { f_chunk, w_chunk, .. } => ch[f_chunk].time_braided_fw(&ch[w_chunk]),
+            Op::Offload { .. } | Op::Reload { .. } => super::block::BlockTiming {
+                duration: 0.0,
+                compute: 0.0,
+                exposed_ar: 0.0,
+                f_done: 0.0,
+                b_done: 0.0,
+            },
+        }
+    }
+
+    /// Cost of the explicit pipeline sends an op performs (STP-family):
+    /// the producer's compute stream is blocked for the launch plus the
+    /// head of the DMA.
+    fn explicit_hop_cost(&self, s: &Schedule, op: &Op) -> f64 {
+        let n_chunks = s.n_chunks();
+        let mut t = 0.0;
+        if let Some((c, _)) = op.forward_part() {
+            if c + 1 < n_chunks {
+                t += self.cost.p2p_secs(s.device_of(c), s.device_of(c + 1));
+            }
+        }
+        if let Some((c, _)) = op.backward_part() {
+            if c > 0 {
+                t += self.cost.p2p_secs(s.device_of(c), s.device_of(c - 1));
+            }
+        }
+        EXPLICIT_PRODUCER_FRAC * t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{HardwareProfile, Topology};
+    use crate::model::ModelConfig;
+    use crate::schedule::{build_schedule, ScheduleKind};
+
+    fn setup(tp: usize, pp: usize) -> (CostModel, Topology) {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(tp, pp, 1);
+        let hw = HardwareProfile::a800();
+        (CostModel::analytic(&m, &topo, &hw, 3072, 1), topo)
+    }
+
+    #[test]
+    fn all_schedules_simulate_without_deadlock() {
+        let (cost, topo) = setup(4, 4);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 8);
+            let r = Simulator::new(&cost).run(&s);
+            assert!(r.iteration_secs > 0.0, "{kind:?}");
+            assert!(r.iteration_secs.is_finite(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn stp_beats_baselines_at_tp8() {
+        // The headline claim (Fig. 7 right): at TP=8/PP=2, STP > 1F1B-I, ZB-V.
+        let (cost, topo) = setup(8, 2);
+        let time = |k| {
+            let s = build_schedule(k, &topo, 64);
+            Simulator::new(&cost).run(&s).iteration_secs
+        };
+        let ours = time(ScheduleKind::Stp);
+        let i1f1b = time(ScheduleKind::OneF1BInterleaved);
+        let zbv = time(ScheduleKind::ZbV);
+        assert!(ours < i1f1b, "STP {ours:.4}s !< 1F1B-I {i1f1b:.4}s");
+        assert!(ours < zbv, "STP {ours:.4}s !< ZB-V {zbv:.4}s");
+    }
+
+    #[test]
+    fn throughput_improvement_in_paper_range() {
+        // Paper: up to ~12% over 1F1B-I on LLMs at TP=8, seq 6144, PP=2.
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(8, 2, 1);
+        let hw = HardwareProfile::a800();
+        let cost = CostModel::analytic(&m, &topo, &hw, 6144, 1);
+        let time = |k| {
+            let s = build_schedule(k, &topo, 64);
+            Simulator::new(&cost).run(&s).iteration_secs
+        };
+        let gain = time(ScheduleKind::OneF1BInterleaved) / time(ScheduleKind::Stp) - 1.0;
+        assert!(
+            (0.02..0.35).contains(&gain),
+            "STP over 1F1B-I gain {:.1}% outside plausible band",
+            gain * 100.0
+        );
+    }
+
+    #[test]
+    fn memory_ordering_matches_table1() {
+        // Table 1 (peak activation): ZB-V (2p) < 1F1B-I (3p-2) < Ours (3p),
+        // comparing the hottest device of each schedule. Chunk sizes are
+        // non-uniform (last stage two layers short), so allow 1F1B-I ≈
+        // Ours within one M_a, but ZB-V must be strictly lowest.
+        let (cost, topo) = setup(4, 4);
+        let peak = |k| {
+            let s = build_schedule(k, &topo, 16);
+            let r = Simulator::new(&cost).run(&s);
+            r.devices.iter().map(|d| d.peak_activation_bytes).max().unwrap()
+        };
+        let zbv = peak(ScheduleKind::ZbV);
+        let i = peak(ScheduleKind::OneF1BInterleaved);
+        let ours = peak(ScheduleKind::Stp);
+        let ma = *cost.act_bytes.iter().max().unwrap();
+        assert!(zbv < i, "ZB-V {zbv} !< 1F1B-I {i}");
+        assert!(ours + ma > i, "Ours {ours} not within one M_a above 1F1B-I {i}");
+        assert!(ours > zbv, "Ours {ours} !> ZB-V {zbv}");
+    }
+
+    #[test]
+    fn offload_reduces_peak_memory() {
+        let (cost, topo) = setup(4, 4);
+        let peak = |k| {
+            let s = build_schedule(k, &topo, 16);
+            let r = Simulator::new(&cost).run(&s);
+            r.devices.iter().map(|d| d.peak_activation_bytes).max().unwrap()
+        };
+        let std = peak(ScheduleKind::Stp);
+        let off = peak(ScheduleKind::StpOffload);
+        assert!(off < std, "offload {off} !< standard {std}");
+        // Paper §5.4: 10–19.2% peak reduction. Allow a wide band.
+        let red = 1.0 - off as f64 / std as f64;
+        assert!(red > 0.05, "only {:.1}% reduction", red * 100.0);
+    }
+
+    #[test]
+    fn more_microbatches_amortize_bubbles() {
+        let (cost, topo) = setup(4, 4);
+        let thr = |m| {
+            let s = build_schedule(ScheduleKind::Stp, &topo, m);
+            let r = Simulator::new(&cost).run(&s);
+            r.throughput()
+        };
+        assert!(thr(64) < thr(192) * 1.02);
+    }
+}

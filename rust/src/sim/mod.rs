@@ -1,0 +1,19 @@
+//! Discrete-event cluster simulator.
+//!
+//! Substitutes the paper's 16–32-GPU testbed (DESIGN.md §1): the analytic
+//! [`CostModel`] turns (model, topology, hardware profile) into per-chunk
+//! unit timings; the two-stream [`block`] machine times individual
+//! execution blocks (Fig. 1 / Fig. 3 semantics); the [`Simulator`] replays
+//! whole schedules and reports throughput, MFU, TP/PP bubble decomposition
+//! and per-device peak memory (every quantity in Figures 7–10 and
+//! Tables 3–8).
+
+pub mod block;
+mod cost;
+mod engine;
+mod report;
+
+pub use block::{braid, time_block, BlockTiming, ChunkUnits, Unit};
+pub use cost::{AcMode, CostModel};
+pub use engine::Simulator;
+pub use report::{DeviceReport, SimReport, TraceEvent};

@@ -1,0 +1,176 @@
+//! Simulation reports: the metrics every paper table/figure is built from.
+
+
+use crate::schedule::ScheduleKind;
+
+/// Per-device accounting.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    /// Time the compute stream held ops (including exposed AR inside ops).
+    pub busy: f64,
+    /// Pure compute time.
+    pub compute: f64,
+    /// Non-overlapped TP communication (the device's TP bubble).
+    pub exposed_ar: f64,
+    /// Idle time (the device's PP bubble, including waiting on P2P).
+    pub idle: f64,
+    /// Peak live activation bytes.
+    pub peak_activation_bytes: usize,
+    /// PCIe stream occupancy (offload variant).
+    pub pcie_busy: f64,
+}
+
+/// One timed op occurrence (feeds the Chrome-trace / ASCII timelines).
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub device: usize,
+    pub op: crate::schedule::Op,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// One simulated training iteration.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub kind: ScheduleKind,
+    pub iteration_secs: f64,
+    pub devices: Vec<DeviceReport>,
+    /// Per-op timeline (in schedule order per device).
+    pub events: Vec<TraceEvent>,
+    pub n_mb: usize,
+    pub mb_size: usize,
+    /// Static (weights+grads+optimizer) bytes per device.
+    pub static_bytes: usize,
+    pub mem_capacity_bytes: usize,
+    pub world_size: usize,
+    pub peak_flops_per_dev: f64,
+    pub model_flops_per_sample: f64,
+}
+
+impl SimReport {
+    /// Samples per second for the whole job.
+    pub fn throughput(&self) -> f64 {
+        (self.n_mb * self.mb_size) as f64 / self.iteration_secs
+    }
+
+    /// Model FLOPs Utilization (fraction of aggregate peak).
+    pub fn mfu(&self) -> f64 {
+        let useful = self.model_flops_per_sample * (self.n_mb * self.mb_size) as f64;
+        useful / (self.iteration_secs * self.world_size as f64 * self.peak_flops_per_dev)
+    }
+
+    /// Total TP bubble time (sum over devices of exposed AR).
+    pub fn tp_bubble(&self) -> f64 {
+        self.devices.iter().map(|d| d.exposed_ar).sum()
+    }
+
+    /// Total PP bubble time (sum of idle).
+    pub fn pp_bubble(&self) -> f64 {
+        self.devices.iter().map(|d| d.idle).sum()
+    }
+
+    /// Mean per-device TP bubble.
+    pub fn tp_bubble_per_device(&self) -> f64 {
+        self.tp_bubble() / self.devices.len() as f64
+    }
+
+    /// Mean per-device PP bubble.
+    pub fn pp_bubble_per_device(&self) -> f64 {
+        self.pp_bubble() / self.devices.len() as f64
+    }
+
+    /// Bubble rate: idle+exposed over total device-time.
+    pub fn bubble_rate(&self) -> f64 {
+        let total = self.iteration_secs * self.devices.len() as f64;
+        (self.tp_bubble() + self.pp_bubble()) / total
+    }
+
+    /// Peak total memory (static + activations) across devices, bytes.
+    pub fn peak_memory_bytes(&self) -> usize {
+        self.devices
+            .iter()
+            .map(|d| d.peak_activation_bytes + self.static_bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak activation-only memory across devices, GB (paper Fig. 9 unit).
+    pub fn peak_activation_gb(&self) -> f64 {
+        self.devices.iter().map(|d| d.peak_activation_bytes).max().unwrap_or(0) as f64 / 1e9
+    }
+
+    /// Per-device activation peaks in GB (Fig. 10 right).
+    pub fn activation_gb_per_device(&self) -> Vec<f64> {
+        self.devices.iter().map(|d| d.peak_activation_bytes as f64 / 1e9).collect()
+    }
+
+    /// Would this run OOM on the profile's device memory?
+    pub fn is_oom(&self) -> bool {
+        self.peak_memory_bytes() > self.mem_capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(iter: f64, n_mb: usize) -> SimReport {
+        SimReport {
+            kind: ScheduleKind::Stp,
+            iteration_secs: iter,
+            events: Vec::new(),
+            devices: vec![
+                DeviceReport {
+                    busy: iter * 0.9,
+                    compute: iter * 0.8,
+                    exposed_ar: iter * 0.1,
+                    idle: iter * 0.1,
+                    peak_activation_bytes: 10 << 30,
+                    pcie_busy: 0.0,
+                },
+                DeviceReport {
+                    busy: iter,
+                    compute: iter * 0.9,
+                    exposed_ar: iter * 0.1,
+                    idle: 0.0,
+                    peak_activation_bytes: 20 << 30,
+                    pcie_busy: 0.0,
+                },
+            ],
+            n_mb,
+            mb_size: 1,
+            static_bytes: 30 << 30,
+            mem_capacity_bytes: 80 << 30,
+            world_size: 16,
+            peak_flops_per_dev: 312e12,
+            model_flops_per_sample: 1e15,
+        }
+    }
+
+    #[test]
+    fn throughput_is_samples_over_time() {
+        let r = mk(10.0, 64);
+        assert!((r.throughput() - 6.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_detection() {
+        let mut r = mk(10.0, 64);
+        assert!(!r.is_oom()); // 20+30=50 GiB-ish < 80
+        r.devices[1].peak_activation_bytes = 60 << 30;
+        assert!(r.is_oom());
+    }
+
+    #[test]
+    fn bubble_rate_bounded() {
+        let r = mk(10.0, 64);
+        assert!(r.bubble_rate() > 0.0 && r.bubble_rate() < 1.0);
+    }
+
+    #[test]
+    fn mfu_sane() {
+        let r = mk(100.0, 64);
+        let mfu = r.mfu();
+        assert!(mfu > 0.0 && mfu < 1.0, "mfu={mfu}");
+    }
+}

@@ -1,0 +1,152 @@
+//! Schedule timeline rendering: Chrome-trace JSON and ASCII timelines.
+//!
+//! Regenerates the paper's schedule figures (Fig. 5 — the STP timeline;
+//! Fig. 12 — the side-by-side schedule comparison; Fig. 4/6 — dataflow
+//! and offload illustrations) from simulated [`SimReport`] events.
+
+use crate::config::json::Json;
+use crate::schedule::Op;
+use crate::sim::SimReport;
+
+use std::collections::BTreeMap;
+
+/// Short label for an op (the paper's F/B/W vocabulary).
+pub fn op_label(op: &Op) -> String {
+    match *op {
+        Op::Pass { kind, chunk, mb } => {
+            let k = match kind {
+                crate::schedule::PassKind::F => "F",
+                crate::schedule::PassKind::B => "B",
+                crate::schedule::PassKind::W => "W",
+                crate::schedule::PassKind::BFull => "B+W",
+            };
+            format!("{k} c{chunk} m{mb}")
+        }
+        Op::Braided { f_chunk, f_mb, b_chunk, b_mb, b_full } => {
+            let tail = if b_full { "" } else { " (sep W)" };
+            format!("F&B c{f_chunk}m{f_mb}/c{b_chunk}m{b_mb}{tail}")
+        }
+        Op::BraidedFW { f_chunk, f_mb, w_chunk, w_mb } => {
+            format!("F&W c{f_chunk}m{f_mb}/c{w_chunk}m{w_mb}")
+        }
+        Op::Offload { chunk, mb, ratio } => format!("offload c{chunk}m{mb} α={ratio}"),
+        Op::Reload { chunk, mb } => format!("reload c{chunk}m{mb}"),
+    }
+}
+
+fn op_category(op: &Op) -> &'static str {
+    match op {
+        Op::Pass { kind: crate::schedule::PassKind::F, .. } => "forward",
+        Op::Pass { kind: crate::schedule::PassKind::B, .. } => "backward",
+        Op::Pass { kind: crate::schedule::PassKind::W, .. } => "weight",
+        Op::Pass { kind: crate::schedule::PassKind::BFull, .. } => "backward",
+        Op::Braided { .. } => "braided",
+        Op::BraidedFW { .. } => "braided",
+        Op::Offload { .. } | Op::Reload { .. } => "pcie",
+    }
+}
+
+/// Chrome `about:tracing` / Perfetto JSON for a simulated iteration.
+pub fn chrome_trace(report: &SimReport) -> String {
+    let mut events = Vec::new();
+    for e in &report.events {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str(op_label(&e.op)));
+        obj.insert("cat".into(), Json::Str(op_category(&e.op).into()));
+        obj.insert("ph".into(), Json::Str("X".into()));
+        obj.insert("ts".into(), Json::Num(e.start * 1e6));
+        obj.insert("dur".into(), Json::Num((e.end - e.start) * 1e6));
+        obj.insert("pid".into(), Json::Num(0.0));
+        obj.insert("tid".into(), Json::Num(e.device as f64));
+        events.push(Json::Obj(obj));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("traceEvents".into(), Json::Arr(events));
+    root.insert(
+        "displayTimeUnit".into(),
+        Json::Str("ms".into()),
+    );
+    Json::Obj(root).to_string()
+}
+
+/// ASCII timeline: one row per device, `width` columns spanning the
+/// iteration. Braided blocks render as '#', F as 'f', full backward 'b',
+/// decoupled B as 'x', W as 'w' — the visual shape of paper Fig. 5/12.
+pub fn ascii_timeline(report: &SimReport, width: usize) -> String {
+    let n_dev = report.devices.len();
+    let total = report.iteration_secs.max(1e-12);
+    let mut rows = vec![vec!['.'; width]; n_dev];
+    for e in &report.events {
+        let c = match e.op {
+            Op::Pass { kind: crate::schedule::PassKind::F, .. } => 'f',
+            Op::Pass { kind: crate::schedule::PassKind::B, .. } => 'x',
+            Op::Pass { kind: crate::schedule::PassKind::BFull, .. } => 'b',
+            Op::Pass { kind: crate::schedule::PassKind::W, .. } => 'w',
+            Op::Braided { .. } => '#',
+            Op::BraidedFW { .. } => '@',
+            Op::Offload { .. } | Op::Reload { .. } => continue,
+        };
+        let a = ((e.start / total) * width as f64) as usize;
+        let b = (((e.end / total) * width as f64).ceil() as usize).min(width);
+        for col in a..b.max(a + 1).min(width) {
+            rows[e.device][col] = c;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} | p={} m={} | iter {:.3}s | f=F b=B+W x=B w=W #=F&B @=F&W\n",
+        report.kind.name(),
+        n_dev,
+        report.n_mb,
+        report.iteration_secs
+    ));
+    for (d, row) in rows.iter().enumerate() {
+        out.push_str(&format!("dev{d} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{HardwareProfile, Topology};
+    use crate::model::ModelConfig;
+    use crate::schedule::{build_schedule, ScheduleKind};
+    use crate::sim::{CostModel, Simulator};
+
+    fn report() -> SimReport {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(2, 2, 1);
+        let hw = HardwareProfile::a800();
+        let cost = CostModel::analytic(&m, &topo, &hw, 1024, 1);
+        let s = build_schedule(ScheduleKind::Stp, &topo, 6);
+        Simulator::new(&cost).run(&s)
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        let r = report();
+        let t = chrome_trace(&r);
+        let v = Json::parse(&t).unwrap();
+        let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), r.events.len());
+        assert!(events[0].get("ts").is_some());
+    }
+
+    #[test]
+    fn ascii_timeline_has_device_rows() {
+        let r = report();
+        let t = ascii_timeline(&r, 80);
+        assert_eq!(t.lines().count(), 1 + r.devices.len());
+        assert!(t.contains('#'), "braids should appear:\n{t}");
+    }
+
+    #[test]
+    fn labels_cover_all_ops() {
+        assert!(op_label(&Op::f(1, 2)).contains("F c1 m2"));
+        assert!(op_label(&Op::Braided { f_chunk: 0, f_mb: 3, b_chunk: 1, b_mb: 2, b_full: false })
+            .contains("sep W"));
+    }
+}

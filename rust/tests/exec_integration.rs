@@ -1,0 +1,93 @@
+//! Integration over the real executor: pipeline training on the `test`
+//! preset artifacts with every schedule must produce identical numerics
+//! (same seed, same data ⇒ same losses) and decreasing loss.
+
+use std::path::{Path, PathBuf};
+
+use stp::exec::{train, TrainConfig};
+use stp::schedule::ScheduleKind;
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/test/manifest.json").exists()
+}
+
+fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
+    TrainConfig {
+        artifacts_dir: PathBuf::from("artifacts/test"),
+        schedule: kind,
+        n_mb: 4,
+        steps,
+        lr: 0.3,
+        seed: 42,
+        verbose: false,
+    }
+}
+
+#[test]
+fn stp_training_reduces_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let r = train(&cfg(ScheduleKind::Stp, 6)).unwrap();
+    assert_eq!(r.steps.len(), 6);
+    // Starts at ln(V) for the miniature vocab (V=256 ⇒ ≈5.545).
+    assert!((r.first_loss() - 5.545).abs() < 0.05, "first loss {}", r.first_loss());
+    assert!(r.last_loss() < r.first_loss(), "{} -> {}", r.first_loss(), r.last_loss());
+    assert!(r.allreduce_bytes > 0, "TP all-reduce must actually run");
+    assert!(r.executions > 0);
+}
+
+#[test]
+fn all_schedules_compute_identical_losses() {
+    // The decisive numerics test: every schedule is a different *order*
+    // of the same computation, so per-step mean losses must agree to
+    // floating-point reassociation tolerance across schedules.
+    if !have_artifacts() {
+        return;
+    }
+    let kinds = [
+        ScheduleKind::GPipe,
+        ScheduleKind::OneF1BInterleaved,
+        ScheduleKind::ZbV,
+        ScheduleKind::Stp,
+        ScheduleKind::StpOffload,
+    ];
+    let mut baseline: Option<Vec<f32>> = None;
+    for kind in kinds {
+        let r = train(&cfg(kind, 3)).unwrap();
+        let losses: Vec<f32> = r.steps.iter().map(|s| s.mean_loss).collect();
+        match &baseline {
+            None => baseline = Some(losses),
+            Some(base) => {
+                for (i, (a, b)) in base.iter().zip(&losses).enumerate() {
+                    assert!(
+                        (a - b).abs() < 2e-3 * a.abs().max(1.0),
+                        "{kind:?} step {i}: loss {b} != baseline {a}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    if !have_artifacts() {
+        return;
+    }
+    let a = train(&cfg(ScheduleKind::Stp, 2)).unwrap();
+    let b = train(&cfg(ScheduleKind::Stp, 2)).unwrap();
+    for (x, y) in a.steps.iter().zip(&b.steps) {
+        assert!((x.mean_loss - y.mean_loss).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn offload_variant_trains_and_uses_arena() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = train(&cfg(ScheduleKind::StpOffload, 2)).unwrap();
+    assert!(r.last_loss().is_finite());
+}

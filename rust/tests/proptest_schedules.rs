@@ -1,0 +1,132 @@
+//! Property-based tests over the schedule generators and simulator
+//! (hand-rolled generator — no proptest crate in this offline build; a
+//! seeded PRNG sweeps the parameter space and every failure prints its
+//! case for replay).
+
+use stp::cluster::{HardwareProfile, Topology};
+use stp::exec::Rng;
+use stp::model::ModelConfig;
+use stp::schedule::{validate, build_schedule, Op, ScheduleKind};
+use stp::sim::{CostModel, Simulator};
+
+/// Deterministic case sweep: 64 random (kind, tp, pp, m) tuples.
+fn cases(seed: u64, n: usize) -> Vec<(ScheduleKind, usize, usize, usize)> {
+    let mut rng = Rng::new(seed);
+    let kinds = ScheduleKind::all();
+    (0..n)
+        .map(|_| {
+            let kind = kinds[rng.below(kinds.len())];
+            let tp = [1, 2, 4, 8][rng.below(4)];
+            let pp = [1, 2, 3, 4, 6, 8][rng.below(6)];
+            // Multiple of pp (1F1B-I constraint), at least 2·pp.
+            let m = pp * (2 + rng.below(9));
+            (kind, tp, pp, m)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_every_random_case_is_legal() {
+    for (kind, tp, pp, m) in cases(0xC0FFEE, 64) {
+        let topo = Topology::new(tp, pp, 1);
+        let s = build_schedule(kind, &topo, m);
+        let v = validate(&s);
+        assert!(v.is_empty(), "case ({kind:?}, tp{tp}, pp{pp}, m{m}): {} violations: {}", v.len(), v[0]);
+    }
+}
+
+#[test]
+fn prop_simulation_never_deadlocks_and_conserves_time() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    for (kind, tp, pp, m) in cases(0xBEEF, 32) {
+        let topo = Topology::new(tp, pp, 1);
+        let cost = CostModel::analytic(&model, &topo, &hw, 2048, 1);
+        let s = build_schedule(kind, &topo, m);
+        let r = Simulator::new(&cost).run(&s);
+        assert!(r.iteration_secs.is_finite() && r.iteration_secs > 0.0);
+        // Per device: busy + idle == iteration (accounting identity).
+        for (d, dev) in r.devices.iter().enumerate() {
+            let total = dev.busy + dev.idle;
+            assert!(
+                (total - r.iteration_secs).abs() < 1e-6 * r.iteration_secs.max(1.0),
+                "case ({kind:?}, tp{tp}, pp{pp}, m{m}) dev {d}: busy+idle {total} != iter {}",
+                r.iteration_secs
+            );
+        }
+        // Compute time is schedule-invariant: busy >= compute.
+        for dev in &r.devices {
+            assert!(dev.busy + 1e-9 >= dev.compute);
+        }
+    }
+}
+
+#[test]
+fn prop_total_compute_is_schedule_invariant() {
+    // Same model+topo ⇒ identical total unit-compute regardless of the
+    // schedule (bubbles move, work doesn't) — modulo braids changing
+    // nothing about compute totals.
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let mut rng = Rng::new(7);
+    for _ in 0..8 {
+        let tp = [2, 4][rng.below(2)];
+        let pp = [2, 4][rng.below(2)];
+        let m = pp * (2 + rng.below(4));
+        let topo = Topology::new(tp, pp, 1);
+        let cost = CostModel::analytic(&model, &topo, &hw, 2048, 1);
+        let compute_of = |kind| {
+            let s = build_schedule(kind, &topo, m);
+            let r = Simulator::new(&cost).run(&s);
+            r.devices.iter().map(|d| d.compute).sum::<f64>()
+        };
+        let base = compute_of(ScheduleKind::GPipe);
+        for kind in [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp] {
+            let c = compute_of(kind);
+            assert!(
+                (c - base).abs() < 1e-6 * base,
+                "tp{tp} pp{pp} m{m} {kind:?}: compute {c} != gpipe {base}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_memory_replay_never_negative() {
+    // Replaying any schedule's ops, live activation count stays >= 0 and
+    // returns to zero (matched alloc/free).
+    for (kind, _tp, pp, m) in cases(0xABCD, 48) {
+        let topo = Topology::new(1, pp, 1);
+        let s = build_schedule(kind, &topo, m);
+        for (d, ops) in s.devices.iter().enumerate() {
+            let mut live = 0i64;
+            for op in ops {
+                if op.forward_part().is_some() {
+                    live += 1;
+                }
+                if op.weight_part().is_some() {
+                    live -= 1;
+                }
+                assert!(live >= 0, "case ({kind:?}, pp{pp}, m{m}) dev {d}: negative live");
+            }
+            assert_eq!(live, 0, "case ({kind:?}, pp{pp}, m{m}) dev {d}: leak {live}");
+        }
+    }
+}
+
+#[test]
+fn prop_braids_always_satisfy_fig11_constraint() {
+    for (_, _, pp, m) in cases(0x5EED, 32) {
+        let topo = Topology::new(2, pp, 1);
+        for kind in [ScheduleKind::Stp, ScheduleKind::StpMemEff, ScheduleKind::StpOffload] {
+            let s = build_schedule(kind, &topo, m);
+            for (_, op) in s.iter_ops() {
+                if let Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } = op {
+                    if f_chunk == b_chunk {
+                        assert!(f_mb > b_mb, "({kind:?}, pp{pp}, m{m}): {op:?}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration over the PJRT runtime: load the AOT-lowered HLO artifacts
+//! (`make artifacts` must have produced `artifacts/test/`) and verify the
+//! numerics against the python-side golden vectors — the rust half of the
+//! L1/L2 correctness contract.
+
+use std::path::Path;
+
+use stp::config::{Json, Manifest};
+use stp::runtime::{Runtime, Tensor};
+
+fn test_dir() -> &'static Path {
+    Path::new("artifacts/test")
+}
+
+fn have_artifacts() -> bool {
+    test_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn manifest_loads_and_describes_units() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let m = Manifest::load(test_dir()).unwrap();
+    assert_eq!(m.preset, "test");
+    for name in [
+        "attn_fwd",
+        "attn_bwd_x",
+        "attn_bwd_w",
+        "mlp_fwd",
+        "mlp_bwd_x",
+        "mlp_bwd_w",
+        "embed_fwd",
+        "embed_bwd",
+        "head_loss_grad",
+        "smoke",
+    ] {
+        assert!(m.artifacts.contains_key(name), "missing {name}");
+    }
+    // Forward partials must be marked for All-Reduce; endpoints must not.
+    assert_eq!(m.artifact("attn_fwd").unwrap().ar_outputs, vec![0]);
+    assert_eq!(m.artifact("mlp_bwd_x").unwrap().ar_outputs, vec![0]);
+    assert!(m.artifact("embed_fwd").unwrap().ar_outputs.is_empty());
+}
+
+#[test]
+fn smoke_artifact_known_answer() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(test_dir()).unwrap();
+    let mut rt = Runtime::load(&m, &["smoke"]).unwrap();
+    let x = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+    let y = Tensor::f32(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
+    let out = rt.run("smoke", &[x, y]).unwrap();
+    assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+}
+
+#[test]
+fn pallas_units_match_python_golden() {
+    if !have_artifacts() {
+        return;
+    }
+    let golden_path = test_dir().join("golden.json");
+    if !golden_path.exists() {
+        eprintln!("skipping: golden.json not generated");
+        return;
+    }
+    let g = Json::parse(&std::fs::read_to_string(golden_path).unwrap()).unwrap();
+    let m = Manifest::load(test_dir()).unwrap();
+    let d = &m.dims;
+    let mut rt = Runtime::load(&m, &["attn_fwd", "mlp_fwd"]).unwrap();
+
+    let vec_of = |k: &str| g.get(k).unwrap().as_f32_vec().unwrap();
+    let x = Tensor::f32(vec_of("x"), &[d.mb, d.seq, d.d]);
+    let dh = d.head_dim();
+    let qr = d.q_heads_per_rank() * dh;
+    let kr = d.kv_heads_per_rank() * dh;
+
+    // Attn unit: rust-executed HLO vs python-executed pallas kernel.
+    let out = rt
+        .run(
+            "attn_fwd",
+            &[
+                x.clone(),
+                Tensor::f32(vec_of("gamma1"), &[d.d]),
+                Tensor::f32(vec_of("wq"), &[d.d, qr]),
+                Tensor::f32(vec_of("wk"), &[d.d, kr]),
+                Tensor::f32(vec_of("wv"), &[d.d, kr]),
+                Tensor::f32(vec_of("wo"), &[qr, d.d]),
+            ],
+        )
+        .unwrap();
+    let want = vec_of("attn_fwd_out");
+    let got = out[0].as_f32().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "attn_fwd[{i}]: {a} vs {b}");
+    }
+
+    // MLP unit.
+    let out = rt
+        .run(
+            "mlp_fwd",
+            &[
+                x,
+                Tensor::f32(vec_of("gamma2"), &[d.d]),
+                Tensor::f32(vec_of("wg"), &[d.d, d.ffn_per_rank()]),
+                Tensor::f32(vec_of("wu"), &[d.d, d.ffn_per_rank()]),
+                Tensor::f32(vec_of("wd"), &[d.ffn_per_rank(), d.d]),
+            ],
+        )
+        .unwrap();
+    let want = vec_of("mlp_fwd_out");
+    let got = out[0].as_f32().unwrap();
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert!((a - b).abs() < 1e-4 + 1e-4 * b.abs(), "mlp_fwd[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn runtime_rejects_shape_mismatch() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(test_dir()).unwrap();
+    let mut rt = Runtime::load(&m, &["smoke"]).unwrap();
+    let bad = Tensor::f32(vec![0.0; 9], &[3, 3]);
+    let ok = Tensor::f32(vec![0.0; 4], &[2, 2]);
+    assert!(rt.run("smoke", &[bad, ok.clone()]).is_err());
+    assert!(rt.run("smoke", &[ok.clone()]).is_err());
+    assert!(rt.run("nonexistent", &[ok]).is_err());
+}
+
+#[test]
+fn head_loss_of_uniform_logits_is_ln_vocab() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load(test_dir()).unwrap();
+    let d = &m.dims;
+    let mut rt = Runtime::load(&m, &["head_loss_grad"]).unwrap();
+    let x = Tensor::zeros(&[d.mb, d.seq, d.d]);
+    let wh = Tensor::zeros(&[d.d, d.vocab]);
+    let targets = Tensor::i32(vec![0; d.mb * d.seq], &[d.mb, d.seq]);
+    let out = rt.run("head_loss_grad", &[x, wh, targets]).unwrap();
+    let loss = out[0].scalar_f32().unwrap();
+    let want = (d.vocab as f32).ln();
+    assert!((loss - want).abs() < 1e-3, "loss {loss} != ln V {want}");
+}

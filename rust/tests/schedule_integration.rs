@@ -1,0 +1,121 @@
+//! Integration: every scheduler × a grid of topologies and microbatch
+//! counts must produce complete, legal schedules with the paper's
+//! structural properties.
+
+use stp::cluster::Topology;
+use stp::schedule::{assert_valid, build_schedule, Op, Schedule, ScheduleKind};
+
+fn grid() -> Vec<(usize, usize)> {
+    // (pp, n_mb) — n_mb always a multiple of pp (1F1B-I's constraint).
+    vec![(1, 4), (2, 4), (2, 8), (4, 8), (4, 16), (8, 16), (4, 12)]
+}
+
+#[test]
+fn all_schedules_legal_across_grid() {
+    for (pp, n_mb) in grid() {
+        let topo = Topology::new(2, pp, 1);
+        for kind in ScheduleKind::all() {
+            if kind == ScheduleKind::OneF1B && n_mb < pp {
+                continue;
+            }
+            let s = build_schedule(kind, &topo, n_mb);
+            assert_valid(&s);
+        }
+    }
+}
+
+#[test]
+fn work_conservation() {
+    // Exactly one F, one B, one W per (chunk, microbatch) everywhere.
+    for (pp, n_mb) in grid() {
+        let topo = Topology::new(1, pp, 1);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, n_mb);
+            let chunks = s.n_chunks();
+            assert_eq!(s.count_forwards(), chunks * n_mb, "{kind:?} pp{pp} m{n_mb}");
+            assert_eq!(s.count_backwards(), chunks * n_mb, "{kind:?}");
+            assert_eq!(s.count_weight_grads(), chunks * n_mb, "{kind:?}");
+        }
+    }
+}
+
+#[test]
+fn stp_tp_exposure_constant_in_m() {
+    // Paper Table 1: STP's TP bubble is (2p+1)·T_AR — independent of m —
+    // while ZB-V's grows 4m and 1F1B-I's 2m.
+    let topo = Topology::new(4, 4, 1);
+    let exposure = |kind, m| {
+        let s = build_schedule(kind, &topo, m);
+        s.exposed_fwd_ars() + s.exposed_bwd_ars()
+    };
+    let stp_64 = exposure(ScheduleKind::Stp, 64);
+    let stp_192 = exposure(ScheduleKind::Stp, 192);
+    assert!(
+        stp_192 < stp_64 * 2,
+        "STP exposure should be ~constant in m: {stp_64} -> {stp_192}"
+    );
+    let zbv_64 = exposure(ScheduleKind::ZbV, 64);
+    let zbv_192 = exposure(ScheduleKind::ZbV, 192);
+    assert_eq!(zbv_192, zbv_64 * 3, "ZB-V exposes every AR (4m)");
+    // Cross-schedule: at m=192 STP exposes far fewer ARs.
+    assert!(stp_192 * 5 < zbv_192);
+}
+
+#[test]
+fn one_f1b_i_exposes_only_forward_ars() {
+    // Full backward hides the backward AR under W (2m total).
+    let topo = Topology::new(4, 4, 1);
+    let s = build_schedule(ScheduleKind::OneF1BInterleaved, &topo, 16);
+    assert_eq!(s.exposed_fwd_ars(), s.count_forwards());
+    assert_eq!(s.exposed_bwd_ars(), 0);
+}
+
+#[test]
+fn vshape_places_head_on_device_zero() {
+    // The V dataflow puts the last chunk (loss) back on device 0, which is
+    // what enables the early backward (paper Fig. 4).
+    for kind in [ScheduleKind::ZbV, ScheduleKind::Stp] {
+        let topo = Topology::new(1, 4, 1);
+        let s = build_schedule(kind, &topo, 8);
+        assert_eq!(s.device_of(s.n_chunks() - 1), 0, "{kind:?}");
+    }
+}
+
+#[test]
+fn offload_variant_only_adds_transfer_ops() {
+    let topo = Topology::new(2, 4, 1);
+    let plain = build_schedule(ScheduleKind::Stp, &topo, 8);
+    let off = build_schedule(ScheduleKind::StpOffload, &topo, 8);
+    let strip = |s: &Schedule| {
+        s.devices
+            .iter()
+            .map(|ops| {
+                ops.iter()
+                    .filter(|o| !matches!(o, Op::Offload { .. } | Op::Reload { .. }))
+                    .copied()
+                    .collect::<Vec<_>>()
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(strip(&plain), strip(&off));
+}
+
+#[test]
+fn schedules_are_deterministic() {
+    let topo = Topology::new(2, 4, 1);
+    for kind in ScheduleKind::all() {
+        let a = build_schedule(kind, &topo, 12);
+        let b = build_schedule(kind, &topo, 12);
+        assert_eq!(a.devices, b.devices, "{kind:?} not deterministic");
+    }
+}
+
+#[test]
+fn large_scale_schedule_builds_quickly() {
+    // p=8, m=256: construction must stay interactive.
+    let topo = Topology::new(8, 8, 1);
+    let t0 = std::time::Instant::now();
+    let s = build_schedule(ScheduleKind::Stp, &topo, 256);
+    assert_valid(&s);
+    assert!(t0.elapsed().as_secs_f64() < 5.0, "took {:?}", t0.elapsed());
+}

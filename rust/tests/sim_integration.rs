@@ -1,0 +1,177 @@
+//! Integration: the simulator must reproduce the paper's qualitative
+//! results (who wins, where, by roughly what factor) across the evaluated
+//! configurations — the acceptance criteria of DESIGN.md §5.
+
+use stp::cluster::{partition_mllm, HardwareProfile, Topology};
+use stp::model::{MllmConfig, ModelConfig};
+use stp::schedule::{build_schedule, build_schedule_scaled, theory, ScheduleKind};
+use stp::sim::{AcMode, CostModel, Simulator};
+
+fn thr(model: &ModelConfig, hw: &HardwareProfile, tp: usize, pp: usize, seq: usize, m: usize, k: ScheduleKind) -> f64 {
+    let topo = Topology::new(tp, pp, 1);
+    let cost = CostModel::analytic(model, &topo, hw, seq, 1);
+    let s = build_schedule(k, &topo, m);
+    Simulator::new(&cost).run(&s).throughput()
+}
+
+#[test]
+fn fig7_stp_wins_every_12b_configuration() {
+    // Strict wins at TP=8 (headline); at TP=4 the greedy construction may
+    // land within a sub-percent tie of 1F1B-I (see EXPERIMENTS.md).
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    for (tp, pp, seq) in [(4, 4, 3072), (8, 2, 3072), (4, 4, 6144), (8, 2, 6144)] {
+        let ours = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::Stp);
+        let i = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::OneF1BInterleaved);
+        let z = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::ZbV);
+        if tp >= 8 {
+            assert!(ours > i, "tp{tp} pp{pp} seq{seq}: ours {ours:.2} !> 1f1b-i {i:.2}");
+        } else {
+            assert!(ours > 0.99 * i, "tp{tp} pp{pp} seq{seq}: ours {ours:.2} well below 1f1b-i {i:.2}");
+        }
+        assert!(ours > z, "tp{tp} pp{pp} seq{seq}: ours {ours:.2} !> zb-v {z:.2}");
+    }
+}
+
+#[test]
+fn gains_grow_with_tp_size() {
+    // Paper: "the highest throughput improvements ... achieved at TP=8"
+    // (larger TP ⇒ more overlappable communication).
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let gain = |tp, pp| {
+        thr(&model, &hw, tp, pp, 6144, 128, ScheduleKind::Stp)
+            / thr(&model, &hw, tp, pp, 6144, 128, ScheduleKind::OneF1BInterleaved)
+    };
+    assert!(gain(8, 2) > gain(4, 4), "tp8 {:.3} !> tp4 {:.3}", gain(8, 2), gain(4, 4));
+}
+
+#[test]
+fn gains_shrink_on_h20() {
+    // Appendix D: the H20's bandwidth/FLOPs ratio shrinks the TP bubble,
+    // so STP's advantage diminishes vs the A800.
+    let model = ModelConfig::qwen2_12b();
+    let gain = |hw: &HardwareProfile| {
+        thr(&model, hw, 8, 2, 6144, 128, ScheduleKind::Stp)
+            / thr(&model, hw, 8, 2, 6144, 128, ScheduleKind::OneF1BInterleaved)
+    };
+    let a800 = gain(&HardwareProfile::a800());
+    let h20 = gain(&HardwareProfile::h20());
+    assert!(h20 < a800, "h20 gain {h20:.3} !< a800 gain {a800:.3}");
+    assert!(h20 > 0.99, "STP should not lose on H20 ({h20:.3})");
+}
+
+#[test]
+fn memory_ranking_zbv_lowest_ours_highest() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let topo = Topology::new(4, 4, 1);
+    let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+    let peak = |k| {
+        let s = build_schedule(k, &topo, 64);
+        Simulator::new(&cost).run(&s).peak_activation_gb()
+    };
+    let z = peak(ScheduleKind::ZbV);
+    let i = peak(ScheduleKind::OneF1BInterleaved);
+    let ours = peak(ScheduleKind::Stp);
+    assert!(z < i && z < ours, "zb-v {z:.1} should be lowest ({i:.1}, {ours:.1})");
+    assert!(ours > 1.2 * z, "ours should clearly exceed zb-v");
+}
+
+#[test]
+fn offload_recovers_memory_with_small_throughput_cost() {
+    // Paper §5.4: 10–19.2% peak reduction, negligible throughput loss.
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::h20();
+    let topo = Topology::new(4, 4, 1);
+    let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+    let run = |k| {
+        let s = build_schedule(k, &topo, 128);
+        Simulator::new(&cost).run(&s)
+    };
+    let plain = run(ScheduleKind::Stp);
+    let off = run(ScheduleKind::StpOffload);
+    let mem_saving = 1.0 - off.peak_activation_gb() / plain.peak_activation_gb();
+    assert!(mem_saving > 0.08, "only {:.1}% saved", 100.0 * mem_saving);
+    let thr_loss = 1.0 - off.throughput() / plain.throughput();
+    assert!(thr_loss < 0.05, "{:.1}% throughput lost", 100.0 * thr_loss);
+}
+
+#[test]
+fn mllm_stp_wins_and_biggest_gain_at_unbalanced_low_pp() {
+    // Table 3 shape: STP > baselines; PP=2 unbalanced case gives the
+    // largest relative win (paper: +16.7%).
+    let mllm = MllmConfig::qwen2vl_14_9b();
+    let hw = HardwareProfile::a800();
+    let gain_at = |tp: usize, pp: usize| {
+        let topo = Topology::new(tp, pp, 1);
+        let plan = partition_mllm(&mllm, topo.chunks());
+        let cost =
+            CostModel::analytic_mllm(&mllm.lm, &mllm.vit, &plan, &topo, &hw, 5120, 3136, 1);
+        let run = |k| {
+            let s = build_schedule_scaled(k, &topo, 128, cost.chunk_scales());
+            Simulator::new(&cost).run(&s).throughput()
+        };
+        run(ScheduleKind::Stp) / run(ScheduleKind::OneF1BInterleaved)
+    };
+    let pp4 = gain_at(4, 4);
+    let pp2 = gain_at(8, 2);
+    assert!(pp4 > 1.0, "MLLM pp4 gain {pp4:.3}");
+    assert!(pp2 > 1.0, "MLLM pp2 gain {pp2:.3}");
+    assert!(pp2 > pp4, "pp2 {pp2:.3} should beat pp4 {pp4:.3} (paper's 16.7% case)");
+}
+
+#[test]
+fn theory_and_simulation_agree_on_tp_bubble_order() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let topo = Topology::new(8, 4, 1);
+    let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+    let ti = cost.theory_inputs(64);
+    for kind in ScheduleKind::paper_trio() {
+        let row = theory(kind, &ti);
+        let s = build_schedule(kind, &topo, 64);
+        let r = Simulator::new(&cost).run(&s);
+        // Simulated per-device TP bubble within 3x of the closed form
+        // (construction overhead, braid tails).
+        let sim = r.tp_bubble_per_device();
+        assert!(
+            sim < 3.0 * row.tp_bubble.max(0.15),
+            "{kind:?}: sim {sim:.3} vs theory {:.3}",
+            row.tp_bubble
+        );
+    }
+}
+
+#[test]
+fn activation_checkpointing_trades_memory_for_time() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let topo = Topology::new(4, 4, 1);
+    let run = |mode| {
+        let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1).with_activation_checkpoint(mode);
+        let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 64, cost.chunk_scales());
+        Simulator::new(&cost).run(&s)
+    };
+    let none = run(AcMode::None);
+    let all = run(AcMode::All);
+    assert!(all.peak_activation_gb() < 0.75 * none.peak_activation_gb());
+    assert!(all.throughput() < none.throughput());
+    // Paper Table 9: full AC ≈ −22% throughput, −35% memory. Shape check.
+    let thr_drop = 1.0 - all.throughput() / none.throughput();
+    assert!((0.05..0.45).contains(&thr_drop), "thr drop {thr_drop:.2}");
+}
+
+#[test]
+fn cp_and_dp_topologies_simulate() {
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    for topo in [Topology::new(2, 4, 1).with_cp(2), Topology::new(2, 4, 2)] {
+        let cost = CostModel::analytic(&model, &topo, &hw, 12288, 1);
+        for kind in ScheduleKind::paper_trio() {
+            let s = build_schedule_scaled(kind, &topo, 64, cost.chunk_scales());
+            let r = Simulator::new(&cost).run(&s);
+            assert!(r.throughput() > 0.0, "{kind:?} {topo}");
+        }
+    }
+}
