@@ -1,0 +1,130 @@
+//! Parallelism auto-planner CLI: given a GPU budget and a per-device
+//! memory cap, search every (TP, PP, DP) factorization × schedule kind ×
+//! microbatch count × offload variant, simulate the survivors in
+//! parallel, and print the ranked plans.
+//!
+//! ```text
+//! cargo run --release --example auto_plan -- --gpus 16
+//! cargo run --release --example auto_plan -- --gpus 32 --model 26b \
+//!     --mem-gib 64 --hw h20 --topk 15 --outdir /tmp/plans --json /tmp/plan.json
+//! ```
+//!
+//! Flags: --gpus N (default 16) | --mem-gib F (default: hw capacity) |
+//! --model 12b|26b|tiny|mllm-14.9b|mllm-28.8b | --hw a800|h20 | --seq N |
+//! --mbsize N | --threads N | --topk N | --outdir DIR | --json FILE.
+//!
+//! The top-k plans also get Chrome traces (`stp-trace-plan<rank>-*.json`
+//! under --outdir, default /tmp) for Perfetto inspection, and the ranked
+//! list is compared against the fixed-configuration baseline the paper's
+//! tables would suggest by hand (TP=8/PP=2, classic 1F1B).
+
+use std::path::PathBuf;
+
+use stp::coordinator::{hw_by_name, parse_flags, plan_model_by_name};
+use stp::plan::{evaluate, plan, simulate_candidate, Candidate, PlanQuery};
+use stp::schedule::{OffloadParams, ScheduleKind};
+use stp::trace::write_chrome_trace;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let flags = parse_flags(&args);
+    let get = |key: &str| flags.get(key).cloned();
+
+    let model = plan_model_by_name(get("model").as_deref().unwrap_or("12b"));
+    let hw = hw_by_name(get("hw").as_deref().unwrap_or("a800"));
+    let gpus: usize = get("gpus").and_then(|s| s.parse().ok()).unwrap_or(16);
+    let topk: usize = get("topk").and_then(|s| s.parse().ok()).unwrap_or(3);
+    let outdir = PathBuf::from(get("outdir").unwrap_or_else(|| "/tmp".into()));
+
+    let mut q = PlanQuery::new(model, hw, gpus);
+    if let Some(v) = get("mem-gib").and_then(|s| s.parse().ok()) {
+        q.mem_cap_gib = v;
+    }
+    if let Some(v) = get("seq").and_then(|s| s.parse().ok()) {
+        q.seq = v;
+    }
+    if let Some(v) = get("mbsize").and_then(|s| s.parse().ok()) {
+        q.mb_size = v;
+    }
+    if let Some(v) = get("threads").and_then(|s| s.parse().ok()) {
+        q.threads = v;
+    }
+
+    let t0 = std::time::Instant::now();
+    let report = plan(&q);
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{}", report.render(topk.max(10)));
+    println!(
+        "search: {} schedules simulated in {:.2}s ({:.0} candidates/s)",
+        report.n_simulated(),
+        secs,
+        report.n_simulated() as f64 / secs.max(1e-9)
+    );
+
+    // The hand-picked configuration the paper's tables would suggest for
+    // this budget: the largest admissible TP ≤ 8 that divides the budget,
+    // PP=2 when it fits, classic 1F1B — using *all* budgeted GPUs.
+    let ctx = q.eval_context();
+    let mk = |tp: usize| {
+        let pp = if (gpus / tp) % 2 == 0 { 2 } else { 1 };
+        Candidate {
+            id: usize::MAX,
+            tp,
+            pp,
+            dp: gpus / (tp * pp),
+            kind: ScheduleKind::OneF1B,
+            n_mb: 64,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+        }
+    };
+    let baseline = (1..=8.min(gpus))
+        .rev()
+        .filter(|tp| gpus % tp == 0)
+        .map(mk)
+        .find(|c| stp::plan::constraints::admissible(&q.model, c).is_ok());
+    match (report.best(), baseline) {
+        (Some(best), Some(baseline)) => {
+            let base = evaluate(&ctx, &baseline);
+            println!(
+                "\nfixed baseline {}{}: {:.2} samples/s -> planner {}: {:.2} samples/s ({:+.1}%)",
+                baseline.label(),
+                if base.feasible { "" } else { " [OOM]" },
+                base.throughput,
+                best.candidate.label(),
+                best.throughput,
+                100.0 * (best.throughput / base.throughput - 1.0)
+            );
+            assert!(
+                !base.feasible || best.throughput >= base.throughput,
+                "planner ranked below the fixed baseline"
+            );
+        }
+        (Some(best), None) => {
+            println!(
+                "\nno admissible fixed baseline for this model/budget; planner best: {} \
+                 ({:.2} samples/s)",
+                best.candidate.label(),
+                best.throughput
+            );
+        }
+        (None, _) => println!("\nno memory-feasible plan found for this budget/cap"),
+    }
+
+    // Chrome traces for the top-k feasible plans.
+    for (rank, e) in report.feasible().take(topk).enumerate() {
+        let r = simulate_candidate(&ctx, &e.candidate);
+        let label = format!("plan{}-{}", rank + 1, e.candidate.label().replace(' ', "-"));
+        match write_chrome_trace(&outdir, &label, &r) {
+            Ok(path) => println!("trace #{}: {}", rank + 1, path.display()),
+            Err(err) => eprintln!("trace write failed ({}): {err}", outdir.display()),
+        }
+    }
+
+    if let Some(json_path) = get("json") {
+        match std::fs::write(&json_path, report.to_json().to_string()) {
+            Ok(()) => println!("wrote {json_path}"),
+            Err(err) => eprintln!("json write failed: {err}"),
+        }
+    }
+}

@@ -1,21 +1,26 @@
 //! Schedule explorer: render every scheduler's timeline for the paper's
 //! illustration setting (4 stages, 12 microbatches — Fig. 5 / Fig. 12) as
-//! ASCII art, plus Chrome traces under /tmp for Perfetto.
+//! ASCII art, plus Chrome traces for Perfetto.
 //!
 //! ```text
-//! cargo run --release --example schedule_explorer [pp] [n_mb]
+//! cargo run --release --example schedule_explorer [pp] [n_mb] [outdir]
 //! ```
+//!
+//! Traces land in `outdir` (default `/tmp`) as `stp-trace-<kind>.json`.
+
+use std::path::PathBuf;
 
 use stp::cluster::{HardwareProfile, Topology};
 use stp::model::ModelConfig;
 use stp::schedule::{assert_valid, build_schedule, ScheduleKind};
 use stp::sim::{CostModel, Simulator};
-use stp::trace::{ascii_timeline, chrome_trace};
+use stp::trace::{ascii_timeline, write_chrome_trace};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let pp: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
     let n_mb: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let outdir = PathBuf::from(args.get(2).map(String::as_str).unwrap_or("/tmp"));
 
     let topo = Topology::new(1, pp, 1);
     let model = ModelConfig::qwen2_12b();
@@ -28,9 +33,9 @@ fn main() {
         assert_valid(&s);
         let r = Simulator::new(&cost).run(&s);
         println!("{}", ascii_timeline(&r, 150));
-        let path = format!("/tmp/stp-trace-{}.json", kind.name());
-        if std::fs::write(&path, chrome_trace(&r)).is_ok() {
-            println!("  chrome trace: {path}\n");
+        match write_chrome_trace(&outdir, kind.name(), &r) {
+            Ok(path) => println!("  chrome trace: {}\n", path.display()),
+            Err(e) => eprintln!("  trace write failed ({}): {e}\n", outdir.display()),
         }
     }
 }

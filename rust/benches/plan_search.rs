@@ -1,0 +1,82 @@
+//! Bench: parallel candidate evaluation of the auto-planner (the L3
+//! §Perf claim that thousands of simulated candidates rank in seconds,
+//! and that evaluation scales with worker threads).
+//!
+//! `cargo bench --bench plan_search`
+
+use std::time::Instant;
+
+use stp::cluster::HardwareProfile;
+use stp::model::ModelConfig;
+use stp::plan::{evaluate_parallel, plan, PlanModel, PlanQuery};
+use stp::plan::constraints::{admissible, memory_feasible};
+use stp::plan::space::enumerate;
+
+fn main() {
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        HardwareProfile::a800(),
+        16,
+    );
+    q.seq = 3072;
+    let ctx = q.eval_context();
+
+    // Fixed survivor set (same filters the search applies) so every
+    // thread count does identical work.
+    let survivors: Vec<_> = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &q.offload_variants)
+        .into_iter()
+        .filter(|c| admissible(&q.model, c).is_ok())
+        .filter(|c| {
+            let cost = ctx.cost_model(c);
+            memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes)
+        })
+        .collect();
+    println!("evaluating {} candidates (16-GPU budget, 12.1B, A800, seq 3072)\n", survivors.len());
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut thread_counts = vec![1usize, 2, 4];
+    if cores > 4 {
+        thread_counts.push(cores);
+    }
+    thread_counts.dedup();
+
+    println!("{:>8} {:>10} {:>12} {:>9}", "threads", "secs", "cands/s", "speedup");
+    let mut t1 = None;
+    for &threads in &thread_counts {
+        if threads > cores {
+            continue;
+        }
+        // Warm once, then take the median of 3.
+        let _ = evaluate_parallel(&ctx, &survivors, threads);
+        let mut times = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let evals = evaluate_parallel(&ctx, &survivors, threads);
+            times.push(t0.elapsed().as_secs_f64());
+            assert_eq!(evals.len(), survivors.len());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let secs = times[1];
+        let base = *t1.get_or_insert(secs);
+        println!(
+            "{threads:>8} {secs:>10.3} {:>12.0} {:>8.2}x",
+            survivors.len() as f64 / secs,
+            base / secs
+        );
+    }
+
+    // End-to-end: the whole plan() pipeline at full parallelism.
+    let t0 = Instant::now();
+    let report = plan(&q);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\nfull plan(): {} enumerated -> {} simulated in {:.2}s; best = {}",
+        report.n_enumerated,
+        report.n_simulated(),
+        secs,
+        report
+            .best()
+            .map(|b| b.candidate.label())
+            .unwrap_or_else(|| "none".into())
+    );
+}

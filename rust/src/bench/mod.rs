@@ -486,6 +486,24 @@ pub fn table11_sim() -> String {
     format!("== Table 11 (two-stream model): GEMM + AllReduce overlap\n{}", t.render())
 }
 
+/// Auto-planner demo — a paper-table sweep expressed as a plan query:
+/// rank every (TP, PP, DP) × schedule × microbatch candidate for a
+/// 16-GPU A800 budget and print the funnel plus the top plans. Future
+/// experiment grids can be phrased the same way instead of hand-rolled
+/// loops.
+pub fn plan16() -> String {
+    use crate::plan::{plan, PlanModel, PlanQuery};
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        HardwareProfile::a800(),
+        16,
+    );
+    // Lighter sweep than the CLI default: the bench target is shape, not
+    // exhaustiveness.
+    q.n_mb_options = vec![16, 64];
+    plan(&q).render(10)
+}
+
 /// Run every regenerator (the `stp bench all` target).
 pub fn all() -> String {
     [
@@ -524,6 +542,7 @@ pub fn by_name(name: &str) -> Option<String> {
         "table9" => table9(),
         "table10" => table10(),
         "table11" => table11_sim(),
+        "plan" => plan16(),
         "all" => all(),
         _ => return None,
     })

@@ -4,10 +4,8 @@
 //! offline environment).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
 
 use crate::cluster::{HardwareProfile, Topology};
-use crate::exec::{train, TrainConfig};
 use crate::model::ModelConfig;
 use crate::schedule::{build_schedule, build_schedule_scaled, validate, ScheduleKind};
 use crate::sim::{CostModel, Simulator};
@@ -21,12 +19,15 @@ USAGE:
   stp sim      --tp N --pp N [--model 12b|26b] [--seq N] [--mbsize N]
                [--mb N] [--schedule KIND] [--hw a800|h20]
   stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
-                table8|fig13|table9|table10|table11|all>
+                table8|fig13|table9|table10|table11|plan|all>
   stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
                [--chrome FILE] [--all-schedules]
   stp validate [--schedule KIND] [--pp N] [--mb N]
+  stp plan     --gpus N [--mem-gib F] [--model 12b|26b|tiny|mllm-14.9b|
+               mllm-28.8b] [--hw a800|h20] [--seq N] [--mbsize N]
+               [--topk N] [--threads N]
   stp train    [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
-               [--lr F] [--seed N] [--quiet]
+               [--lr F] [--seed N] [--quiet]   (needs the `pjrt` feature)
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
 ";
@@ -55,7 +56,8 @@ fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str, default: T
     f.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn model_by_name(name: &str) -> ModelConfig {
+/// Model lookup shared by the CLI and the examples.
+pub fn model_by_name(name: &str) -> ModelConfig {
     match name {
         "26b" | "qwen2-26b" => ModelConfig::qwen2_26b(),
         "tiny" => ModelConfig::tiny_100m(),
@@ -63,7 +65,18 @@ fn model_by_name(name: &str) -> ModelConfig {
     }
 }
 
-fn hw_by_name(name: &str) -> HardwareProfile {
+/// Planner-model lookup (LLMs plus the MLLM configs).
+pub fn plan_model_by_name(name: &str) -> crate::plan::PlanModel {
+    use crate::plan::PlanModel;
+    match name {
+        "mllm-14.9b" | "mllm-14.9" => PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_14_9b()),
+        "mllm-28.8b" | "mllm-28.8" => PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_28_8b()),
+        _ => PlanModel::Llm(model_by_name(name)),
+    }
+}
+
+/// Hardware-profile lookup shared by the CLI and the examples.
+pub fn hw_by_name(name: &str) -> HardwareProfile {
     match name {
         "h20" => HardwareProfile::h20(),
         "cpu" => HardwareProfile::cpu_sim(),
@@ -182,41 +195,8 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
             }
             Ok(if bad == 0 { 0 } else { 1 })
         }
-        "train" => {
-            let cfg = TrainConfig {
-                artifacts_dir: PathBuf::from(flag::<String>(
-                    &flags,
-                    "artifacts",
-                    "artifacts/e2e".into(),
-                )),
-                schedule: flag::<String>(&flags, "schedule", "stp".into())
-                    .parse()
-                    .map_err(|e| anyhow::anyhow!("{e}"))?,
-                n_mb: flag(&flags, "mb", 4usize),
-                steps: flag(&flags, "steps", 20usize),
-                lr: flag(&flags, "lr", 0.1f32),
-                seed: flag(&flags, "seed", 42u64),
-                verbose: !flags.contains_key("quiet"),
-            };
-            let report = train(&cfg)?;
-            println!(
-                "trained {} steps ({} schedule): loss {:.4} -> {:.4}, {:.1}s wall, \
-                 {} PJRT execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
-                report.steps.len(),
-                cfg.schedule.name(),
-                report.first_loss(),
-                report.last_loss(),
-                report.wall_secs,
-                report.executions,
-                report.allreduce_bytes as f64 / 1e6,
-                report
-                    .peak_activation_bytes
-                    .iter()
-                    .map(|b| (b / 1_000_000).to_string())
-                    .collect::<Vec<_>>(),
-            );
-            Ok(0)
-        }
+        "plan" => run_plan(&flags),
+        "train" => run_train(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(0)
@@ -226,6 +206,76 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
             Ok(2)
         }
     }
+}
+
+/// `stp plan`: run the parallelism auto-planner over a GPU budget.
+fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
+    use crate::plan::{plan, PlanQuery};
+
+    let model = plan_model_by_name(&flag::<String>(flags, "model", "12b".into()));
+    let hw = hw_by_name(&flag::<String>(flags, "hw", "a800".into()));
+    let gpus = flag(flags, "gpus", 16usize);
+    let mut q = PlanQuery::new(model, hw, gpus);
+    q.mem_cap_gib = flag(flags, "mem-gib", q.mem_cap_gib);
+    q.seq = flag(flags, "seq", q.seq);
+    q.mb_size = flag(flags, "mbsize", q.mb_size);
+    q.threads = flag(flags, "threads", q.threads);
+    let topk = flag(flags, "topk", 10usize);
+    let report = plan(&q);
+    println!("{}", report.render(topk));
+    Ok(if report.best().is_some() { 0 } else { 1 })
+}
+
+/// `stp train`: real PJRT pipeline training (requires the `pjrt` feature).
+#[cfg(feature = "pjrt")]
+fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
+    use std::path::PathBuf;
+
+    use crate::exec::{train, TrainConfig};
+
+    let cfg = TrainConfig {
+        artifacts_dir: PathBuf::from(flag::<String>(
+            flags,
+            "artifacts",
+            "artifacts/e2e".into(),
+        )),
+        schedule: flag::<String>(flags, "schedule", "stp".into())
+            .parse()
+            .map_err(|e| anyhow::anyhow!("{e}"))?,
+        n_mb: flag(flags, "mb", 4usize),
+        steps: flag(flags, "steps", 20usize),
+        lr: flag(flags, "lr", 0.1f32),
+        seed: flag(flags, "seed", 42u64),
+        verbose: !flags.contains_key("quiet"),
+    };
+    let report = train(&cfg)?;
+    println!(
+        "trained {} steps ({} schedule): loss {:.4} -> {:.4}, {:.1}s wall, \
+         {} PJRT execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
+        report.steps.len(),
+        cfg.schedule.name(),
+        report.first_loss(),
+        report.last_loss(),
+        report.wall_secs,
+        report.executions,
+        report.allreduce_bytes as f64 / 1e6,
+        report
+            .peak_activation_bytes
+            .iter()
+            .map(|b| (b / 1_000_000).to_string())
+            .collect::<Vec<_>>(),
+    );
+    Ok(0)
+}
+
+/// Without the `pjrt` feature there is no executor to train with.
+#[cfg(not(feature = "pjrt"))]
+fn run_train(_flags: &HashMap<String, String>) -> Result<i32> {
+    eprintln!(
+        "`stp train` needs the real PJRT executor — rebuild with \
+         `--features pjrt` (and real xla bindings, see rust/Cargo.toml)"
+    );
+    Ok(2)
 }
 
 #[cfg(test)]

@@ -13,9 +13,11 @@
 //! * **L3** — this crate: schedule generators (GPipe, 1F1B, 1F1B-I, ZB-V,
 //!   and the paper's STP schedule with braided execution blocks), a
 //!   discrete-event cluster simulator that regenerates every table and
-//!   figure of the paper's evaluation, and a real multi-threaded pipeline
-//!   executor that runs the AOT artifacts through PJRT with in-process
-//!   All-Reduce.
+//!   figure of the paper's evaluation, a parallelism **auto-planner**
+//!   ([`plan`]) that searches (TP, PP, DP) × schedule × microbatch-count
+//!   for a GPU budget under a memory cap, and a real multi-threaded
+//!   pipeline executor that runs the AOT artifacts through PJRT with
+//!   in-process All-Reduce (feature `pjrt`).
 //!
 //! ## Quick tour
 //!
@@ -46,6 +48,7 @@ pub mod exec;
 pub mod memory;
 pub mod metrics;
 pub mod model;
+pub mod plan;
 pub mod runtime;
 pub mod schedule;
 pub mod sim;

@@ -1,0 +1,227 @@
+//! Ranked plan reports: human-readable tables (the `stp plan` CLI and the
+//! `auto_plan` example) and JSON (the `config::json` value type, same
+//! idiom as the Chrome traces and run reports).
+
+use std::collections::BTreeMap;
+use std::collections::HashSet;
+
+use crate::config::json::Json;
+use crate::metrics::{pct, Table};
+use crate::schedule::ScheduleKind;
+
+use super::evaluate::Evaluation;
+
+/// Outcome of one [`super::plan`] query: the pruning funnel plus every
+/// simulated candidate, ranked feasible-first by simulated throughput.
+#[derive(Debug, Clone)]
+pub struct PlanReport {
+    pub model_name: String,
+    pub hw_name: String,
+    pub gpus: usize,
+    pub mem_cap_bytes: usize,
+    pub seq: usize,
+    pub mb_size: usize,
+    /// Raw candidate-space size before any pruning.
+    pub n_enumerated: usize,
+    /// Dropped by shape rules (TP divisibility, pipeline depth, n_mb).
+    pub n_rejected_shape: usize,
+    /// Dropped by the closed-form memory pre-filter.
+    pub n_pruned_memory: usize,
+    /// Dropped by the theory-estimate bound.
+    pub n_pruned_theory: usize,
+    /// Simulated candidates, ranked (feasible first, throughput desc).
+    pub ranked: Vec<Evaluation>,
+}
+
+impl PlanReport {
+    /// Number of candidates that went through full simulation.
+    pub fn n_simulated(&self) -> usize {
+        self.ranked.len()
+    }
+
+    /// The chosen plan: the top-ranked *memory-feasible* candidate.
+    pub fn best(&self) -> Option<&Evaluation> {
+        self.ranked.first().filter(|e| e.feasible)
+    }
+
+    /// Feasible candidates in rank order.
+    pub fn feasible(&self) -> impl Iterator<Item = &Evaluation> {
+        self.ranked.iter().filter(|e| e.feasible)
+    }
+
+    /// Distinct schedule kinds among the simulated candidates.
+    pub fn kinds_covered(&self) -> usize {
+        self.ranked.iter().map(|e| e.candidate.kind).collect::<HashSet<ScheduleKind>>().len()
+    }
+
+    /// Render the pruning funnel and the top `top` rows.
+    pub fn render(&self, top: usize) -> String {
+        let mut t = Table::new(vec![
+            "rank", "plan", "samples/s", "MFU %", "TP bub/dev", "PP bub/dev", "peak GB", "fit",
+        ]);
+        for (i, e) in self.ranked.iter().take(top).enumerate() {
+            t.row(vec![
+                (i + 1).to_string(),
+                e.candidate.label(),
+                format!("{:.2}", e.throughput),
+                pct(e.mfu),
+                format!("{:.3}s", e.tp_bubble_per_dev),
+                format!("{:.3}s", e.pp_bubble_per_dev),
+                format!("{:.1}", e.peak_mem_bytes as f64 / 1e9),
+                if e.feasible { "ok".to_string() } else { "OOM".to_string() },
+            ]);
+        }
+        let best_line = match self.best() {
+            Some(b) => format!(
+                "best plan: {}  ({:.2} samples/s, MFU {:.1}%, peak {:.1} GB)",
+                b.candidate.label(),
+                b.throughput,
+                100.0 * b.mfu,
+                b.peak_mem_bytes as f64 / 1e9
+            ),
+            None => "no memory-feasible plan for this budget".to_string(),
+        };
+        format!(
+            "== auto-plan: {} on {} x{} (seq {}, mbsize {}, cap {:.0} GiB)\n\
+             candidates: {} enumerated | {} shape-rejected | {} memory-pruned | \
+             {} theory-pruned | {} simulated ({} schedule kinds)\n{}\n{}",
+            self.model_name,
+            self.hw_name,
+            self.gpus,
+            self.seq,
+            self.mb_size,
+            self.mem_cap_bytes as f64 / (1u64 << 30) as f64,
+            self.n_enumerated,
+            self.n_rejected_shape,
+            self.n_pruned_memory,
+            self.n_pruned_theory,
+            self.n_simulated(),
+            self.kinds_covered(),
+            t.render(),
+            best_line
+        )
+    }
+
+    /// Serialize the whole report (query echo + funnel + ranked list).
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("model".into(), Json::Str(self.model_name.clone()));
+        root.insert("hw".into(), Json::Str(self.hw_name.clone()));
+        root.insert("gpus".into(), Json::Num(self.gpus as f64));
+        root.insert(
+            "mem_cap_gib".into(),
+            Json::Num(self.mem_cap_bytes as f64 / (1u64 << 30) as f64),
+        );
+        root.insert("seq".into(), Json::Num(self.seq as f64));
+        root.insert("mb_size".into(), Json::Num(self.mb_size as f64));
+        root.insert("enumerated".into(), Json::Num(self.n_enumerated as f64));
+        root.insert("rejected_shape".into(), Json::Num(self.n_rejected_shape as f64));
+        root.insert("pruned_memory".into(), Json::Num(self.n_pruned_memory as f64));
+        root.insert("pruned_theory".into(), Json::Num(self.n_pruned_theory as f64));
+        root.insert("simulated".into(), Json::Num(self.n_simulated() as f64));
+        let candidates: Vec<Json> = self
+            .ranked
+            .iter()
+            .enumerate()
+            .map(|(i, e)| {
+                let c = &e.candidate;
+                let mut o = BTreeMap::new();
+                o.insert("rank".into(), Json::Num((i + 1) as f64));
+                o.insert("tp".into(), Json::Num(c.tp as f64));
+                o.insert("pp".into(), Json::Num(c.pp as f64));
+                o.insert("dp".into(), Json::Num(c.dp as f64));
+                o.insert("schedule".into(), Json::Str(c.kind.name().into()));
+                o.insert("n_mb".into(), Json::Num(c.n_mb as f64));
+                o.insert("offload_variant".into(), Json::Num(c.offload_variant as f64));
+                o.insert("throughput".into(), Json::Num(e.throughput));
+                o.insert("mfu".into(), Json::Num(e.mfu));
+                o.insert("iteration_secs".into(), Json::Num(e.iteration_secs));
+                o.insert("dp_grad_secs".into(), Json::Num(e.dp_grad_secs));
+                o.insert("tp_bubble_per_dev".into(), Json::Num(e.tp_bubble_per_dev));
+                o.insert("pp_bubble_per_dev".into(), Json::Num(e.pp_bubble_per_dev));
+                o.insert("peak_gb".into(), Json::Num(e.peak_mem_bytes as f64 / 1e9));
+                o.insert("feasible".into(), Json::Bool(e.feasible));
+                Json::Obj(o)
+            })
+            .collect();
+        root.insert("candidates".into(), Json::Arr(candidates));
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::OffloadParams;
+    use crate::plan::space::Candidate;
+
+    fn eval(id: usize, kind: ScheduleKind, thr: f64, feasible: bool) -> Evaluation {
+        Evaluation {
+            candidate: Candidate {
+                id,
+                tp: 8,
+                pp: 2,
+                dp: 1,
+                kind,
+                n_mb: 64,
+                offload: OffloadParams::default(),
+                offload_variant: 0,
+            },
+            iteration_secs: 1.0,
+            dp_grad_secs: 0.0,
+            throughput: thr,
+            mfu: 0.4,
+            tp_bubble_per_dev: 0.1,
+            pp_bubble_per_dev: 0.2,
+            peak_mem_bytes: 50_000_000_000,
+            feasible,
+        }
+    }
+
+    fn report() -> PlanReport {
+        PlanReport {
+            model_name: "qwen2-12.1b".into(),
+            hw_name: "a800-sxm4-80g".into(),
+            gpus: 16,
+            mem_cap_bytes: 80 << 30,
+            seq: 6144,
+            mb_size: 1,
+            n_enumerated: 10,
+            n_rejected_shape: 4,
+            n_pruned_memory: 2,
+            n_pruned_theory: 1,
+            ranked: vec![
+                eval(3, ScheduleKind::Stp, 30.0, true),
+                eval(1, ScheduleKind::OneF1BInterleaved, 25.0, true),
+                eval(2, ScheduleKind::GPipe, 40.0, false),
+            ],
+        }
+    }
+
+    #[test]
+    fn best_is_top_feasible() {
+        let r = report();
+        assert_eq!(r.best().unwrap().candidate.id, 3);
+        assert_eq!(r.n_simulated(), 3);
+        assert_eq!(r.kinds_covered(), 3);
+    }
+
+    #[test]
+    fn render_contains_funnel_and_best() {
+        let out = report().render(10);
+        assert!(out.contains("10 enumerated"));
+        assert!(out.contains("best plan: tp8-pp2-dp1 stp m64"));
+        assert!(out.contains("OOM"));
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let r = report();
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("gpus").unwrap().as_usize(), Some(16));
+        assert_eq!(j.get("candidates").unwrap().as_arr().unwrap().len(), 3);
+        let top = j.get("candidates").unwrap().idx(0).unwrap();
+        assert_eq!(top.get("schedule").unwrap().as_str(), Some("stp"));
+        assert!(matches!(top.get("feasible"), Some(Json::Bool(true))));
+    }
+}

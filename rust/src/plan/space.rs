@@ -1,0 +1,256 @@
+//! Candidate space of the auto-planner: everything a parallel plan can
+//! vary — the (TP, PP, DP) factorization of the GPU budget, the schedule
+//! kind, the microbatch count, and (for the offload variant) the
+//! [`OffloadParams`]. Enumeration is exhaustive and deterministic (nested
+//! loops in a fixed order assign stable candidate ids); *pruning* is the
+//! job of [`super::constraints`] and [`super::search`].
+
+use crate::cluster::{partition_mllm, HardwareProfile, Topology};
+use crate::model::{MllmConfig, ModelConfig};
+use crate::schedule::{OffloadParams, ScheduleKind};
+use crate::sim::CostModel;
+
+/// The workload the planner optimizes for: a dense LLM (uniform layer
+/// split, paper §5.1) or an MLLM (ViT on the first virtual stage —
+/// the chunk-imbalance case that exercises `build_schedule_scaled`).
+#[derive(Debug, Clone)]
+pub enum PlanModel {
+    Llm(ModelConfig),
+    Mllm(MllmConfig),
+}
+
+impl PlanModel {
+    pub fn name(&self) -> &str {
+        match self {
+            PlanModel::Llm(m) => &m.name,
+            PlanModel::Mllm(m) => &m.name,
+        }
+    }
+
+    /// The language-model config (TP divisibility is decided by it).
+    pub fn lm(&self) -> &ModelConfig {
+        match self {
+            PlanModel::Llm(m) => m,
+            PlanModel::Mllm(m) => &m.lm,
+        }
+    }
+
+    pub fn total_params(&self) -> usize {
+        match self {
+            PlanModel::Llm(m) => m.total_params(),
+            PlanModel::Mllm(m) => m.total_params(),
+        }
+    }
+
+    /// Minimum virtual-stage count this model can be split into.
+    pub fn min_chunks(&self) -> usize {
+        match self {
+            PlanModel::Llm(_) => 1,
+            // ViT chunk + at least one LM chunk.
+            PlanModel::Mllm(_) => 2,
+        }
+    }
+
+    /// Maximum virtual-stage count (one layer per chunk floor).
+    pub fn max_chunks(&self) -> usize {
+        match self {
+            PlanModel::Llm(m) => m.layers,
+            PlanModel::Mllm(m) => m.lm.layers + 1,
+        }
+    }
+
+    /// Analytic cost model for one candidate topology.
+    pub fn cost_model(
+        &self,
+        topo: &Topology,
+        hw: &HardwareProfile,
+        seq: usize,
+        vit_tokens: usize,
+        mb_size: usize,
+    ) -> CostModel {
+        match self {
+            PlanModel::Llm(m) => CostModel::analytic(m, topo, hw, seq, mb_size),
+            PlanModel::Mllm(m) => {
+                let plan = partition_mllm(m, topo.chunks());
+                CostModel::analytic_mllm(&m.lm, &m.vit, &plan, topo, hw, seq, vit_tokens, mb_size)
+            }
+        }
+    }
+}
+
+/// One point of the search space.
+#[derive(Debug, Clone, Copy)]
+pub struct Candidate {
+    /// Stable id in enumeration order (ties in ranking break on it).
+    pub id: usize,
+    pub tp: usize,
+    pub pp: usize,
+    pub dp: usize,
+    pub kind: ScheduleKind,
+    /// Microbatches per iteration *per DP replica*.
+    pub n_mb: usize,
+    /// Offload parameters (meaningful only for `StpOffload`).
+    pub offload: OffloadParams,
+    /// Which offload variant this is (0 for non-offload kinds).
+    pub offload_variant: usize,
+}
+
+impl Candidate {
+    /// Virtual stages per device for this candidate's schedule kind: the
+    /// classic single-chunk schedules (1F1B, ZB-H1) re-partition the model
+    /// into `pp` stages; everything else uses the paper's 2 chunks/device.
+    pub fn vpp(&self) -> usize {
+        match self.kind {
+            ScheduleKind::OneF1B | ScheduleKind::ZbH1 => 1,
+            _ => 2,
+        }
+    }
+
+    /// The topology this candidate builds schedules and cost models with.
+    /// Keeping `vpp` consistent between the two is what makes per-chunk
+    /// costs line up with the emitted chunk ids.
+    pub fn topo(&self) -> Topology {
+        Topology::new(self.tp, self.pp, self.dp).with_vpp(self.vpp())
+    }
+
+    /// Compact human-readable label ("tp8-pp2-dp1 stp m64").
+    pub fn label(&self) -> String {
+        let mut s = format!(
+            "tp{}-pp{}-dp{} {} m{}",
+            self.tp,
+            self.pp,
+            self.dp,
+            self.kind.name(),
+            self.n_mb
+        );
+        if self.kind == ScheduleKind::StpOffload && self.offload_variant > 0 {
+            s.push_str(&format!(" o{}", self.offload_variant));
+        }
+        s
+    }
+}
+
+/// Divisors of `n`, ascending.
+pub fn divisors(n: usize) -> Vec<usize> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// Enumerate the raw candidate space for a GPU budget: every (TP, PP, DP)
+/// factorization × schedule kind × microbatch count × offload variant
+/// (offload variants only multiply `StpOffload`). No pruning here beyond
+/// the factorization itself — ids must be stable regardless of model and
+/// memory inputs.
+pub fn enumerate(
+    gpus: usize,
+    kinds: &[ScheduleKind],
+    n_mb_options: &[usize],
+    offload_variants: &[OffloadParams],
+) -> Vec<Candidate> {
+    assert!(gpus >= 1, "GPU budget must be positive");
+    let mut out = Vec::new();
+    let mut id = 0;
+    for tp in divisors(gpus) {
+        for pp in divisors(gpus / tp) {
+            let dp = gpus / (tp * pp);
+            for &kind in kinds {
+                for &n_mb in n_mb_options {
+                    if kind == ScheduleKind::StpOffload {
+                        for (v, &offload) in offload_variants.iter().enumerate() {
+                            out.push(Candidate {
+                                id,
+                                tp,
+                                pp,
+                                dp,
+                                kind,
+                                n_mb,
+                                offload,
+                                offload_variant: v,
+                            });
+                            id += 1;
+                        }
+                    } else {
+                        out.push(Candidate {
+                            id,
+                            tp,
+                            pp,
+                            dp,
+                            kind,
+                            n_mb,
+                            offload: OffloadParams::default(),
+                            offload_variant: 0,
+                        });
+                        id += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_of_16() {
+        assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+    }
+
+    #[test]
+    fn enumeration_covers_all_factorizations() {
+        let kinds = [ScheduleKind::Stp];
+        let cands = enumerate(16, &kinds, &[64], &[OffloadParams::default()]);
+        // Ordered triples (tp, pp, dp) with product 16: sum over divisors
+        // tp of d(16/tp) = 5+4+3+2+1 = 15.
+        assert_eq!(cands.len(), 15);
+        assert!(cands.iter().all(|c| c.tp * c.pp * c.dp == 16));
+    }
+
+    #[test]
+    fn ids_are_stable_and_dense() {
+        let kinds = ScheduleKind::all();
+        let a = enumerate(8, &kinds, &[16, 32], &[OffloadParams::default()]);
+        let b = enumerate(8, &kinds, &[16, 32], &[OffloadParams::default()]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.label(), y.label());
+        }
+        for (i, c) in a.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+    }
+
+    #[test]
+    fn offload_variants_multiply_only_offload_kind() {
+        let kinds = [ScheduleKind::Stp, ScheduleKind::StpOffload];
+        let variants = [
+            OffloadParams::default(),
+            OffloadParams { alpha_warmup: 0.5, alpha_steady: 0.9, reload_lead: 3 },
+        ];
+        let cands = enumerate(4, &kinds, &[8], &variants);
+        let stp = cands.iter().filter(|c| c.kind == ScheduleKind::Stp).count();
+        let off = cands.iter().filter(|c| c.kind == ScheduleKind::StpOffload).count();
+        assert_eq!(off, 2 * stp);
+    }
+
+    #[test]
+    fn vpp_matches_schedule_family() {
+        let c = Candidate {
+            id: 0,
+            tp: 2,
+            pp: 4,
+            dp: 1,
+            kind: ScheduleKind::OneF1B,
+            n_mb: 8,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+        };
+        assert_eq!(c.vpp(), 1);
+        assert_eq!(c.topo().chunks(), 4);
+        let c2 = Candidate { kind: ScheduleKind::ZbV, ..c };
+        assert_eq!(c2.topo().chunks(), 8);
+    }
+}

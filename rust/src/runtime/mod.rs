@@ -5,9 +5,15 @@
 //! `client.compile` → `execute`. Interchange is HLO **text** — the crate's
 //! xla_extension 0.5.1 rejects jax ≥ 0.5 serialized protos (64-bit ids).
 //! Adapted from /opt/xla-example/load_hlo.
+//!
+//! [`Tensor`] (the host-side interchange type used by `comm`, `memory`
+//! and `exec::params`) is always available; [`Runtime`] and the PJRT
+//! literal conversions require the `pjrt` cargo feature (see Cargo.toml).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 
+#[cfg(feature = "pjrt")]
 use crate::config::{DType, Manifest};
 use crate::Result;
 
@@ -73,7 +79,11 @@ impl Tensor {
         anyhow::ensure!(!d.is_empty(), "empty tensor");
         Ok(d[0])
     }
+}
 
+/// The PJRT boundary of [`Tensor`] — only meaningful with a client.
+#[cfg(feature = "pjrt")]
+impl Tensor {
     fn to_literal(&self) -> Result<xla::Literal> {
         let lit = match self {
             Tensor::F32 { data, shape } => {
@@ -100,6 +110,7 @@ impl Tensor {
 }
 
 /// A per-thread PJRT runtime holding compiled executables by name.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     execs: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -108,6 +119,7 @@ pub struct Runtime {
     pub executions: u64,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a runtime for `manifest`, compiling the named artifacts
     /// (or every artifact if `names` is empty).

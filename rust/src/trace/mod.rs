@@ -69,6 +69,20 @@ pub fn chrome_trace(report: &SimReport) -> String {
     Json::Obj(root).to_string()
 }
 
+/// Write a Chrome trace for `report` into `dir` (created if missing) as
+/// `stp-trace-<label>.json`; returns the path. Shared by
+/// `examples/schedule_explorer.rs` and the auto-planner's top-k dumps.
+pub fn write_chrome_trace(
+    dir: &std::path::Path,
+    label: &str,
+    report: &SimReport,
+) -> std::io::Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("stp-trace-{label}.json"));
+    std::fs::write(&path, chrome_trace(report))?;
+    Ok(path)
+}
+
 /// ASCII timeline: one row per device, `width` columns spanning the
 /// iteration. Braided blocks render as '#', F as 'f', full backward 'b',
 /// decoupled B as 'x', W as 'w' — the visual shape of paper Fig. 5/12.
@@ -148,5 +162,15 @@ mod tests {
         assert!(op_label(&Op::f(1, 2)).contains("F c1 m2"));
         assert!(op_label(&Op::Braided { f_chunk: 0, f_mb: 3, b_chunk: 1, b_mb: 2, b_full: false })
             .contains("sep W"));
+    }
+
+    #[test]
+    fn write_chrome_trace_creates_parseable_file() {
+        let r = report();
+        let dir = std::env::temp_dir().join("stp-trace-test");
+        let path = write_chrome_trace(&dir, "unit", &r).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(path).ok();
     }
 }

@@ -1,6 +1,9 @@
 //! Integration over the real executor: pipeline training on the `test`
 //! preset artifacts with every schedule must produce identical numerics
 //! (same seed, same data ⇒ same losses) and decreasing loss.
+//!
+//! Needs the `pjrt` feature (and real xla bindings + artifacts).
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 

@@ -1,0 +1,195 @@
+//! Integration + property tests over the parallelism auto-planner
+//! (hand-rolled sweep in the `proptest_schedules.rs` style — no proptest
+//! crate in this offline build). The contract under test:
+//!
+//! * the chosen plan is memory-feasible (simulated peak under the cap);
+//! * planning is deterministic for fixed inputs (bit-identical ranking,
+//!   independent of worker-thread count);
+//! * the chosen plan is never ranked below any feasible candidate the
+//!   search evaluated — including every fixed baseline configuration;
+//! * at the acceptance budget (16 GPUs) the search simulates a wide
+//!   field spanning every schedule kind.
+
+use stp::cluster::HardwareProfile;
+use stp::model::{MllmConfig, ModelConfig};
+use stp::plan::{evaluate, plan, PlanModel, PlanQuery};
+use stp::schedule::ScheduleKind;
+
+/// A fast-but-wide query used by most tests (shorter sequence and a
+/// reduced microbatch sweep keep debug-build runtime in check).
+fn query_16() -> PlanQuery {
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        HardwareProfile::a800(),
+        16,
+    );
+    q.seq = 2048;
+    q.n_mb_options = vec![8, 16, 32, 64];
+    // The test harness already runs tests concurrently; keep each
+    // planner's own pool small to avoid oversubscription.
+    q.threads = 2;
+    q
+}
+
+#[test]
+fn acceptance_16_gpus_wide_field_all_kinds() {
+    let r = plan(&query_16());
+    assert!(
+        r.n_simulated() >= 100,
+        "only {} candidates simulated at 16 GPUs",
+        r.n_simulated()
+    );
+    assert_eq!(
+        r.kinds_covered(),
+        ScheduleKind::all().len(),
+        "simulated field does not span all schedule kinds"
+    );
+    assert!(r.best().is_some());
+    // Funnel accounting: nothing silently dropped.
+    assert_eq!(
+        r.n_enumerated,
+        r.n_rejected_shape + r.n_pruned_memory + r.n_pruned_theory + r.n_simulated()
+    );
+}
+
+#[test]
+fn chosen_plan_is_memory_feasible() {
+    for gpus in [8usize, 16] {
+        let mut q = query_16();
+        q.gpus = gpus;
+        let r = plan(&q);
+        let best = r.best().unwrap_or_else(|| panic!("no feasible plan at {gpus} GPUs"));
+        assert!(best.feasible);
+        assert!(
+            best.peak_mem_bytes <= q.mem_cap_bytes(),
+            "best plan peak {} exceeds cap {}",
+            best.peak_mem_bytes,
+            q.mem_cap_bytes()
+        );
+    }
+}
+
+#[test]
+fn chosen_plan_never_below_any_feasible_candidate() {
+    let r = plan(&query_16());
+    let best = r.best().unwrap();
+    for e in r.feasible() {
+        assert!(
+            best.throughput + 1e-12 >= e.throughput,
+            "best {:.4} ranked below evaluated {:.4} ({})",
+            best.throughput,
+            e.throughput,
+            e.candidate.label()
+        );
+    }
+}
+
+#[test]
+fn chosen_plan_beats_fixed_baselines() {
+    // Every hand-pickable fixed baseline for the budget — the paper's own
+    // tp8/pp2 among them, across the compared schedules — must not beat
+    // the planner's choice.
+    let q = query_16();
+    let r = plan(&q);
+    let best = r.best().unwrap();
+    let ctx = q.eval_context();
+    for (tp, pp) in [(8, 2), (4, 4), (4, 2), (2, 8)] {
+        for kind in [
+            ScheduleKind::OneF1B,
+            ScheduleKind::OneF1BInterleaved,
+            ScheduleKind::ZbV,
+            ScheduleKind::Stp,
+        ] {
+            let c = stp::plan::Candidate {
+                id: usize::MAX,
+                tp,
+                pp,
+                dp: 16 / (tp * pp),
+                kind,
+                n_mb: 32,
+                offload: stp::schedule::OffloadParams::default(),
+                offload_variant: 0,
+            };
+            let e = evaluate(&ctx, &c);
+            if e.feasible {
+                assert!(
+                    best.throughput + 1e-12 >= e.throughput,
+                    "baseline {} ({:.3} samples/s) beats planned {} ({:.3})",
+                    c.label(),
+                    e.throughput,
+                    best.candidate.label(),
+                    best.throughput
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn planning_is_deterministic_across_runs_and_threads() {
+    let mut q = query_16();
+    q.n_mb_options = vec![16, 32]; // smaller field: this test runs plan() three times
+    let a = plan(&q);
+    let b = plan(&q);
+    let mut q1 = q.clone();
+    q1.threads = 1;
+    let c = plan(&q1);
+    for other in [&b, &c] {
+        assert_eq!(a.n_simulated(), other.n_simulated());
+        for (x, y) in a.ranked.iter().zip(&other.ranked) {
+            assert_eq!(x.candidate.id, y.candidate.id);
+            assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+            assert_eq!(x.peak_mem_bytes, y.peak_mem_bytes);
+            assert_eq!(x.feasible, y.feasible);
+        }
+    }
+}
+
+#[test]
+fn tighter_memory_cap_changes_the_frontier_not_the_contract() {
+    // Constrain memory hard enough to matter: everything still ranked
+    // must be feasible under the tighter cap, and the funnel must show
+    // more memory pruning than the permissive run.
+    let mut q = query_16();
+    q.n_mb_options = vec![16, 32];
+    let loose = plan(&q);
+    q.mem_cap_gib = 40.0;
+    let tight = plan(&q);
+    assert!(tight.n_pruned_memory > loose.n_pruned_memory);
+    if let Some(best) = tight.best() {
+        assert!(best.peak_mem_bytes <= q.mem_cap_bytes());
+    }
+}
+
+#[test]
+fn mllm_planning_exercises_scaled_builders() {
+    // The MLLM path routes chunk-imbalance scales into the builders; the
+    // planner must produce a feasible plan for the 14.9B MLLM on 16 GPUs.
+    let mut q = PlanQuery::new(
+        PlanModel::Mllm(MllmConfig::qwen2vl_14_9b()),
+        HardwareProfile::a800(),
+        16,
+    );
+    q.seq = 2048;
+    q.vit_tokens = 1024;
+    q.n_mb_options = vec![16];
+    q.threads = 2;
+    let r = plan(&q);
+    let best = r.best().expect("MLLM plan exists at 16 GPUs");
+    assert!(best.feasible);
+    // ViT-first split needs at least two chunks everywhere.
+    assert!(best.candidate.pp * best.candidate.vpp() >= 2);
+}
+
+#[test]
+fn plan_report_json_roundtrips() {
+    let mut q = query_16();
+    q.n_mb_options = vec![16];
+    let r = plan(&q);
+    let json = r.to_json().to_string();
+    let v = stp::config::Json::parse(&json).expect("report JSON parses");
+    assert_eq!(v.get("gpus").and_then(|x| x.as_usize()), Some(16));
+    let cands = v.get("candidates").and_then(|x| x.as_arr()).expect("candidates array");
+    assert_eq!(cands.len(), r.n_simulated());
+    assert!(cands[0].get("schedule").and_then(|s| s.as_str()).is_some());
+}

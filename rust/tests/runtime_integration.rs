@@ -2,6 +2,9 @@
 //! (`make artifacts` must have produced `artifacts/test/`) and verify the
 //! numerics against the python-side golden vectors — the rust half of the
 //! L1/L2 correctness contract.
+//!
+//! Needs the `pjrt` feature (and real xla bindings + artifacts).
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 

@@ -1,0 +1,200 @@
+//! Minimal, API-compatible subset of the `anyhow` crate for this offline
+//! build (see Cargo.toml). Provides [`Error`], [`Result`], and the
+//! `anyhow!` / `bail!` / `ensure!` macros with the semantics the `stp`
+//! crate relies on:
+//!
+//! * `Error` is a cheap string-backed error that optionally wraps a
+//!   source error (preserved for `{:#}` chains).
+//! * `Result<T>` defaults the error type to [`Error`].
+//! * `?` works on `std::io::Error` and the common std parse errors.
+//!
+//! Like real `anyhow::Error`, this type deliberately does **not**
+//! implement `std::error::Error` (that would conflict with the generic
+//! conversions).
+
+use std::fmt;
+
+/// A string-backed error with an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with [`Error`] as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message (what `anyhow!` emits).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error, preserving it as the source.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Attach context, demoting the current error to the source position
+    /// of the chain (mirrors `anyhow::Context` for the owned case).
+    pub fn context<M: fmt::Display>(self, message: M) -> Error {
+        Error { msg: format!("{message}: {}", self.msg), source: self.source }
+    }
+
+    /// The root-cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        let mut next = self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static));
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if f.alternate() {
+            // `{:#}` prints the whole cause chain, anyhow-style.
+            let mut seen = self.msg.clone();
+            for cause in self.chain() {
+                let c = cause.to_string();
+                if c != seen {
+                    write!(f, ": {c}")?;
+                    seen = c;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::new(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Error {
+        Error::new(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Error {
+        Error::new(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Error {
+        Error::new(e)
+    }
+}
+
+impl From<std::str::Utf8Error> for Error {
+    fn from(e: std::str::Utf8Error) -> Error {
+        Error::new(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+/// Construct an [`Error`] from a format string (`anyhow!("bad {x}")`),
+/// or from any `Display` expression (`anyhow!(err)`), mirroring the real
+/// crate's arms.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error: `bail!("bad {x}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn helper(fail: bool) -> Result<u32> {
+        ensure!(!fail, "flagged failure {}", 42);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_result() {
+        assert_eq!(helper(false).unwrap(), 7);
+        let e = helper(true).unwrap_err();
+        assert_eq!(e.to_string(), "flagged failure 42");
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        let e = read().unwrap_err();
+        assert!(e.chain().next().is_some());
+        // `{:#}` includes the chain without panicking.
+        let _ = format!("{e:#}");
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f() -> Result<()> {
+            bail!("x = {}", 3);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "x = 3");
+    }
+}

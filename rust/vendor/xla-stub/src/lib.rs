@@ -1,0 +1,208 @@
+//! Compile-time stub of the `xla` (xla_extension 0.5.1) API surface used
+//! by `stp::runtime`. Host-side literal handling works for real; client
+//! construction, compilation and execution fail with a descriptive error
+//! (there is no libpjrt in this environment). See Cargo.toml.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+const UNAVAILABLE: &str =
+    "PJRT is unavailable: the `pjrt` feature was built against the in-tree \
+     xla stub (rust/vendor/xla-stub); link the real xla_extension bindings \
+     to execute artifacts";
+
+/// XLA element types (subset + padding variants so consumer matches have a
+/// reachable wildcard arm).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Host scalar types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn to_f64(self) -> f64;
+    fn from_f64(x: f64) -> Self;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn from_f64(x: f64) -> Self {
+        x as i32
+    }
+}
+
+/// A host-side array (or tuple) literal.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    ty: ElementType,
+    data: Vec<f64>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            ty: T::TY,
+            data: data.iter().map(|x| x.to_f64()).collect(),
+            dims: vec![data.len() as i64],
+            tuple: None,
+        }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(mut self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        ensure!(
+            n as usize == self.data.len(),
+            "reshape to {:?} ({} elements) from {} elements",
+            dims,
+            n,
+            self.data.len()
+        );
+        self.dims = dims.to_vec();
+        Ok(self)
+    }
+
+    /// Array shape (dims + element type).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        ensure!(self.tuple.is_none(), "array_shape of a tuple literal");
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty })
+    }
+
+    /// Copy out as a host vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        ensure!(
+            self.ty == T::TY,
+            "literal holds {:?}, requested {:?}",
+            self.ty,
+            T::TY
+        );
+        Ok(self.data.iter().map(|&x| T::from_f64(x)).collect())
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.tuple {
+            Some(parts) => Ok(parts.clone()),
+            None => bail!("to_tuple on a non-tuple literal"),
+        }
+    }
+}
+
+/// Shape of an array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// HLO module handle (stub: never constructible from files here).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+/// Computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: construction fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Compiled executable (stub: never produced, execution errors defensively).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(anyhow!(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        let shape = l.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x").is_err());
+    }
+}
