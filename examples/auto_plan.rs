@@ -9,9 +9,11 @@
 //!     --mem-gib 64 --hw h20 --topk 15 --outdir /tmp/plans --json /tmp/plan.json
 //! ```
 //!
-//! Flags: --gpus N (default 16) | --mem-gib F (default: hw capacity) |
-//! --model 12b|26b|tiny|mllm-14.9b|mllm-28.8b | --hw a800|h20 | --seq N |
-//! --mbsize N | --threads N | --topk N | --outdir DIR | --json FILE.
+//! Flags: --gpus N (default 16) | --mem-gib F (default: pool capacity) |
+//! --model 12b|26b|tiny|mllm-14.9b|mllm-28.8b | --hw a800|h20 |
+//! --cluster mixed|FILE.json (heterogeneous pool; overrides --hw) |
+//! --seq N | --mbsize N | --threads N | --topk N | --outdir DIR |
+//! --json FILE.
 //!
 //! The top-k plans also get Chrome traces (`stp-trace-plan<rank>-*.json`
 //! under --outdir, default /tmp) for Perfetto inspection, and the ranked
@@ -20,7 +22,8 @@
 
 use std::path::PathBuf;
 
-use stp::coordinator::{hw_by_name, parse_flags, plan_model_by_name};
+use stp::cluster::ClusterSpec;
+use stp::coordinator::{cluster_by_name, hw_by_name, parse_flags, plan_model_by_name};
 use stp::plan::{evaluate, plan, simulate_candidate, Candidate, PlanQuery};
 use stp::schedule::{OffloadParams, ScheduleKind};
 use stp::trace::write_chrome_trace;
@@ -31,12 +34,21 @@ fn main() {
     let get = |key: &str| flags.get(key).cloned();
 
     let model = plan_model_by_name(get("model").as_deref().unwrap_or("12b"));
-    let hw = hw_by_name(get("hw").as_deref().unwrap_or("a800"));
+    let cluster = match get("cluster") {
+        Some(name) => match cluster_by_name(&name) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                std::process::exit(2);
+            }
+        },
+        None => ClusterSpec::uniform(hw_by_name(get("hw").as_deref().unwrap_or("a800"))),
+    };
     let gpus: usize = get("gpus").and_then(|s| s.parse().ok()).unwrap_or(16);
     let topk: usize = get("topk").and_then(|s| s.parse().ok()).unwrap_or(3);
     let outdir = PathBuf::from(get("outdir").unwrap_or_else(|| "/tmp".into()));
 
-    let mut q = PlanQuery::new(model, hw, gpus);
+    let mut q = PlanQuery::new(model, cluster, gpus);
     if let Some(v) = get("mem-gib").and_then(|s| s.parse().ok()) {
         q.mem_cap_gib = v;
     }
@@ -65,6 +77,7 @@ fn main() {
     // this budget: the largest admissible TP ≤ 8 that divides the budget,
     // PP=2 when it fits, classic 1F1B — using *all* budgeted GPUs.
     let ctx = q.eval_context();
+    let baseline_order = q.cluster.group_orders()[0];
     let mk = |tp: usize| {
         let pp = if (gpus / tp) % 2 == 0 { 2 } else { 1 };
         Candidate {
@@ -74,6 +87,7 @@ fn main() {
             dp: gpus / (tp * pp),
             kind: ScheduleKind::OneF1B,
             n_mb: 64,
+            order: baseline_order,
             offload: OffloadParams::default(),
             offload_variant: 0,
         }
@@ -82,7 +96,7 @@ fn main() {
         .rev()
         .filter(|tp| gpus % tp == 0)
         .map(mk)
-        .find(|c| stp::plan::constraints::admissible(&q.model, c).is_ok());
+        .find(|c| stp::plan::constraints::admissible(&q.model, &q.cluster, c).is_ok());
     match (report.best(), baseline) {
         (Some(best), Some(baseline)) => {
             let base = evaluate(&ctx, &baseline);

@@ -10,27 +10,28 @@
 //! splits — reproducing the shape of Table 3, including the largest STP
 //! win (paper: +16.7%) in the PP=2 low-ViT-intensity case.
 
-use stp::cluster::{partition_mllm, HardwareProfile, Topology};
+use stp::cluster::{partition_mllm, ClusterSpec, HardwareProfile, Topology};
 use stp::model::MllmConfig;
 use stp::schedule::{build_schedule_scaled, ScheduleKind};
 use stp::sim::{CostModel, Simulator};
 
 fn main() {
     let mllm = MllmConfig::qwen2vl_14_9b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     println!(
         "model {} = {:.1}B ViT + {:.1}B LM | {}\n",
         mllm.name,
         mllm.vit.total_params() as f64 / 1e9,
         mllm.lm.total_params() as f64 / 1e9,
-        hw.name
+        cluster.name
     );
 
     for (tp, pp, vit_tokens, lm_seq, n_mb) in [(4, 4, 3136, 5120, 128), (8, 2, 3136, 5120, 128)] {
         let topo = Topology::new(tp, pp, 1);
         let plan = partition_mllm(&mllm, topo.chunks());
-        let cost =
-            CostModel::analytic_mllm(&mllm.lm, &mllm.vit, &plan, &topo, &hw, lm_seq, vit_tokens, 1);
+        let cost = CostModel::analytic_mllm(
+            &mllm.lm, &mllm.vit, &plan, &topo, &cluster, lm_seq, vit_tokens, 1,
+        );
         let scales = cost.chunk_scales();
         println!(
             "tp{tp} pp{pp} | ViT len {vit_tokens}, LM len {lm_seq} | chunk compute scales: {}",

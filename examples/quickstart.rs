@@ -9,7 +9,7 @@
 //! ZB-V on throughput at TP=8/PP=2 by overlapping TP All-Reduce inside
 //! braided execution blocks, at the cost of a higher activation peak.
 
-use stp::cluster::{HardwareProfile, Topology};
+use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
 use stp::model::ModelConfig;
 use stp::schedule::{build_schedule, ScheduleKind};
 use stp::sim::{CostModel, Simulator};
@@ -18,16 +18,16 @@ fn main() {
     // Qwen2-12.1B on 16 simulated A800s: TP=8, PP=2, seq 6144.
     let model = ModelConfig::qwen2_12b();
     let topo = Topology::new(8, 2, 1);
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let n_mb = 64;
-    let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+    let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
 
     println!(
         "model {} ({:.1}B params) | {} | {} | {n_mb} microbatches\n",
         model.name,
         model.total_params() as f64 / 1e9,
         topo,
-        hw.name
+        cluster.name
     );
     println!(
         "{:10} {:>12} {:>8} {:>12} {:>12} {:>10}",

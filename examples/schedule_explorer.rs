@@ -1,16 +1,21 @@
 //! Schedule explorer: render every scheduler's timeline for the paper's
 //! illustration setting (4 stages, 12 microbatches — Fig. 5 / Fig. 12) as
-//! ASCII art, plus Chrome traces for Perfetto.
+//! ASCII art, plus Chrome traces for Perfetto. Device rows in the Chrome
+//! traces carry the per-device hardware-profile name, so passing a mixed
+//! cluster ("mixed" or a JSON spec) yields readable heterogeneous
+//! timelines.
 //!
 //! ```text
-//! cargo run --release --example schedule_explorer [pp] [n_mb] [outdir]
+//! cargo run --release --example schedule_explorer [pp] [n_mb] [outdir] [cluster]
 //! ```
 //!
-//! Traces land in `outdir` (default `/tmp`) as `stp-trace-<kind>.json`.
+//! Traces land in `outdir` (default `/tmp`) as `stp-trace-<kind>.json`;
+//! `cluster` is a pool name ("a800", "h20", "mixed") or a JSON spec path.
 
 use std::path::PathBuf;
 
-use stp::cluster::{HardwareProfile, Topology};
+use stp::cluster::{GroupOrder, Topology};
+use stp::coordinator::cluster_by_name;
 use stp::model::ModelConfig;
 use stp::schedule::{assert_valid, build_schedule, ScheduleKind};
 use stp::sim::{CostModel, Simulator};
@@ -21,14 +26,31 @@ fn main() {
     let pp: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
     let n_mb: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
     let outdir = PathBuf::from(args.get(2).map(String::as_str).unwrap_or("/tmp"));
+    let cluster = match cluster_by_name(args.get(3).map(String::as_str).unwrap_or("a800")) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
 
     let topo = Topology::new(1, pp, 1);
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
-    let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
 
-    println!("pipeline schedules, p={pp}, m={n_mb} (paper Fig. 5 / Fig. 12 setting)\n");
+    println!(
+        "pipeline schedules, p={pp}, m={n_mb}, cluster={} (paper Fig. 5 / Fig. 12 setting)\n",
+        cluster.name
+    );
     for kind in ScheduleKind::all() {
+        let cost = CostModel::analytic_for(
+            &model,
+            &topo,
+            &cluster,
+            GroupOrder::Declared,
+            kind.placement(),
+            4096,
+            1,
+        );
         let s = build_schedule(kind, &topo, n_mb);
         assert_valid(&s);
         let r = Simulator::new(&cost).run(&s);

@@ -10,13 +10,13 @@ fn main() {
 
     // Micro-timing of the two-stream block machine itself (the simulator
     // hot path): time_braided on a 10-layer chunk.
-    use stp::cluster::{HardwareProfile, Topology};
+    use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
     use stp::model::ModelConfig;
     use stp::sim::CostModel;
     let cost = CostModel::analytic(
         &ModelConfig::qwen2_12b(),
         &Topology::new(8, 2, 1),
-        &HardwareProfile::a800(),
+        &ClusterSpec::uniform(HardwareProfile::a800()),
         6144,
         1,
     );

@@ -1,12 +1,14 @@
 //! Bench: parallel candidate evaluation of the auto-planner (the L3
 //! §Perf claim that thousands of simulated candidates rank in seconds,
-//! and that evaluation scales with worker threads).
+//! and that evaluation scales with worker threads), plus a perf baseline
+//! for the heterogeneous (`--cluster`) search path whose ranked report is
+//! emitted as JSON next to the bench output.
 //!
 //! `cargo bench --bench plan_search`
 
 use std::time::Instant;
 
-use stp::cluster::HardwareProfile;
+use stp::cluster::{ClusterSpec, HardwareProfile};
 use stp::model::ModelConfig;
 use stp::plan::{evaluate_parallel, plan, PlanModel, PlanQuery};
 use stp::plan::constraints::{admissible, memory_feasible};
@@ -15,7 +17,7 @@ use stp::plan::space::enumerate;
 fn main() {
     let mut q = PlanQuery::new(
         PlanModel::Llm(ModelConfig::qwen2_12b()),
-        HardwareProfile::a800(),
+        ClusterSpec::uniform(HardwareProfile::a800()),
         16,
     );
     q.seq = 3072;
@@ -23,14 +25,16 @@ fn main() {
 
     // Fixed survivor set (same filters the search applies) so every
     // thread count does identical work.
-    let survivors: Vec<_> = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &q.offload_variants)
-        .into_iter()
-        .filter(|c| admissible(&q.model, c).is_ok())
-        .filter(|c| {
-            let cost = ctx.cost_model(c);
-            memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes)
-        })
-        .collect();
+    let orders = q.cluster.group_orders();
+    let survivors: Vec<_> =
+        enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants)
+            .into_iter()
+            .filter(|c| admissible(&q.model, &q.cluster, c).is_ok())
+            .filter(|c| {
+                let cost = ctx.cost_model(c);
+                memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes)
+            })
+            .collect();
     println!("evaluating {} candidates (16-GPU budget, 12.1B, A800, seq 3072)\n", survivors.len());
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -79,4 +83,38 @@ fn main() {
             .map(|b| b.candidate.label())
             .unwrap_or_else(|| "none".into())
     );
+
+    // Heterogeneous search path (`stp plan --cluster mixed`): same budget
+    // over the mixed A800+H20 preset — the perf baseline for group-order
+    // enumeration, stage-time-balanced partitioning and per-device OOM.
+    let mut hq = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::mixed_a800_h20(),
+        16,
+    );
+    hq.seq = 3072;
+    let t0 = Instant::now();
+    let hetero = plan(&hq);
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "\nhetero plan() [{}]: {} enumerated -> {} simulated in {:.2}s ({:.0} cands/s); best = {}",
+        hetero.cluster_name,
+        hetero.n_enumerated,
+        hetero.n_simulated(),
+        secs,
+        hetero.n_simulated() as f64 / secs.max(1e-9),
+        hetero
+            .best()
+            .map(|b| b.candidate.label())
+            .unwrap_or_else(|| "none".into())
+    );
+    let json_path = if std::path::Path::new("target").is_dir() {
+        std::path::PathBuf::from("target/plan-search-hetero.json")
+    } else {
+        std::env::temp_dir().join("plan-search-hetero.json")
+    };
+    match std::fs::write(&json_path, hetero.to_json().to_string()) {
+        Ok(()) => println!("hetero ranked report: {}", json_path.display()),
+        Err(e) => eprintln!("hetero report write failed: {e}"),
+    }
 }

@@ -5,19 +5,19 @@
 
 use std::time::Instant;
 
-use stp::cluster::{HardwareProfile, Topology};
+use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
 use stp::model::ModelConfig;
 use stp::schedule::{build_schedule, ScheduleKind};
 use stp::sim::{CostModel, Simulator};
 
 fn main() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     println!("{:12} {:>4} {:>5} {:>8} {:>10} {:>12}", "schedule", "pp", "m", "ops", "sim ms", "ops/ms");
     for kind in [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp] {
         for (pp, m) in [(2usize, 64usize), (4, 192), (8, 512)] {
             let topo = Topology::new(4, pp, 1);
-            let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+            let cost = CostModel::analytic(&model, &topo, &cluster, 4096, 1);
             let s = build_schedule(kind, &topo, m);
             let _ = Simulator::new(&cost).run(&s); // warm
             let mut times = Vec::new();

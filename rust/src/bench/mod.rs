@@ -4,16 +4,17 @@
 //! on the *shape* of the results (who wins, by roughly what factor) without
 //! re-parsing stdout.
 
-use crate::cluster::{partition_mllm, HardwareProfile, Topology};
+use crate::cluster::{partition_mllm, ClusterSpec, HardwareProfile, Topology};
 use crate::metrics::{gb, pct, Table};
 use crate::model::{MllmConfig, ModelConfig};
 use crate::schedule::{build_schedule, build_schedule_scaled, theory, ScheduleKind, TheoryInputs};
 use crate::sim::{AcMode, CostModel, SimReport, Simulator};
 
 /// Simulate one (model, topo, seq, mb_size, schedule) point.
+#[allow(clippy::too_many_arguments)]
 pub fn run_llm(
     model: &ModelConfig,
-    hw: &HardwareProfile,
+    cluster: &ClusterSpec,
     tp: usize,
     pp: usize,
     seq: usize,
@@ -22,7 +23,7 @@ pub fn run_llm(
     kind: ScheduleKind,
 ) -> SimReport {
     let topo = Topology::new(tp, pp, 1);
-    let cost = CostModel::analytic(model, &topo, hw, seq, mb_size);
+    let cost = CostModel::analytic(model, &topo, cluster, seq, mb_size);
     let s = build_schedule_scaled(kind, &topo, n_mb, cost.chunk_scales());
     Simulator::new(&cost).run(&s)
 }
@@ -31,13 +32,13 @@ pub fn run_llm(
 /// speedup of braided execution, vs TP size (Qwen2-12.1B, seq 6144).
 pub fn fig1() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut t = Table::new(vec![
         "tp", "comm share fwd %", "naive fwd (ms)", "overlapped fwd (ms)", "overlap speedup",
     ]);
     for tp in [2usize, 4, 8] {
         let topo = Topology::new(tp, 2, 1);
-        let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
         let c = &cost.chunks[0];
         let share = c.t_ar_fwd() / (c.t_f() + c.t_ar_fwd());
         // Paper Fig. 1's definition: forward pass with exposed AR (naive)
@@ -62,10 +63,10 @@ pub fn fig1() -> String {
 /// Table 1 — theoretical bubbles/memory vs simulated, side by side.
 pub fn table1() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let (tp, pp, seq, m) = (8, 4, 4096, 64);
     let topo = Topology::new(tp, pp, 1);
-    let cost = CostModel::analytic(&model, &topo, &hw, seq, 1);
+    let cost = CostModel::analytic(&model, &topo, &cluster, seq, 1);
     let ti: TheoryInputs = cost.theory_inputs(m);
     let ma = *cost.act_bytes.iter().max().unwrap() as f64;
 
@@ -105,7 +106,7 @@ pub fn table1() -> String {
 
 /// Shared grid printer for the LLM throughput experiments.
 fn llm_grid(title: &str, model: &ModelConfig, grid: &[(usize, usize, usize, usize)]) -> String {
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut t = Table::new(vec![
         "seq", "tp", "pp", "mbs", "1f1b-i", "zb-v", "ours", "gain vs 1f1b-i",
     ]);
@@ -113,7 +114,7 @@ fn llm_grid(title: &str, model: &ModelConfig, grid: &[(usize, usize, usize, usiz
         for n_mb in [64usize, 128, 192] {
             let thr: Vec<f64> = ScheduleKind::paper_trio()
                 .iter()
-                .map(|&k| run_llm(model, &hw, tp, pp, seq, mb_size, n_mb, k).throughput())
+                .map(|&k| run_llm(model, &cluster, tp, pp, seq, mb_size, n_mb, k).throughput())
                 .collect();
             t.row(vec![
                 seq.to_string(),
@@ -151,12 +152,12 @@ pub fn fig8() -> String {
 /// Fig. 9 — peak activation memory, 12.1B, PP∈{4,2}.
 pub fn fig9() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut t = Table::new(vec!["seq", "tp", "pp", "1f1b-i GB", "zb-v GB", "ours GB"]);
     for (seq, tp, pp) in [(3072, 4, 4), (3072, 8, 2), (6144, 4, 4), (6144, 8, 2)] {
         let mems: Vec<f64> = ScheduleKind::paper_trio()
             .iter()
-            .map(|&k| run_llm(&model, &hw, tp, pp, seq, 2, 64, k).peak_activation_gb())
+            .map(|&k| run_llm(&model, &cluster, tp, pp, seq, 2, 64, k).peak_activation_gb())
             .collect();
         t.row(vec![
             seq.to_string(),
@@ -174,7 +175,7 @@ pub fn fig9() -> String {
 #[allow(clippy::too_many_arguments)]
 pub fn run_mllm(
     mllm: &MllmConfig,
-    hw: &HardwareProfile,
+    cluster: &ClusterSpec,
     tp: usize,
     pp: usize,
     vit_tokens: usize,
@@ -184,14 +185,15 @@ pub fn run_mllm(
 ) -> SimReport {
     let topo = Topology::new(tp, pp, 1);
     let plan = partition_mllm(mllm, topo.chunks());
-    let cost = CostModel::analytic_mllm(&mllm.lm, &mllm.vit, &plan, &topo, hw, lm_seq, vit_tokens, 1);
+    let cost =
+        CostModel::analytic_mllm(&mllm.lm, &mllm.vit, &plan, &topo, cluster, lm_seq, vit_tokens, 1);
     let s = build_schedule_scaled(kind, &topo, n_mb, cost.chunk_scales());
     Simulator::new(&cost).run(&s)
 }
 
 /// Table 3 — MLLM throughput + peak memory.
 pub fn table3() -> String {
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut t = Table::new(vec![
         "model", "vit len", "lm len", "tp", "pp", "schedule", "mbs=64/96", "mbs=128/176",
         "mbs=192/256", "mem GB",
@@ -206,7 +208,7 @@ pub fn table3() -> String {
         for kind in ScheduleKind::paper_trio() {
             let rs: Vec<SimReport> = mbs
                 .iter()
-                .map(|&m| run_mllm(mllm, &hw, *tp, *pp, *vit_len, *lm_len, m, kind))
+                .map(|&m| run_mllm(mllm, &cluster, *tp, *pp, *vit_len, *lm_len, m, kind))
                 .collect();
             t.row(vec![
                 mllm.name.clone(),
@@ -229,7 +231,7 @@ pub fn table3() -> String {
 /// activation memory over 4 PP stages.
 pub fn fig10() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::h20();
+    let cluster = ClusterSpec::uniform(HardwareProfile::h20());
     let mut t = Table::new(vec!["schedule", "thr (samples/s)", "per-stage act GB", "peak GB"]);
     for kind in [
         ScheduleKind::OneF1BInterleaved,
@@ -237,7 +239,7 @@ pub fn fig10() -> String {
         ScheduleKind::Stp,
         ScheduleKind::StpOffload,
     ] {
-        let r = run_llm(&model, &hw, 4, 4, 6144, 1, 128, kind);
+        let r = run_llm(&model, &cluster, 4, 4, 6144, 1, 128, kind);
         let per: Vec<String> =
             r.activation_gb_per_device().iter().map(|g| format!("{g:.1}")).collect();
         t.row(vec![
@@ -253,7 +255,7 @@ pub fn fig10() -> String {
 /// Table 4 — maximized memory utilization on 16 H20 96G GPUs.
 pub fn table4() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::h20();
+    let cluster = ClusterSpec::uniform(HardwareProfile::h20());
     let mut t = Table::new(vec![
         "tp", "pp", "mb size", "schedule", "thr", "MFU %", "mem GB", "status",
     ]);
@@ -279,7 +281,7 @@ pub fn table4() -> String {
         (8, 2, 3, ScheduleKind::StpOffload),
     ];
     for (tp, pp, mb_size, kind) in cases {
-        let r = run_llm(&model, &hw, tp, pp, 8192, mb_size, 192, kind);
+        let r = run_llm(&model, &cluster, tp, pp, 8192, mb_size, 192, kind);
         let oom = r.is_oom();
         t.row(vec![
             tp.to_string(),
@@ -297,7 +299,7 @@ pub fn table4() -> String {
 
 /// Tables 5/6/7 — appendix grids (peak memory / throughput / MFU).
 pub fn table567() -> String {
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut t = Table::new(vec![
         "model", "seq", "tp", "pp", "schedule", "thr", "MFU %", "act GB",
     ]);
@@ -313,7 +315,7 @@ pub fn table567() -> String {
     ];
     for (model, seq, tp, pp, mb_size) in &cases {
         for kind in ScheduleKind::paper_trio() {
-            let r = run_llm(model, &hw, *tp, *pp, *seq, *mb_size, 192, kind);
+            let r = run_llm(model, &cluster, *tp, *pp, *seq, *mb_size, 192, kind);
             t.row(vec![
                 model.name.clone(),
                 seq.to_string(),
@@ -332,11 +334,11 @@ pub fn table567() -> String {
 /// Table 8 — H20 throughput grid.
 pub fn table8() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::h20();
+    let cluster = ClusterSpec::uniform(HardwareProfile::h20());
     let mut t = Table::new(vec!["tp", "pp", "schedule", "thr", "MFU %", "mem GB"]);
     for (tp, pp) in [(2usize, 8usize), (4, 4), (8, 2)] {
         for kind in ScheduleKind::paper_trio() {
-            let r = run_llm(&model, &hw, tp, pp, 6144, 1, 192, kind);
+            let r = run_llm(&model, &cluster, tp, pp, 6144, 1, 192, kind);
             t.row(vec![
                 tp.to_string(),
                 pp.to_string(),
@@ -356,9 +358,10 @@ pub fn fig13() -> String {
     let model = ModelConfig::qwen2_12b();
     let mut t = Table::new(vec!["hw", "tp", "attn comm %", "mlp comm %", "layer comm %"]);
     for hw in [HardwareProfile::a800(), HardwareProfile::h20()] {
+        let cluster = ClusterSpec::uniform(hw.clone());
         for tp in [4usize, 8] {
             let topo = Topology::new(tp, 2, 1);
-            let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+            let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
             let c = &cost.chunks[0];
             // Units alternate [norm, attn(+ar), norm, mlp(+ar)]; gather per-kind.
             let mut attn_c = 0.0;
@@ -393,7 +396,7 @@ pub fn fig13() -> String {
 /// Table 9 — activation-checkpointing compatibility.
 pub fn table9() -> String {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let topo = Topology::new(4, 4, 1);
     let mut t = Table::new(vec!["config", "thr (samples/s)", "peak act GB"]);
     for (label, mode) in [
@@ -403,7 +406,7 @@ pub fn table9() -> String {
         ("AC on Attn+MLP+Norm", AcMode::All),
     ] {
         let cost =
-            CostModel::analytic(&model, &topo, &hw, 6144, 1).with_activation_checkpoint(mode);
+            CostModel::analytic(&model, &topo, &cluster, 6144, 1).with_activation_checkpoint(mode);
         let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 128, cost.chunk_scales());
         let r = Simulator::new(&cost).run(&s);
         t.row(vec![
@@ -419,11 +422,12 @@ pub fn table9() -> String {
 pub fn table10() -> String {
     let model = ModelConfig::qwen2_12b();
     let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(hw.clone());
     let mut t = Table::new(vec!["mode", "tp", "pp", "x", "seq", "schedule", "thr"]);
     // CP=2, seq 12k.
     for kind in ScheduleKind::paper_trio() {
         let topo = Topology::new(2, 4, 1).with_cp(2);
-        let cost = CostModel::analytic(&model, &topo, &hw, 12288, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 12288, 1);
         let s = build_schedule_scaled(kind, &topo, 128, cost.chunk_scales());
         let r = Simulator::new(&cost).run(&s);
         t.row(vec![
@@ -440,7 +444,7 @@ pub fn table10() -> String {
     // all-reduce tax modelled from param bytes over the internode link.
     for kind in ScheduleKind::paper_trio() {
         let topo = Topology::new(2, 4, 2);
-        let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 4096, 1);
         let s = build_schedule_scaled(kind, &topo, 128, cost.chunk_scales());
         let r = Simulator::new(&cost).run(&s);
         let grad_bytes = model.total_params() * 2 / (topo.tp * topo.pp);
@@ -495,13 +499,50 @@ pub fn plan16() -> String {
     use crate::plan::{plan, PlanModel, PlanQuery};
     let mut q = PlanQuery::new(
         PlanModel::Llm(ModelConfig::qwen2_12b()),
-        HardwareProfile::a800(),
+        ClusterSpec::uniform(HardwareProfile::a800()),
         16,
     );
     // Lighter sweep than the CLI default: the bench target is shape, not
     // exhaustiveness.
     q.n_mb_options = vec![16, 64];
     plan(&q).render(10)
+}
+
+/// Heterogeneous auto-planner demo — the runnable Fig. 13-style "who wins
+/// flips with hardware" result: plan the same 16-GPU budget over a
+/// uniform A800 pool, a uniform H20 pool, and the mixed A800+H20 preset.
+/// On the mixed pool the planner balances *stage time* (non-uniform layer
+/// split), enumerates fast-first vs interleaved group orders, and rejects
+/// per-device OOM against each group's own `mem_gib`.
+pub fn plan_mixed() -> String {
+    use crate::plan::{plan, PlanModel, PlanQuery};
+    let pools = [
+        ClusterSpec::uniform(HardwareProfile::a800()),
+        ClusterSpec::uniform(HardwareProfile::h20()),
+        ClusterSpec::mixed_a800_h20(),
+    ];
+    let mut out = Vec::new();
+    let mut best_lines = Vec::new();
+    for cluster in pools {
+        let mut q = PlanQuery::new(
+            PlanModel::Llm(ModelConfig::qwen2_12b()),
+            cluster,
+            16,
+        );
+        q.n_mb_options = vec![16, 64];
+        let r = plan(&q);
+        best_lines.push(format!(
+            "{:16} -> {}",
+            r.cluster_name,
+            r.best().map(|b| b.candidate.label()).unwrap_or_else(|| "no feasible plan".into())
+        ));
+        out.push(r.render(5));
+    }
+    format!(
+        "{}\n== who wins flips with hardware (best plan per pool)\n{}",
+        out.join("\n"),
+        best_lines.join("\n")
+    )
 }
 
 /// Run every regenerator (the `stp bench all` target).
@@ -543,6 +584,7 @@ pub fn by_name(name: &str) -> Option<String> {
         "table10" => table10(),
         "table11" => table11_sim(),
         "plan" => plan16(),
+        "plan-mixed" | "plan-hetero" => plan_mixed(),
         "all" => all(),
         _ => return None,
     })

@@ -1,10 +1,16 @@
-//! Cluster description: hardware profiles, parallel topology, and the
-//! layer→stage partitioner (LLM uniform split and MLLM ViT-first split).
+//! Cluster description: hardware profiles, (possibly heterogeneous) pool
+//! specifications, parallel topology, and the layer→stage partitioners
+//! (LLM uniform split, stage-time-balanced heterogeneous split, MLLM
+//! ViT-first split).
 
 mod partition;
 mod profile;
+mod spec;
 mod topology;
 
-pub use partition::{partition_llm, partition_mllm, StagePlan, ChunkContent};
+pub use partition::{
+    partition_llm, partition_llm_weighted, partition_mllm, ChunkContent, StagePlan,
+};
 pub use profile::HardwareProfile;
+pub use spec::{ClusterSpec, DeviceView, GroupOrder, NodeGroup};
 pub use topology::Topology;

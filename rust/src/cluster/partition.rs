@@ -88,6 +88,80 @@ pub fn partition_llm(model: &ModelConfig, n_chunks: usize) -> StagePlan {
     StagePlan { chunks }
 }
 
+/// Heterogeneity-aware LLM split: distribute layers over `n_chunks` in
+/// proportion to `weights` (each chunk's effective FLOPs — the profile of
+/// the device that will execute it), so *stage time* (layers ÷ effective
+/// FLOPs) balances instead of layer count. Every chunk keeps ≥ 1 layer;
+/// the last chunk donates up to two layers to the fastest chunk to
+/// compensate for the output head, mirroring `partition_llm`'s §5.1 rule.
+/// Deterministic: largest-remainder apportionment, ties to lower index.
+pub fn partition_llm_weighted(
+    model: &ModelConfig,
+    n_chunks: usize,
+    weights: &[f64],
+) -> StagePlan {
+    assert_eq!(weights.len(), n_chunks, "one weight per chunk");
+    assert!(n_chunks >= 1);
+    assert!(
+        model.layers >= n_chunks,
+        "{} layers cannot fill {} chunks",
+        model.layers,
+        n_chunks
+    );
+    assert!(weights.iter().all(|&w| w > 0.0), "weights must be positive");
+
+    let mut counts = vec![1usize; n_chunks];
+    let remaining = model.layers - n_chunks;
+    let sum_w: f64 = weights.iter().sum();
+    let shares: Vec<f64> = weights.iter().map(|w| remaining as f64 * w / sum_w).collect();
+    for (c, s) in counts.iter_mut().zip(&shares) {
+        *c += *s as usize;
+    }
+    let mut leftover = model.layers - counts.iter().sum::<usize>();
+    // Largest fractional part first; ties broken toward the lower index.
+    let mut order: Vec<usize> = (0..n_chunks).collect();
+    order.sort_by(|&a, &b| {
+        let fa = shares[a] - shares[a].floor();
+        let fb = shares[b] - shares[b].floor();
+        fb.partial_cmp(&fa).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    for &i in order.iter().cycle().take(n_chunks * (leftover / n_chunks.max(1) + 1)) {
+        if leftover == 0 {
+            break;
+        }
+        counts[i] += 1;
+        leftover -= 1;
+    }
+
+    // Head compensation: the last chunk carries the vocabulary head, so
+    // shift up to two of its layers onto the fastest chunk.
+    if n_chunks >= 2 {
+        let fastest = (0..n_chunks - 1)
+            .max_by(|&a, &b| {
+                weights[a]
+                    .partial_cmp(&weights[b])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.cmp(&a))
+            })
+            .unwrap();
+        let give = 2.min(counts[n_chunks - 1].saturating_sub(1));
+        counts[n_chunks - 1] -= give;
+        counts[fastest] += give;
+    }
+
+    let chunks = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| ChunkContent {
+            lm_layers: n,
+            vit_layers: 0,
+            has_embed: i == 0,
+            has_head: i == n_chunks - 1,
+        })
+        .collect();
+    StagePlan { chunks }
+}
+
 /// MLLM split: the whole ViT on chunk 0 (first virtual stage of device 0),
 /// the LM uniformly over chunks `1..n_chunks` with the last two layers
 /// short (paper §5.1).
@@ -143,6 +217,27 @@ mod tests {
         assert!(p.chunks[7].has_head);
         assert_eq!(p.chunks.iter().filter(|c| c.has_embed).count(), 1);
         assert_eq!(p.chunks.iter().filter(|c| c.has_head).count(), 1);
+    }
+
+    #[test]
+    fn weighted_partition_conserves_layers_and_biases_fast_chunks() {
+        let m = ModelConfig::qwen2_12b(); // 40 layers
+        // A800/H20 effective-FLOPs ratio under the V-shape (fast, slow,
+        // slow, fast).
+        let w = [1.814, 1.0, 1.0, 1.814];
+        let p = partition_llm_weighted(&m, 4, &w);
+        assert_eq!(p.total_lm_layers(), m.layers);
+        let counts: Vec<usize> = p.chunks.iter().map(|c| c.lm_layers).collect();
+        assert!(counts.iter().all(|&c| c >= 1), "{counts:?}");
+        assert!(counts[0] > counts[1], "fast chunk should carry more: {counts:?}");
+        assert!(p.chunks[0].has_embed && p.chunks[3].has_head);
+    }
+
+    #[test]
+    fn weighted_partition_is_deterministic() {
+        let m = ModelConfig::qwen2_26b();
+        let w = vec![2.0, 1.0, 1.0, 2.0, 2.0, 1.0, 1.0, 2.0];
+        assert_eq!(partition_llm_weighted(&m, 8, &w), partition_llm_weighted(&m, 8, &w));
     }
 
     #[test]

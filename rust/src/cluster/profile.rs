@@ -25,6 +25,8 @@ pub struct HardwareProfile {
     pub allreduce_efficiency: f64,
     /// Fixed launch/synchronization latency per collective, seconds.
     pub collective_latency: f64,
+    /// Fixed launch latency per point-to-point transfer, seconds.
+    pub p2p_latency: f64,
     /// Inter-node bandwidth per GPU, GB/s (IB HDR ≈ 25 GB/s).
     pub internode_gbps: f64,
     /// Host↔device (PCIe) bandwidth, GB/s — bounds activation offloading.
@@ -46,6 +48,7 @@ impl HardwareProfile {
             nvlink_gbps: 400.0,
             allreduce_efficiency: 0.55,
             collective_latency: 25e-6,
+            p2p_latency: 5e-6,
             internode_gbps: 25.0,
             pcie_gbps: 32.0, // Gen4 x16
             mem_gib: 80.0,
@@ -64,6 +67,7 @@ impl HardwareProfile {
             nvlink_gbps: 900.0,
             allreduce_efficiency: 0.65,
             collective_latency: 20e-6,
+            p2p_latency: 5e-6,
             internode_gbps: 50.0,
             pcie_gbps: 64.0, // Gen5 x16
             mem_gib: 96.0,
@@ -82,6 +86,7 @@ impl HardwareProfile {
             nvlink_gbps: 10.0,
             allreduce_efficiency: 0.8,
             collective_latency: 5e-6,
+            p2p_latency: 5e-6,
             internode_gbps: 10.0,
             pcie_gbps: 10.0,
             mem_gib: 16.0,
@@ -110,7 +115,7 @@ impl HardwareProfile {
     /// selects the interconnect tier.
     pub fn p2p_secs(&self, bytes: usize, cross_node: bool) -> f64 {
         let bw = if cross_node { self.internode_gbps } else { self.nvlink_gbps };
-        bytes as f64 / (bw * 1e9) + 5e-6 // small launch latency
+        bytes as f64 / (bw * 1e9) + self.p2p_latency
     }
 
     /// Host offload/reload time for `bytes` over PCIe.
@@ -160,6 +165,14 @@ mod tests {
             / (hw.nvlink_gbps * hw.allreduce_efficiency * 1e9)
             + hw.collective_latency;
         assert!((t8 - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn p2p_latency_is_a_profile_field() {
+        let mut hw = HardwareProfile::a800();
+        assert_eq!(hw.p2p_secs(0, false), hw.p2p_latency);
+        hw.p2p_latency = 1e-3;
+        assert_eq!(hw.p2p_secs(0, true), 1e-3);
     }
 
     #[test]

@@ -1,0 +1,467 @@
+//! Cluster specification for (possibly heterogeneous) device pools.
+//!
+//! The paper's two testbeds — A800 SXM4 80G and H20 96G — already show
+//! that hardware asymmetry changes which schedule wins (Fig. 13 /
+//! Table 8: "TP bubbles matter less on H20"). A [`ClusterSpec`] describes
+//! a mixed pool as *node groups* (`nodes × HardwareProfile`) plus an
+//! inter-group link tier; a [`DeviceView`] resolves any PP rank to its
+//! group (and thus its profile) and decides the link tier of each
+//! pipeline hop. `ClusterSpec::uniform(hw)` reproduces the old
+//! single-profile behavior exactly, so every pre-existing call site
+//! converts mechanically.
+
+use crate::config::json::Json;
+
+use super::profile::HardwareProfile;
+use super::topology::Topology;
+
+use std::collections::BTreeMap;
+
+/// One homogeneous group of nodes inside a pool.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeGroup {
+    /// Node count; `0` means "unbounded" (the uniform-spec sentinel, so a
+    /// uniform pool can host any topology, exactly like the old global
+    /// profile did).
+    pub nodes: usize,
+    pub hw: HardwareProfile,
+}
+
+impl NodeGroup {
+    /// Devices (GPUs) this group contributes.
+    pub fn devices(&self) -> usize {
+        if self.nodes == 0 {
+            usize::MAX
+        } else {
+            self.nodes.saturating_mul(self.hw.gpus_per_node)
+        }
+    }
+}
+
+/// How pipeline stages are assigned to node groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum GroupOrder {
+    /// Fill groups in declaration order (the only order a uniform pool
+    /// enumerates — it is a no-op there).
+    Declared,
+    /// Fill the highest-effective-FLOPs group first (early stages, which
+    /// hold the embedding and the deepest warm-up, land on fast devices).
+    FastFirst,
+    /// Round-robin stages across groups: every pipeline hop crosses the
+    /// inter-group tier, but fast and slow devices alternate.
+    Interleaved,
+}
+
+impl GroupOrder {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GroupOrder::Declared => "declared",
+            GroupOrder::FastFirst => "fast-first",
+            GroupOrder::Interleaved => "interleaved",
+        }
+    }
+}
+
+/// Resolution of one concrete topology against a [`ClusterSpec`]: which
+/// group (and therefore which [`HardwareProfile`]) each PP rank runs on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceView {
+    /// `groups[d]` = group index of PP rank `d`.
+    groups: Vec<usize>,
+}
+
+impl DeviceView {
+    /// Group index of a PP rank.
+    pub fn group_of(&self, dev: usize) -> usize {
+        self.groups[dev]
+    }
+
+    /// Number of PP ranks resolved.
+    pub fn n_devices(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// PP-rank count per group (indexed by group id).
+    pub fn ranks_per_group(&self, n_groups: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; n_groups];
+        for &g in &self.groups {
+            counts[g] += 1;
+        }
+        counts
+    }
+}
+
+/// One (JSON key, getter, setter) row per numeric [`HardwareProfile`]
+/// field — the single source both `to_json` and `from_json` iterate, so
+/// the two cannot drift when a profile field is added. (`gpus_per_node`
+/// is handled separately: it is integral and validated.)
+fn profile_fields() -> [(
+    &'static str,
+    fn(&HardwareProfile) -> f64,
+    fn(&mut HardwareProfile, f64),
+); 10] {
+    [
+        ("bf16_tflops", |hw| hw.bf16_tflops, |hw, v| hw.bf16_tflops = v),
+        ("matmul_efficiency", |hw| hw.matmul_efficiency, |hw, v| hw.matmul_efficiency = v),
+        ("hbm_gbps", |hw| hw.hbm_gbps, |hw, v| hw.hbm_gbps = v),
+        ("nvlink_gbps", |hw| hw.nvlink_gbps, |hw, v| hw.nvlink_gbps = v),
+        (
+            "allreduce_efficiency",
+            |hw| hw.allreduce_efficiency,
+            |hw, v| hw.allreduce_efficiency = v,
+        ),
+        ("collective_latency", |hw| hw.collective_latency, |hw, v| hw.collective_latency = v),
+        ("p2p_latency", |hw| hw.p2p_latency, |hw, v| hw.p2p_latency = v),
+        ("internode_gbps", |hw| hw.internode_gbps, |hw, v| hw.internode_gbps = v),
+        ("pcie_gbps", |hw| hw.pcie_gbps, |hw, v| hw.pcie_gbps = v),
+        ("mem_gib", |hw| hw.mem_gib, |hw, v| hw.mem_gib = v),
+    ]
+}
+
+/// A (possibly mixed) device pool: node groups plus inter-group link tier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub groups: Vec<NodeGroup>,
+    /// Inter-group link bandwidth per GPU, GB/s. `0.0` means "limited by
+    /// the groups' own inter-node NICs" (cross-group hops then pay the
+    /// slower of the two endpoints' `internode_gbps`).
+    pub intergroup_gbps: f64,
+}
+
+impl ClusterSpec {
+    /// A uniform pool: one unbounded group — behavior-preserving stand-in
+    /// for the old global `HardwareProfile`.
+    pub fn uniform(hw: HardwareProfile) -> ClusterSpec {
+        ClusterSpec {
+            name: hw.name.clone(),
+            groups: vec![NodeGroup { nodes: 0, hw }],
+            intergroup_gbps: 0.0,
+        }
+    }
+
+    /// The mixed testbed preset: one A800 node + one H20 node (16 GPUs),
+    /// joined by a shared IB tier. This is the runnable Fig. 13-style
+    /// "who wins flips with hardware" demo pool.
+    pub fn mixed_a800_h20() -> ClusterSpec {
+        ClusterSpec {
+            name: "mixed-a800-h20".into(),
+            groups: vec![
+                NodeGroup { nodes: 1, hw: HardwareProfile::a800() },
+                NodeGroup { nodes: 1, hw: HardwareProfile::h20() },
+            ],
+            intergroup_gbps: 25.0,
+        }
+    }
+
+    /// Whether every device shares one profile (the fast path that keeps
+    /// all legacy arithmetic bit-for-bit identical).
+    pub fn is_uniform(&self) -> bool {
+        self.groups.len() <= 1 || self.groups.iter().all(|g| g.hw == self.groups[0].hw)
+    }
+
+    /// Total devices across groups (saturating; unbounded groups dominate).
+    pub fn total_devices(&self) -> usize {
+        self.groups.iter().fold(0usize, |acc, g| acc.saturating_add(g.devices()))
+    }
+
+    /// Smallest per-device memory across groups, GiB.
+    pub fn min_mem_gib(&self) -> f64 {
+        self.groups.iter().map(|g| g.hw.mem_gib).fold(f64::INFINITY, f64::min)
+    }
+
+    /// Largest per-device memory across groups, GiB.
+    pub fn max_mem_gib(&self) -> f64 {
+        self.groups.iter().map(|g| g.hw.mem_gib).fold(0.0, f64::max)
+    }
+
+    /// Group orderings worth enumerating for this pool. Uniform pools get
+    /// exactly one (so planner candidate ids match the single-profile
+    /// enumeration); mixed pools search fast-group-first vs interleaved.
+    pub fn group_orders(&self) -> Vec<GroupOrder> {
+        if self.is_uniform() {
+            vec![GroupOrder::Declared]
+        } else {
+            vec![GroupOrder::FastFirst, GroupOrder::Interleaved]
+        }
+    }
+
+    /// Profile of the group a view maps `dev` to.
+    pub fn profile_of<'a>(&'a self, view: &DeviceView, dev: usize) -> &'a HardwareProfile {
+        &self.groups[view.group_of(dev)].hw
+    }
+
+    /// Resolve a topology against this pool: assign each of the `pp`
+    /// pipeline stages (each consuming `tp·cp` GPUs in every one of the
+    /// `dp` replicas) to a group, in the requested order. `None` when the
+    /// pool cannot host the topology.
+    pub fn device_view(&self, topo: &Topology, order: GroupOrder) -> Option<DeviceView> {
+        let per_stage = topo.tp * topo.cp * topo.dp;
+        if per_stage == 0 {
+            return None;
+        }
+        let mut caps: Vec<usize> =
+            self.groups.iter().map(|g| g.devices() / per_stage).collect();
+        let seq: Vec<usize> = match order {
+            GroupOrder::Declared | GroupOrder::Interleaved => (0..self.groups.len()).collect(),
+            GroupOrder::FastFirst => {
+                let mut idx: Vec<usize> = (0..self.groups.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    self.groups[b]
+                        .hw
+                        .matmul_flops_per_sec()
+                        .partial_cmp(&self.groups[a].hw.matmul_flops_per_sec())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                idx
+            }
+        };
+
+        let mut assigned = Vec::with_capacity(topo.pp);
+        match order {
+            GroupOrder::Interleaved => {
+                while assigned.len() < topo.pp {
+                    let before = assigned.len();
+                    for &g in &seq {
+                        if assigned.len() == topo.pp {
+                            break;
+                        }
+                        if caps[g] > 0 {
+                            caps[g] -= 1;
+                            assigned.push(g);
+                        }
+                    }
+                    if assigned.len() == before {
+                        return None; // every group exhausted
+                    }
+                }
+            }
+            _ => {
+                for &g in &seq {
+                    while caps[g] > 0 && assigned.len() < topo.pp {
+                        caps[g] -= 1;
+                        assigned.push(g);
+                    }
+                }
+                if assigned.len() < topo.pp {
+                    return None;
+                }
+            }
+        }
+        Some(DeviceView { groups: assigned })
+    }
+
+    /// Point-to-point time for one pipeline hop between PP ranks under a
+    /// view. Same-group hops use that group's profile (node-locality rule
+    /// unchanged); cross-group hops pay the slower link tier of the two
+    /// endpoints (capped further by `intergroup_gbps` when set) plus the
+    /// larger launch latency.
+    pub fn p2p_secs(
+        &self,
+        view: &DeviceView,
+        topo: &Topology,
+        from: usize,
+        to: usize,
+        bytes: usize,
+    ) -> f64 {
+        if from == to {
+            return 0.0;
+        }
+        let (gf, gt) = (view.group_of(from), view.group_of(to));
+        if gf == gt {
+            let hw = &self.groups[gf].hw;
+            hw.p2p_secs(bytes, topo.pp_hop_cross_node(from, to, hw.gpus_per_node))
+        } else {
+            let a = &self.groups[gf].hw;
+            let b = &self.groups[gt].hw;
+            let mut bw = a.internode_gbps.min(b.internode_gbps);
+            if self.intergroup_gbps > 0.0 {
+                bw = bw.min(self.intergroup_gbps);
+            }
+            bytes as f64 / (bw * 1e9) + a.p2p_latency.max(b.p2p_latency)
+        }
+    }
+
+    /// Serialize (the `--cluster <json>` file format).
+    pub fn to_json(&self) -> Json {
+        let groups: Vec<Json> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let mut o = BTreeMap::new();
+                o.insert("hw".into(), Json::Str(g.hw.name.clone()));
+                o.insert("nodes".into(), Json::Num(g.nodes as f64));
+                for (key, get, _) in profile_fields() {
+                    o.insert(key.into(), Json::Num(get(&g.hw)));
+                }
+                o.insert("gpus_per_node".into(), Json::Num(g.hw.gpus_per_node as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("name".into(), Json::Str(self.name.clone()));
+        root.insert("intergroup_gbps".into(), Json::Num(self.intergroup_gbps));
+        root.insert("groups".into(), Json::Arr(groups));
+        Json::Obj(root)
+    }
+
+    /// Parse a `--cluster <json>` value. Each group names a base preset
+    /// (`"hw": "a800" | "h20" | "cpu"`) and may override any profile
+    /// field; `nodes` defaults to 1 (`0` = unbounded).
+    pub fn from_json(v: &Json) -> Result<ClusterSpec, String> {
+        let groups_json =
+            v.get("groups").and_then(Json::as_arr).ok_or("cluster spec needs a 'groups' array")?;
+        if groups_json.is_empty() {
+            return Err("cluster spec needs at least one group".into());
+        }
+        let mut groups = Vec::with_capacity(groups_json.len());
+        for (i, g) in groups_json.iter().enumerate() {
+            let base = g.get("hw").and_then(Json::as_str).unwrap_or("a800");
+            let mut hw = match base {
+                "a800" | "a800-sxm4-80g" => HardwareProfile::a800(),
+                "h20" | "h20-96g" => HardwareProfile::h20(),
+                "cpu" | "cpu-sim" => HardwareProfile::cpu_sim(),
+                other => return Err(format!("group {i}: unknown hw preset '{other}'")),
+            };
+            hw.name = base.to_string();
+            let num = |key: &str| g.get(key).and_then(Json::as_f64);
+            for (key, _, set) in profile_fields() {
+                if let Some(x) = num(key) {
+                    set(&mut hw, x);
+                }
+            }
+            if let Some(x) = num("gpus_per_node") {
+                if x < 1.0 {
+                    return Err(format!("group {i}: gpus_per_node must be >= 1"));
+                }
+                hw.gpus_per_node = x as usize;
+            }
+            let nodes = match num("nodes") {
+                Some(x) if x < 0.0 || x.fract() != 0.0 => {
+                    return Err(format!("group {i}: nodes must be a non-negative integer"));
+                }
+                Some(x) => x as usize, // 0 = unbounded
+                None => 1,
+            };
+            groups.push(NodeGroup { nodes, hw });
+        }
+        Ok(ClusterSpec {
+            name: v
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or("cluster")
+                .to_string(),
+            groups,
+            intergroup_gbps: v.get("intergroup_gbps").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_hosts_any_topology_on_group_zero() {
+        let spec = ClusterSpec::uniform(HardwareProfile::a800());
+        assert!(spec.is_uniform());
+        assert_eq!(spec.group_orders(), vec![GroupOrder::Declared]);
+        for topo in [Topology::new(8, 2, 1), Topology::new(1, 16, 4)] {
+            let v = spec.device_view(&topo, GroupOrder::Declared).unwrap();
+            assert_eq!(v.n_devices(), topo.pp);
+            assert!((0..topo.pp).all(|d| v.group_of(d) == 0));
+        }
+    }
+
+    #[test]
+    fn uniform_p2p_matches_profile_arithmetic() {
+        let hw = HardwareProfile::a800();
+        let spec = ClusterSpec::uniform(hw.clone());
+        let topo = Topology::new(8, 2, 1);
+        let view = spec.device_view(&topo, GroupOrder::Declared).unwrap();
+        let bytes = 64 << 20;
+        let cross = topo.pp_hop_cross_node(0, 1, hw.gpus_per_node);
+        assert_eq!(spec.p2p_secs(&view, &topo, 0, 1, bytes), hw.p2p_secs(bytes, cross));
+        assert_eq!(spec.p2p_secs(&view, &topo, 1, 1, bytes), 0.0);
+    }
+
+    #[test]
+    fn mixed_fast_first_puts_a800_on_early_stages() {
+        let spec = ClusterSpec::mixed_a800_h20();
+        assert!(!spec.is_uniform());
+        let topo = Topology::new(4, 4, 1); // 4 GPUs per stage: 2 stages per node
+        let v = spec.device_view(&topo, GroupOrder::FastFirst).unwrap();
+        assert_eq!((0..4).map(|d| v.group_of(d)).collect::<Vec<_>>(), vec![0, 0, 1, 1]);
+        let vi = spec.device_view(&topo, GroupOrder::Interleaved).unwrap();
+        assert_eq!((0..4).map(|d| vi.group_of(d)).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn capacity_rejects_oversized_topologies() {
+        let spec = ClusterSpec::mixed_a800_h20(); // 8 + 8 GPUs
+        // 16 GPUs per stage: no group can host even one stage.
+        assert!(spec.device_view(&Topology::new(8, 2, 2), GroupOrder::FastFirst).is_none());
+        // 32 GPUs total requested.
+        assert!(spec.device_view(&Topology::new(8, 4, 1), GroupOrder::FastFirst).is_none());
+        // Exactly fits.
+        assert!(spec.device_view(&Topology::new(8, 2, 1), GroupOrder::FastFirst).is_some());
+    }
+
+    #[test]
+    fn cross_group_hop_pays_slower_tier() {
+        let spec = ClusterSpec::mixed_a800_h20();
+        let topo = Topology::new(8, 2, 1);
+        let v = spec.device_view(&topo, GroupOrder::FastFirst).unwrap();
+        assert_ne!(v.group_of(0), v.group_of(1));
+        let bytes = 64 << 20;
+        let t = spec.p2p_secs(&v, &topo, 0, 1, bytes);
+        // intergroup 25 GB/s is the binding tier (A800 NIC 25, H20 NIC 50).
+        let expect = bytes as f64 / (25.0 * 1e9)
+            + spec.groups[0].hw.p2p_latency.max(spec.groups[1].hw.p2p_latency);
+        assert!((t - expect).abs() / expect < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_spec() {
+        let spec = ClusterSpec::mixed_a800_h20();
+        let j = spec.to_json().to_string();
+        let back = ClusterSpec::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.name, spec.name);
+        assert_eq!(back.groups.len(), 2);
+        assert_eq!(back.intergroup_gbps, spec.intergroup_gbps);
+        for (a, b) in back.groups.iter().zip(&spec.groups) {
+            assert_eq!(a.nodes, b.nodes);
+            assert_eq!(a.hw.bf16_tflops, b.hw.bf16_tflops);
+            assert_eq!(a.hw.mem_gib, b.hw.mem_gib);
+            assert_eq!(a.hw.gpus_per_node, b.hw.gpus_per_node);
+        }
+    }
+
+    #[test]
+    fn from_json_applies_overrides() {
+        let j = Json::parse(
+            r#"{"name":"derated","groups":[{"hw":"a800","nodes":2,"mem_gib":40.0}]}"#,
+        )
+        .unwrap();
+        let spec = ClusterSpec::from_json(&j).unwrap();
+        assert_eq!(spec.name, "derated");
+        assert_eq!(spec.groups[0].nodes, 2);
+        assert_eq!(spec.groups[0].hw.mem_gib, 40.0);
+        assert_eq!(spec.groups[0].hw.gpus_per_node, 8);
+        assert!(ClusterSpec::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_bad_inputs() {
+        let parse = |s: &str| ClusterSpec::from_json(&Json::parse(s).unwrap());
+        // Unknown hw preset must error, not silently become an A800.
+        assert!(parse(r#"{"groups":[{"hw":"h100"}]}"#).is_err());
+        // Negative node counts must not alias the 0 = unbounded sentinel.
+        assert!(parse(r#"{"groups":[{"hw":"a800","nodes":-1}]}"#).is_err());
+        assert!(parse(r#"{"groups":[{"hw":"a800","nodes":1.5}]}"#).is_err());
+        // 0 stays the documented unbounded marker.
+        let spec = parse(r#"{"groups":[{"hw":"a800","nodes":0}]}"#).unwrap();
+        assert_eq!(spec.groups[0].devices(), usize::MAX);
+    }
+}

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 
-use crate::cluster::{HardwareProfile, Topology};
+use crate::cluster::{ClusterSpec, HardwareProfile, Topology};
 use crate::model::ModelConfig;
 use crate::schedule::{build_schedule, build_schedule_scaled, validate, ScheduleKind};
 use crate::sim::{CostModel, Simulator};
@@ -18,18 +18,21 @@ stp — Synergistic Tensor and Pipeline Parallelism (NeurIPS 2025 reproduction)
 USAGE:
   stp sim      --tp N --pp N [--model 12b|26b] [--seq N] [--mbsize N]
                [--mb N] [--schedule KIND] [--hw a800|h20]
+               [--cluster mixed|FILE.json]
   stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
-                table8|fig13|table9|table10|table11|plan|all>
+                table8|fig13|table9|table10|table11|plan|plan-mixed|all>
   stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
-               [--chrome FILE] [--all-schedules]
+               [--chrome FILE] [--all-schedules] [--cluster mixed|FILE.json]
   stp validate [--schedule KIND] [--pp N] [--mb N]
   stp plan     --gpus N [--mem-gib F] [--model 12b|26b|tiny|mllm-14.9b|
-               mllm-28.8b] [--hw a800|h20] [--seq N] [--mbsize N]
-               [--topk N] [--threads N]
+               mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
+               [--seq N] [--mbsize N] [--topk N] [--threads N]
   stp train    [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
                [--lr F] [--seed N] [--quiet]   (needs the `pjrt` feature)
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
+Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
+           without it the pool is uniform over --hw.
 ";
 
 /// Parse `--key value` pairs after the subcommand.
@@ -84,6 +87,53 @@ pub fn hw_by_name(name: &str) -> HardwareProfile {
     }
 }
 
+/// Cluster lookup shared by the CLI and the examples: a preset name
+/// ("mixed"), a path to a JSON spec, or a uniform pool over a profile
+/// name ("a800" / "h20" / "cpu").
+pub fn cluster_by_name(name: &str) -> Result<ClusterSpec> {
+    match name {
+        "mixed" | "mixed-a800-h20" | "a800+h20" => Ok(ClusterSpec::mixed_a800_h20()),
+        path if path.ends_with(".json") => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))?;
+            let json = crate::config::Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))?;
+            ClusterSpec::from_json(&json).map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))
+        }
+        "a800" | "h20" | "cpu" => Ok(ClusterSpec::uniform(hw_by_name(name))),
+        other => Err(anyhow::anyhow!(
+            "unknown cluster '{other}' (expected 'mixed', a .json spec path, or a800|h20|cpu)"
+        )),
+    }
+}
+
+/// Resolve the pool for a subcommand: `--cluster` wins, else a uniform
+/// pool over `--hw`.
+fn cluster_from_flags(flags: &HashMap<String, String>) -> Result<ClusterSpec> {
+    match flags.get("cluster") {
+        Some(name) => cluster_by_name(name),
+        None => Ok(ClusterSpec::uniform(hw_by_name(&flag::<String>(
+            flags,
+            "hw",
+            "a800".into(),
+        )))),
+    }
+}
+
+/// Graceful CLI error (instead of the cost model's panic) when a pool
+/// cannot host the requested topology.
+fn check_hosts(cluster: &ClusterSpec, topo: &Topology) -> Result<()> {
+    if cluster.device_view(topo, crate::cluster::GroupOrder::Declared).is_none() {
+        anyhow::bail!(
+            "cluster '{}' ({} devices) cannot host {topo} ({} devices)",
+            cluster.name,
+            cluster.total_devices(),
+            topo.world_size()
+        );
+    }
+    Ok(())
+}
+
 /// CLI entry point. Returns the process exit code.
 pub fn run_cli(args: Vec<String>) -> Result<i32> {
     let Some(cmd) = args.first().map(String::as_str) else {
@@ -94,7 +144,7 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
     match cmd {
         "sim" => {
             let model = model_by_name(&flag::<String>(&flags, "model", "12b".into()));
-            let hw = hw_by_name(&flag::<String>(&flags, "hw", "a800".into()));
+            let cluster = cluster_from_flags(&flags)?;
             let topo = Topology::new(
                 flag(&flags, "tp", 8usize),
                 flag(&flags, "pp", 2usize),
@@ -106,11 +156,20 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
             let n_mb = flag(&flags, "mb", 64usize);
             let kind: ScheduleKind =
                 flag::<String>(&flags, "schedule", "stp".into()).parse().map_err(|e| anyhow::anyhow!("{e}"))?;
-            let cost = CostModel::analytic(&model, &topo, &hw, seq, mb_size);
+            check_hosts(&cluster, &topo)?;
+            let cost = CostModel::analytic_for(
+                &model,
+                &topo,
+                &cluster,
+                crate::cluster::GroupOrder::Declared,
+                kind.placement(),
+                seq,
+                mb_size,
+            );
             let s = build_schedule_scaled(kind, &topo, n_mb, cost.chunk_scales());
             let r = Simulator::new(&cost).run(&s);
             println!(
-                "{} | {} {} seq={seq} mbsize={mb_size} m={n_mb} hw={}\n\
+                "{} | {} {} seq={seq} mbsize={mb_size} m={n_mb} cluster={}\n\
                  iteration      {:>10.3} s\n\
                  throughput     {:>10.2} samples/s\n\
                  MFU            {:>10.2} %\n\
@@ -121,7 +180,7 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
                 kind.name(),
                 model.name,
                 topo,
-                hw.name,
+                cluster.name,
                 r.iteration_secs,
                 r.throughput(),
                 100.0 * r.mfu(),
@@ -151,8 +210,8 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
             let n_mb = flag(&flags, "mb", 12usize);
             let width = flag(&flags, "width", 160usize);
             let model = model_by_name(&flag::<String>(&flags, "model", "12b".into()));
-            let hw = hw_by_name(&flag::<String>(&flags, "hw", "a800".into()));
-            let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+            let cluster = cluster_from_flags(&flags)?;
+            check_hosts(&cluster, &topo)?;
             let kinds: Vec<ScheduleKind> = if flags.contains_key("all-schedules") {
                 ScheduleKind::all().to_vec()
             } else {
@@ -161,6 +220,15 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
                     .map_err(|e| anyhow::anyhow!("{e}"))?]
             };
             for kind in kinds {
+                let cost = CostModel::analytic_for(
+                    &model,
+                    &topo,
+                    &cluster,
+                    crate::cluster::GroupOrder::Declared,
+                    kind.placement(),
+                    4096,
+                    1,
+                );
                 let s = build_schedule(kind, &topo, n_mb);
                 let r = Simulator::new(&cost).run(&s);
                 println!("{}", ascii_timeline(&r, width));
@@ -213,9 +281,9 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
     use crate::plan::{plan, PlanQuery};
 
     let model = plan_model_by_name(&flag::<String>(flags, "model", "12b".into()));
-    let hw = hw_by_name(&flag::<String>(flags, "hw", "a800".into()));
+    let cluster = cluster_from_flags(flags)?;
     let gpus = flag(flags, "gpus", 16usize);
-    let mut q = PlanQuery::new(model, hw, gpus);
+    let mut q = PlanQuery::new(model, cluster, gpus);
     q.mem_cap_gib = flag(flags, "mem-gib", q.mem_cap_gib);
     q.seq = flag(flags, "seq", q.seq);
     q.mb_size = flag(flags, "mbsize", q.mb_size);

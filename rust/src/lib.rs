@@ -23,15 +23,16 @@
 //!
 //! ```no_run
 //! use stp::model::ModelConfig;
-//! use stp::cluster::{HardwareProfile, Topology};
+//! use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
 //! use stp::schedule::{ScheduleKind, build_schedule};
 //! use stp::sim::{CostModel, Simulator};
 //!
 //! let model = ModelConfig::qwen2_12b();
 //! let topo = Topology::new(8, 2, 1); // TP=8, PP=2, DP=1
-//! let hw = HardwareProfile::a800();
+//! // A uniform pool; try `ClusterSpec::mixed_a800_h20()` for a mixed one.
+//! let cluster = ClusterSpec::uniform(HardwareProfile::a800());
 //! let sched = build_schedule(ScheduleKind::Stp, &topo, 64);
-//! let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+//! let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
 //! let report = Simulator::new(&cost).run(&sched);
 //! println!("throughput = {:.2} samples/s", report.throughput());
 //! ```

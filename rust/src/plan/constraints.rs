@@ -7,6 +7,7 @@
 //! generators' own asserts (so the search never panics a builder) plus
 //! Megatron's TP divisibility requirements.
 
+use crate::cluster::ClusterSpec;
 use crate::schedule::{theory, ScheduleKind};
 use crate::sim::CostModel;
 
@@ -22,6 +23,9 @@ pub enum Reject {
     /// Microbatch count violates a generator's constraint
     /// (1F1B-I needs `n_mb % pp == 0`; all need `n_mb >= 2·pp`).
     MicrobatchShape,
+    /// The cluster cannot host the topology under the candidate's
+    /// group-assignment order (group capacities, DP replicas included).
+    ClusterShape,
     /// Predicted peak memory exceeds the per-device cap.
     Memory,
     /// Theory-estimate throughput too far below the best candidate.
@@ -29,7 +33,7 @@ pub enum Reject {
 }
 
 /// Check everything that can be decided without a cost model.
-pub fn admissible(model: &PlanModel, c: &Candidate) -> Result<(), Reject> {
+pub fn admissible(model: &PlanModel, cluster: &ClusterSpec, c: &Candidate) -> Result<(), Reject> {
     let lm = model.lm();
     // Megatron TP sharding: attention heads (Q and KV) and the SwiGLU
     // width must split evenly across TP ranks.
@@ -55,6 +59,12 @@ pub fn admissible(model: &PlanModel, c: &Candidate) -> Result<(), Reject> {
     }
     if c.kind == ScheduleKind::OneF1BInterleaved && c.n_mb % c.pp != 0 {
         return Err(Reject::MicrobatchShape);
+    }
+
+    // The pool must host the topology: every stage (tp·cp GPUs × dp
+    // replicas) must land inside a single node group with capacity left.
+    if cluster.device_view(&c.topo(), c.order).is_none() {
+        return Err(Reject::ClusterShape);
     }
     Ok(())
 }
@@ -99,9 +109,9 @@ pub fn memory_feasible(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::HardwareProfile;
+    use crate::cluster::{GroupOrder, HardwareProfile};
     use crate::model::ModelConfig;
-    use crate::schedule::OffloadParams;
+    use crate::schedule::{OffloadParams, Placement};
 
     fn cand(tp: usize, pp: usize, dp: usize, kind: ScheduleKind, n_mb: usize) -> Candidate {
         Candidate {
@@ -111,17 +121,22 @@ mod tests {
             dp,
             kind,
             n_mb,
+            order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
         }
     }
 
+    fn a800() -> ClusterSpec {
+        ClusterSpec::uniform(HardwareProfile::a800())
+    }
+
     #[test]
     fn tp_divisibility_enforced() {
         let m = PlanModel::Llm(ModelConfig::qwen2_12b()); // 40 Q / 8 KV heads
-        assert!(admissible(&m, &cand(8, 2, 1, ScheduleKind::Stp, 64)).is_ok());
+        assert!(admissible(&m, &a800(), &cand(8, 2, 1, ScheduleKind::Stp, 64)).is_ok());
         assert_eq!(
-            admissible(&m, &cand(16, 1, 1, ScheduleKind::Stp, 64)),
+            admissible(&m, &a800(), &cand(16, 1, 1, ScheduleKind::Stp, 64)),
             Err(Reject::TpShape)
         );
     }
@@ -131,29 +146,45 @@ mod tests {
         let m = PlanModel::Llm(ModelConfig::tiny_100m()); // 20 layers
         // pp=16 with vpp=2 needs 32 chunks > 20 layers.
         assert_eq!(
-            admissible(&m, &cand(1, 16, 1, ScheduleKind::Stp, 64)),
+            admissible(&m, &a800(), &cand(1, 16, 1, ScheduleKind::Stp, 64)),
             Err(Reject::PipelineShape)
         );
-        assert!(admissible(&m, &cand(1, 8, 1, ScheduleKind::Stp, 64)).is_ok());
+        assert!(admissible(&m, &a800(), &cand(1, 8, 1, ScheduleKind::Stp, 64)).is_ok());
     }
 
     #[test]
     fn interleaved_needs_mb_multiple_of_pp() {
         let m = PlanModel::Llm(ModelConfig::qwen2_12b());
         assert_eq!(
-            admissible(&m, &cand(2, 3, 1, ScheduleKind::OneF1BInterleaved, 8)),
+            admissible(&m, &a800(), &cand(2, 3, 1, ScheduleKind::OneF1BInterleaved, 8)),
             Err(Reject::MicrobatchShape)
         );
-        assert!(admissible(&m, &cand(2, 3, 1, ScheduleKind::OneF1BInterleaved, 9)).is_ok());
+        assert!(
+            admissible(&m, &a800(), &cand(2, 3, 1, ScheduleKind::OneF1BInterleaved, 9)).is_ok()
+        );
     }
 
     #[test]
     fn everyone_needs_two_pp_rounds_of_microbatches() {
         let m = PlanModel::Llm(ModelConfig::qwen2_12b());
         assert_eq!(
-            admissible(&m, &cand(2, 8, 1, ScheduleKind::Stp, 8)),
+            admissible(&m, &a800(), &cand(2, 8, 1, ScheduleKind::Stp, 8)),
             Err(Reject::MicrobatchShape)
         );
+    }
+
+    #[test]
+    fn cluster_capacity_enforced_on_mixed_pools() {
+        let m = PlanModel::Llm(ModelConfig::qwen2_12b());
+        let mixed = ClusterSpec::mixed_a800_h20(); // 8 + 8 GPUs
+        assert!(admissible(&m, &mixed, &cand(8, 2, 1, ScheduleKind::Stp, 64)).is_ok());
+        // A 16-GPU stage cannot fit inside either 8-GPU group.
+        assert_eq!(
+            admissible(&m, &mixed, &cand(8, 2, 2, ScheduleKind::Stp, 64)),
+            Err(Reject::ClusterShape)
+        );
+        // The unbounded uniform pool hosts anything.
+        assert!(admissible(&m, &a800(), &cand(8, 2, 2, ScheduleKind::Stp, 64)).is_ok());
     }
 
     #[test]
@@ -164,7 +195,9 @@ mod tests {
         let c = cand(4, 4, 1, ScheduleKind::Stp, 32);
         let cost = PlanModel::Llm(m).cost_model(
             &c.topo(),
-            &HardwareProfile::a800(),
+            &a800(),
+            GroupOrder::Declared,
+            Placement::VShape,
             4096,
             0,
             1,
@@ -179,10 +212,10 @@ mod tests {
     #[test]
     fn mllm_constraints_respect_vit() {
         let m = PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_14_9b()); // 16 ViT heads
-        assert!(admissible(&m, &cand(8, 2, 1, ScheduleKind::Stp, 64)).is_ok());
+        assert!(admissible(&m, &a800(), &cand(8, 2, 1, ScheduleKind::Stp, 64)).is_ok());
         // MLLM needs at least 2 chunks: pp=1 with vpp=1 kinds has 1.
         assert_eq!(
-            admissible(&m, &cand(8, 1, 2, ScheduleKind::OneF1B, 64)),
+            admissible(&m, &a800(), &cand(8, 1, 2, ScheduleKind::OneF1B, 64)),
             Err(Reject::PipelineShape)
         );
     }

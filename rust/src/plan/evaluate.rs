@@ -6,7 +6,7 @@
 //! (ring over the `dp` replicas of each shard, on the interconnect tier
 //! the replica stride lands on).
 
-use crate::cluster::HardwareProfile;
+use crate::cluster::ClusterSpec;
 use crate::schedule::{build_schedule_scaled, stp, theory, ScheduleKind, ShapeCosts};
 use crate::sim::{CostModel, SimReport, Simulator};
 
@@ -16,8 +16,9 @@ use super::space::{Candidate, PlanModel};
 #[derive(Debug, Clone)]
 pub struct EvalContext {
     pub model: PlanModel,
-    pub hw: HardwareProfile,
-    /// Per-device memory cap, bytes.
+    pub cluster: ClusterSpec,
+    /// Global memory-cap override, bytes (the per-device profile caps are
+    /// enforced separately by the simulated per-device OOM check).
     pub mem_cap_bytes: usize,
     /// LM sequence length per sample.
     pub seq: usize,
@@ -29,8 +30,15 @@ pub struct EvalContext {
 
 impl EvalContext {
     pub fn cost_model(&self, c: &Candidate) -> CostModel {
-        self.model
-            .cost_model(&c.topo(), &self.hw, self.seq, self.vit_tokens, self.mb_size)
+        self.model.cost_model(
+            &c.topo(),
+            &self.cluster,
+            c.order,
+            c.placement(),
+            self.seq,
+            self.vit_tokens,
+            self.mb_size,
+        )
     }
 }
 
@@ -57,18 +65,37 @@ pub struct Evaluation {
 /// Per-iteration DP gradient all-reduce time. Each device holds
 /// `params/(tp·pp)` gradient elements (bf16) and rings them across its
 /// `dp` replicas; replicas of one shard sit `tp·pp` ranks apart, so the
-/// ring spans `tp·pp·dp` consecutive ranks and crosses nodes whenever
-/// that span exceeds one node.
+/// ring's node-crossing rule depends on the pool's packing (see the span
+/// comment below). Stage rings run concurrently; on mixed pools the
+/// slowest stage's ring (each stage's replicas live inside one node
+/// group) sets the charge.
 pub fn dp_gradient_secs(ctx: &EvalContext, c: &Candidate) -> f64 {
     if c.dp <= 1 {
         return 0.0;
     }
-    let hw = &ctx.hw;
     let grad_bytes = ctx.model.total_params() as f64 * 2.0 / (c.tp * c.pp) as f64;
-    let cross_node = c.tp * c.pp * c.dp > hw.gpus_per_node;
-    let bw = if cross_node { hw.internode_gbps } else { hw.nvlink_gbps };
     let factor = 2.0 * (c.dp as f64 - 1.0) / c.dp as f64;
-    factor * grad_bytes / (bw * hw.allreduce_efficiency * 1e9) + hw.collective_latency
+    let topo = c.topo();
+    let view = ctx
+        .cluster
+        .device_view(&topo, c.order)
+        .expect("dp_gradient_secs: candidate not hosted by the cluster");
+    // Ring span: uniform pools keep the seed's linear Megatron packing
+    // (replicas sit tp·pp ranks apart — the ring spans the whole job),
+    // so the pre-refactor charge is reproduced exactly. Mixed pools pack
+    // stage-major (the DeviceView co-locates one stage's tp·cp·dp GPUs),
+    // so the ring leaves the node only when that block does.
+    let uniform = ctx.cluster.is_uniform();
+    (0..topo.pp)
+        .map(|d| {
+            let hw = ctx.cluster.profile_of(&view, d);
+            let span =
+                if uniform { c.tp * c.pp * c.dp } else { c.tp * topo.cp * c.dp };
+            let cross_node = span > hw.gpus_per_node;
+            let bw = if cross_node { hw.internode_gbps } else { hw.nvlink_gbps };
+            factor * grad_bytes / (bw * hw.allreduce_efficiency * 1e9) + hw.collective_latency
+        })
+        .fold(0.0, f64::max)
 }
 
 /// Closed-form iteration-time estimate (Table 1 bubbles on top of the
@@ -120,6 +147,8 @@ pub fn simulate_candidate(ctx: &EvalContext, c: &Candidate) -> SimReport {
 }
 
 /// Full evaluation of one candidate: simulate, then fold in the DP terms.
+/// Feasibility requires both the global cap override *and* every device's
+/// own memory capacity (per-group `mem_gib` on mixed pools).
 pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
     let r = simulate_candidate(ctx, c);
     let dp_grad_secs = dp_gradient_secs(ctx, c);
@@ -127,7 +156,7 @@ pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
     let samples = (c.dp * c.n_mb * ctx.mb_size) as f64;
     let throughput = samples / total.max(1e-12);
     let useful = r.model_flops_per_sample * samples;
-    let mfu = useful / (total * r.world_size as f64 * r.peak_flops_per_dev).max(1e-12);
+    let mfu = useful / (total * r.aggregate_peak_flops).max(1e-12);
     let peak_mem_bytes = r.peak_memory_bytes();
     Evaluation {
         candidate: *c,
@@ -138,20 +167,21 @@ pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
         tp_bubble_per_dev: r.tp_bubble_per_device(),
         pp_bubble_per_dev: r.pp_bubble_per_device(),
         peak_mem_bytes,
-        feasible: peak_mem_bytes <= ctx.mem_cap_bytes,
+        feasible: peak_mem_bytes <= ctx.mem_cap_bytes && !r.is_oom(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{GroupOrder, HardwareProfile};
     use crate::model::ModelConfig;
     use crate::schedule::OffloadParams;
 
     fn ctx() -> EvalContext {
         EvalContext {
             model: PlanModel::Llm(ModelConfig::qwen2_12b()),
-            hw: HardwareProfile::a800(),
+            cluster: ClusterSpec::uniform(HardwareProfile::a800()),
             mem_cap_bytes: (80.0 * (1u64 << 30) as f64) as usize,
             seq: 3072,
             vit_tokens: 0,
@@ -167,6 +197,7 @@ mod tests {
             dp,
             kind,
             n_mb,
+            order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
         }

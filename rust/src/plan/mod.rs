@@ -40,7 +40,7 @@ pub use space::{Candidate, PlanModel};
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::HardwareProfile;
+    use crate::cluster::{ClusterSpec, HardwareProfile};
     use crate::model::ModelConfig;
 
     #[test]
@@ -52,7 +52,7 @@ mod tests {
 
         let mut q = PlanQuery::new(
             PlanModel::Llm(ModelConfig::qwen2_12b()),
-            HardwareProfile::a800(),
+            ClusterSpec::uniform(HardwareProfile::a800()),
             16,
         );
         q.seq = 3072;

@@ -16,7 +16,9 @@ use super::evaluate::Evaluation;
 #[derive(Debug, Clone)]
 pub struct PlanReport {
     pub model_name: String,
-    pub hw_name: String,
+    /// Pool name: a profile name for uniform pools ("a800-sxm4-80g"), a
+    /// spec name for mixed ones ("mixed-a800-h20").
+    pub cluster_name: String,
     pub gpus: usize,
     pub mem_cap_bytes: usize,
     pub seq: usize,
@@ -86,7 +88,7 @@ impl PlanReport {
              candidates: {} enumerated | {} shape-rejected | {} memory-pruned | \
              {} theory-pruned | {} simulated ({} schedule kinds)\n{}\n{}",
             self.model_name,
-            self.hw_name,
+            self.cluster_name,
             self.gpus,
             self.seq,
             self.mb_size,
@@ -106,7 +108,7 @@ impl PlanReport {
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
         root.insert("model".into(), Json::Str(self.model_name.clone()));
-        root.insert("hw".into(), Json::Str(self.hw_name.clone()));
+        root.insert("cluster".into(), Json::Str(self.cluster_name.clone()));
         root.insert("gpus".into(), Json::Num(self.gpus as f64));
         root.insert(
             "mem_cap_gib".into(),
@@ -132,6 +134,7 @@ impl PlanReport {
                 o.insert("dp".into(), Json::Num(c.dp as f64));
                 o.insert("schedule".into(), Json::Str(c.kind.name().into()));
                 o.insert("n_mb".into(), Json::Num(c.n_mb as f64));
+                o.insert("order".into(), Json::Str(c.order.name().into()));
                 o.insert("offload_variant".into(), Json::Num(c.offload_variant as f64));
                 o.insert("throughput".into(), Json::Num(e.throughput));
                 o.insert("mfu".into(), Json::Num(e.mfu));
@@ -152,8 +155,9 @@ impl PlanReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::OffloadParams;
+    use crate::cluster::GroupOrder;
     use crate::plan::space::Candidate;
+    use crate::schedule::OffloadParams;
 
     fn eval(id: usize, kind: ScheduleKind, thr: f64, feasible: bool) -> Evaluation {
         Evaluation {
@@ -164,6 +168,7 @@ mod tests {
                 dp: 1,
                 kind,
                 n_mb: 64,
+                order: GroupOrder::Declared,
                 offload: OffloadParams::default(),
                 offload_variant: 0,
             },
@@ -181,7 +186,7 @@ mod tests {
     fn report() -> PlanReport {
         PlanReport {
             model_name: "qwen2-12.1b".into(),
-            hw_name: "a800-sxm4-80g".into(),
+            cluster_name: "a800-sxm4-80g".into(),
             gpus: 16,
             mem_cap_bytes: 80 << 30,
             seq: 6144,

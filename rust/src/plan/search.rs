@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc;
 
-use crate::cluster::HardwareProfile;
+use crate::cluster::ClusterSpec;
 use crate::schedule::{OffloadParams, ScheduleKind};
 use crate::sim::CostModel;
 
@@ -25,16 +25,21 @@ use super::evaluate::{estimated_throughput, evaluate, EvalContext, Evaluation};
 use super::report::PlanReport;
 use super::space::{enumerate, Candidate, PlanModel};
 
-/// A planning request: model + hardware + GPU budget, plus the knobs of
-/// the candidate space. `PlanQuery::new` fills paper-grade defaults;
+/// A planning request: model + device pool + GPU budget, plus the knobs
+/// of the candidate space. `PlanQuery::new` fills paper-grade defaults;
 /// override fields before calling [`plan`].
 #[derive(Debug, Clone)]
 pub struct PlanQuery {
     pub model: PlanModel,
-    pub hw: HardwareProfile,
+    /// The device pool — `ClusterSpec::uniform(hw)` for the classic
+    /// single-profile search, or a mixed spec whose group orderings the
+    /// planner then enumerates.
+    pub cluster: ClusterSpec,
     /// Total GPU budget (TP·PP·DP must equal it exactly).
     pub gpus: usize,
-    /// Per-device memory cap, GiB (defaults to the profile's capacity).
+    /// Global memory-cap override, GiB (defaults to the pool's largest
+    /// per-device capacity; per-device profile caps are always enforced
+    /// by the simulated OOM check on top of this).
     pub mem_cap_gib: f64,
     pub seq: usize,
     pub mb_size: usize,
@@ -55,11 +60,11 @@ pub struct PlanQuery {
 }
 
 impl PlanQuery {
-    pub fn new(model: PlanModel, hw: HardwareProfile, gpus: usize) -> PlanQuery {
-        let mem_cap_gib = hw.mem_gib;
+    pub fn new(model: PlanModel, cluster: ClusterSpec, gpus: usize) -> PlanQuery {
+        let mem_cap_gib = cluster.max_mem_gib();
         PlanQuery {
             model,
-            hw,
+            cluster,
             gpus,
             mem_cap_gib,
             seq: 6144,
@@ -87,7 +92,7 @@ impl PlanQuery {
     pub fn eval_context(&self) -> EvalContext {
         EvalContext {
             model: self.model.clone(),
-            hw: self.hw.clone(),
+            cluster: self.cluster.clone(),
             mem_cap_bytes: self.mem_cap_bytes(),
             seq: self.seq,
             vit_tokens: self.vit_tokens,
@@ -107,27 +112,32 @@ impl PlanQuery {
 /// Run the full search and return the ranked report.
 pub fn plan(q: &PlanQuery) -> PlanReport {
     let ctx = q.eval_context();
-    let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &q.offload_variants);
+    let orders = q.cluster.group_orders();
+    let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants);
     let n_enumerated = all.len();
 
-    // Stage 1: shape admissibility.
+    // Stage 1: shape admissibility (TP divisibility, pipeline depth,
+    // microbatch rules, cluster capacity under the candidate's order).
     let mut shaped: Vec<Candidate> = Vec::with_capacity(all.len());
     let mut n_rejected_shape = 0;
     for c in &all {
-        match admissible(&q.model, c) {
+        match admissible(&q.model, &q.cluster, c) {
             Ok(()) => shaped.push(*c),
             Err(_) => n_rejected_shape += 1,
         }
     }
 
     // Stage 2+3: memory pre-filter and theory estimates. The cost model
-    // only depends on (tp, pp, vpp) — cache it per topology. (Estimates
-    // never read the DP extent of the cached topology.)
-    let mut cost_cache: BTreeMap<(usize, usize, usize), CostModel> = BTreeMap::new();
+    // depends on (tp, pp, dp, vpp, order, placement) — cache it per key.
+    // On mixed pools the group order and the schedule family's placement
+    // change which device a chunk is costed against, and DP changes how
+    // many GPUs a stage consumes (and so which group it lands in).
+    let mut cost_cache: BTreeMap<(usize, usize, usize, usize, u8, u8), CostModel> =
+        BTreeMap::new();
     let mut scored: Vec<(Candidate, f64)> = Vec::with_capacity(shaped.len());
     let mut n_pruned_memory = 0;
     for c in shaped {
-        let key = (c.tp, c.pp, c.vpp());
+        let key = (c.tp, c.pp, c.dp, c.vpp(), c.order as u8, c.placement() as u8);
         let cost = cost_cache.entry(key).or_insert_with(|| ctx.cost_model(&c));
         if !memory_feasible(cost, c.kind, c.n_mb, ctx.mem_cap_bytes) {
             n_pruned_memory += 1;
@@ -174,7 +184,7 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
 
     PlanReport {
         model_name: q.model.name().to_string(),
-        hw_name: q.hw.name.clone(),
+        cluster_name: q.cluster.name.clone(),
         gpus: q.gpus,
         mem_cap_bytes: q.mem_cap_bytes(),
         seq: q.seq,
@@ -221,12 +231,13 @@ pub fn evaluate_parallel(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::HardwareProfile;
     use crate::model::ModelConfig;
 
     fn small_query() -> PlanQuery {
         let mut q = PlanQuery::new(
             PlanModel::Llm(ModelConfig::qwen2_12b()),
-            HardwareProfile::a800(),
+            ClusterSpec::uniform(HardwareProfile::a800()),
             8,
         );
         q.seq = 2048;
@@ -266,10 +277,11 @@ mod tests {
     fn parallel_evaluation_matches_serial() {
         let q = small_query();
         let ctx = q.eval_context();
-        let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &q.offload_variants);
+        let orders = q.cluster.group_orders();
+        let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants);
         let survivors: Vec<Candidate> = all
             .into_iter()
-            .filter(|c| admissible(&q.model, c).is_ok())
+            .filter(|c| admissible(&q.model, &q.cluster, c).is_ok())
             .filter(|c| {
                 let cost = ctx.cost_model(c);
                 memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes)

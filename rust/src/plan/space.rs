@@ -1,13 +1,14 @@
 //! Candidate space of the auto-planner: everything a parallel plan can
 //! vary — the (TP, PP, DP) factorization of the GPU budget, the schedule
-//! kind, the microbatch count, and (for the offload variant) the
+//! kind, the microbatch count, the device→group assignment order on
+//! heterogeneous pools, and (for the offload variant) the
 //! [`OffloadParams`]. Enumeration is exhaustive and deterministic (nested
 //! loops in a fixed order assign stable candidate ids); *pruning* is the
 //! job of [`super::constraints`] and [`super::search`].
 
-use crate::cluster::{partition_mllm, HardwareProfile, Topology};
+use crate::cluster::{partition_mllm, ClusterSpec, GroupOrder, Topology};
 use crate::model::{MllmConfig, ModelConfig};
-use crate::schedule::{OffloadParams, ScheduleKind};
+use crate::schedule::{OffloadParams, Placement, ScheduleKind};
 use crate::sim::CostModel;
 
 /// The workload the planner optimizes for: a dense LLM (uniform layer
@@ -59,20 +60,29 @@ impl PlanModel {
         }
     }
 
-    /// Analytic cost model for one candidate topology.
+    /// Analytic cost model for one candidate topology under a pool,
+    /// group-assignment order and chunk placement.
+    #[allow(clippy::too_many_arguments)]
     pub fn cost_model(
         &self,
         topo: &Topology,
-        hw: &HardwareProfile,
+        cluster: &ClusterSpec,
+        order: GroupOrder,
+        placement: Placement,
         seq: usize,
         vit_tokens: usize,
         mb_size: usize,
     ) -> CostModel {
         match self {
-            PlanModel::Llm(m) => CostModel::analytic(m, topo, hw, seq, mb_size),
+            PlanModel::Llm(m) => {
+                CostModel::analytic_for(m, topo, cluster, order, placement, seq, mb_size)
+            }
             PlanModel::Mllm(m) => {
                 let plan = partition_mllm(m, topo.chunks());
-                CostModel::analytic_mllm(&m.lm, &m.vit, &plan, topo, hw, seq, vit_tokens, mb_size)
+                CostModel::analytic_mllm_for(
+                    &m.lm, &m.vit, &plan, topo, cluster, order, placement, seq, vit_tokens,
+                    mb_size,
+                )
             }
         }
     }
@@ -89,6 +99,8 @@ pub struct Candidate {
     pub kind: ScheduleKind,
     /// Microbatches per iteration *per DP replica*.
     pub n_mb: usize,
+    /// Device→group assignment order (always `Declared` on uniform pools).
+    pub order: GroupOrder,
     /// Offload parameters (meaningful only for `StpOffload`).
     pub offload: OffloadParams,
     /// Which offload variant this is (0 for non-offload kinds).
@@ -113,7 +125,14 @@ impl Candidate {
         Topology::new(self.tp, self.pp, self.dp).with_vpp(self.vpp())
     }
 
-    /// Compact human-readable label ("tp8-pp2-dp1 stp m64").
+    /// Chunk→device placement of this candidate's schedule family (the
+    /// per-device cost attribution on mixed pools depends on it).
+    pub fn placement(&self) -> Placement {
+        self.kind.placement()
+    }
+
+    /// Compact human-readable label ("tp8-pp2-dp1 stp m64"); mixed-pool
+    /// candidates append their group order ("[interleaved]").
     pub fn label(&self) -> String {
         let mut s = format!(
             "tp{}-pp{}-dp{} {} m{}",
@@ -126,6 +145,9 @@ impl Candidate {
         if self.kind == ScheduleKind::StpOffload && self.offload_variant > 0 {
             s.push_str(&format!(" o{}", self.offload_variant));
         }
+        if self.order != GroupOrder::Declared {
+            s.push_str(&format!(" [{}]", self.order.name()));
+        }
         s
     }
 }
@@ -136,17 +158,22 @@ pub fn divisors(n: usize) -> Vec<usize> {
 }
 
 /// Enumerate the raw candidate space for a GPU budget: every (TP, PP, DP)
-/// factorization × schedule kind × microbatch count × offload variant
-/// (offload variants only multiply `StpOffload`). No pruning here beyond
-/// the factorization itself — ids must be stable regardless of model and
+/// factorization × schedule kind × microbatch count × group order ×
+/// offload variant (offload variants only multiply `StpOffload`; uniform
+/// pools pass a single `Declared` order, which keeps ids identical to the
+/// pre-heterogeneity enumeration). No pruning here beyond the
+/// factorization itself — ids must be stable regardless of model and
 /// memory inputs.
 pub fn enumerate(
     gpus: usize,
     kinds: &[ScheduleKind],
     n_mb_options: &[usize],
+    orders: &[GroupOrder],
     offload_variants: &[OffloadParams],
 ) -> Vec<Candidate> {
     assert!(gpus >= 1, "GPU budget must be positive");
+    assert!(!orders.is_empty(), "at least one group order");
+    let default_variant = [OffloadParams::default()];
     let mut out = Vec::new();
     let mut id = 0;
     for tp in divisors(gpus) {
@@ -154,8 +181,15 @@ pub fn enumerate(
             let dp = gpus / (tp * pp);
             for &kind in kinds {
                 for &n_mb in n_mb_options {
-                    if kind == ScheduleKind::StpOffload {
-                        for (v, &offload) in offload_variants.iter().enumerate() {
+                    for &order in orders {
+                        // Offload variants only multiply the offload kind;
+                        // everything else gets the single default variant.
+                        let variants: &[OffloadParams] = if kind == ScheduleKind::StpOffload {
+                            offload_variants
+                        } else {
+                            &default_variant
+                        };
+                        for (v, &offload) in variants.iter().enumerate() {
                             out.push(Candidate {
                                 id,
                                 tp,
@@ -163,23 +197,12 @@ pub fn enumerate(
                                 dp,
                                 kind,
                                 n_mb,
+                                order,
                                 offload,
                                 offload_variant: v,
                             });
                             id += 1;
                         }
-                    } else {
-                        out.push(Candidate {
-                            id,
-                            tp,
-                            pp,
-                            dp,
-                            kind,
-                            n_mb,
-                            offload: OffloadParams::default(),
-                            offload_variant: 0,
-                        });
-                        id += 1;
                     }
                 }
             }
@@ -192,6 +215,8 @@ pub fn enumerate(
 mod tests {
     use super::*;
 
+    const DECLARED: [GroupOrder; 1] = [GroupOrder::Declared];
+
     #[test]
     fn divisors_of_16() {
         assert_eq!(divisors(16), vec![1, 2, 4, 8, 16]);
@@ -201,7 +226,7 @@ mod tests {
     #[test]
     fn enumeration_covers_all_factorizations() {
         let kinds = [ScheduleKind::Stp];
-        let cands = enumerate(16, &kinds, &[64], &[OffloadParams::default()]);
+        let cands = enumerate(16, &kinds, &[64], &DECLARED, &[OffloadParams::default()]);
         // Ordered triples (tp, pp, dp) with product 16: sum over divisors
         // tp of d(16/tp) = 5+4+3+2+1 = 15.
         assert_eq!(cands.len(), 15);
@@ -211,8 +236,8 @@ mod tests {
     #[test]
     fn ids_are_stable_and_dense() {
         let kinds = ScheduleKind::all();
-        let a = enumerate(8, &kinds, &[16, 32], &[OffloadParams::default()]);
-        let b = enumerate(8, &kinds, &[16, 32], &[OffloadParams::default()]);
+        let a = enumerate(8, &kinds, &[16, 32], &DECLARED, &[OffloadParams::default()]);
+        let b = enumerate(8, &kinds, &[16, 32], &DECLARED, &[OffloadParams::default()]);
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.id, y.id);
@@ -224,20 +249,35 @@ mod tests {
     }
 
     #[test]
+    fn group_orders_multiply_the_space() {
+        let kinds = [ScheduleKind::Stp];
+        let one = enumerate(8, &kinds, &[16], &DECLARED, &[OffloadParams::default()]);
+        let two = enumerate(
+            8,
+            &kinds,
+            &[16],
+            &[GroupOrder::FastFirst, GroupOrder::Interleaved],
+            &[OffloadParams::default()],
+        );
+        assert_eq!(two.len(), 2 * one.len());
+        assert!(two.iter().any(|c| c.label().contains("[interleaved]")));
+    }
+
+    #[test]
     fn offload_variants_multiply_only_offload_kind() {
         let kinds = [ScheduleKind::Stp, ScheduleKind::StpOffload];
         let variants = [
             OffloadParams::default(),
             OffloadParams { alpha_warmup: 0.5, alpha_steady: 0.9, reload_lead: 3 },
         ];
-        let cands = enumerate(4, &kinds, &[8], &variants);
+        let cands = enumerate(4, &kinds, &[8], &DECLARED, &variants);
         let stp = cands.iter().filter(|c| c.kind == ScheduleKind::Stp).count();
         let off = cands.iter().filter(|c| c.kind == ScheduleKind::StpOffload).count();
         assert_eq!(off, 2 * stp);
     }
 
     #[test]
-    fn vpp_matches_schedule_family() {
+    fn vpp_and_placement_match_schedule_family() {
         let c = Candidate {
             id: 0,
             tp: 2,
@@ -245,12 +285,15 @@ mod tests {
             dp: 1,
             kind: ScheduleKind::OneF1B,
             n_mb: 8,
+            order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
         };
         assert_eq!(c.vpp(), 1);
         assert_eq!(c.topo().chunks(), 4);
+        assert_eq!(c.placement(), Placement::Interleaved);
         let c2 = Candidate { kind: ScheduleKind::ZbV, ..c };
         assert_eq!(c2.topo().chunks(), 8);
+        assert_eq!(c2.placement(), Placement::VShape);
     }
 }

@@ -186,6 +186,22 @@ impl ScheduleKind {
     pub fn paper_trio() -> [ScheduleKind; 3] {
         [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp]
     }
+
+    /// Chunk→device placement this kind's builder emits (must match the
+    /// generators — the per-device cost attribution on heterogeneous
+    /// clusters relies on it).
+    pub fn placement(&self) -> Placement {
+        match self {
+            ScheduleKind::GPipe
+            | ScheduleKind::OneF1B
+            | ScheduleKind::OneF1BInterleaved
+            | ScheduleKind::ZbH1 => Placement::Interleaved,
+            ScheduleKind::ZbV
+            | ScheduleKind::Stp
+            | ScheduleKind::StpMemEff
+            | ScheduleKind::StpOffload => Placement::VShape,
+        }
+    }
 }
 
 impl std::str::FromStr for ScheduleKind {

@@ -1,13 +1,21 @@
-//! Analytic cost model: model config × topology × hardware → per-chunk
-//! unit timings, activation bytes and communication costs.
+//! Analytic cost model: model config × topology × cluster → per-chunk,
+//! per-device unit timings, activation bytes and communication costs.
 //!
 //! This is the substitution for the paper's measured A800/H20 timings
 //! (DESIGN.md §1): every simulated quantity is a function of
 //! (FLOPs ÷ effective throughput, bytes ÷ bandwidth), so who-wins shapes
-//! are preserved while absolute samples/s are not claimed.
+//! are preserved while absolute samples/s are not claimed. Since the
+//! heterogeneous-cluster refactor (DESIGN.md §8) every chunk is costed
+//! against the [`HardwareProfile`] of the device that actually executes
+//! it, resolved through a [`ClusterSpec`]/[`DeviceView`] pair; a uniform
+//! spec reproduces the old single-profile arithmetic exactly.
 
-use crate::cluster::{ChunkContent, HardwareProfile, StagePlan, Topology};
+use crate::cluster::{
+    partition_llm_weighted, ChunkContent, ClusterSpec, DeviceView, GroupOrder, HardwareProfile,
+    StagePlan, Topology,
+};
 use crate::model::{LayerFlops, ModelConfig, VitConfig};
+use crate::schedule::Placement;
 
 use super::block::{ChunkUnits, Unit};
 
@@ -37,7 +45,8 @@ pub enum AcMode {
 /// Fully-resolved per-chunk costs consumed by the simulator engine.
 #[derive(Debug, Clone)]
 pub struct CostModel {
-    /// Unit sequences per chunk (index = chunk id).
+    /// Unit sequences per chunk (index = chunk id), timed against the
+    /// profile of the chunk's owning device.
     pub chunks: Vec<ChunkUnits>,
     /// Activation bytes (`M_a`) per chunk per microbatch.
     pub act_bytes: Vec<usize>,
@@ -46,8 +55,14 @@ pub struct CostModel {
     pub w_frac: f64,
     /// P2P bytes per pipeline hop per microbatch.
     pub p2p_bytes: usize,
-    /// Hardware profile (for P2P/PCIe/memory).
-    pub hw: HardwareProfile,
+    /// The device pool (per-device profiles, link tiers, memory caps).
+    pub cluster: ClusterSpec,
+    /// PP rank → node group resolution for this topology.
+    pub view: DeviceView,
+    /// Device (PP rank) each chunk's costs were attributed to.
+    pub chunk_dev: Vec<usize>,
+    /// The layer→chunk split the chunks were costed from.
+    pub stage_plan: StagePlan,
     /// Topology (TP size decides AR cost; PP for hop locality).
     pub topo: Topology,
     /// Per-device static bytes (weights + grads + optimizer state).
@@ -59,17 +74,60 @@ pub struct CostModel {
 }
 
 impl CostModel {
-    /// Cost model for an LLM uniformly partitioned over the topology's
-    /// chunks (paper §5.1 split).
+    /// Cost model for an LLM partitioned over the topology's chunks: the
+    /// uniform §5.1 split on uniform pools, the stage-time-balanced split
+    /// on heterogeneous ones. Stages fill groups in declared order under
+    /// the V-shape placement; use [`CostModel::analytic_for`] for other
+    /// orderings/placements.
     pub fn analytic(
         model: &ModelConfig,
         topo: &Topology,
-        hw: &HardwareProfile,
+        cluster: &ClusterSpec,
         seq: usize,
         mb_size: usize,
     ) -> CostModel {
-        let plan = crate::cluster::partition_llm(model, topo.chunks());
-        Self::from_plan(model, None, &plan, topo, hw, seq, 0, mb_size)
+        Self::analytic_for(model, topo, cluster, GroupOrder::Declared, Placement::VShape, seq, mb_size)
+    }
+
+    /// [`CostModel::analytic`] with explicit group ordering and chunk
+    /// placement (the planner enumerates both on mixed pools).
+    pub fn analytic_for(
+        model: &ModelConfig,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        order: GroupOrder,
+        placement: Placement,
+        seq: usize,
+        mb_size: usize,
+    ) -> CostModel {
+        let view = resolve_view(cluster, topo, order);
+        let plan = if cluster.is_uniform() {
+            crate::cluster::partition_llm(model, topo.chunks())
+        } else {
+            let weights: Vec<f64> = (0..topo.chunks())
+                .map(|c| {
+                    cluster
+                        .profile_of(&view, placement.device_of(c, topo))
+                        .matmul_flops_per_sec()
+                })
+                .collect();
+            partition_llm_weighted(model, topo.chunks(), &weights)
+        };
+        Self::from_plan(model, None, &plan, topo, cluster, view, placement, seq, 0, mb_size)
+    }
+
+    /// Cost model for an LLM with an explicit stage plan (e.g. to compare
+    /// the uniform layer split against the balanced one on a mixed pool).
+    pub fn analytic_planned(
+        model: &ModelConfig,
+        plan: &StagePlan,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        seq: usize,
+        mb_size: usize,
+    ) -> CostModel {
+        let view = resolve_view(cluster, topo, GroupOrder::Declared);
+        Self::from_plan(model, None, plan, topo, cluster, view, Placement::VShape, seq, 0, mb_size)
     }
 
     /// Cost model for an MLLM stage plan (`vit_tokens` patch tokens into
@@ -80,12 +138,52 @@ impl CostModel {
         vit: &VitConfig,
         plan: &StagePlan,
         topo: &Topology,
-        hw: &HardwareProfile,
+        cluster: &ClusterSpec,
         lm_seq: usize,
         vit_tokens: usize,
         mb_size: usize,
     ) -> CostModel {
-        Self::from_plan(lm, Some(vit), plan, topo, hw, lm_seq, vit_tokens, mb_size)
+        Self::analytic_mllm_for(
+            lm,
+            vit,
+            plan,
+            topo,
+            cluster,
+            GroupOrder::Declared,
+            Placement::VShape,
+            lm_seq,
+            vit_tokens,
+            mb_size,
+        )
+    }
+
+    /// [`CostModel::analytic_mllm`] with explicit ordering and placement.
+    #[allow(clippy::too_many_arguments)]
+    pub fn analytic_mllm_for(
+        lm: &ModelConfig,
+        vit: &VitConfig,
+        plan: &StagePlan,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        order: GroupOrder,
+        placement: Placement,
+        lm_seq: usize,
+        vit_tokens: usize,
+        mb_size: usize,
+    ) -> CostModel {
+        let view = resolve_view(cluster, topo, order);
+        Self::from_plan(
+            lm,
+            Some(vit),
+            plan,
+            topo,
+            cluster,
+            view,
+            placement,
+            lm_seq,
+            vit_tokens,
+            mb_size,
+        )
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -94,22 +192,32 @@ impl CostModel {
         vit: Option<&VitConfig>,
         plan: &StagePlan,
         topo: &Topology,
-        hw: &HardwareProfile,
+        cluster: &ClusterSpec,
+        view: DeviceView,
+        placement: Placement,
         seq: usize,
         vit_tokens: usize,
         mb_size: usize,
     ) -> CostModel {
+        assert_eq!(
+            plan.chunks.len(),
+            topo.chunks(),
+            "stage plan must cover every virtual stage"
+        );
         let tp = topo.tp;
         // Context parallelism splits the sequence across cp ranks.
         let seq_cp = seq / topo.cp;
-        let flops_sec = hw.matmul_flops_per_sec();
-        let hbm = hw.hbm_gbps * 1e9;
 
+        let chunk_dev: Vec<usize> =
+            (0..topo.chunks()).map(|c| placement.device_of(c, topo)).collect();
         let mut chunks = Vec::with_capacity(plan.chunks.len());
         let mut act_bytes = Vec::with_capacity(plan.chunks.len());
-        for c in &plan.chunks {
+        for (c, content) in plan.chunks.iter().enumerate() {
+            let hw = cluster.profile_of(&view, chunk_dev[c]);
+            let flops_sec = hw.matmul_flops_per_sec();
+            let hbm = hw.hbm_gbps * 1e9;
             let (units, bytes) =
-                chunk_costs(lm, vit, c, seq_cp, vit_tokens, mb_size, tp, flops_sec, hbm, hw);
+                chunk_costs(lm, vit, content, seq_cp, vit_tokens, mb_size, tp, flops_sec, hbm, hw);
             chunks.push(units);
             act_bytes.push(bytes);
         }
@@ -135,7 +243,10 @@ impl CostModel {
             act_bytes,
             w_frac: 0.45,
             p2p_bytes: mb_size * seq_cp * lm.hidden * lm.dtype_bytes,
-            hw: hw.clone(),
+            cluster: cluster.clone(),
+            view,
+            chunk_dev,
+            stage_plan: plan.clone(),
             topo: *topo,
             static_bytes,
             mb_size,
@@ -148,18 +259,22 @@ impl CostModel {
         self.chunks.len()
     }
 
-    /// P2P time for one activation/gradient hop between PP ranks.
-    pub fn p2p_secs(&self, from_dev: usize, to_dev: usize) -> f64 {
-        if from_dev == to_dev {
-            return 0.0;
-        }
-        let cross = self.topo.pp_hop_cross_node(from_dev, to_dev, self.hw.gpus_per_node);
-        self.hw.p2p_secs(self.p2p_bytes, cross)
+    /// Profile of the device holding PP rank `dev`.
+    pub fn dev_profile(&self, dev: usize) -> &HardwareProfile {
+        self.cluster.profile_of(&self.view, dev)
     }
 
-    /// PCIe transfer time for offloading `ratio` of chunk `c`'s activation.
+    /// P2P time for one activation/gradient hop between PP ranks
+    /// (cross-group hops pay the slower link tier).
+    pub fn p2p_secs(&self, from_dev: usize, to_dev: usize) -> f64 {
+        self.cluster.p2p_secs(&self.view, &self.topo, from_dev, to_dev, self.p2p_bytes)
+    }
+
+    /// PCIe transfer time for offloading `ratio` of chunk `c`'s activation
+    /// (on the chunk's own device).
     pub fn offload_secs(&self, chunk: usize, ratio: f32) -> f64 {
-        self.hw.pcie_secs((self.act_bytes[chunk] as f64 * ratio as f64) as usize)
+        self.dev_profile(self.chunk_dev[chunk])
+            .pcie_secs((self.act_bytes[chunk] as f64 * ratio as f64) as usize)
     }
 
     /// Mean per-chunk `T_F`/`T_B`/`T_W`/`T_AR` (theory-formula inputs).
@@ -223,6 +338,21 @@ impl CostModel {
         let mean = self.chunks.iter().map(|c| c.t_f()).sum::<f64>() / self.chunks.len() as f64;
         self.chunks.iter().map(|c| if mean > 0.0 { c.t_f() / mean } else { 1.0 }).collect()
     }
+}
+
+/// Resolve a topology against a cluster, panicking with a clear message
+/// when the pool cannot host it (the planner pre-filters such candidates;
+/// direct constructors treat it as a caller error).
+fn resolve_view(cluster: &ClusterSpec, topo: &Topology, order: GroupOrder) -> DeviceView {
+    cluster.device_view(topo, order).unwrap_or_else(|| {
+        panic!(
+            "cluster '{}' ({} devices) cannot host {} ({} devices)",
+            cluster.name,
+            cluster.total_devices(),
+            topo,
+            topo.world_size()
+        )
+    })
 }
 
 /// Build the unit sequence + activation bytes of one chunk.
@@ -318,12 +448,15 @@ mod tests {
     use crate::cluster::partition_mllm;
     use crate::model::MllmConfig;
 
+    fn a800() -> ClusterSpec {
+        ClusterSpec::uniform(HardwareProfile::a800())
+    }
+
     #[test]
     fn llm_cost_model_basic_shape() {
         let m = ModelConfig::qwen2_12b();
         let topo = Topology::new(8, 2, 1);
-        let hw = HardwareProfile::a800();
-        let cm = CostModel::analytic(&m, &topo, &hw, 6144, 1);
+        let cm = CostModel::analytic(&m, &topo, &a800(), 6144, 1);
         assert_eq!(cm.n_chunks(), 4);
         for c in &cm.chunks {
             assert!(c.t_f() > 0.0);
@@ -336,10 +469,10 @@ mod tests {
     fn tp_bubble_share_grows_with_tp() {
         // Fig. 1: the TP-communication share of a layer grows with TP size.
         let m = ModelConfig::qwen2_12b();
-        let hw = HardwareProfile::a800();
+        let cluster = a800();
         let share = |tp: usize| {
             let topo = Topology::new(tp, 2, 1);
-            let cm = CostModel::analytic(&m, &topo, &hw, 6144, 1);
+            let cm = CostModel::analytic(&m, &topo, &cluster, 6144, 1);
             let c = &cm.chunks[0];
             c.t_ar_fwd() / (c.t_f() + c.t_ar_fwd())
         };
@@ -355,13 +488,13 @@ mod tests {
     fn h20_has_smaller_comm_share_than_a800() {
         // Fig. 13 / appendix D.
         let m = ModelConfig::qwen2_12b();
-        let share = |hw: &HardwareProfile| {
+        let share = |cluster: &ClusterSpec| {
             let topo = Topology::new(8, 2, 1);
-            let cm = CostModel::analytic(&m, &topo, hw, 6144, 1);
+            let cm = CostModel::analytic(&m, &topo, cluster, 6144, 1);
             let c = &cm.chunks[0];
             c.t_ar_fwd() / (c.t_f() + c.t_ar_fwd())
         };
-        assert!(share(&HardwareProfile::h20()) < share(&HardwareProfile::a800()));
+        assert!(share(&ClusterSpec::uniform(HardwareProfile::h20())) < share(&a800()));
     }
 
     #[test]
@@ -369,8 +502,7 @@ mod tests {
         let m = MllmConfig::qwen2vl_14_9b();
         let topo = Topology::new(4, 4, 1);
         let plan = partition_mllm(&m, topo.chunks());
-        let hw = HardwareProfile::a800();
-        let cm = CostModel::analytic_mllm(&m.lm, &m.vit, &plan, &topo, &hw, 5120, 3136, 1);
+        let cm = CostModel::analytic_mllm(&m.lm, &m.vit, &plan, &topo, &a800(), 5120, 3136, 1);
         assert_eq!(cm.n_chunks(), 8);
         assert!(cm.chunks[0].t_f() > 0.0);
         // ViT chunk imbalance surfaces in chunk scales.
@@ -383,18 +515,76 @@ mod tests {
     #[test]
     fn static_bytes_scale_down_with_parallelism() {
         let m = ModelConfig::qwen2_12b();
-        let hw = HardwareProfile::a800();
-        let a = CostModel::analytic(&m, &Topology::new(4, 4, 1), &hw, 4096, 1).static_bytes;
-        let b = CostModel::analytic(&m, &Topology::new(8, 4, 1), &hw, 4096, 1).static_bytes;
+        let cluster = a800();
+        let a = CostModel::analytic(&m, &Topology::new(4, 4, 1), &cluster, 4096, 1).static_bytes;
+        let b = CostModel::analytic(&m, &Topology::new(8, 4, 1), &cluster, 4096, 1).static_bytes;
         assert!(b < a);
     }
 
     #[test]
     fn cp_divides_sequence() {
         let m = ModelConfig::qwen2_12b();
-        let hw = HardwareProfile::a800();
-        let base = CostModel::analytic(&m, &Topology::new(2, 4, 1), &hw, 12288, 1);
-        let cp = CostModel::analytic(&m, &Topology::new(2, 4, 1).with_cp(2), &hw, 12288, 1);
+        let cluster = a800();
+        let base = CostModel::analytic(&m, &Topology::new(2, 4, 1), &cluster, 12288, 1);
+        let cp = CostModel::analytic(&m, &Topology::new(2, 4, 1).with_cp(2), &cluster, 12288, 1);
         assert!(cp.chunks[0].t_f() < base.chunks[0].t_f());
+    }
+
+    #[test]
+    fn uniform_cluster_keeps_uniform_partition() {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(8, 2, 1);
+        let cm = CostModel::analytic(&m, &topo, &a800(), 4096, 1);
+        assert_eq!(cm.stage_plan, crate::cluster::partition_llm(&m, topo.chunks()));
+        // Every chunk was costed against the same profile: AR time equals
+        // the direct single-profile arithmetic.
+        let hw = HardwareProfile::a800();
+        let expect_ar = hw.allreduce_secs(m.ar_bytes_per_layer(4096, 1) / 2, topo.tp);
+        let u = cm.chunks[0].fwd.iter().find(|u| u.ar > 0.0).unwrap();
+        assert_eq!(u.ar, expect_ar);
+    }
+
+    #[test]
+    fn mixed_cluster_balances_stage_time() {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(8, 2, 1); // chunks 0,1,2,3 on devs 0,1,1,0
+        let spec = ClusterSpec::mixed_a800_h20();
+        let cm = CostModel::analytic_for(
+            &m,
+            &topo,
+            &spec,
+            GroupOrder::FastFirst,
+            Placement::VShape,
+            4096,
+            1,
+        );
+        // Non-uniform split: the A800-owned chunks carry more layers.
+        let counts: Vec<usize> = cm.stage_plan.chunks.iter().map(|c| c.lm_layers).collect();
+        assert!(counts[0] > counts[1], "fast chunk should carry more layers: {counts:?}");
+        // Per-device stage times (sum of owned chunks' T_F) balance far
+        // better than the uniform split would.
+        let stage = |cm: &CostModel, d: usize| -> f64 {
+            cm.chunks
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| cm.chunk_dev[*c] == d)
+                .map(|(_, u)| u.t_f())
+                .sum()
+        };
+        let balanced_skew = stage(&cm, 0).max(stage(&cm, 1)) / stage(&cm, 0).min(stage(&cm, 1));
+        let uniform = CostModel::analytic_planned(
+            &m,
+            &crate::cluster::partition_llm(&m, topo.chunks()),
+            &topo,
+            &spec,
+            4096,
+            1,
+        );
+        let uniform_skew =
+            stage(&uniform, 0).max(stage(&uniform, 1)) / stage(&uniform, 0).min(stage(&uniform, 1));
+        assert!(
+            balanced_skew < uniform_skew,
+            "balanced skew {balanced_skew:.3} !< uniform skew {uniform_skew:.3}"
+        );
     }
 }

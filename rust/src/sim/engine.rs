@@ -245,15 +245,36 @@ impl<'a> Simulator<'a> {
 
         let iteration = dev_time.iter().cloned().fold(0.0, f64::max);
         let devices: Vec<DeviceReport> = (0..n_dev)
-            .map(|d| DeviceReport {
-                busy: busy[d],
-                compute: compute_time[d],
-                exposed_ar: exposed_ar[d],
-                idle: iteration - busy[d],
-                peak_activation_bytes: mem_peak[d].max(0) as usize,
-                pcie_busy: pcie_busy[d],
+            .map(|d| {
+                let hw = self.cost.dev_profile(d);
+                DeviceReport {
+                    busy: busy[d],
+                    compute: compute_time[d],
+                    exposed_ar: exposed_ar[d],
+                    idle: iteration - busy[d],
+                    peak_activation_bytes: mem_peak[d].max(0) as usize,
+                    pcie_busy: pcie_busy[d],
+                    mem_capacity_bytes: (hw.mem_gib * (1u64 << 30) as f64) as usize,
+                    hw_name: hw.name.clone(),
+                }
             })
             .collect();
+
+        // Aggregate peak FLOPs over the whole job: each PP rank is a
+        // TP×CP group replicated DP times; sum per *group* so a uniform
+        // pool reduces to the old `world_size × per-device peak` product.
+        let topo = &self.cost.topo;
+        let ranks_per_group =
+            self.cost.view.ranks_per_group(self.cost.cluster.groups.len());
+        let aggregate_peak_flops: f64 = ranks_per_group
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(g, &n)| {
+                let gpus = n * topo.tp * topo.cp * topo.dp;
+                gpus as f64 * (self.cost.cluster.groups[g].hw.bf16_tflops * 1e12)
+            })
+            .sum();
 
         SimReport {
             kind: s.kind,
@@ -263,9 +284,8 @@ impl<'a> Simulator<'a> {
             n_mb: s.n_mb,
             mb_size: self.cost.mb_size,
             static_bytes: self.cost.static_bytes,
-            mem_capacity_bytes: (self.cost.hw.mem_gib * (1u64 << 30) as f64) as usize,
             world_size: self.cost.topo.world_size(),
-            peak_flops_per_dev: self.cost.hw.bf16_tflops * 1e12,
+            aggregate_peak_flops,
             model_flops_per_sample: self.cost.model_flops_per_sample,
         }
     }
@@ -315,15 +335,15 @@ impl<'a> Simulator<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{HardwareProfile, Topology};
+    use crate::cluster::{ClusterSpec, HardwareProfile, Topology};
     use crate::model::ModelConfig;
     use crate::schedule::{build_schedule, ScheduleKind};
 
     fn setup(tp: usize, pp: usize) -> (CostModel, Topology) {
         let m = ModelConfig::qwen2_12b();
         let topo = Topology::new(tp, pp, 1);
-        let hw = HardwareProfile::a800();
-        (CostModel::analytic(&m, &topo, &hw, 3072, 1), topo)
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        (CostModel::analytic(&m, &topo, &cluster, 3072, 1), topo)
     }
 
     #[test]
@@ -357,8 +377,8 @@ mod tests {
         // Paper: up to ~12% over 1F1B-I on LLMs at TP=8, seq 6144, PP=2.
         let m = ModelConfig::qwen2_12b();
         let topo = Topology::new(8, 2, 1);
-        let hw = HardwareProfile::a800();
-        let cost = CostModel::analytic(&m, &topo, &hw, 6144, 1);
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let cost = CostModel::analytic(&m, &topo, &cluster, 6144, 1);
         let time = |k| {
             let s = build_schedule(k, &topo, 64);
             Simulator::new(&cost).run(&s).iteration_secs

@@ -18,6 +18,12 @@ pub struct DeviceReport {
     pub peak_activation_bytes: usize,
     /// PCIe stream occupancy (offload variant).
     pub pcie_busy: f64,
+    /// This device's own memory capacity (its profile's `mem_gib`) —
+    /// per-device OOM detection on heterogeneous pools.
+    pub mem_capacity_bytes: usize,
+    /// Profile name of the device ("a800-sxm4-80g"), surfaced in traces
+    /// so mixed-pool timelines stay readable.
+    pub hw_name: String,
 }
 
 /// One timed op occurrence (feeds the Chrome-trace / ASCII timelines).
@@ -41,9 +47,10 @@ pub struct SimReport {
     pub mb_size: usize,
     /// Static (weights+grads+optimizer) bytes per device.
     pub static_bytes: usize,
-    pub mem_capacity_bytes: usize,
     pub world_size: usize,
-    pub peak_flops_per_dev: f64,
+    /// Sum of peak BF16 FLOPs over every GPU of the job (per-group peaks
+    /// on heterogeneous pools) — the MFU denominator.
+    pub aggregate_peak_flops: f64,
     pub model_flops_per_sample: f64,
 }
 
@@ -56,7 +63,7 @@ impl SimReport {
     /// Model FLOPs Utilization (fraction of aggregate peak).
     pub fn mfu(&self) -> f64 {
         let useful = self.model_flops_per_sample * (self.n_mb * self.mb_size) as f64;
-        useful / (self.iteration_secs * self.world_size as f64 * self.peak_flops_per_dev)
+        useful / (self.iteration_secs * self.aggregate_peak_flops)
     }
 
     /// Total TP bubble time (sum over devices of exposed AR).
@@ -104,9 +111,12 @@ impl SimReport {
         self.devices.iter().map(|d| d.peak_activation_bytes as f64 / 1e9).collect()
     }
 
-    /// Would this run OOM on the profile's device memory?
+    /// Would this run OOM? Each device is checked against its *own*
+    /// memory capacity (mixed pools have per-group `mem_gib`).
     pub fn is_oom(&self) -> bool {
-        self.peak_memory_bytes() > self.mem_capacity_bytes
+        self.devices
+            .iter()
+            .any(|d| d.peak_activation_bytes + self.static_bytes > d.mem_capacity_bytes)
     }
 }
 
@@ -127,6 +137,8 @@ mod tests {
                     idle: iter * 0.1,
                     peak_activation_bytes: 10 << 30,
                     pcie_busy: 0.0,
+                    mem_capacity_bytes: 80 << 30,
+                    hw_name: "a800-sxm4-80g".into(),
                 },
                 DeviceReport {
                     busy: iter,
@@ -135,14 +147,15 @@ mod tests {
                     idle: 0.0,
                     peak_activation_bytes: 20 << 30,
                     pcie_busy: 0.0,
+                    mem_capacity_bytes: 96 << 30,
+                    hw_name: "h20-96g".into(),
                 },
             ],
             n_mb,
             mb_size: 1,
             static_bytes: 30 << 30,
-            mem_capacity_bytes: 80 << 30,
             world_size: 16,
-            peak_flops_per_dev: 312e12,
+            aggregate_peak_flops: 16.0 * 312e12,
             model_flops_per_sample: 1e15,
         }
     }
@@ -154,10 +167,14 @@ mod tests {
     }
 
     #[test]
-    fn oom_detection() {
+    fn oom_detection_uses_each_devices_own_capacity() {
         let mut r = mk(10.0, 64);
-        assert!(!r.is_oom()); // 20+30=50 GiB-ish < 80
+        assert!(!r.is_oom()); // 10+30 < 80 and 20+30 < 96
+        // 60+30 = 90 GiB fits the 96G device...
         r.devices[1].peak_activation_bytes = 60 << 30;
+        assert!(!r.is_oom());
+        // ...but not the 80G one.
+        r.devices[0].peak_activation_bytes = 60 << 30;
         assert!(r.is_oom());
     }
 

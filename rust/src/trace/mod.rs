@@ -47,8 +47,21 @@ fn op_category(op: &Op) -> &'static str {
 }
 
 /// Chrome `about:tracing` / Perfetto JSON for a simulated iteration.
+/// Each device row is named after its hardware profile
+/// ("dev0 a800-sxm4-80g") so mixed-pool timelines stay readable.
 pub fn chrome_trace(report: &SimReport) -> String {
     let mut events = Vec::new();
+    for (d, dev) in report.devices.iter().enumerate() {
+        let mut args = BTreeMap::new();
+        args.insert("name".into(), Json::Str(format!("dev{d} {}", dev.hw_name)));
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::Str("thread_name".into()));
+        obj.insert("ph".into(), Json::Str("M".into()));
+        obj.insert("pid".into(), Json::Num(0.0));
+        obj.insert("tid".into(), Json::Num(d as f64));
+        obj.insert("args".into(), Json::Obj(args));
+        events.push(Json::Obj(obj));
+    }
     for e in &report.events {
         let mut obj = BTreeMap::new();
         obj.insert("name".into(), Json::Str(op_label(&e.op)));
@@ -114,8 +127,14 @@ pub fn ascii_timeline(report: &SimReport, width: usize) -> String {
         report.n_mb,
         report.iteration_secs
     ));
+    // Tag rows with the profile only when the pool is actually mixed.
+    let mixed = report.devices.windows(2).any(|w| w[0].hw_name != w[1].hw_name);
     for (d, row) in rows.iter().enumerate() {
-        out.push_str(&format!("dev{d} |"));
+        if mixed {
+            out.push_str(&format!("dev{d}[{}] |", report.devices[d].hw_name));
+        } else {
+            out.push_str(&format!("dev{d} |"));
+        }
         out.extend(row.iter());
         out.push('\n');
     }
@@ -125,7 +144,7 @@ pub fn ascii_timeline(report: &SimReport, width: usize) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::{HardwareProfile, Topology};
+    use crate::cluster::{ClusterSpec, HardwareProfile, Topology};
     use crate::model::ModelConfig;
     use crate::schedule::{build_schedule, ScheduleKind};
     use crate::sim::{CostModel, Simulator};
@@ -133,20 +152,23 @@ mod tests {
     fn report() -> SimReport {
         let m = ModelConfig::qwen2_12b();
         let topo = Topology::new(2, 2, 1);
-        let hw = HardwareProfile::a800();
-        let cost = CostModel::analytic(&m, &topo, &hw, 1024, 1);
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let cost = CostModel::analytic(&m, &topo, &cluster, 1024, 1);
         let s = build_schedule(ScheduleKind::Stp, &topo, 6);
         Simulator::new(&cost).run(&s)
     }
 
     #[test]
-    fn chrome_trace_is_valid_json() {
+    fn chrome_trace_is_valid_json_and_names_devices() {
         let r = report();
         let t = chrome_trace(&r);
         let v = Json::parse(&t).unwrap();
         let events = v.get("traceEvents").unwrap().as_arr().unwrap();
-        assert_eq!(events.len(), r.events.len());
-        assert!(events[0].get("ts").is_some());
+        // One thread_name metadata event per device, then the op events.
+        assert_eq!(events.len(), r.devices.len() + r.events.len());
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("M"));
+        assert!(t.contains("dev0 a800-sxm4-80g"));
+        assert!(events[r.devices.len()].get("ts").is_some());
     }
 
     #[test]

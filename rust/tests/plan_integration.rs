@@ -10,17 +10,18 @@
 //! * at the acceptance budget (16 GPUs) the search simulates a wide
 //!   field spanning every schedule kind.
 
-use stp::cluster::HardwareProfile;
+use stp::cluster::{ClusterSpec, GroupOrder, HardwareProfile, Topology};
 use stp::model::{MllmConfig, ModelConfig};
 use stp::plan::{evaluate, plan, PlanModel, PlanQuery};
-use stp::schedule::ScheduleKind;
+use stp::schedule::{build_schedule_scaled, ScheduleKind};
+use stp::sim::{CostModel, Simulator};
 
 /// A fast-but-wide query used by most tests (shorter sequence and a
 /// reduced microbatch sweep keep debug-build runtime in check).
 fn query_16() -> PlanQuery {
     let mut q = PlanQuery::new(
         PlanModel::Llm(ModelConfig::qwen2_12b()),
-        HardwareProfile::a800(),
+        ClusterSpec::uniform(HardwareProfile::a800()),
         16,
     );
     q.seq = 2048;
@@ -107,6 +108,7 @@ fn chosen_plan_beats_fixed_baselines() {
                 dp: 16 / (tp * pp),
                 kind,
                 n_mb: 32,
+                order: GroupOrder::Declared,
                 offload: stp::schedule::OffloadParams::default(),
                 offload_variant: 0,
             };
@@ -167,7 +169,7 @@ fn mllm_planning_exercises_scaled_builders() {
     // planner must produce a feasible plan for the 14.9B MLLM on 16 GPUs.
     let mut q = PlanQuery::new(
         PlanModel::Mllm(MllmConfig::qwen2vl_14_9b()),
-        HardwareProfile::a800(),
+        ClusterSpec::uniform(HardwareProfile::a800()),
         16,
     );
     q.seq = 2048;
@@ -192,4 +194,147 @@ fn plan_report_json_roundtrips() {
     let cands = v.get("candidates").and_then(|x| x.as_arr()).expect("candidates array");
     assert_eq!(cands.len(), r.n_simulated());
     assert!(cands[0].get("schedule").and_then(|s| s.as_str()).is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Heterogeneous clusters (ClusterSpec): the uniform path must be
+// behavior-preserving, and mixed A800+H20 pools must change what is
+// optimal — the Fig. 13-style "who wins flips with hardware" result.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn uniform_cluster_spec_is_behavior_preserving() {
+    // `ClusterSpec::uniform(hw)` routes every chunk, hop and capacity
+    // through the exact single-profile arithmetic the planner used before
+    // the refactor: same partition, same AR/P2P formulas, one profile on
+    // every device.
+    let model = ModelConfig::qwen2_12b();
+    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(hw.clone());
+    let topo = Topology::new(8, 2, 1);
+    let cm = CostModel::analytic(&model, &topo, &cluster, 4096, 1);
+
+    // Uniform layer split (the seed §5.1 partition), not the weighted one.
+    assert_eq!(cm.stage_plan, stp::cluster::partition_llm(&model, topo.chunks()));
+
+    // Chunk AR charged with the single profile's formula, on every chunk.
+    let expect_ar = hw.allreduce_secs(model.ar_bytes_per_layer(4096, 1) / 2, topo.tp);
+    for c in &cm.chunks {
+        let u = c.fwd.iter().find(|u| u.ar > 0.0).expect("AR-carrying unit");
+        assert_eq!(u.ar, expect_ar);
+    }
+
+    // Pipeline hops priced with the single profile's P2P formula.
+    let cross = topo.pp_hop_cross_node(0, 1, hw.gpus_per_node);
+    assert_eq!(cm.p2p_secs(0, 1), hw.p2p_secs(cm.p2p_bytes, cross));
+
+    // Every simulated device reports the single profile's capacity/name.
+    let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 16, cm.chunk_scales());
+    let r = Simulator::new(&cm).run(&s);
+    for d in &r.devices {
+        assert_eq!(d.hw_name, hw.name);
+        assert_eq!(d.mem_capacity_bytes, (hw.mem_gib * (1u64 << 30) as f64) as usize);
+    }
+
+    // And the ranked search over the uniform spec stays deterministic.
+    let a = plan(&query_16());
+    let b = plan(&query_16());
+    for (x, y) in a.ranked.iter().zip(&b.ranked) {
+        assert_eq!(x.candidate.id, y.candidate.id);
+        assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+    }
+}
+
+#[test]
+fn mixed_pool_balanced_partition_beats_uniform_split() {
+    // On 1 A800 node + 1 H20 node (tp8-pp2: fast devices hold chunks 0,3;
+    // slow ones 1,2), balancing *stage time* (layers ÷ effective FLOPs)
+    // must beat the paper's uniform layer split on simulated throughput:
+    // uniform layers make the H20 stage the critical path.
+    let model = ModelConfig::qwen2_12b();
+    let spec = ClusterSpec::mixed_a800_h20();
+    let topo = Topology::new(8, 2, 1);
+
+    let balanced = CostModel::analytic(&model, &topo, &spec, 3072, 1);
+    let uniform = CostModel::analytic_planned(
+        &model,
+        &stp::cluster::partition_llm(&model, topo.chunks()),
+        &topo,
+        &spec,
+        3072,
+        1,
+    );
+    // The balanced split is genuinely non-uniform: A800 chunks carry more.
+    let counts: Vec<usize> =
+        balanced.stage_plan.chunks.iter().map(|c| c.lm_layers).collect();
+    assert!(counts[0] > counts[1], "A800 chunk should carry more layers: {counts:?}");
+    assert_eq!(balanced.stage_plan.total_lm_layers(), model.layers);
+
+    // V-shape kinds only: both cost models above attribute chunks under
+    // the V-shape placement (the planner handles interleaved-placement
+    // kinds through their own per-placement cost models).
+    for kind in [ScheduleKind::Stp, ScheduleKind::ZbV] {
+        let thr = |cm: &CostModel| {
+            let s = build_schedule_scaled(kind, &topo, 32, cm.chunk_scales());
+            Simulator::new(cm).run(&s).throughput()
+        };
+        let bal = thr(&balanced);
+        let unif = thr(&uniform);
+        assert!(
+            bal > 1.05 * unif,
+            "{kind:?}: balanced {bal:.3} !> uniform {unif:.3} samples/s"
+        );
+    }
+
+    // Per-device OOM data reflects each device's own profile.
+    let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 16, balanced.chunk_scales());
+    let r = Simulator::new(&balanced).run(&s);
+    assert_eq!(r.devices[0].mem_capacity_bytes, 80 << 30);
+    assert_eq!(r.devices[1].mem_capacity_bytes, 96 << 30);
+    assert!(r.devices[0].hw_name.contains("a800"));
+    assert!(r.devices[1].hw_name.contains("h20"));
+}
+
+#[test]
+fn mixed_pool_planner_searches_orderings_and_flips_the_partition() {
+    // The planner on the mixed pool enumerates device→group orderings and
+    // lands on a stage-time-balanced (non-uniform) partition — an optimum
+    // that *cannot* arise on either uniform pool, whose winners always use
+    // the uniform §5.1 split (the Fig. 13-style flip, partition axis).
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::mixed_a800_h20(),
+        16,
+    );
+    q.seq = 2048;
+    q.n_mb_options = vec![16, 32];
+    q.threads = 2;
+    let r = plan(&q);
+    let best = r.best().expect("mixed pool admits a feasible plan");
+    assert!(best.feasible);
+
+    // Both orderings were actually explored.
+    for order in [GroupOrder::FastFirst, GroupOrder::Interleaved] {
+        assert!(
+            r.ranked.iter().any(|e| e.candidate.order == order),
+            "no simulated candidate with order {order:?}"
+        );
+    }
+
+    // The chosen plan's partition is not the uniform layer split.
+    let ctx = q.eval_context();
+    let cm = ctx.cost_model(&best.candidate);
+    let model = ModelConfig::qwen2_12b();
+    assert_ne!(
+        cm.stage_plan,
+        stp::cluster::partition_llm(&model, best.candidate.topo().chunks()),
+        "mixed-pool optimum should use a non-uniform partition"
+    );
+    assert_eq!(cm.stage_plan.total_lm_layers(), model.layers);
+
+    // Funnel accounting still closes with the wider (ordered) space.
+    assert_eq!(
+        r.n_enumerated,
+        r.n_rejected_shape + r.n_pruned_memory + r.n_pruned_theory + r.n_simulated()
+    );
 }

@@ -3,7 +3,7 @@
 //! seeded PRNG sweeps the parameter space and every failure prints its
 //! case for replay).
 
-use stp::cluster::{HardwareProfile, Topology};
+use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
 use stp::exec::Rng;
 use stp::model::ModelConfig;
 use stp::schedule::{validate, build_schedule, Op, ScheduleKind};
@@ -38,10 +38,10 @@ fn prop_every_random_case_is_legal() {
 #[test]
 fn prop_simulation_never_deadlocks_and_conserves_time() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     for (kind, tp, pp, m) in cases(0xBEEF, 32) {
         let topo = Topology::new(tp, pp, 1);
-        let cost = CostModel::analytic(&model, &topo, &hw, 2048, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 2048, 1);
         let s = build_schedule(kind, &topo, m);
         let r = Simulator::new(&cost).run(&s);
         assert!(r.iteration_secs.is_finite() && r.iteration_secs > 0.0);
@@ -67,14 +67,14 @@ fn prop_total_compute_is_schedule_invariant() {
     // schedule (bubbles move, work doesn't) — modulo braids changing
     // nothing about compute totals.
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let mut rng = Rng::new(7);
     for _ in 0..8 {
         let tp = [2, 4][rng.below(2)];
         let pp = [2, 4][rng.below(2)];
         let m = pp * (2 + rng.below(4));
         let topo = Topology::new(tp, pp, 1);
-        let cost = CostModel::analytic(&model, &topo, &hw, 2048, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 2048, 1);
         let compute_of = |kind| {
             let s = build_schedule(kind, &topo, m);
             let r = Simulator::new(&cost).run(&s);

@@ -2,14 +2,22 @@
 //! results (who wins, where, by roughly what factor) across the evaluated
 //! configurations — the acceptance criteria of DESIGN.md §5.
 
-use stp::cluster::{partition_mllm, HardwareProfile, Topology};
+use stp::cluster::{partition_mllm, ClusterSpec, HardwareProfile, Topology};
 use stp::model::{MllmConfig, ModelConfig};
 use stp::schedule::{build_schedule, build_schedule_scaled, theory, ScheduleKind};
 use stp::sim::{AcMode, CostModel, Simulator};
 
-fn thr(model: &ModelConfig, hw: &HardwareProfile, tp: usize, pp: usize, seq: usize, m: usize, k: ScheduleKind) -> f64 {
+fn thr(
+    model: &ModelConfig,
+    cluster: &ClusterSpec,
+    tp: usize,
+    pp: usize,
+    seq: usize,
+    m: usize,
+    k: ScheduleKind,
+) -> f64 {
     let topo = Topology::new(tp, pp, 1);
-    let cost = CostModel::analytic(model, &topo, hw, seq, 1);
+    let cost = CostModel::analytic(model, &topo, cluster, seq, 1);
     let s = build_schedule(k, &topo, m);
     Simulator::new(&cost).run(&s).throughput()
 }
@@ -19,11 +27,11 @@ fn fig7_stp_wins_every_12b_configuration() {
     // Strict wins at TP=8 (headline); at TP=4 the greedy construction may
     // land within a sub-percent tie of 1F1B-I (see EXPERIMENTS.md).
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     for (tp, pp, seq) in [(4, 4, 3072), (8, 2, 3072), (4, 4, 6144), (8, 2, 6144)] {
-        let ours = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::Stp);
-        let i = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::OneF1BInterleaved);
-        let z = thr(&model, &hw, tp, pp, seq, 128, ScheduleKind::ZbV);
+        let ours = thr(&model, &cluster, tp, pp, seq, 128, ScheduleKind::Stp);
+        let i = thr(&model, &cluster, tp, pp, seq, 128, ScheduleKind::OneF1BInterleaved);
+        let z = thr(&model, &cluster, tp, pp, seq, 128, ScheduleKind::ZbV);
         if tp >= 8 {
             assert!(ours > i, "tp{tp} pp{pp} seq{seq}: ours {ours:.2} !> 1f1b-i {i:.2}");
         } else {
@@ -38,10 +46,10 @@ fn gains_grow_with_tp_size() {
     // Paper: "the highest throughput improvements ... achieved at TP=8"
     // (larger TP ⇒ more overlappable communication).
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let gain = |tp, pp| {
-        thr(&model, &hw, tp, pp, 6144, 128, ScheduleKind::Stp)
-            / thr(&model, &hw, tp, pp, 6144, 128, ScheduleKind::OneF1BInterleaved)
+        thr(&model, &cluster, tp, pp, 6144, 128, ScheduleKind::Stp)
+            / thr(&model, &cluster, tp, pp, 6144, 128, ScheduleKind::OneF1BInterleaved)
     };
     assert!(gain(8, 2) > gain(4, 4), "tp8 {:.3} !> tp4 {:.3}", gain(8, 2), gain(4, 4));
 }
@@ -51,12 +59,12 @@ fn gains_shrink_on_h20() {
     // Appendix D: the H20's bandwidth/FLOPs ratio shrinks the TP bubble,
     // so STP's advantage diminishes vs the A800.
     let model = ModelConfig::qwen2_12b();
-    let gain = |hw: &HardwareProfile| {
-        thr(&model, hw, 8, 2, 6144, 128, ScheduleKind::Stp)
-            / thr(&model, hw, 8, 2, 6144, 128, ScheduleKind::OneF1BInterleaved)
+    let gain = |cluster: &ClusterSpec| {
+        thr(&model, cluster, 8, 2, 6144, 128, ScheduleKind::Stp)
+            / thr(&model, cluster, 8, 2, 6144, 128, ScheduleKind::OneF1BInterleaved)
     };
-    let a800 = gain(&HardwareProfile::a800());
-    let h20 = gain(&HardwareProfile::h20());
+    let a800 = gain(&ClusterSpec::uniform(HardwareProfile::a800()));
+    let h20 = gain(&ClusterSpec::uniform(HardwareProfile::h20()));
     assert!(h20 < a800, "h20 gain {h20:.3} !< a800 gain {a800:.3}");
     assert!(h20 > 0.99, "STP should not lose on H20 ({h20:.3})");
 }
@@ -64,9 +72,9 @@ fn gains_shrink_on_h20() {
 #[test]
 fn memory_ranking_zbv_lowest_ours_highest() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let topo = Topology::new(4, 4, 1);
-    let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+    let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
     let peak = |k| {
         let s = build_schedule(k, &topo, 64);
         Simulator::new(&cost).run(&s).peak_activation_gb()
@@ -82,9 +90,9 @@ fn memory_ranking_zbv_lowest_ours_highest() {
 fn offload_recovers_memory_with_small_throughput_cost() {
     // Paper §5.4: 10–19.2% peak reduction, negligible throughput loss.
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::h20();
+    let cluster = ClusterSpec::uniform(HardwareProfile::h20());
     let topo = Topology::new(4, 4, 1);
-    let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1);
+    let cost = CostModel::analytic(&model, &topo, &cluster, 6144, 1);
     let run = |k| {
         let s = build_schedule(k, &topo, 128);
         Simulator::new(&cost).run(&s)
@@ -102,12 +110,13 @@ fn mllm_stp_wins_and_biggest_gain_at_unbalanced_low_pp() {
     // Table 3 shape: STP > baselines; PP=2 unbalanced case gives the
     // largest relative win (paper: +16.7%).
     let mllm = MllmConfig::qwen2vl_14_9b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let gain_at = |tp: usize, pp: usize| {
         let topo = Topology::new(tp, pp, 1);
         let plan = partition_mllm(&mllm, topo.chunks());
-        let cost =
-            CostModel::analytic_mllm(&mllm.lm, &mllm.vit, &plan, &topo, &hw, 5120, 3136, 1);
+        let cost = CostModel::analytic_mllm(
+            &mllm.lm, &mllm.vit, &plan, &topo, &cluster, 5120, 3136, 1,
+        );
         let run = |k| {
             let s = build_schedule_scaled(k, &topo, 128, cost.chunk_scales());
             Simulator::new(&cost).run(&s).throughput()
@@ -124,9 +133,9 @@ fn mllm_stp_wins_and_biggest_gain_at_unbalanced_low_pp() {
 #[test]
 fn theory_and_simulation_agree_on_tp_bubble_order() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let topo = Topology::new(8, 4, 1);
-    let cost = CostModel::analytic(&model, &topo, &hw, 4096, 1);
+    let cost = CostModel::analytic(&model, &topo, &cluster, 4096, 1);
     let ti = cost.theory_inputs(64);
     for kind in ScheduleKind::paper_trio() {
         let row = theory(kind, &ti);
@@ -146,10 +155,11 @@ fn theory_and_simulation_agree_on_tp_bubble_order() {
 #[test]
 fn activation_checkpointing_trades_memory_for_time() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let topo = Topology::new(4, 4, 1);
     let run = |mode| {
-        let cost = CostModel::analytic(&model, &topo, &hw, 6144, 1).with_activation_checkpoint(mode);
+        let cost =
+            CostModel::analytic(&model, &topo, &cluster, 6144, 1).with_activation_checkpoint(mode);
         let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 64, cost.chunk_scales());
         Simulator::new(&cost).run(&s)
     };
@@ -165,9 +175,9 @@ fn activation_checkpointing_trades_memory_for_time() {
 #[test]
 fn cp_and_dp_topologies_simulate() {
     let model = ModelConfig::qwen2_12b();
-    let hw = HardwareProfile::a800();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     for topo in [Topology::new(2, 4, 1).with_cp(2), Topology::new(2, 4, 2)] {
-        let cost = CostModel::analytic(&model, &topo, &hw, 12288, 1);
+        let cost = CostModel::analytic(&model, &topo, &cluster, 12288, 1);
         for kind in ScheduleKind::paper_trio() {
             let s = build_schedule_scaled(kind, &topo, 64, cost.chunk_scales());
             let r = Simulator::new(&cost).run(&s);
