@@ -1,5 +1,7 @@
 //! Bench: simulator replay throughput (L3 §Perf target: ≥ 10^5 ops/s so
-//! the full table sweeps stay interactive).
+//! the full table sweeps stay interactive), comparing the polling oracle
+//! (`sim::reference`) against the event-driven core (`sim::Simulator`,
+//! no-trace + reused arena — the planner's configuration).
 //!
 //! `cargo bench --bench sim_perf`
 
@@ -7,35 +9,63 @@ use std::time::Instant;
 
 use stp::cluster::{ClusterSpec, HardwareProfile, Topology};
 use stp::model::ModelConfig;
-use stp::schedule::{build_schedule, ScheduleKind};
-use stp::sim::{CostModel, Simulator};
+use stp::schedule::{build_schedule, Schedule, ScheduleKind};
+use stp::sim::{reference, CostModel, SimArena, Simulator};
+
+fn median_ms(mut times: Vec<f64>) -> f64 {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2] * 1e3
+}
+
+fn time_reference(cost: &CostModel, s: &Schedule) -> f64 {
+    let _ = reference::Simulator::new(cost).run(s); // warm
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let _ = reference::Simulator::new(cost).run(s);
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    median_ms(times)
+}
+
+fn time_event(cost: &CostModel, s: &Schedule, arena: &mut SimArena) -> f64 {
+    let _ = Simulator::new(cost).without_trace().try_run_in(s, arena).unwrap(); // warm
+    let mut times = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let _ = Simulator::new(cost).without_trace().try_run_in(s, arena).unwrap();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    median_ms(times)
+}
 
 fn main() {
     let model = ModelConfig::qwen2_12b();
     let cluster = ClusterSpec::uniform(HardwareProfile::a800());
-    println!("{:12} {:>4} {:>5} {:>8} {:>10} {:>12}", "schedule", "pp", "m", "ops", "sim ms", "ops/ms");
+    let mut arena = SimArena::default();
+    println!(
+        "{:12} {:>4} {:>5} {:>8} {:>10} {:>12} {:>10} {:>12} {:>9}",
+        "schedule", "pp", "m", "ops", "ref ms", "ref ops/ms", "event ms", "event ops/ms", "speedup"
+    );
     for kind in [ScheduleKind::OneF1BInterleaved, ScheduleKind::ZbV, ScheduleKind::Stp] {
         for (pp, m) in [(2usize, 64usize), (4, 192), (8, 512)] {
             let topo = Topology::new(4, pp, 1);
             let cost = CostModel::analytic(&model, &topo, &cluster, 4096, 1);
             let s = build_schedule(kind, &topo, m);
-            let _ = Simulator::new(&cost).run(&s); // warm
-            let mut times = Vec::new();
-            for _ in 0..5 {
-                let t0 = Instant::now();
-                let _ = Simulator::new(&cost).run(&s);
-                times.push(t0.elapsed().as_secs_f64());
-            }
-            times.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let ms = times[2] * 1e3;
+            let ref_ms = time_reference(&cost, &s);
+            let ev_ms = time_event(&cost, &s, &mut arena);
+            let ops = s.num_ops() as f64;
             println!(
-                "{:12} {:>4} {:>5} {:>8} {:>10.3} {:>12.0}",
+                "{:12} {:>4} {:>5} {:>8} {:>10.3} {:>12.0} {:>10.3} {:>12.0} {:>8.1}x",
                 kind.name(),
                 pp,
                 m,
                 s.num_ops(),
-                ms,
-                s.num_ops() as f64 / ms
+                ref_ms,
+                ops / ref_ms,
+                ev_ms,
+                ops / ev_ms,
+                ref_ms / ev_ms
             );
         }
     }

@@ -492,9 +492,10 @@ pub fn table11_sim() -> String {
 
 /// Auto-planner demo — a paper-table sweep expressed as a plan query:
 /// rank every (TP, PP, DP) × schedule × microbatch candidate for a
-/// 16-GPU A800 budget and print the funnel plus the top plans. Future
-/// experiment grids can be phrased the same way instead of hand-rolled
-/// loops.
+/// 16-GPU A800 budget and print the funnel plus the top plans, then run
+/// the search-perf sweep (exhaustive vs beam over growing GPU budgets)
+/// and record it in `BENCH_plan_search.json` at the repo root so future
+/// PRs can track the planner's perf trajectory.
 pub fn plan16() -> String {
     use crate::plan::{plan, PlanModel, PlanQuery};
     let mut q = PlanQuery::new(
@@ -505,7 +506,96 @@ pub fn plan16() -> String {
     // Lighter sweep than the CLI default: the bench target is shape, not
     // exhaustiveness.
     q.n_mb_options = vec![16, 64];
-    plan(&q).render(10)
+    format!("{}\n{}", plan(&q).render(10), plan_perf(true))
+}
+
+/// Search-perf sweep: plan the same model over growing GPU budgets with
+/// exhaustive enumeration vs beam search, report wall-clock and
+/// candidates/sec, and write the machine-readable trajectory record
+/// `BENCH_plan_search.json` at the repo root. `quick` limits the sweep
+/// to {16, 128} GPUs (the CI perf-smoke mode); the full sweep adds 64
+/// and 256.
+pub fn plan_perf(quick: bool) -> String {
+    use std::time::Instant;
+
+    use crate::config::json::Json;
+    use crate::plan::{plan, PlanModel, PlanQuery, SearchMode};
+    use std::collections::BTreeMap;
+
+    let budgets: Vec<usize> = if quick { vec![16, 128] } else { vec![16, 64, 128, 256] };
+    let beam_width = 8usize;
+    let mut t = Table::new(vec![
+        "gpus", "search", "simulated", "wall s", "cands/s", "speedup", "best plan",
+    ]);
+    let mut entries: Vec<Json> = Vec::new();
+    for &gpus in &budgets {
+        let mut exhaustive_secs = 0.0f64;
+        for mode in [SearchMode::Exhaustive, SearchMode::Beam { width: beam_width }] {
+            let mut q = PlanQuery::new(
+                PlanModel::Llm(ModelConfig::qwen2_12b()),
+                ClusterSpec::uniform(HardwareProfile::a800()),
+                gpus,
+            );
+            q.search = mode;
+            let t0 = Instant::now();
+            let r = plan(&q);
+            let secs = t0.elapsed().as_secs_f64();
+            let speedup = match mode {
+                SearchMode::Exhaustive => {
+                    exhaustive_secs = secs;
+                    1.0
+                }
+                SearchMode::Beam { .. } => exhaustive_secs / secs.max(1e-9),
+            };
+            let best = r
+                .best()
+                .map(|b| b.candidate.label())
+                .unwrap_or_else(|| "no feasible plan".into());
+            let best_thr = r.best().map(|b| b.throughput).unwrap_or(0.0);
+            t.row(vec![
+                gpus.to_string(),
+                r.search_mode.clone(),
+                r.n_simulated().to_string(),
+                format!("{secs:.3}"),
+                format!("{:.0}", r.n_simulated() as f64 / secs.max(1e-9)),
+                format!("{speedup:.1}x"),
+                best.clone(),
+            ]);
+            let mut o = BTreeMap::new();
+            o.insert("gpus".to_string(), Json::Num(gpus as f64));
+            o.insert("mode".to_string(), Json::Str(r.search_mode.clone()));
+            o.insert("wall_secs".to_string(), Json::Num(secs));
+            o.insert("enumerated".to_string(), Json::Num(r.n_enumerated as f64));
+            o.insert("simulated".to_string(), Json::Num(r.n_simulated() as f64));
+            o.insert(
+                "candidates_per_sec".to_string(),
+                Json::Num(r.n_simulated() as f64 / secs.max(1e-9)),
+            );
+            o.insert("speedup_vs_exhaustive".to_string(), Json::Num(speedup));
+            o.insert("best".to_string(), Json::Str(best));
+            o.insert("best_throughput".to_string(), Json::Num(best_thr));
+            entries.push(Json::Obj(o));
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("plan_search".into()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("beam_width".to_string(), Json::Num(beam_width as f64));
+    root.insert(
+        "gpus_swept".to_string(),
+        Json::Arr(budgets.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
+    root.insert("entries".to_string(), Json::Arr(entries));
+    let path = "BENCH_plan_search.json";
+    let note = match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => format!("wrote {path}"),
+        Err(e) => format!("could not write {path}: {e}"),
+    };
+    format!(
+        "== plan-search perf: exhaustive vs beam-{beam_width} (12.1B, A800, planner defaults)\n{}\n{note}",
+        t.render()
+    )
 }
 
 /// Heterogeneous auto-planner demo — the runnable Fig. 13-style "who wins
@@ -584,6 +674,8 @@ pub fn by_name(name: &str) -> Option<String> {
         "table10" => table10(),
         "table11" => table11_sim(),
         "plan" => plan16(),
+        "plan-perf" => plan_perf(false),
+        "plan-quick" | "plan-perf-quick" => plan_perf(true),
         "plan-mixed" | "plan-hetero" => plan_mixed(),
         "all" => all(),
         _ => return None,

@@ -20,13 +20,15 @@ USAGE:
                [--mb N] [--schedule KIND] [--hw a800|h20]
                [--cluster mixed|FILE.json]
   stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
-                table8|fig13|table9|table10|table11|plan|plan-mixed|all>
+                table8|fig13|table9|table10|table11|plan|plan-mixed|
+                plan-perf|plan-quick|all>
   stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
                [--chrome FILE] [--all-schedules] [--cluster mixed|FILE.json]
   stp validate [--schedule KIND] [--pp N] [--mb N]
   stp plan     --gpus N [--mem-gib F] [--model 12b|26b|tiny|mllm-14.9b|
                mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
                [--seq N] [--mbsize N] [--topk N] [--threads N]
+               [--search exhaustive|beam] [--beam-width N]
   stp train    [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
                [--lr F] [--seed N] [--quiet]   (needs the `pjrt` feature)
 
@@ -278,7 +280,7 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
 
 /// `stp plan`: run the parallelism auto-planner over a GPU budget.
 fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
-    use crate::plan::{plan, PlanQuery};
+    use crate::plan::{plan, PlanQuery, SearchMode};
 
     let model = plan_model_by_name(&flag::<String>(flags, "model", "12b".into()));
     let cluster = cluster_from_flags(flags)?;
@@ -288,6 +290,12 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
     q.seq = flag(flags, "seq", q.seq);
     q.mb_size = flag(flags, "mbsize", q.mb_size);
     q.threads = flag(flags, "threads", q.threads);
+    let width = flag(flags, "beam-width", 8usize);
+    q.search = match flag::<String>(flags, "search", "exhaustive".into()).as_str() {
+        "beam" => SearchMode::Beam { width },
+        "exhaustive" | "full" => SearchMode::Exhaustive,
+        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam)"),
+    };
     let topk = flag(flags, "topk", 10usize);
     let report = plan(&q);
     println!("{}", report.render(topk));

@@ -8,7 +8,7 @@
 
 use crate::cluster::ClusterSpec;
 use crate::schedule::{build_schedule_scaled, stp, theory, ScheduleKind, ShapeCosts};
-use crate::sim::{CostModel, SimReport, Simulator};
+use crate::sim::{CostModel, SimArena, SimReport, Simulator};
 
 use super::space::{Candidate, PlanModel};
 
@@ -60,6 +60,9 @@ pub struct Evaluation {
     pub peak_mem_bytes: usize,
     /// Simulated peak within the memory cap?
     pub feasible: bool,
+    /// The replay deadlocked (malformed candidate schedule): always
+    /// infeasible, ranked last, never aborts the search.
+    pub sim_failed: bool,
 }
 
 /// Per-iteration DP gradient all-reduce time. Each device holds
@@ -150,7 +153,34 @@ pub fn simulate_candidate(ctx: &EvalContext, c: &Candidate) -> SimReport {
 /// Feasibility requires both the global cap override *and* every device's
 /// own memory capacity (per-group `mem_gib` on mixed pools).
 pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
-    let r = simulate_candidate(ctx, c);
+    evaluate_in(ctx, c, &mut SimArena::default())
+}
+
+/// [`evaluate`] against a caller-owned simulator arena (the planner keeps
+/// one per worker thread): the no-trace event-driven replay, so ranking a
+/// candidate allocates nothing beyond its schedule. A deadlocked replay
+/// (malformed candidate) comes back as an infeasible [`Evaluation`] with
+/// `sim_failed` set instead of aborting the whole `plan` run.
+pub fn evaluate_in(ctx: &EvalContext, c: &Candidate, arena: &mut SimArena) -> Evaluation {
+    let cost = ctx.cost_model(c);
+    let s = build_candidate_schedule(&cost, c);
+    let r = match Simulator::new(&cost).without_trace().try_run_in(&s, arena) {
+        Ok(r) => r,
+        Err(_) => {
+            return Evaluation {
+                candidate: *c,
+                iteration_secs: f64::INFINITY,
+                dp_grad_secs: 0.0,
+                throughput: 0.0,
+                mfu: 0.0,
+                tp_bubble_per_dev: 0.0,
+                pp_bubble_per_dev: 0.0,
+                peak_mem_bytes: 0,
+                feasible: false,
+                sim_failed: true,
+            }
+        }
+    };
     let dp_grad_secs = dp_gradient_secs(ctx, c);
     let total = r.iteration_secs + dp_grad_secs;
     let samples = (c.dp * c.n_mb * ctx.mb_size) as f64;
@@ -168,6 +198,7 @@ pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
         pp_bubble_per_dev: r.pp_bubble_per_device(),
         peak_mem_bytes,
         feasible: peak_mem_bytes <= ctx.mem_cap_bytes && !r.is_oom(),
+        sim_failed: false,
     }
 }
 
@@ -247,6 +278,21 @@ mod tests {
         let sim_stp = evaluate(&ctx, &stp_c).throughput;
         let sim_zbv = evaluate(&ctx, &zbv_c).throughput;
         assert!(sim_stp > sim_zbv);
+    }
+
+    #[test]
+    fn arena_evaluation_matches_fresh_evaluation() {
+        let ctx = ctx();
+        let mut arena = SimArena::default();
+        for kind in ScheduleKind::all() {
+            let c = cand(4, 2, 2, kind, 16);
+            let fresh = evaluate(&ctx, &c);
+            let reused = evaluate_in(&ctx, &c, &mut arena);
+            assert_eq!(fresh.throughput.to_bits(), reused.throughput.to_bits(), "{kind:?}");
+            assert_eq!(fresh.peak_mem_bytes, reused.peak_mem_bytes, "{kind:?}");
+            assert_eq!(fresh.feasible, reused.feasible, "{kind:?}");
+            assert!(!reused.sim_failed, "{kind:?}");
+        }
     }
 
     #[test]

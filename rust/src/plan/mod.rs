@@ -14,9 +14,13 @@
 //!    (memory feasibility is a first-class constraint, not an
 //!    afterthought), and a theory-estimate throughput bound
 //!    ([`constraints`], [`evaluate`]);
-//! 3. **simulates** every survivor under the discrete-event engine on a
-//!    thread pool ([`search`]) — deterministically, regardless of thread
-//!    count;
+//! 3. **simulates** under the event-driven no-trace replay on a thread
+//!    pool with per-worker scratch arenas ([`search`]) —
+//!    deterministically, regardless of thread count — either every
+//!    theory-bound survivor ([`SearchMode::Exhaustive`]) or a
+//!    theory-seeded beam walk over (tp, pp, n_mb, order) neighbors
+//!    ([`SearchMode::Beam`], for budgets of hundreds of GPUs where
+//!    exhaustive simulation stops scaling);
 //! 4. **reports** a ranked [`PlanReport`] with throughput, MFU, TP/PP
 //!    bubble decomposition and peak memory per candidate, serializable
 //!    to JSON and traceable via `trace::write_chrome_trace` ([`report`]).
@@ -34,7 +38,7 @@ pub mod space;
 pub use constraints::Reject;
 pub use evaluate::{evaluate, simulate_candidate, EvalContext, Evaluation};
 pub use report::PlanReport;
-pub use search::{evaluate_parallel, plan, PlanQuery};
+pub use search::{evaluate_parallel, plan, PlanQuery, SearchMode};
 pub use space::{Candidate, PlanModel};
 
 #[cfg(test)]

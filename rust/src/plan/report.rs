@@ -23,6 +23,9 @@ pub struct PlanReport {
     pub mem_cap_bytes: usize,
     pub seq: usize,
     pub mb_size: usize,
+    /// Exploration strategy that produced the ranking ("exhaustive",
+    /// "beam-8").
+    pub search_mode: String,
     /// Raw candidate-space size before any pruning.
     pub n_enumerated: usize,
     /// Dropped by shape rules (TP divisibility, pipeline depth, n_mb).
@@ -70,7 +73,13 @@ impl PlanReport {
                 format!("{:.3}s", e.tp_bubble_per_dev),
                 format!("{:.3}s", e.pp_bubble_per_dev),
                 format!("{:.1}", e.peak_mem_bytes as f64 / 1e9),
-                if e.feasible { "ok".to_string() } else { "OOM".to_string() },
+                if e.sim_failed {
+                    "fail".to_string()
+                } else if e.feasible {
+                    "ok".to_string()
+                } else {
+                    "OOM".to_string()
+                },
             ]);
         }
         let best_line = match self.best() {
@@ -84,7 +93,7 @@ impl PlanReport {
             None => "no memory-feasible plan for this budget".to_string(),
         };
         format!(
-            "== auto-plan: {} on {} x{} (seq {}, mbsize {}, cap {:.0} GiB)\n\
+            "== auto-plan: {} on {} x{} (seq {}, mbsize {}, cap {:.0} GiB, search {})\n\
              candidates: {} enumerated | {} shape-rejected | {} memory-pruned | \
              {} theory-pruned | {} simulated ({} schedule kinds)\n{}\n{}",
             self.model_name,
@@ -93,6 +102,7 @@ impl PlanReport {
             self.seq,
             self.mb_size,
             self.mem_cap_bytes as f64 / (1u64 << 30) as f64,
+            self.search_mode,
             self.n_enumerated,
             self.n_rejected_shape,
             self.n_pruned_memory,
@@ -116,6 +126,7 @@ impl PlanReport {
         );
         root.insert("seq".into(), Json::Num(self.seq as f64));
         root.insert("mb_size".into(), Json::Num(self.mb_size as f64));
+        root.insert("search_mode".into(), Json::Str(self.search_mode.clone()));
         root.insert("enumerated".into(), Json::Num(self.n_enumerated as f64));
         root.insert("rejected_shape".into(), Json::Num(self.n_rejected_shape as f64));
         root.insert("pruned_memory".into(), Json::Num(self.n_pruned_memory as f64));
@@ -144,6 +155,7 @@ impl PlanReport {
                 o.insert("pp_bubble_per_dev".into(), Json::Num(e.pp_bubble_per_dev));
                 o.insert("peak_gb".into(), Json::Num(e.peak_mem_bytes as f64 / 1e9));
                 o.insert("feasible".into(), Json::Bool(e.feasible));
+                o.insert("sim_failed".into(), Json::Bool(e.sim_failed));
                 Json::Obj(o)
             })
             .collect();
@@ -180,6 +192,7 @@ mod tests {
             pp_bubble_per_dev: 0.2,
             peak_mem_bytes: 50_000_000_000,
             feasible,
+            sim_failed: false,
         }
     }
 
@@ -191,6 +204,7 @@ mod tests {
             mem_cap_bytes: 80 << 30,
             seq: 6144,
             mb_size: 1,
+            search_mode: "exhaustive".into(),
             n_enumerated: 10,
             n_rejected_shape: 4,
             n_pruned_memory: 2,
@@ -224,6 +238,7 @@ mod tests {
         let r = report();
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.get("gpus").unwrap().as_usize(), Some(16));
+        assert_eq!(j.get("search_mode").unwrap().as_str(), Some("exhaustive"));
         assert_eq!(j.get("candidates").unwrap().as_arr().unwrap().len(), 3);
         let top = j.get("candidates").unwrap().idx(0).unwrap();
         assert_eq!(top.get("schedule").unwrap().as_str(), Some("stp"));

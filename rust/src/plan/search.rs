@@ -8,22 +8,60 @@
 //! candidates whose predicted throughput is hopeless relative to the best
 //! prediction — while always keeping the `min_keep` best-predicted so the
 //! simulated field stays wide. Survivors are simulated concurrently on a
-//! thread pool (the simulator replays ≥10^5 ops/s, so hundreds of
-//! candidates rank in seconds) and sorted feasible-first by simulated
+//! thread pool (each worker reuses one [`SimArena`], the no-trace
+//! event-driven replay) and sorted feasible-first by simulated
 //! throughput. Results are bit-identical across runs and thread counts.
+//!
+//! For budgets where exhaustive simulation stops scaling (hundreds of
+//! GPUs — the group orderings multiply the space further), a
+//! **beam search** ([`SearchMode::Beam`]) replaces stage 3+4: the beam is
+//! seeded from the theory estimates (top-`width` overall plus the best
+//! prediction per schedule kind), then repeatedly expands the simulated
+//! frontier to the neighbors of the current beam in
+//! (tp, pp, n_mb, order) space, stopping when a whole frontier round
+//! fails to improve the best simulated plan. Everything is ordered by
+//! (estimate, candidate id), so beam results are as deterministic as the
+//! exhaustive ones.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::AtomicUsize;
 use std::sync::mpsc;
 
 use crate::cluster::ClusterSpec;
 use crate::schedule::{OffloadParams, ScheduleKind};
-use crate::sim::CostModel;
+use crate::sim::{CostModel, SimArena};
 
 use super::constraints::{admissible, memory_feasible};
-use super::evaluate::{estimated_throughput, evaluate, EvalContext, Evaluation};
+use super::evaluate::{estimated_throughput, evaluate_in, EvalContext, Evaluation};
 use super::report::PlanReport;
 use super::space::{enumerate, Candidate, PlanModel};
+
+/// Hard cap on beam rounds (a backstop far above any observed run; the
+/// stall rule terminates long before).
+const BEAM_MAX_ROUNDS: usize = 64;
+
+/// How the planner explores the candidate space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Simulate every candidate that survives the memory pre-filter and
+    /// the theory bound (the historical behavior).
+    Exhaustive,
+    /// Theory-seeded beam search over (tp, pp, n_mb, order) neighbors.
+    Beam {
+        /// Beam width: candidates simulated per frontier round.
+        width: usize,
+    },
+}
+
+impl SearchMode {
+    /// Stable label for reports and JSON ("exhaustive", "beam-8").
+    pub fn label(&self) -> String {
+        match self {
+            SearchMode::Exhaustive => "exhaustive".to_string(),
+            SearchMode::Beam { width } => format!("beam-{width}"),
+        }
+    }
+}
 
 /// A planning request: model + device pool + GPU budget, plus the knobs
 /// of the candidate space. `PlanQuery::new` fills paper-grade defaults;
@@ -57,6 +95,9 @@ pub struct PlanQuery {
     pub prune_slack: f64,
     /// Always simulate at least this many best-predicted candidates.
     pub min_keep: usize,
+    /// Exploration strategy (exhaustive by default; beam for large
+    /// budgets).
+    pub search: SearchMode,
 }
 
 impl PlanQuery {
@@ -82,6 +123,7 @@ impl PlanQuery {
             threads: 0,
             prune_slack: 0.5,
             min_keep: 192,
+            search: SearchMode::Exhaustive,
         }
     }
 
@@ -146,33 +188,39 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
         scored.push((c, estimated_throughput(&ctx, cost, &c)));
     }
 
-    let best_est = scored.iter().map(|x| x.1).fold(0.0f64, f64::max);
-    let mut order: Vec<usize> = (0..scored.len()).collect();
-    order.sort_by(|&a, &b| {
-        scored[b]
-            .1
-            .partial_cmp(&scored[a].1)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(scored[a].0.id.cmp(&scored[b].0.id))
-    });
-    let mut keep = vec![false; scored.len()];
-    for (rank, &i) in order.iter().enumerate() {
-        if rank < q.min_keep || scored[i].1 >= q.prune_slack * best_est {
-            keep[i] = true;
+    // Stage 4: simulate — every theory-bound survivor (exhaustive) or
+    // the beam's frontier walk. Work is claimed via an atomic cursor;
+    // results carry their candidate and are re-sorted, so the outcome is
+    // independent of thread interleaving.
+    let threads = q.effective_threads();
+    let evals = match q.search {
+        SearchMode::Exhaustive => {
+            let best_est = scored.iter().map(|x| x.1).fold(0.0f64, f64::max);
+            let mut order: Vec<usize> = (0..scored.len()).collect();
+            order.sort_by(|&a, &b| {
+                scored[b]
+                    .1
+                    .partial_cmp(&scored[a].1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(scored[a].0.id.cmp(&scored[b].0.id))
+            });
+            let mut keep = vec![false; scored.len()];
+            for (rank, &i) in order.iter().enumerate() {
+                if rank < q.min_keep || scored[i].1 >= q.prune_slack * best_est {
+                    keep[i] = true;
+                }
+            }
+            let mut survivors: Vec<Candidate> = Vec::with_capacity(scored.len());
+            for (i, x) in scored.iter().enumerate() {
+                if keep[i] {
+                    survivors.push(x.0);
+                }
+            }
+            evaluate_parallel(&ctx, &survivors, threads)
         }
-    }
-    let mut survivors: Vec<Candidate> = Vec::with_capacity(scored.len());
-    for (i, x) in scored.iter().enumerate() {
-        if keep[i] {
-            survivors.push(x.0);
-        }
-    }
-    let n_pruned_theory = scored.len() - survivors.len();
-
-    // Stage 4: simulate survivors on the thread pool. Work is claimed via
-    // an atomic cursor; results carry their candidate and are re-sorted,
-    // so the outcome is independent of thread interleaving.
-    let evals = evaluate_parallel(&ctx, &survivors, q.effective_threads());
+        SearchMode::Beam { width } => beam_evaluate(&ctx, &scored, width, threads),
+    };
+    let n_pruned_theory = scored.len() - evals.len();
 
     let mut ranked = evals;
     ranked.sort_by(|a, b| {
@@ -189,6 +237,7 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
         mem_cap_bytes: q.mem_cap_bytes(),
         seq: q.seq,
         mb_size: q.mb_size,
+        search_mode: q.search.label(),
         n_enumerated,
         n_rejected_shape,
         n_pruned_memory,
@@ -197,8 +246,182 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
     }
 }
 
+/// Candidate coordinates the beam moves along: dp is implied by
+/// (tp, pp) and the budget, so neighbors vary tp, pp, n_mb and the
+/// group order one step at a time; kind and offload variant are fixed
+/// per beam member (the seeding covers every kind).
+type BeamKey = (usize, usize, usize, u8, u8, usize);
+
+fn beam_key(c: &Candidate) -> BeamKey {
+    (c.tp, c.pp, c.n_mb, c.order as u8, c.kind as u8, c.offload_variant)
+}
+
+/// Values adjacent to `v` in the sorted distinct list `vals`.
+fn adjacent(vals: &[usize], v: usize) -> Vec<usize> {
+    match vals.binary_search(&v) {
+        Ok(i) => {
+            let mut out = Vec::with_capacity(2);
+            if i > 0 {
+                out.push(vals[i - 1]);
+            }
+            if i + 1 < vals.len() {
+                out.push(vals[i + 1]);
+            }
+            out
+        }
+        Err(_) => Vec::new(),
+    }
+}
+
+/// Beam search over the scored (memory-feasible, theory-estimated)
+/// candidates: seed from the estimates, expand (tp, pp, n_mb, order)
+/// neighbors of the current beam, stop when a frontier round stops
+/// improving the best simulated plan. Returns every simulated
+/// evaluation (the caller ranks them like the exhaustive path).
+fn beam_evaluate(
+    ctx: &EvalContext,
+    scored: &[(Candidate, f64)],
+    width: usize,
+    threads: usize,
+) -> Vec<Evaluation> {
+    if scored.is_empty() {
+        return Vec::new();
+    }
+    let width = width.max(1);
+
+    let index: BTreeMap<BeamKey, usize> =
+        scored.iter().enumerate().map(|(i, (c, _))| (beam_key(c), i)).collect();
+
+    // Distinct move coordinates actually present in the space.
+    let sorted_unique = |mut v: Vec<usize>| {
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    let tps = sorted_unique(scored.iter().map(|(c, _)| c.tp).collect());
+    let pps = sorted_unique(scored.iter().map(|(c, _)| c.pp).collect());
+    let mbs = sorted_unique(scored.iter().map(|(c, _)| c.n_mb).collect());
+    let orders = {
+        let mut v: Vec<u8> = scored.iter().map(|(c, _)| c.order as u8).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+
+    // Estimate-descending order (ties broken by candidate id).
+    let mut by_est: Vec<usize> = (0..scored.len()).collect();
+    by_est.sort_by(|&a, &b| {
+        scored[b]
+            .1
+            .partial_cmp(&scored[a].1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(scored[a].0.id.cmp(&scored[b].0.id))
+    });
+
+    // Seed: the top `width` predictions overall, plus the best prediction
+    // of every schedule kind not already covered (so no family is written
+    // off by its theory row alone).
+    let mut seeds: Vec<usize> = by_est.iter().copied().take(width).collect();
+    let mut kinds_seen: BTreeSet<u8> =
+        seeds.iter().map(|&i| scored[i].0.kind as u8).collect();
+    for &i in &by_est {
+        let k = scored[i].0.kind as u8;
+        if kinds_seen.insert(k) {
+            seeds.push(i);
+        }
+    }
+
+    let mut simulated: BTreeMap<usize, Evaluation> = BTreeMap::new();
+    let simulate_batch = |idxs: &[usize], simulated: &mut BTreeMap<usize, Evaluation>| {
+        // `evaluate_parallel` returns evaluations sorted by candidate id;
+        // `scored` is in enumeration (id) order, so sorting the batch
+        // indices keeps the zip aligned.
+        let mut idxs: Vec<usize> = idxs.to_vec();
+        idxs.sort_unstable();
+        let cands: Vec<Candidate> = idxs.iter().map(|&i| scored[i].0).collect();
+        for (i, e) in idxs.iter().zip(evaluate_parallel(ctx, &cands, threads)) {
+            simulated.insert(*i, e);
+        }
+    };
+    simulate_batch(&seeds, &mut simulated);
+
+    // (feasible, throughput) with deterministic id tiebreak.
+    let beam_rank = |a: &Evaluation, b: &Evaluation| {
+        b.feasible
+            .cmp(&a.feasible)
+            .then(b.throughput.partial_cmp(&a.throughput).unwrap_or(std::cmp::Ordering::Equal))
+            .then(a.candidate.id.cmp(&b.candidate.id))
+    };
+    let best_of = |sims: &BTreeMap<usize, Evaluation>| -> (bool, f64) {
+        sims.values()
+            .fold((false, 0.0f64), |acc, e| {
+                if (e.feasible, e.throughput) > acc { (e.feasible, e.throughput) } else { acc }
+            })
+    };
+    let mut best = best_of(&simulated);
+
+    for _round in 0..BEAM_MAX_ROUNDS {
+        // Current beam: the top `width` simulated candidates.
+        let mut ranked: Vec<&Evaluation> = simulated.values().collect();
+        ranked.sort_by(|a, b| beam_rank(a, b));
+        let beam: Vec<Candidate> =
+            ranked.iter().take(width).map(|e| e.candidate).collect();
+
+        // Frontier: unsimulated one-step neighbors of the beam.
+        let mut frontier: BTreeSet<usize> = BTreeSet::new();
+        for c in &beam {
+            let mut keys: Vec<BeamKey> = Vec::new();
+            for tp in adjacent(&tps, c.tp) {
+                keys.push((tp, c.pp, c.n_mb, c.order as u8, c.kind as u8, c.offload_variant));
+            }
+            for pp in adjacent(&pps, c.pp) {
+                keys.push((c.tp, pp, c.n_mb, c.order as u8, c.kind as u8, c.offload_variant));
+            }
+            for mb in adjacent(&mbs, c.n_mb) {
+                keys.push((c.tp, c.pp, mb, c.order as u8, c.kind as u8, c.offload_variant));
+            }
+            for &o in &orders {
+                if o != c.order as u8 {
+                    keys.push((c.tp, c.pp, c.n_mb, o, c.kind as u8, c.offload_variant));
+                }
+            }
+            for k in keys {
+                if let Some(&i) = index.get(&k) {
+                    if !simulated.contains_key(&i) {
+                        frontier.insert(i);
+                    }
+                }
+            }
+        }
+        let mut frontier: Vec<usize> = frontier.into_iter().collect();
+        frontier.sort_by(|&a, &b| {
+            scored[b]
+                .1
+                .partial_cmp(&scored[a].1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(scored[a].0.id.cmp(&scored[b].0.id))
+        });
+        frontier.truncate(width);
+        if frontier.is_empty() {
+            break;
+        }
+
+        simulate_batch(&frontier, &mut simulated);
+        let new_best = best_of(&simulated);
+        if new_best <= best {
+            // The frontier stalled: no neighbor beat the incumbent plan.
+            break;
+        }
+        best = new_best;
+    }
+
+    simulated.into_values().collect()
+}
+
 /// Evaluate candidates concurrently; deterministic regardless of thread
 /// count (exposed for the `plan_search` bench's scaling measurement).
+/// Each worker owns one [`SimArena`], so a candidate evaluation reuses
+/// the previous one's buffers instead of allocating.
 pub fn evaluate_parallel(
     ctx: &EvalContext,
     candidates: &[Candidate],
@@ -211,13 +434,16 @@ pub fn evaluate_parallel(
         for _ in 0..n_threads {
             let tx = tx.clone();
             let cursor = &cursor;
-            s.spawn(move || loop {
-                let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= candidates.len() {
-                    break;
-                }
-                if tx.send(evaluate(ctx, &candidates[i])).is_err() {
-                    break;
+            s.spawn(move || {
+                let mut arena = SimArena::default();
+                loop {
+                    let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= candidates.len() {
+                        break;
+                    }
+                    if tx.send(evaluate_in(ctx, &candidates[i], &mut arena)).is_err() {
+                        break;
+                    }
                 }
             });
         }
@@ -296,5 +522,54 @@ mod tests {
             assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
             assert_eq!(a.peak_mem_bytes, b.peak_mem_bytes);
         }
+    }
+
+    #[test]
+    fn beam_funnel_counts_stay_consistent() {
+        let mut q = small_query();
+        q.search = SearchMode::Beam { width: 4 };
+        let r = plan(&q);
+        assert_eq!(r.search_mode, "beam-4");
+        assert_eq!(
+            r.n_enumerated,
+            r.n_rejected_shape + r.n_pruned_memory + r.n_pruned_theory + r.ranked.len()
+        );
+        assert!(r.best().is_some());
+    }
+
+    #[test]
+    fn beam_is_deterministic_across_thread_counts() {
+        let mut a = small_query();
+        a.search = SearchMode::Beam { width: 4 };
+        a.threads = 1;
+        let mut b = a.clone();
+        b.threads = 4;
+        let ra = plan(&a);
+        let rb = plan(&b);
+        assert_eq!(ra.ranked.len(), rb.ranked.len());
+        for (x, y) in ra.ranked.iter().zip(&rb.ranked) {
+            assert_eq!(x.candidate.id, y.candidate.id);
+            assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+        }
+    }
+
+    #[test]
+    fn beam_simulates_fewer_but_finds_the_exhaustive_best() {
+        let mut ex = small_query();
+        ex.n_mb_options = vec![8, 16, 32];
+        let mut beam = ex.clone();
+        beam.search = SearchMode::Beam { width: 6 };
+        let re = plan(&ex);
+        let rb = plan(&beam);
+        assert!(
+            rb.n_simulated() < re.n_simulated(),
+            "beam simulated {} !< exhaustive {}",
+            rb.n_simulated(),
+            re.n_simulated()
+        );
+        let eb = re.best().expect("exhaustive best");
+        let bb = rb.best().expect("beam best");
+        assert_eq!(eb.candidate.id, bb.candidate.id, "beam best != exhaustive best");
+        assert_eq!(eb.throughput.to_bits(), bb.throughput.to_bits());
     }
 }

@@ -285,6 +285,147 @@ impl Schedule {
     }
 }
 
+/// Sentinel for "no op produces this (chunk, mb) slot" in the
+/// [`CompiledSchedule`] producer tables.
+pub const NO_OP: u32 = u32::MAX;
+
+/// A schedule lowered to flat index arrays for the event-driven simulator
+/// (`sim::Simulator`): every op gets a dense id (device-major, program
+/// order preserved), every cross-chunk F/B edge is resolved to a static
+/// producer id, and each op carries its *dependency count* — the number
+/// of completions (program-order predecessor + cross-chunk producers)
+/// that must land before the op may start. Replay is then a single
+/// ready-queue pass in O(ops) instead of round-robin polling.
+///
+/// The compiled replay requires producer uniqueness (at most one op
+/// performs the forward / backward of a given `(chunk, mb)`), which
+/// every builder guarantees and `validate` checks. Compilation detects
+/// violations and records them in [`CompiledSchedule::unique_producers`];
+/// the event-driven simulator falls back to the fully general
+/// `sim::reference` oracle for such schedules instead of silently
+/// mis-replaying them.
+#[derive(Debug, Clone, Default)]
+pub struct CompiledSchedule {
+    pub n_chunks: usize,
+    pub n_mb: usize,
+    /// Flat op array: device 0's program, then device 1's, …
+    pub ops: Vec<Op>,
+    /// Device (PP rank) executing each flat op.
+    pub op_dev: Vec<u32>,
+    /// Per-device start offsets into `ops` (length `n_dev + 1`).
+    pub dev_start: Vec<u32>,
+    /// `(chunk * n_mb + mb)` → id of the op producing that forward part
+    /// ([`NO_OP`] when the schedule has none).
+    pub f_producer: Vec<u32>,
+    /// Same for the activation-backward part.
+    pub b_producer: Vec<u32>,
+    /// Static dependency count per op. An op whose producer is missing
+    /// keeps an undecrementable dependency and is reported as a deadlock,
+    /// exactly like the polling replay's never-ready op.
+    pub base_deps: Vec<u32>,
+    /// Chunk → executing device under the schedule's placement.
+    pub chunk_dev: Vec<u32>,
+    /// False when some `(chunk, mb)` forward/backward has more than one
+    /// producing op — the dependency counts are then unsound and the
+    /// event-driven replay must not use this compilation.
+    pub unique_producers: bool,
+}
+
+impl CompiledSchedule {
+    /// Number of devices.
+    pub fn n_dev(&self) -> usize {
+        self.dev_start.len().saturating_sub(1)
+    }
+
+    /// Flat slot index of `(chunk, mb)`.
+    #[inline]
+    pub fn slot(&self, chunk: usize, mb: usize) -> usize {
+        chunk * self.n_mb + mb
+    }
+
+    /// Recompile in place, reusing every buffer (the planner compiles one
+    /// schedule per candidate; this keeps that loop allocation-free once
+    /// the buffers have grown to the working size).
+    pub fn compile_from(&mut self, s: &Schedule) {
+        let n_chunks = s.n_chunks();
+        let n_mb = s.n_mb;
+        let n_dev = s.devices.len();
+        let total = s.num_ops();
+        self.n_chunks = n_chunks;
+        self.n_mb = n_mb;
+
+        self.ops.clear();
+        self.op_dev.clear();
+        self.dev_start.clear();
+        self.ops.reserve(total);
+        self.op_dev.reserve(total);
+        self.dev_start.reserve(n_dev + 1);
+        let slots = n_chunks * n_mb;
+        self.f_producer.clear();
+        self.f_producer.resize(slots, NO_OP);
+        self.b_producer.clear();
+        self.b_producer.resize(slots, NO_OP);
+        self.chunk_dev.clear();
+        self.chunk_dev.extend((0..n_chunks).map(|c| s.device_of(c) as u32));
+
+        // Pass 1: flatten and index the producers.
+        self.unique_producers = true;
+        for (d, ops) in s.devices.iter().enumerate() {
+            self.dev_start.push(self.ops.len() as u32);
+            for op in ops {
+                let id = self.ops.len() as u32;
+                if let Some((c, m)) = op.forward_part() {
+                    let slot = &mut self.f_producer[c * n_mb + m];
+                    self.unique_producers &= *slot == NO_OP;
+                    *slot = id;
+                }
+                if let Some((c, m)) = op.backward_part() {
+                    let slot = &mut self.b_producer[c * n_mb + m];
+                    self.unique_producers &= *slot == NO_OP;
+                    *slot = id;
+                }
+                self.ops.push(*op);
+                self.op_dev.push(d as u32);
+            }
+        }
+        self.dev_start.push(self.ops.len() as u32);
+
+        // Pass 2: count each op's static dependencies. These mirror the
+        // polling replay's readiness rules exactly: F(c,m) waits on
+        // F(c-1,m); B(c,m) waits on its own F(c,m) and on B(c+1,m);
+        // braided ops combine the rules of their two halves; W, Offload
+        // and Reload wait only on program order.
+        self.base_deps.clear();
+        self.base_deps.reserve(total);
+        for (j, op) in self.ops.iter().enumerate() {
+            let d = self.op_dev[j] as usize;
+            let mut deps = u32::from(j as u32 > self.dev_start[d]);
+            if let Some((c, _)) = op.forward_part() {
+                if c > 0 {
+                    deps += 1;
+                }
+            }
+            if let Some((c, _)) = op.backward_part() {
+                deps += 1; // own forward
+                if c + 1 < n_chunks {
+                    deps += 1;
+                }
+            }
+            self.base_deps.push(deps);
+        }
+    }
+}
+
+impl Schedule {
+    /// Lower this schedule to the flat dependency-counted form consumed
+    /// by the event-driven simulator.
+    pub fn compile(&self) -> CompiledSchedule {
+        let mut c = CompiledSchedule::default();
+        c.compile_from(self);
+        c
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +458,72 @@ mod tests {
         // Braided blocks hide both (STP's near-zero TP bubble).
         let br = Op::Braided { f_chunk: 0, f_mb: 1, b_chunk: 0, b_mb: 0, b_full: true };
         assert!(br.fwd_ar_overlapped() && br.bwd_ar_overlapped());
+    }
+
+    #[test]
+    fn compile_flattens_device_major_with_producers() {
+        let topo = Topology::new(1, 2, 1); // 4 chunks over 2 devices
+        let s = crate::schedule::build_schedule(ScheduleKind::Stp, &topo, 4);
+        let c = s.compile();
+        assert_eq!(c.ops.len(), s.num_ops());
+        assert_eq!(c.n_dev(), 2);
+        assert_eq!(c.n_chunks, 4);
+        assert!(c.unique_producers);
+        // Device-major program order is preserved.
+        for d in 0..2 {
+            let (a, b) = (c.dev_start[d] as usize, c.dev_start[d + 1] as usize);
+            assert_eq!(&c.ops[a..b], s.devices[d].as_slice());
+            assert!(c.op_dev[a..b].iter().all(|&x| x as usize == d));
+        }
+        // Every (chunk, mb) has exactly one F and one B producer, and the
+        // producer sits on the chunk's device.
+        for chunk in 0..4 {
+            for mb in 0..4 {
+                let f = c.f_producer[c.slot(chunk, mb)];
+                let b = c.b_producer[c.slot(chunk, mb)];
+                assert_ne!(f, NO_OP, "F({chunk},{mb}) missing");
+                assert_ne!(b, NO_OP, "B({chunk},{mb}) missing");
+                assert_eq!(c.op_dev[f as usize], c.chunk_dev[chunk]);
+                assert_eq!(c.ops[f as usize].forward_part(), Some((chunk, mb)));
+                assert_eq!(c.ops[b as usize].backward_part(), Some((chunk, mb)));
+            }
+        }
+    }
+
+    #[test]
+    fn compile_dependency_counts_match_readiness_rules() {
+        let topo = Topology::new(1, 2, 1);
+        let s = crate::schedule::build_schedule(ScheduleKind::ZbV, &topo, 4);
+        let c = s.compile();
+        let n_chunks = c.n_chunks;
+        for (j, op) in c.ops.iter().enumerate() {
+            let d = c.op_dev[j] as usize;
+            let mut want = u32::from(j as u32 > c.dev_start[d]);
+            if let Some((ch, _)) = op.forward_part() {
+                want += u32::from(ch > 0);
+            }
+            if let Some((ch, _)) = op.backward_part() {
+                want += 1 + u32::from(ch + 1 < n_chunks);
+            }
+            assert_eq!(c.base_deps[j], want, "op {j} {op:?}");
+        }
+        // At least one op is immediately runnable (F(0,0) on its device).
+        assert!(c.base_deps.iter().any(|&d| d == 0));
+    }
+
+    #[test]
+    fn compile_from_reuses_buffers_across_schedules() {
+        let topo = Topology::new(1, 4, 1);
+        let big = crate::schedule::build_schedule(ScheduleKind::Stp, &topo, 16);
+        let small = crate::schedule::build_schedule(ScheduleKind::GPipe, &topo, 8);
+        let mut c = big.compile();
+        c.compile_from(&small);
+        let fresh = small.compile();
+        assert_eq!(c.ops, fresh.ops);
+        assert_eq!(c.base_deps, fresh.base_deps);
+        assert_eq!(c.f_producer, fresh.f_producer);
+        assert_eq!(c.b_producer, fresh.b_producer);
+        assert_eq!(c.dev_start, fresh.dev_start);
     }
 
     #[test]

@@ -15,7 +15,7 @@ pub mod validate;
 pub mod zbv;
 
 pub use builder::ShapeCosts;
-pub use ir::{Op, PassKind, Placement, Schedule, ScheduleKind};
+pub use ir::{CompiledSchedule, Op, PassKind, Placement, Schedule, ScheduleKind, NO_OP};
 pub use stp::OffloadParams;
 pub use theory::{theory, TheoryInputs, TheoryRow};
 pub use validate::{assert_valid, validate, Violation};

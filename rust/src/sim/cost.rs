@@ -42,6 +42,21 @@ pub enum AcMode {
     All,
 }
 
+/// Precomputed per-chunk pipeline-hop P2P costs for one schedule's
+/// chunk→device placement. Hoisted out of the simulator's readiness
+/// paths: the polling replay used to recompute `p2p_secs(dev, dev±1)`
+/// inside the inner closures on every poll of every op; both replay
+/// cores now build this table once per run.
+#[derive(Debug, Clone, Default)]
+pub struct HopTable {
+    /// `next[c]` = P2P seconds for the hop chunk `c` → chunk `c+1`
+    /// (0.0 for the last chunk).
+    pub next: Vec<f64>,
+    /// `prev[c]` = P2P seconds for the hop chunk `c` → chunk `c-1`
+    /// (0.0 for chunk 0).
+    pub prev: Vec<f64>,
+}
+
 /// Fully-resolved per-chunk costs consumed by the simulator engine.
 #[derive(Debug, Clone)]
 pub struct CostModel {
@@ -268,6 +283,33 @@ impl CostModel {
     /// (cross-group hops pay the slower link tier).
     pub fn p2p_secs(&self, from_dev: usize, to_dev: usize) -> f64 {
         self.cluster.p2p_secs(&self.view, &self.topo, from_dev, to_dev, self.p2p_bytes)
+    }
+
+    /// Build the per-chunk hop-cost table for a schedule's placement
+    /// (`s.device_of` resolves chunks to devices; the schedule's
+    /// placement may differ from the one this model was costed with,
+    /// e.g. when a V-shape cost model replays an interleaved baseline).
+    pub fn hop_table(&self, s: &crate::schedule::Schedule) -> HopTable {
+        let mut hops = HopTable::default();
+        self.hop_table_into(s, &mut hops);
+        hops
+    }
+
+    /// [`CostModel::hop_table`] into reused buffers (the simulator arena).
+    pub fn hop_table_into(&self, s: &crate::schedule::Schedule, hops: &mut HopTable) {
+        let n = s.n_chunks();
+        hops.next.clear();
+        hops.next.resize(n, 0.0);
+        hops.prev.clear();
+        hops.prev.resize(n, 0.0);
+        for c in 0..n {
+            if c + 1 < n {
+                hops.next[c] = self.p2p_secs(s.device_of(c), s.device_of(c + 1));
+            }
+            if c > 0 {
+                hops.prev[c] = self.p2p_secs(s.device_of(c), s.device_of(c - 1));
+            }
+        }
     }
 
     /// PCIe transfer time for offloading `ratio` of chunk `c`'s activation
@@ -542,6 +584,41 @@ mod tests {
         let expect_ar = hw.allreduce_secs(m.ar_bytes_per_layer(4096, 1) / 2, topo.tp);
         let u = cm.chunks[0].fwd.iter().find(|u| u.ar > 0.0).unwrap();
         assert_eq!(u.ar, expect_ar);
+    }
+
+    #[test]
+    fn hop_table_matches_direct_p2p_calls() {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(2, 4, 1);
+        for spec in [a800(), ClusterSpec::mixed_a800_h20()] {
+            let cm = CostModel::analytic(&m, &topo, &spec, 4096, 1);
+            for kind in
+                [crate::schedule::ScheduleKind::Stp, crate::schedule::ScheduleKind::OneF1BInterleaved]
+            {
+                let s = crate::schedule::build_schedule(kind, &topo, 8);
+                let hops = cm.hop_table(&s);
+                let n = s.n_chunks();
+                assert_eq!(hops.next.len(), n);
+                for c in 0..n {
+                    if c + 1 < n {
+                        assert_eq!(
+                            hops.next[c].to_bits(),
+                            cm.p2p_secs(s.device_of(c), s.device_of(c + 1)).to_bits()
+                        );
+                    } else {
+                        assert_eq!(hops.next[c], 0.0);
+                    }
+                    if c > 0 {
+                        assert_eq!(
+                            hops.prev[c].to_bits(),
+                            cm.p2p_secs(s.device_of(c), s.device_of(c - 1)).to_bits()
+                        );
+                    } else {
+                        assert_eq!(hops.prev[c], 0.0);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Discrete-event replay of a schedule under a cost model.
+//! Event-driven replay of a schedule under a cost model.
 //!
 //! Each device executes its op list **in order** (the IR is an explicit
 //! per-device program); cross-device edges (pipeline activations/gradients)
@@ -6,16 +6,61 @@
 //! are resolved during the replay. The output [`SimReport`] carries the
 //! iteration time, the TP/PP bubble decomposition and per-device peak
 //! memory — the quantities every paper table and figure is built from.
+//!
+//! Unlike the polling oracle ([`super::reference`]), this core never
+//! retries a blocked op: dependencies are **pre-counted** at compile time
+//! ([`CompiledSchedule`] — prior op on the device, cross-chunk F/B
+//! edges), per-hop P2P costs are resolved once into a [`HopTable`], and
+//! the replay is a single ready-queue pass in O(ops). Two planner-facing
+//! modes shave the remaining constants: [`Simulator::without_trace`]
+//! skips `TraceEvent` collection entirely, and [`Simulator::try_run_in`]
+//! reuses a [`SimArena`] so repeated candidate evaluations stop
+//! allocating. The golden suite (`tests/sim_equivalence.rs`) pins this
+//! core bit-identical to the oracle.
 
-use crate::schedule::{Op, PassKind, Schedule, ScheduleKind};
+use crate::schedule::{CompiledSchedule, Op, PassKind, Schedule, ScheduleKind, NO_OP};
 
-use super::cost::CostModel;
-use super::report::{DeviceReport, SimReport};
+use super::block::BlockTiming;
+use super::cost::{CostModel, HopTable};
+use super::reference::{explicit_hop_cost, op_timing};
+use super::report::{finalize_report, RunTotals, SimReport, TraceEvent};
+use super::{SimError, EXPLICIT_PRODUCER_FRAC};
 
-/// Fraction of a pipeline hop that blocks the producer's compute stream
-/// under STP's explicit (non-overlapped-launch) P2P communication; the
-/// remainder is pure link time that only delays the consumer.
-const EXPLICIT_PRODUCER_FRAC: f64 = 0.5;
+/// Reusable scratch buffers for [`Simulator::try_run_in`]: the compiled
+/// program, dependency counters, the ready queue, per-(chunk, mb) done
+/// times, per-device accumulators, the PCIe/offload state and the
+/// per-chunk timing memo. One arena per worker thread keeps the
+/// planner's no-trace evaluation loop allocation-free after warm-up.
+/// (Traced runs are the exception: the returned report takes ownership
+/// of the event vec, so that one buffer is allocated per traced run.)
+#[derive(Debug, Default)]
+pub struct SimArena {
+    compiled: CompiledSchedule,
+    hops: HopTable,
+    n_deps: Vec<u32>,
+    ready: Vec<u32>,
+    done_f: Vec<f64>,
+    done_b: Vec<f64>,
+    dev_time: Vec<f64>,
+    busy: Vec<f64>,
+    compute: Vec<f64>,
+    exposed_ar: Vec<f64>,
+    mem: Vec<i64>,
+    mem_peak: Vec<i64>,
+    done_per_dev: Vec<u32>,
+    offloaded: Vec<f32>,
+    reload_done: Vec<f64>,
+    offload_done: Vec<f64>,
+    pcie_time: Vec<f64>,
+    pcie_busy: Vec<f64>,
+    // Timing memo (reset per run — the cost model may change between
+    // runs): plain passes by (pass kind, chunk), braided blocks by
+    // (b_full, f_chunk, b_chunk), F&W braids by (f_chunk, w_chunk).
+    timing_plain: Vec<Option<BlockTiming>>,
+    timing_braided: Vec<Option<BlockTiming>>,
+    timing_braided_fw: Vec<Option<BlockTiming>>,
+    events: Vec<TraceEvent>,
+}
 
 /// The simulator: replays schedules under a cost model.
 pub struct Simulator<'a> {
@@ -24,11 +69,97 @@ pub struct Simulator<'a> {
     /// STP's explicit pipeline communication "is executed immediately after
     /// computation and cannot be overlapped", §5.2).
     explicit_p2p: Option<bool>,
+    /// Collect per-op [`TraceEvent`]s (planning only needs the scalars).
+    trace: bool,
+}
+
+/// Earliest start implied by the forward pipeline edge of `(c, m)`.
+#[inline]
+fn f_ready(
+    done_f: &[f64],
+    n_mb: usize,
+    hops: &HopTable,
+    edge_frac: f64,
+    c: usize,
+    m: usize,
+) -> f64 {
+    if c == 0 {
+        0.0
+    } else {
+        done_f[(c - 1) * n_mb + m] + edge_frac * hops.next[c - 1]
+    }
+}
+
+/// Earliest start implied by the backward edges of `(c, m)` (own forward
+/// plus the gradient arriving from chunk `c + 1`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn b_ready(
+    done_f: &[f64],
+    done_b: &[f64],
+    n_chunks: usize,
+    n_mb: usize,
+    hops: &HopTable,
+    edge_frac: f64,
+    c: usize,
+    m: usize,
+) -> f64 {
+    let own = done_f[c * n_mb + m];
+    if c + 1 == n_chunks {
+        own
+    } else {
+        own.max(done_b[(c + 1) * n_mb + m] + edge_frac * hops.prev[c + 1])
+    }
+}
+
+/// Resolve one dependency of `id`; enqueue it once the count hits zero.
+#[inline]
+fn dec(n_deps: &mut [u32], ready: &mut Vec<u32>, id: u32) {
+    if id == NO_OP {
+        return;
+    }
+    let i = id as usize;
+    debug_assert!(n_deps[i] > 0, "dependency underflow at op {i}");
+    n_deps[i] -= 1;
+    if n_deps[i] == 0 {
+        ready.push(id);
+    }
+}
+
+/// Memoized two-stream timing of one op (keyed by chunk ids, so each
+/// distinct block shape is timed once per replay instead of once per
+/// microbatch).
+#[inline]
+fn timing_for(
+    cost: &CostModel,
+    n_chunks: usize,
+    plain: &mut [Option<BlockTiming>],
+    braided: &mut [Option<BlockTiming>],
+    braided_fw: &mut [Option<BlockTiming>],
+    op: &Op,
+) -> BlockTiming {
+    let slot = match *op {
+        Op::Pass { kind, chunk, .. } => {
+            let k = match kind {
+                PassKind::F => 0,
+                PassKind::B => 1,
+                PassKind::W => 2,
+                PassKind::BFull => 3,
+            };
+            &mut plain[k * n_chunks + chunk]
+        }
+        Op::Braided { f_chunk, b_chunk, b_full, .. } => {
+            &mut braided[((b_full as usize) * n_chunks + f_chunk) * n_chunks + b_chunk]
+        }
+        Op::BraidedFW { f_chunk, w_chunk, .. } => &mut braided_fw[f_chunk * n_chunks + w_chunk],
+        Op::Offload { .. } | Op::Reload { .. } => return op_timing(cost, op),
+    };
+    *slot.get_or_insert_with(|| op_timing(cost, op))
 }
 
 impl<'a> Simulator<'a> {
     pub fn new(cost: &'a CostModel) -> Self {
-        Simulator { cost, explicit_p2p: None }
+        Simulator { cost, explicit_p2p: None, trace: true }
     }
 
     /// Override the explicit-P2P rule (default: STP-family schedules only).
@@ -37,149 +168,199 @@ impl<'a> Simulator<'a> {
         self
     }
 
-    /// Replay `s` and produce the report.
+    /// Planning mode: skip [`TraceEvent`] collection (the report's
+    /// `events` come back empty; every scalar is unchanged).
+    pub fn without_trace(mut self) -> Self {
+        self.trace = false;
+        self
+    }
+
+    /// Replay `s` and produce the report, panicking on deadlock (the
+    /// historical behavior; prefer [`Simulator::try_run`]).
     pub fn run(&self, s: &Schedule) -> SimReport {
-        let n_chunks = s.n_chunks();
-        let n_dev = s.devices.len();
+        match self.try_run(s) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Replay `s`; a stuck device yields a [`SimError`] instead of a
+    /// panic so one malformed candidate cannot abort a planner run.
+    pub fn try_run(&self, s: &Schedule) -> Result<SimReport, SimError> {
+        let mut arena = SimArena::default();
+        self.try_run_in(s, &mut arena)
+    }
+
+    /// [`Simulator::try_run`] against caller-owned scratch buffers.
+    pub fn try_run_in(&self, s: &Schedule, arena: &mut SimArena) -> Result<SimReport, SimError> {
         let explicit_p2p = self.explicit_p2p.unwrap_or(matches!(
             s.kind,
             ScheduleKind::Stp | ScheduleKind::StpMemEff | ScheduleKind::StpOffload
         ));
+        let edge_frac = if explicit_p2p { 1.0 - EXPLICIT_PRODUCER_FRAC } else { 1.0 };
 
-        let mut events: Vec<super::report::TraceEvent> = Vec::with_capacity(s.num_ops());
-        let mut done_f = vec![vec![f64::NAN; s.n_mb]; n_chunks];
-        let mut done_b = vec![vec![f64::NAN; s.n_mb]; n_chunks];
-        let mut cursor = vec![0usize; n_dev];
-        let mut dev_time = vec![0.0f64; n_dev];
-        let mut busy = vec![0.0f64; n_dev];
-        let mut exposed_ar = vec![0.0f64; n_dev];
-        let mut compute_time = vec![0.0f64; n_dev];
+        // Disjoint borrows of every arena buffer.
+        let SimArena {
+            compiled,
+            hops,
+            n_deps,
+            ready,
+            done_f,
+            done_b,
+            dev_time,
+            busy,
+            compute,
+            exposed_ar,
+            mem,
+            mem_peak,
+            done_per_dev,
+            offloaded,
+            reload_done,
+            offload_done,
+            pcie_time,
+            pcie_busy,
+            timing_plain,
+            timing_braided,
+            timing_braided_fw,
+            events,
+        } = arena;
 
-        // Memory tracking (bytes of live activations per device).
-        let mut mem = vec![0i64; n_dev];
-        let mut mem_peak = vec![0i64; n_dev];
-        // Offloaded fraction per (chunk, mb): ratio actually moved to host.
-        let mut offloaded = vec![vec![0f32; s.n_mb]; n_chunks];
-        // PCIe stream frontier and reload-finish gate per (chunk, mb).
-        let mut pcie_time = vec![0.0f64; n_dev];
-        let mut reload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
-        let mut offload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
-        let mut pcie_busy = vec![0.0f64; n_dev];
-
-        let dev_of = |c: usize| s.device_of(c);
+        compiled.compile_from(s);
+        if !compiled.unique_producers {
+            // Duplicate F/B producers (e.g. recomputation-style hand-built
+            // schedules): outside the compiled replay's contract, so the
+            // dependency counts would be unsound. Delegate to the fully
+            // general polling oracle, whose semantics this core
+            // reproduces, instead of silently mis-replaying.
+            let mut oracle = super::reference::Simulator::new(self.cost);
+            if let Some(v) = self.explicit_p2p {
+                oracle = oracle.with_explicit_p2p(v);
+            }
+            let mut r = oracle.try_run(s)?;
+            if !self.trace {
+                r.events = Vec::new();
+            }
+            return Ok(r);
+        }
+        self.cost.hop_table_into(s, hops);
+        let c: &CompiledSchedule = compiled;
+        let n_chunks = c.n_chunks;
+        let n_mb = c.n_mb;
+        let n_dev = c.n_dev();
+        let n_ops = c.ops.len();
+        let slots = n_chunks * n_mb;
         let w_frac = self.cost.w_frac;
 
-        loop {
-            let mut advanced = false;
-            for d in 0..n_dev {
-                while cursor[d] < s.devices[d].len() {
-                    let op = s.devices[d][cursor[d]];
-                    // --- readiness ---------------------------------------
-                    // STP's explicit sends block the producer's compute
-                    // stream for the launch + part of the DMA (charged in
-                    // `explicit_hop_cost`); the rest of the transfer rides
-                    // the link and delays only the consumer edge.
-                    let edge_frac = if explicit_p2p { 1.0 - EXPLICIT_PRODUCER_FRAC } else { 1.0 };
-                    let f_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>| -> Option<f64> {
-                        if c == 0 {
-                            Some(0.0)
-                        } else {
-                            let t = done_f[c - 1][m];
-                            if t.is_nan() {
-                                None
-                            } else {
-                                Some(t + edge_frac * self.cost.p2p_secs(dev_of(c - 1), dev_of(c)))
-                            }
-                        }
-                    };
-                    let b_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>, done_b: &Vec<Vec<f64>>| -> Option<f64> {
-                        let own = done_f[c][m];
-                        if own.is_nan() {
-                            return None;
-                        }
-                        if c + 1 == n_chunks {
-                            Some(own)
-                        } else {
-                            let t = done_b[c + 1][m];
-                            if t.is_nan() {
-                                None
-                            } else {
-                                Some(own.max(t + edge_frac * self.cost.p2p_secs(dev_of(c + 1), dev_of(c))))
-                            }
-                        }
-                    };
+        n_deps.clear();
+        n_deps.extend_from_slice(&c.base_deps);
+        ready.clear();
+        reset(done_f, slots, f64::NAN);
+        reset(done_b, slots, f64::NAN);
+        reset(dev_time, n_dev, 0.0);
+        reset(busy, n_dev, 0.0);
+        reset(compute, n_dev, 0.0);
+        reset(exposed_ar, n_dev, 0.0);
+        reset(mem, n_dev, 0i64);
+        reset(mem_peak, n_dev, 0i64);
+        reset(done_per_dev, n_dev, 0u32);
+        reset(offloaded, slots, 0f32);
+        reset(reload_done, slots, 0.0);
+        reset(offload_done, slots, 0.0);
+        reset(pcie_time, n_dev, 0.0);
+        reset(pcie_busy, n_dev, 0.0);
+        reset(timing_plain, 4 * n_chunks, None);
+        reset(timing_braided, 2 * n_chunks * n_chunks, None);
+        reset(timing_braided_fw, n_chunks * n_chunks, None);
+        events.clear();
+        if self.trace {
+            // The report takes ownership of the events at the end, so a
+            // traced run cannot amortize this buffer across runs — make
+            // it one exact allocation instead of repeated growth.
+            events.reserve_exact(n_ops);
+        }
 
-                    let ready: Option<f64> = match op {
-                        Op::Pass { kind: PassKind::F, chunk, mb } => f_ready(chunk, mb, &done_f),
-                        Op::Pass { kind: PassKind::B | PassKind::BFull, chunk, mb } => {
-                            b_ready(chunk, mb, &done_f, &done_b)
-                                .map(|t| t.max(reload_done[chunk][mb]))
-                        }
-                        Op::Pass { kind: PassKind::W, .. } => Some(0.0), // B precedes in-order
-                        Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } => {
-                            match (
-                                f_ready(f_chunk, f_mb, &done_f),
-                                b_ready(b_chunk, b_mb, &done_f, &done_b),
-                            ) {
-                                (Some(a), Some(b)) => {
-                                    Some(a.max(b).max(reload_done[b_chunk][b_mb]))
-                                }
-                                _ => None,
-                            }
-                        }
-                        Op::BraidedFW { f_chunk, f_mb, .. } => f_ready(f_chunk, f_mb, &done_f),
-                        Op::Offload { .. } | Op::Reload { .. } => Some(0.0),
+        for (j, &d) in n_deps.iter().enumerate() {
+            if d == 0 {
+                ready.push(j as u32);
+            }
+        }
+
+        let mut remaining = n_ops;
+        while let Some(id) = ready.pop() {
+            let j = id as usize;
+            let d = c.op_dev[j] as usize;
+            let op = c.ops[j];
+
+            // --- readiness (all producers have completed) ----------------
+            let ready_t = match op {
+                Op::Pass { kind: PassKind::F, chunk, mb } => {
+                    f_ready(done_f, n_mb, hops, edge_frac, chunk, mb)
+                }
+                Op::Pass { kind: PassKind::B | PassKind::BFull, chunk, mb } => {
+                    b_ready(done_f, done_b, n_chunks, n_mb, hops, edge_frac, chunk, mb)
+                        .max(reload_done[chunk * n_mb + mb])
+                }
+                Op::Pass { kind: PassKind::W, .. } => 0.0, // B precedes in-order
+                Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } => {
+                    let a = f_ready(done_f, n_mb, hops, edge_frac, f_chunk, f_mb);
+                    let b =
+                        b_ready(done_f, done_b, n_chunks, n_mb, hops, edge_frac, b_chunk, b_mb);
+                    a.max(b).max(reload_done[b_chunk * n_mb + b_mb])
+                }
+                Op::BraidedFW { f_chunk, f_mb, .. } => {
+                    f_ready(done_f, n_mb, hops, edge_frac, f_chunk, f_mb)
+                }
+                Op::Offload { .. } | Op::Reload { .. } => 0.0,
+            };
+
+            // --- duration & bookkeeping ---------------------------------
+            let start = dev_time[d].max(ready_t);
+            match op {
+                Op::Offload { chunk, mb, ratio } => {
+                    // Runs on the PCIe stream in parallel with compute;
+                    // clamp the ratio so the transfer fits under one
+                    // forward (paper §4.4: T_o < T_F).
+                    let t_f = self.cost.chunks[chunk].t_f();
+                    let full = self.cost.offload_secs(chunk, 1.0);
+                    let eff = if full > 0.0 {
+                        (ratio as f64).min(t_f / full).max(0.0) as f32
+                    } else {
+                        ratio
                     };
-                    let Some(ready) = ready else { break };
-
-                    // --- duration & bookkeeping --------------------------
-                    let start = dev_time[d].max(ready);
-                    match op {
-                        Op::Offload { chunk, mb, ratio } => {
-                            // Runs on the PCIe stream in parallel with
-                            // compute; clamp the ratio so the transfer fits
-                            // under one forward (paper §4.4: T_o < T_F).
-                            let t_f = self.cost.chunks[chunk].t_f();
-                            let full = self.cost.offload_secs(chunk, 1.0);
-                            let eff = if full > 0.0 {
-                                (ratio as f64).min(t_f / full).max(0.0) as f32
-                            } else {
-                                ratio
-                            };
-                            let dur = self.cost.offload_secs(chunk, eff);
-                            let t0 = pcie_time[d].max(dev_time[d]);
-                            pcie_time[d] = t0 + dur;
-                            pcie_busy[d] += dur;
-                            offload_done[chunk][mb] = pcie_time[d];
-                            offloaded[chunk][mb] = eff;
-                            // Memory freed once the transfer completes;
-                            // conservatively count it as freed at completion
-                            // by subtracting now (peak sampled at op starts).
-                            mem[d] -= (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
-                            cursor[d] += 1;
-                            advanced = true;
-                            continue;
-                        }
-                        Op::Reload { chunk, mb } => {
-                            let eff = offloaded[chunk][mb];
-                            let dur = self.cost.offload_secs(chunk, eff);
-                            let t0 = pcie_time[d].max(dev_time[d]).max(offload_done[chunk][mb]);
-                            pcie_time[d] = t0 + dur;
-                            pcie_busy[d] += dur;
-                            reload_done[chunk][mb] = pcie_time[d];
-                            mem[d] += (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
-                            mem_peak[d] = mem_peak[d].max(mem[d]);
-                            // Data is back on device: the backward frees it
-                            // like any resident activation.
-                            offloaded[chunk][mb] = 0.0;
-                            cursor[d] += 1;
-                            advanced = true;
-                            continue;
-                        }
-                        _ => {}
-                    }
-
-                    let timing = self.op_timing(&op);
+                    let dur = self.cost.offload_secs(chunk, eff);
+                    let t0 = pcie_time[d].max(dev_time[d]);
+                    pcie_time[d] = t0 + dur;
+                    pcie_busy[d] += dur;
+                    offload_done[chunk * n_mb + mb] = pcie_time[d];
+                    offloaded[chunk * n_mb + mb] = eff;
+                    // Memory freed once the transfer completes;
+                    // conservatively count it as freed at completion by
+                    // subtracting now (peak sampled at op starts).
+                    mem[d] -= (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                }
+                Op::Reload { chunk, mb } => {
+                    let eff = offloaded[chunk * n_mb + mb];
+                    let dur = self.cost.offload_secs(chunk, eff);
+                    let t0 =
+                        pcie_time[d].max(dev_time[d]).max(offload_done[chunk * n_mb + mb]);
+                    pcie_time[d] = t0 + dur;
+                    pcie_busy[d] += dur;
+                    reload_done[chunk * n_mb + mb] = pcie_time[d];
+                    mem[d] += (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                    mem_peak[d] = mem_peak[d].max(mem[d]);
+                    // Data is back on device: the backward frees it like
+                    // any resident activation.
+                    offloaded[chunk * n_mb + mb] = 0.0;
+                }
+                _ => {
+                    let timing = timing_for(
+                        self.cost,
+                        n_chunks,
+                        timing_plain,
+                        timing_braided,
+                        timing_braided_fw,
+                        &op,
+                    );
                     let mut finish = start + timing.duration;
 
                     // Explicit (non-overlapped) pipeline sends: the
@@ -187,149 +368,107 @@ impl<'a> Simulator<'a> {
                     // the op (STP-family).
                     let mut hop = 0.0;
                     if explicit_p2p {
-                        hop = self.explicit_hop_cost(s, &op);
+                        hop = explicit_hop_cost(hops, n_chunks, &op);
                         finish += hop;
                     }
 
                     dev_time[d] = finish;
                     busy[d] += finish - start;
-                    compute_time[d] += timing.compute;
+                    compute[d] += timing.compute;
                     exposed_ar[d] += timing.exposed_ar;
-                    events.push(super::report::TraceEvent { device: d, op, start, end: finish });
+                    if self.trace {
+                        events.push(TraceEvent { device: d, op, start, end: finish });
+                    }
 
                     // Completion bookkeeping + memory events. Inside a
                     // braided block each direction completes at its own
                     // sub-stream time — a braid does not serialize the
                     // pipeline chain behind its full duration.
-                    if let Some((c, m)) = op.forward_part() {
-                        done_f[c][m] = start + timing.f_done + hop;
-                        mem[d] += self.cost.act_bytes[c] as i64;
+                    if let Some((cc, m)) = op.forward_part() {
+                        done_f[cc * n_mb + m] = start + timing.f_done + hop;
+                        mem[d] += self.cost.act_bytes[cc] as i64;
                         mem_peak[d] = mem_peak[d].max(mem[d]);
                     }
-                    if let Some((c, m)) = op.backward_part() {
-                        done_b[c][m] = start + timing.b_done + hop;
-                        let act = self.cost.act_bytes[c] as f64;
-                        let kept = offloaded[c][m] as f64; // already subtracted
-                        if op.weight_part() == Some((c, m)) {
+                    if let Some((cc, m)) = op.backward_part() {
+                        done_b[cc * n_mb + m] = start + timing.b_done + hop;
+                        let act = self.cost.act_bytes[cc] as f64;
+                        let kept = offloaded[cc * n_mb + m] as f64; // already subtracted
+                        if op.weight_part() == Some((cc, m)) {
                             mem[d] -= (act * (1.0 - kept)) as i64;
                         } else {
                             mem[d] -= (act * (1.0 - w_frac - kept).max(0.0)) as i64;
                         }
                     }
-                    if let Some((c, m)) = op.weight_part() {
-                        if op.backward_part() != Some((c, m)) {
+                    if let Some((cc, m)) = op.weight_part() {
+                        if op.backward_part() != Some((cc, m)) {
                             // Deferred W frees the retained weight-grad inputs.
                             let _ = m;
-                            mem[d] -= (self.cost.act_bytes[c] as f64 * w_frac) as i64;
+                            mem[d] -= (self.cost.act_bytes[cc] as f64 * w_frac) as i64;
                         }
                     }
-                    cursor[d] += 1;
-                    advanced = true;
                 }
             }
-            if !advanced {
-                break;
+
+            // --- completion: release program successor and consumers ----
+            remaining -= 1;
+            done_per_dev[d] += 1;
+            let next = id + 1;
+            if next < c.dev_start[d + 1] {
+                dec(n_deps, ready, next);
             }
-        }
-
-        // Any stuck device means an illegal schedule — surface loudly.
-        for d in 0..n_dev {
-            assert!(
-                cursor[d] == s.devices[d].len(),
-                "simulator deadlock: device {d} stuck at op {:?} ({}/{} ops)",
-                s.devices[d].get(cursor[d]),
-                cursor[d],
-                s.devices[d].len()
-            );
-        }
-
-        let iteration = dev_time.iter().cloned().fold(0.0, f64::max);
-        let devices: Vec<DeviceReport> = (0..n_dev)
-            .map(|d| {
-                let hw = self.cost.dev_profile(d);
-                DeviceReport {
-                    busy: busy[d],
-                    compute: compute_time[d],
-                    exposed_ar: exposed_ar[d],
-                    idle: iteration - busy[d],
-                    peak_activation_bytes: mem_peak[d].max(0) as usize,
-                    pcie_busy: pcie_busy[d],
-                    mem_capacity_bytes: (hw.mem_gib * (1u64 << 30) as f64) as usize,
-                    hw_name: hw.name.clone(),
+            if let Some((cc, m)) = op.forward_part() {
+                if cc + 1 < n_chunks {
+                    dec(n_deps, ready, c.f_producer[(cc + 1) * n_mb + m]);
                 }
-            })
-            .collect();
-
-        // Aggregate peak FLOPs over the whole job: each PP rank is a
-        // TP×CP group replicated DP times; sum per *group* so a uniform
-        // pool reduces to the old `world_size × per-device peak` product.
-        let topo = &self.cost.topo;
-        let ranks_per_group =
-            self.cost.view.ranks_per_group(self.cost.cluster.groups.len());
-        let aggregate_peak_flops: f64 = ranks_per_group
-            .iter()
-            .enumerate()
-            .filter(|(_, &n)| n > 0)
-            .map(|(g, &n)| {
-                let gpus = n * topo.tp * topo.cp * topo.dp;
-                gpus as f64 * (self.cost.cluster.groups[g].hw.bf16_tflops * 1e12)
-            })
-            .sum();
-
-        SimReport {
-            kind: s.kind,
-            iteration_secs: iteration,
-            devices,
-            events,
-            n_mb: s.n_mb,
-            mb_size: self.cost.mb_size,
-            static_bytes: self.cost.static_bytes,
-            world_size: self.cost.topo.world_size(),
-            aggregate_peak_flops,
-            model_flops_per_sample: self.cost.model_flops_per_sample,
-        }
-    }
-
-    /// Two-stream timing of one op.
-    fn op_timing(&self, op: &Op) -> super::block::BlockTiming {
-        let ch = &self.cost.chunks;
-        match *op {
-            Op::Pass { kind: PassKind::F, chunk, .. } => ch[chunk].time_f(),
-            Op::Pass { kind: PassKind::B, chunk, .. } => ch[chunk].time_b(),
-            Op::Pass { kind: PassKind::W, chunk, .. } => ch[chunk].time_w(),
-            Op::Pass { kind: PassKind::BFull, chunk, .. } => ch[chunk].time_b_full(),
-            Op::Braided { f_chunk, b_chunk, b_full, .. } => {
-                ch[f_chunk].time_braided(&ch[b_chunk], b_full)
+                dec(n_deps, ready, c.b_producer[cc * n_mb + m]);
             }
-            Op::BraidedFW { f_chunk, w_chunk, .. } => ch[f_chunk].time_braided_fw(&ch[w_chunk]),
-            Op::Offload { .. } | Op::Reload { .. } => super::block::BlockTiming {
-                duration: 0.0,
-                compute: 0.0,
-                exposed_ar: 0.0,
-                f_done: 0.0,
-                b_done: 0.0,
+            if let Some((cc, m)) = op.backward_part() {
+                if cc > 0 {
+                    dec(n_deps, ready, c.b_producer[(cc - 1) * n_mb + m]);
+                }
+            }
+        }
+
+        // Unexecuted ops mean an illegal schedule — report the first
+        // stuck device (same contract as the polling oracle).
+        if remaining > 0 {
+            for d in 0..n_dev {
+                let total = (c.dev_start[d + 1] - c.dev_start[d]) as usize;
+                let done = done_per_dev[d] as usize;
+                if done < total {
+                    return Err(SimError {
+                        device: d,
+                        op_index: done,
+                        ops_left: total - done,
+                        op: Some(c.ops[c.dev_start[d] as usize + done]),
+                    });
+                }
+            }
+            unreachable!("remaining ops but every device complete");
+        }
+
+        Ok(finalize_report(
+            self.cost,
+            s.kind,
+            s.n_mb,
+            RunTotals {
+                dev_time: dev_time.as_slice(),
+                busy: busy.as_slice(),
+                compute: compute.as_slice(),
+                exposed_ar: exposed_ar.as_slice(),
+                mem_peak: mem_peak.as_slice(),
+                pcie_busy: pcie_busy.as_slice(),
             },
-        }
+            if self.trace { std::mem::take(events) } else { Vec::new() },
+        ))
     }
+}
 
-    /// Cost of the explicit pipeline sends an op performs (STP-family):
-    /// the producer's compute stream is blocked for the launch plus the
-    /// head of the DMA.
-    fn explicit_hop_cost(&self, s: &Schedule, op: &Op) -> f64 {
-        let n_chunks = s.n_chunks();
-        let mut t = 0.0;
-        if let Some((c, _)) = op.forward_part() {
-            if c + 1 < n_chunks {
-                t += self.cost.p2p_secs(s.device_of(c), s.device_of(c + 1));
-            }
-        }
-        if let Some((c, _)) = op.backward_part() {
-            if c > 0 {
-                t += self.cost.p2p_secs(s.device_of(c), s.device_of(c - 1));
-            }
-        }
-        EXPLICIT_PRODUCER_FRAC * t
-    }
+/// `clear` + `resize` so every element is reinitialized to `v`.
+#[inline]
+fn reset<T: Clone>(buf: &mut Vec<T>, len: usize, v: T) {
+    buf.clear();
+    buf.resize(len, v);
 }
 
 #[cfg(test)]
@@ -337,7 +476,7 @@ mod tests {
     use super::*;
     use crate::cluster::{ClusterSpec, HardwareProfile, Topology};
     use crate::model::ModelConfig;
-    use crate::schedule::{build_schedule, ScheduleKind};
+    use crate::schedule::{build_schedule, Placement, ScheduleKind};
 
     fn setup(tp: usize, pp: usize) -> (CostModel, Topology) {
         let m = ModelConfig::qwen2_12b();
@@ -437,5 +576,71 @@ mod tests {
             r.throughput()
         };
         assert!(thr(64) < thr(192) * 1.02);
+    }
+
+    #[test]
+    fn no_trace_mode_matches_traced_scalars() {
+        let (cost, topo) = setup(4, 4);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 12);
+            let traced = Simulator::new(&cost).run(&s);
+            let bare = Simulator::new(&cost).without_trace().run(&s);
+            assert!(bare.events.is_empty(), "{kind:?}");
+            assert!(!traced.events.is_empty(), "{kind:?}");
+            assert_eq!(
+                traced.iteration_secs.to_bits(),
+                bare.iteration_secs.to_bits(),
+                "{kind:?}"
+            );
+            for (a, b) in traced.devices.iter().zip(&bare.devices) {
+                assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{kind:?}");
+                assert_eq!(a.exposed_ar.to_bits(), b.exposed_ar.to_bits(), "{kind:?}");
+                assert_eq!(a.peak_activation_bytes, b.peak_activation_bytes, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn arena_reuse_is_deterministic_across_schedules() {
+        let (cost, topo) = setup(4, 4);
+        let mut arena = SimArena::default();
+        // Interleave kinds so every buffer is resized up and down.
+        for &m in &[16usize, 8, 24] {
+            for kind in ScheduleKind::all() {
+                let s = build_schedule(kind, &topo, m);
+                let reused = Simulator::new(&cost)
+                    .without_trace()
+                    .try_run_in(&s, &mut arena)
+                    .unwrap();
+                let fresh = Simulator::new(&cost).without_trace().try_run(&s).unwrap();
+                assert_eq!(
+                    reused.iteration_secs.to_bits(),
+                    fresh.iteration_secs.to_bits(),
+                    "{kind:?} m={m}"
+                );
+                assert_eq!(
+                    reused.devices.iter().map(|d| d.peak_activation_bytes).max(),
+                    fresh.devices.iter().map(|d| d.peak_activation_bytes).max(),
+                    "{kind:?} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_schedule_is_an_error_not_a_panic() {
+        let (cost, topo) = setup(1, 2);
+        // A backward with no forward anywhere: device 0 can never start it.
+        let s = crate::schedule::Schedule {
+            kind: ScheduleKind::Stp,
+            topo,
+            n_mb: 1,
+            placement: Placement::VShape,
+            devices: vec![vec![crate::schedule::Op::b(0, 0)], vec![]],
+        };
+        let err = Simulator::new(&cost).try_run(&s).unwrap_err();
+        assert_eq!(err.device, 0);
+        assert_eq!(err.op_index, 0);
+        assert_eq!(err.ops_left, 1);
     }
 }

@@ -7,13 +7,59 @@
 //! whole schedules and reports throughput, MFU, TP/PP bubble decomposition
 //! and per-device peak memory (every quantity in Figures 7–10 and
 //! Tables 3–8).
+//!
+//! Two replay cores share the block machine and the report finalizer
+//! (DESIGN.md §9):
+//!
+//! * [`Simulator`] (`engine`) — the **event-driven** core: dependencies
+//!   are pre-counted at compile time
+//!   ([`crate::schedule::CompiledSchedule`]) and the replay is one
+//!   ready-queue pass in O(ops), with an optional no-trace mode and a
+//!   reusable [`SimArena`] for the planner's hot loop.
+//! * [`reference::Simulator`] — the original **polling** replay, kept as
+//!   the oracle: the golden suite (`tests/sim_equivalence.rs`) asserts
+//!   the event-driven core reproduces its [`SimReport`]s bit-for-bit.
 
 pub mod block;
 mod cost;
 mod engine;
+pub mod reference;
 mod report;
 
 pub use block::{braid, time_block, BlockTiming, ChunkUnits, Unit};
-pub use cost::{AcMode, CostModel};
-pub use engine::Simulator;
+pub use cost::{AcMode, CostModel, HopTable};
+pub use engine::{SimArena, Simulator};
 pub use report::{DeviceReport, SimReport, TraceEvent};
+
+/// Fraction of a pipeline hop that blocks the producer's compute stream
+/// under STP's explicit (non-overlapped-launch) P2P communication; the
+/// remainder is pure link time that only delays the consumer.
+pub(crate) const EXPLICIT_PRODUCER_FRAC: f64 = 0.5;
+
+/// A replay that could not run to completion: some device's program is
+/// blocked forever (a malformed schedule — e.g. a backward whose forward
+/// is never produced). The planner maps this to an infeasible candidate
+/// instead of aborting the whole search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimError {
+    /// First stuck device.
+    pub device: usize,
+    /// Index of the op that device is blocked on.
+    pub op_index: usize,
+    /// Ops that device still had to run.
+    pub ops_left: usize,
+    /// The blocked op, if the device had one (for the message).
+    pub op: Option<crate::schedule::Op>,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "simulator deadlock: device {} stuck at op {:?} ({} ops left)",
+            self.device, self.op, self.ops_left
+        )
+    }
+}
+
+impl std::error::Error for SimError {}

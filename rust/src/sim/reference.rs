@@ -1,0 +1,361 @@
+//! The original polling replay, kept as the simulator's **oracle**.
+//!
+//! Each round rescans every device and retries its next op until nothing
+//! advances (quadratic in the worst case). The event-driven core in
+//! [`super::engine`] replaces it on every hot path; this module survives
+//! so the golden equivalence suite (`tests/sim_equivalence.rs`) can prove
+//! the rewrite bit-identical, and as the fully general fallback that
+//! assumes nothing about producer uniqueness.
+
+use crate::schedule::{Op, PassKind, Schedule, ScheduleKind};
+
+use super::cost::{CostModel, HopTable};
+use super::report::{finalize_report, RunTotals, SimReport, TraceEvent};
+use super::{SimError, EXPLICIT_PRODUCER_FRAC};
+
+/// The polling simulator: replays schedules by round-robin rescanning.
+pub struct Simulator<'a> {
+    cost: &'a CostModel,
+    /// Charge P2P sends on the producer's compute stream (the paper notes
+    /// STP's explicit pipeline communication "is executed immediately after
+    /// computation and cannot be overlapped", §5.2).
+    explicit_p2p: Option<bool>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(cost: &'a CostModel) -> Self {
+        Simulator { cost, explicit_p2p: None }
+    }
+
+    /// Override the explicit-P2P rule (default: STP-family schedules only).
+    pub fn with_explicit_p2p(mut self, v: bool) -> Self {
+        self.explicit_p2p = Some(v);
+        self
+    }
+
+    /// Replay `s` and produce the report, panicking on deadlock (the
+    /// historical behavior; prefer [`Simulator::try_run`]).
+    pub fn run(&self, s: &Schedule) -> SimReport {
+        match self.try_run(s) {
+            Ok(r) => r,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Replay `s`; a stuck device yields a [`SimError`] instead of a panic
+    /// so one malformed candidate cannot abort a whole planner run.
+    pub fn try_run(&self, s: &Schedule) -> Result<SimReport, SimError> {
+        let n_chunks = s.n_chunks();
+        let n_dev = s.devices.len();
+        let explicit_p2p = self.explicit_p2p.unwrap_or(matches!(
+            s.kind,
+            ScheduleKind::Stp | ScheduleKind::StpMemEff | ScheduleKind::StpOffload
+        ));
+        // Hop costs hoisted out of the readiness closures: one P2P
+        // resolution per (chunk, direction) instead of one per poll.
+        let hops = self.cost.hop_table(s);
+
+        let mut events: Vec<TraceEvent> = Vec::with_capacity(s.num_ops());
+        let mut done_f = vec![vec![f64::NAN; s.n_mb]; n_chunks];
+        let mut done_b = vec![vec![f64::NAN; s.n_mb]; n_chunks];
+        let mut cursor = vec![0usize; n_dev];
+        let mut dev_time = vec![0.0f64; n_dev];
+        let mut busy = vec![0.0f64; n_dev];
+        let mut exposed_ar = vec![0.0f64; n_dev];
+        let mut compute_time = vec![0.0f64; n_dev];
+
+        // Memory tracking (bytes of live activations per device).
+        let mut mem = vec![0i64; n_dev];
+        let mut mem_peak = vec![0i64; n_dev];
+        // Offloaded fraction per (chunk, mb): ratio actually moved to host.
+        let mut offloaded = vec![vec![0f32; s.n_mb]; n_chunks];
+        // PCIe stream frontier and reload-finish gate per (chunk, mb).
+        let mut pcie_time = vec![0.0f64; n_dev];
+        let mut reload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
+        let mut offload_done = vec![vec![0.0f64; s.n_mb]; n_chunks];
+        let mut pcie_busy = vec![0.0f64; n_dev];
+
+        let w_frac = self.cost.w_frac;
+
+        loop {
+            let mut advanced = false;
+            for d in 0..n_dev {
+                while cursor[d] < s.devices[d].len() {
+                    let op = s.devices[d][cursor[d]];
+                    // --- readiness ---------------------------------------
+                    // STP's explicit sends block the producer's compute
+                    // stream for the launch + part of the DMA (charged in
+                    // `explicit_hop_cost`); the rest of the transfer rides
+                    // the link and delays only the consumer edge.
+                    let edge_frac = if explicit_p2p { 1.0 - EXPLICIT_PRODUCER_FRAC } else { 1.0 };
+                    let f_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>| -> Option<f64> {
+                        if c == 0 {
+                            Some(0.0)
+                        } else {
+                            let t = done_f[c - 1][m];
+                            if t.is_nan() {
+                                None
+                            } else {
+                                Some(t + edge_frac * hops.next[c - 1])
+                            }
+                        }
+                    };
+                    let b_ready = |c: usize, m: usize, done_f: &Vec<Vec<f64>>, done_b: &Vec<Vec<f64>>| -> Option<f64> {
+                        let own = done_f[c][m];
+                        if own.is_nan() {
+                            return None;
+                        }
+                        if c + 1 == n_chunks {
+                            Some(own)
+                        } else {
+                            let t = done_b[c + 1][m];
+                            if t.is_nan() {
+                                None
+                            } else {
+                                Some(own.max(t + edge_frac * hops.prev[c + 1]))
+                            }
+                        }
+                    };
+
+                    let ready: Option<f64> = match op {
+                        Op::Pass { kind: PassKind::F, chunk, mb } => f_ready(chunk, mb, &done_f),
+                        Op::Pass { kind: PassKind::B | PassKind::BFull, chunk, mb } => {
+                            b_ready(chunk, mb, &done_f, &done_b)
+                                .map(|t| t.max(reload_done[chunk][mb]))
+                        }
+                        Op::Pass { kind: PassKind::W, .. } => Some(0.0), // B precedes in-order
+                        Op::Braided { f_chunk, f_mb, b_chunk, b_mb, .. } => {
+                            match (
+                                f_ready(f_chunk, f_mb, &done_f),
+                                b_ready(b_chunk, b_mb, &done_f, &done_b),
+                            ) {
+                                (Some(a), Some(b)) => {
+                                    Some(a.max(b).max(reload_done[b_chunk][b_mb]))
+                                }
+                                _ => None,
+                            }
+                        }
+                        Op::BraidedFW { f_chunk, f_mb, .. } => f_ready(f_chunk, f_mb, &done_f),
+                        Op::Offload { .. } | Op::Reload { .. } => Some(0.0),
+                    };
+                    let Some(ready) = ready else { break };
+
+                    // --- duration & bookkeeping --------------------------
+                    let start = dev_time[d].max(ready);
+                    match op {
+                        Op::Offload { chunk, mb, ratio } => {
+                            // Runs on the PCIe stream in parallel with
+                            // compute; clamp the ratio so the transfer fits
+                            // under one forward (paper §4.4: T_o < T_F).
+                            let t_f = self.cost.chunks[chunk].t_f();
+                            let full = self.cost.offload_secs(chunk, 1.0);
+                            let eff = if full > 0.0 {
+                                (ratio as f64).min(t_f / full).max(0.0) as f32
+                            } else {
+                                ratio
+                            };
+                            let dur = self.cost.offload_secs(chunk, eff);
+                            let t0 = pcie_time[d].max(dev_time[d]);
+                            pcie_time[d] = t0 + dur;
+                            pcie_busy[d] += dur;
+                            offload_done[chunk][mb] = pcie_time[d];
+                            offloaded[chunk][mb] = eff;
+                            // Memory freed once the transfer completes;
+                            // conservatively count it as freed at completion
+                            // by subtracting now (peak sampled at op starts).
+                            mem[d] -= (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                            cursor[d] += 1;
+                            advanced = true;
+                            continue;
+                        }
+                        Op::Reload { chunk, mb } => {
+                            let eff = offloaded[chunk][mb];
+                            let dur = self.cost.offload_secs(chunk, eff);
+                            let t0 = pcie_time[d].max(dev_time[d]).max(offload_done[chunk][mb]);
+                            pcie_time[d] = t0 + dur;
+                            pcie_busy[d] += dur;
+                            reload_done[chunk][mb] = pcie_time[d];
+                            mem[d] += (self.cost.act_bytes[chunk] as f64 * eff as f64) as i64;
+                            mem_peak[d] = mem_peak[d].max(mem[d]);
+                            // Data is back on device: the backward frees it
+                            // like any resident activation.
+                            offloaded[chunk][mb] = 0.0;
+                            cursor[d] += 1;
+                            advanced = true;
+                            continue;
+                        }
+                        _ => {}
+                    }
+
+                    let timing = self.op_timing(&op);
+                    let mut finish = start + timing.duration;
+
+                    // Explicit (non-overlapped) pipeline sends: the
+                    // producer's compute stream pays the hop right after
+                    // the op (STP-family).
+                    let mut hop = 0.0;
+                    if explicit_p2p {
+                        hop = explicit_hop_cost(&hops, n_chunks, &op);
+                        finish += hop;
+                    }
+
+                    dev_time[d] = finish;
+                    busy[d] += finish - start;
+                    compute_time[d] += timing.compute;
+                    exposed_ar[d] += timing.exposed_ar;
+                    events.push(TraceEvent { device: d, op, start, end: finish });
+
+                    // Completion bookkeeping + memory events. Inside a
+                    // braided block each direction completes at its own
+                    // sub-stream time — a braid does not serialize the
+                    // pipeline chain behind its full duration.
+                    if let Some((c, m)) = op.forward_part() {
+                        done_f[c][m] = start + timing.f_done + hop;
+                        mem[d] += self.cost.act_bytes[c] as i64;
+                        mem_peak[d] = mem_peak[d].max(mem[d]);
+                    }
+                    if let Some((c, m)) = op.backward_part() {
+                        done_b[c][m] = start + timing.b_done + hop;
+                        let act = self.cost.act_bytes[c] as f64;
+                        let kept = offloaded[c][m] as f64; // already subtracted
+                        if op.weight_part() == Some((c, m)) {
+                            mem[d] -= (act * (1.0 - kept)) as i64;
+                        } else {
+                            mem[d] -= (act * (1.0 - w_frac - kept).max(0.0)) as i64;
+                        }
+                    }
+                    if let Some((c, m)) = op.weight_part() {
+                        if op.backward_part() != Some((c, m)) {
+                            // Deferred W frees the retained weight-grad inputs.
+                            let _ = m;
+                            mem[d] -= (self.cost.act_bytes[c] as f64 * w_frac) as i64;
+                        }
+                    }
+                    cursor[d] += 1;
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+
+        // Any stuck device means an illegal schedule — surface it as an
+        // error (the planner marks the candidate infeasible; direct
+        // callers going through `run` keep the historical panic).
+        for d in 0..n_dev {
+            if cursor[d] != s.devices[d].len() {
+                return Err(SimError {
+                    device: d,
+                    op_index: cursor[d],
+                    ops_left: s.devices[d].len() - cursor[d],
+                    op: s.devices[d].get(cursor[d]).copied(),
+                });
+            }
+        }
+
+        Ok(finalize_report(
+            self.cost,
+            s.kind,
+            s.n_mb,
+            RunTotals {
+                dev_time: &dev_time,
+                busy: &busy,
+                compute: &compute_time,
+                exposed_ar: &exposed_ar,
+                mem_peak: &mem_peak,
+                pcie_busy: &pcie_busy,
+            },
+            events,
+        ))
+    }
+
+    /// Two-stream timing of one op.
+    fn op_timing(&self, op: &Op) -> super::block::BlockTiming {
+        op_timing(self.cost, op)
+    }
+}
+
+/// Two-stream timing of one op against a cost model (shared by both
+/// replay cores; the event-driven engine memoizes the results).
+pub(crate) fn op_timing(cost: &CostModel, op: &Op) -> super::block::BlockTiming {
+    let ch = &cost.chunks;
+    match *op {
+        Op::Pass { kind: PassKind::F, chunk, .. } => ch[chunk].time_f(),
+        Op::Pass { kind: PassKind::B, chunk, .. } => ch[chunk].time_b(),
+        Op::Pass { kind: PassKind::W, chunk, .. } => ch[chunk].time_w(),
+        Op::Pass { kind: PassKind::BFull, chunk, .. } => ch[chunk].time_b_full(),
+        Op::Braided { f_chunk, b_chunk, b_full, .. } => {
+            ch[f_chunk].time_braided(&ch[b_chunk], b_full)
+        }
+        Op::BraidedFW { f_chunk, w_chunk, .. } => ch[f_chunk].time_braided_fw(&ch[w_chunk]),
+        Op::Offload { .. } | Op::Reload { .. } => super::block::BlockTiming {
+            duration: 0.0,
+            compute: 0.0,
+            exposed_ar: 0.0,
+            f_done: 0.0,
+            b_done: 0.0,
+        },
+    }
+}
+
+/// Cost of the explicit pipeline sends an op performs (STP-family):
+/// the producer's compute stream is blocked for the launch plus the
+/// head of the DMA. Shared by both replay cores.
+pub(crate) fn explicit_hop_cost(hops: &HopTable, n_chunks: usize, op: &Op) -> f64 {
+    let mut t = 0.0;
+    if let Some((c, _)) = op.forward_part() {
+        if c + 1 < n_chunks {
+            t += hops.next[c];
+        }
+    }
+    if let Some((c, _)) = op.backward_part() {
+        if c > 0 {
+            t += hops.prev[c];
+        }
+    }
+    EXPLICIT_PRODUCER_FRAC * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, HardwareProfile, Topology};
+    use crate::model::ModelConfig;
+    use crate::schedule::{build_schedule, Placement, ScheduleKind};
+
+    fn setup(tp: usize, pp: usize) -> (CostModel, Topology) {
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(tp, pp, 1);
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        (CostModel::analytic(&m, &topo, &cluster, 3072, 1), topo)
+    }
+
+    #[test]
+    fn all_schedules_replay_without_deadlock() {
+        let (cost, topo) = setup(4, 4);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 8);
+            let r = Simulator::new(&cost).run(&s);
+            assert!(r.iteration_secs > 0.0, "{kind:?}");
+            assert!(r.iteration_secs.is_finite(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_schedule_is_an_error_not_a_panic() {
+        let (cost, topo) = setup(1, 2);
+        // A backward with no forward anywhere: device 0 can never start it.
+        let s = crate::schedule::Schedule {
+            kind: ScheduleKind::Stp,
+            topo,
+            n_mb: 1,
+            placement: Placement::VShape,
+            devices: vec![vec![crate::schedule::Op::b(0, 0)], vec![]],
+        };
+        let err = Simulator::new(&cost).try_run(&s).unwrap_err();
+        assert_eq!(err.device, 0);
+        assert_eq!(err.ops_left, 1);
+        assert!(err.to_string().contains("deadlock"));
+    }
+}

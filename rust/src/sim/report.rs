@@ -1,4 +1,10 @@
 //! Simulation reports: the metrics every paper table/figure is built from.
+//!
+//! [`finalize_report`] turns one replay's raw accumulators into a
+//! [`SimReport`]; both replay cores (the event-driven `sim::Simulator`
+//! and the polling `sim::reference`) share it, so their aggregation
+//! arithmetic is identical by construction — a precondition of the
+//! bit-equivalence guarantee the golden suite asserts.
 
 
 use crate::schedule::ScheduleKind;
@@ -52,6 +58,73 @@ pub struct SimReport {
     /// on heterogeneous pools) — the MFU denominator.
     pub aggregate_peak_flops: f64,
     pub model_flops_per_sample: f64,
+}
+
+/// Raw per-device accumulators of one replay, borrowed from whichever
+/// engine produced them (all slices are indexed by PP rank).
+pub(crate) struct RunTotals<'a> {
+    pub dev_time: &'a [f64],
+    pub busy: &'a [f64],
+    pub compute: &'a [f64],
+    pub exposed_ar: &'a [f64],
+    pub mem_peak: &'a [i64],
+    pub pcie_busy: &'a [f64],
+}
+
+/// Fold one replay's accumulators into the report (iteration time,
+/// per-device accounting, aggregate peak FLOPs for MFU).
+pub(crate) fn finalize_report(
+    cost: &super::cost::CostModel,
+    kind: ScheduleKind,
+    n_mb: usize,
+    t: RunTotals,
+    events: Vec<TraceEvent>,
+) -> SimReport {
+    let n_dev = t.dev_time.len();
+    let iteration = t.dev_time.iter().cloned().fold(0.0, f64::max);
+    let devices: Vec<DeviceReport> = (0..n_dev)
+        .map(|d| {
+            let hw = cost.dev_profile(d);
+            DeviceReport {
+                busy: t.busy[d],
+                compute: t.compute[d],
+                exposed_ar: t.exposed_ar[d],
+                idle: iteration - t.busy[d],
+                peak_activation_bytes: t.mem_peak[d].max(0) as usize,
+                pcie_busy: t.pcie_busy[d],
+                mem_capacity_bytes: (hw.mem_gib * (1u64 << 30) as f64) as usize,
+                hw_name: hw.name.clone(),
+            }
+        })
+        .collect();
+
+    // Aggregate peak FLOPs over the whole job: each PP rank is a
+    // TP×CP group replicated DP times; sum per *group* so a uniform
+    // pool reduces to the old `world_size × per-device peak` product.
+    let topo = &cost.topo;
+    let ranks_per_group = cost.view.ranks_per_group(cost.cluster.groups.len());
+    let aggregate_peak_flops: f64 = ranks_per_group
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(g, &n)| {
+            let gpus = n * topo.tp * topo.cp * topo.dp;
+            gpus as f64 * (cost.cluster.groups[g].hw.bf16_tflops * 1e12)
+        })
+        .sum();
+
+    SimReport {
+        kind,
+        iteration_secs: iteration,
+        devices,
+        events,
+        n_mb,
+        mb_size: cost.mb_size,
+        static_bytes: cost.static_bytes,
+        world_size: cost.topo.world_size(),
+        aggregate_peak_flops,
+        model_flops_per_sample: cost.model_flops_per_sample,
+    }
 }
 
 impl SimReport {

@@ -1,0 +1,236 @@
+//! Golden equivalence suite: the event-driven simulator core must be
+//! **bit-identical** to the polling oracle (`sim::reference`) — iteration
+//! time, bubble decomposition, peak memory, every per-device accumulator
+//! and every per-device event sequence — across all schedule kinds,
+//! uniform and mixed clusters, MLLM chunk imbalance and offload
+//! variants. Plus the planner-level contract: beam search finds the
+//! exhaustive best plan at 16 GPUs while simulating fewer candidates.
+
+use stp::cluster::{partition_mllm, ClusterSpec, GroupOrder, HardwareProfile, Topology};
+use stp::model::{MllmConfig, ModelConfig};
+use stp::plan::{plan, PlanModel, PlanQuery, SearchMode};
+use stp::schedule::{
+    build_schedule_scaled, stp::build_stp_offload, OffloadParams, Placement, Schedule,
+    ScheduleKind, ShapeCosts,
+};
+use stp::sim::{reference, CostModel, SimReport, Simulator};
+
+/// Assert two reports are bit-identical: scalars, per-device accounting,
+/// and the per-device event sequences (the engines may interleave
+/// devices differently in the global event order; within one device both
+/// emit program order).
+fn assert_bit_identical(oracle: &SimReport, event: &SimReport, label: &str) {
+    assert_eq!(oracle.kind, event.kind, "{label}");
+    assert_eq!(
+        oracle.iteration_secs.to_bits(),
+        event.iteration_secs.to_bits(),
+        "{label}: iteration"
+    );
+    assert_eq!(oracle.n_mb, event.n_mb, "{label}");
+    assert_eq!(oracle.mb_size, event.mb_size, "{label}");
+    assert_eq!(oracle.static_bytes, event.static_bytes, "{label}");
+    assert_eq!(oracle.world_size, event.world_size, "{label}");
+    assert_eq!(
+        oracle.aggregate_peak_flops.to_bits(),
+        event.aggregate_peak_flops.to_bits(),
+        "{label}: peak flops"
+    );
+    assert_eq!(
+        oracle.model_flops_per_sample.to_bits(),
+        event.model_flops_per_sample.to_bits(),
+        "{label}: model flops"
+    );
+    assert_eq!(oracle.devices.len(), event.devices.len(), "{label}");
+    for (d, (a, b)) in oracle.devices.iter().zip(&event.devices).enumerate() {
+        assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{label}: dev{d} busy");
+        assert_eq!(a.compute.to_bits(), b.compute.to_bits(), "{label}: dev{d} compute");
+        assert_eq!(
+            a.exposed_ar.to_bits(),
+            b.exposed_ar.to_bits(),
+            "{label}: dev{d} exposed AR (TP bubble)"
+        );
+        assert_eq!(a.idle.to_bits(), b.idle.to_bits(), "{label}: dev{d} idle (PP bubble)");
+        assert_eq!(
+            a.peak_activation_bytes, b.peak_activation_bytes,
+            "{label}: dev{d} peak memory"
+        );
+        assert_eq!(a.pcie_busy.to_bits(), b.pcie_busy.to_bits(), "{label}: dev{d} pcie");
+        assert_eq!(a.mem_capacity_bytes, b.mem_capacity_bytes, "{label}: dev{d} capacity");
+        assert_eq!(a.hw_name, b.hw_name, "{label}: dev{d} hw");
+    }
+    assert_eq!(oracle.events.len(), event.events.len(), "{label}: event count");
+    for d in 0..oracle.devices.len() {
+        let ea: Vec<_> = oracle.events.iter().filter(|e| e.device == d).collect();
+        let eb: Vec<_> = event.events.iter().filter(|e| e.device == d).collect();
+        assert_eq!(ea.len(), eb.len(), "{label}: dev{d} event count");
+        for (i, (x, y)) in ea.iter().zip(&eb).enumerate() {
+            assert_eq!(x.op, y.op, "{label}: dev{d} event {i} op");
+            assert_eq!(x.start.to_bits(), y.start.to_bits(), "{label}: dev{d} event {i} start");
+            assert_eq!(x.end.to_bits(), y.end.to_bits(), "{label}: dev{d} event {i} end");
+        }
+    }
+}
+
+fn compare(cost: &CostModel, s: &Schedule, label: &str) {
+    let oracle = reference::Simulator::new(cost).run(s);
+    let event = Simulator::new(cost).run(s);
+    assert_bit_identical(&oracle, &event, label);
+}
+
+#[test]
+fn golden_all_kinds_uniform_cluster() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    for (tp, pp, n_mb) in [(4usize, 4usize, 16usize), (8, 2, 64), (2, 8, 32)] {
+        let topo = Topology::new(tp, pp, 1);
+        let cost = CostModel::analytic(&m, &topo, &cluster, 3072, 1);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule_scaled(kind, &topo, n_mb, cost.chunk_scales());
+            compare(&cost, &s, &format!("{kind:?} tp{tp} pp{pp} m{n_mb} uniform"));
+        }
+    }
+}
+
+#[test]
+fn golden_all_kinds_mixed_cluster() {
+    let m = ModelConfig::qwen2_12b();
+    let spec = ClusterSpec::mixed_a800_h20();
+    let topo = Topology::new(4, 4, 1); // 16 GPUs over the 8+8 pool
+    for order in [GroupOrder::Declared, GroupOrder::FastFirst, GroupOrder::Interleaved] {
+        for kind in ScheduleKind::all() {
+            let cost =
+                CostModel::analytic_for(&m, &topo, &spec, order, kind.placement(), 3072, 1);
+            let s = build_schedule_scaled(kind, &topo, 16, cost.chunk_scales());
+            compare(&cost, &s, &format!("{kind:?} mixed order={order:?}"));
+        }
+    }
+}
+
+#[test]
+fn golden_mllm_chunk_imbalance() {
+    let m = MllmConfig::qwen2vl_14_9b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(4, 4, 1);
+    let stage_plan = partition_mllm(&m, topo.chunks());
+    let cost =
+        CostModel::analytic_mllm(&m.lm, &m.vit, &stage_plan, &topo, &cluster, 5120, 3136, 1);
+    for kind in ScheduleKind::paper_trio() {
+        let s = build_schedule_scaled(kind, &topo, 24, cost.chunk_scales());
+        compare(&cost, &s, &format!("{kind:?} mllm"));
+    }
+}
+
+#[test]
+fn golden_offload_variants() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::h20());
+    let topo = Topology::new(4, 4, 1);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 6144, 1);
+    for params in [
+        OffloadParams::default(),
+        OffloadParams { alpha_warmup: 0.5, alpha_steady: 0.9, reload_lead: 2 },
+        OffloadParams { alpha_warmup: 0.0, alpha_steady: 1.0, reload_lead: 3 },
+    ] {
+        let s =
+            build_stp_offload(&topo, 32, ShapeCosts::default(), cost.chunk_scales(), params);
+        compare(&cost, &s, &format!("offload {params:?}"));
+    }
+}
+
+#[test]
+fn golden_explicit_p2p_overrides() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(4, 4, 1);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 3072, 1);
+    for kind in [ScheduleKind::Stp, ScheduleKind::OneF1BInterleaved] {
+        for explicit in [true, false] {
+            let s = build_schedule_scaled(kind, &topo, 16, cost.chunk_scales());
+            let oracle = reference::Simulator::new(&cost).with_explicit_p2p(explicit).run(&s);
+            let event = Simulator::new(&cost).with_explicit_p2p(explicit).run(&s);
+            assert_bit_identical(&oracle, &event, &format!("{kind:?} explicit={explicit}"));
+        }
+    }
+}
+
+#[test]
+fn deadlock_is_an_error_in_both_cores() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(1, 2, 1);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 2048, 1);
+    // B(0,0) with no F(0,0) anywhere: the polling replay never finds it
+    // ready; the event-driven replay never resolves its dependency.
+    let s = Schedule {
+        kind: ScheduleKind::Stp,
+        topo,
+        n_mb: 1,
+        placement: Placement::VShape,
+        devices: vec![vec![stp::schedule::Op::b(0, 0)], vec![]],
+    };
+    let a = reference::Simulator::new(&cost).try_run(&s).unwrap_err();
+    let b = Simulator::new(&cost).try_run(&s).unwrap_err();
+    assert_eq!(a.device, b.device);
+    assert_eq!(a.op_index, b.op_index);
+    assert_eq!(a.ops_left, b.ops_left);
+    assert_eq!(a.op, b.op);
+}
+
+#[test]
+fn duplicate_producers_fall_back_to_the_oracle() {
+    // Two ops produce F(0,0) — a recomputation-style shape no builder
+    // emits. That is outside the compiled replay's contract (producer
+    // tables keep one writer), so the event-driven core must delegate to
+    // the general oracle and still match it, not mis-replay silently.
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(1, 1, 1).with_vpp(1); // one chunk, one device
+    let cost = CostModel::analytic(&m, &topo, &cluster, 2048, 1);
+    let s = Schedule {
+        kind: ScheduleKind::GPipe,
+        topo,
+        n_mb: 1,
+        placement: Placement::Interleaved,
+        devices: vec![vec![
+            stp::schedule::Op::f(0, 0),
+            stp::schedule::Op::f(0, 0),
+            stp::schedule::Op::b_full(0, 0),
+        ]],
+    };
+    assert!(!s.compile().unique_producers);
+    let oracle = reference::Simulator::new(&cost).run(&s);
+    let event = Simulator::new(&cost).run(&s);
+    assert_bit_identical(&oracle, &event, "duplicate producers");
+}
+
+#[test]
+fn beam_finds_the_exhaustive_best_plan_at_16_gpus() {
+    let mut ex = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::uniform(HardwareProfile::a800()),
+        16,
+    );
+    ex.seq = 3072;
+    ex.n_mb_options = vec![16, 64];
+    ex.threads = 2;
+    let mut beam = ex.clone();
+    beam.search = SearchMode::Beam { width: 8 };
+
+    let re = plan(&ex);
+    let rb = plan(&beam);
+    assert!(
+        rb.n_simulated() < re.n_simulated(),
+        "beam simulated {} !< exhaustive {}",
+        rb.n_simulated(),
+        re.n_simulated()
+    );
+    let best_ex = re.best().expect("exhaustive best");
+    let best_beam = rb.best().expect("beam best");
+    assert_eq!(
+        best_ex.candidate.id, best_beam.candidate.id,
+        "beam best {} != exhaustive best {}",
+        best_beam.candidate.label(),
+        best_ex.candidate.label()
+    );
+    assert_eq!(best_ex.throughput.to_bits(), best_beam.throughput.to_bits());
+}
