@@ -1,22 +1,23 @@
-//! End-to-end validation (DESIGN.md §5): train a ~100M-parameter
-//! Qwen2-style transformer with REAL compute through all three layers —
-//! Pallas kernels (L1) lowered through the JAX model (L2) into HLO
-//! artifacts that this rust coordinator (L3) executes under the paper's
-//! STP schedule with genuine TP All-Reduce and pipeline P2P between
-//! threads — and log the loss curve.
+//! End-to-end validation (DESIGN.md §5, §10): train a Qwen2-style
+//! transformer with REAL tensor compute through the backend-abstract
+//! executor — per-(stage, tp-rank) threads, genuine TP All-Reduce and
+//! pipeline P2P under the paper's STP schedule — and log the loss curve.
 //!
 //! ```text
-//! make artifacts                       # once (python, build path only)
-//! cargo run --release --example train_e2e -- [steps] [schedule]
+//! cargo run --release --example train_e2e -- [steps] [schedule] [backend]
 //! ```
 //!
-//! TP=2 × PP=2 × 2 virtual chunks (the manifest's topology). Loss starts
-//! near ln(V) ≈ 9.01 and must fall toward the synthetic bigram corpus's
-//! entropy floor. The run is recorded in EXPERIMENTS.md.
+//! The default **virtual** backend runs in every build (miniature
+//! deterministic dims, TP=2 × PP=2 × 2 virtual chunks). Passing `pjrt`
+//! as the third argument executes the AOT HLO artifacts instead
+//! (`make artifacts` first; needs the `pjrt` feature and real xla
+//! bindings); the preset's dims then come from `artifacts/e2e`.
+//!
+//! Loss starts near ln(V) and must fall toward the synthetic bigram
+//! corpus's entropy floor; the process exits non-zero on a flat or
+//! non-finite curve (the CI train-smoke leg relies on this).
 
-use std::path::PathBuf;
-
-use stp::exec::{train, Corpus, TrainConfig};
+use stp::exec::{train, virtual_dims, BackendKind, Corpus, TrainConfig};
 use stp::schedule::ScheduleKind;
 
 fn main() -> stp::Result<()> {
@@ -26,19 +27,27 @@ fn main() -> stp::Result<()> {
         .get(1)
         .map(|s| s.parse().expect("bad schedule name"))
         .unwrap_or(ScheduleKind::Stp);
+    let backend: BackendKind = args
+        .get(2)
+        .map(|s| s.parse().expect("bad backend name"))
+        .unwrap_or(BackendKind::Virtual);
 
-    let cfg = TrainConfig {
-        artifacts_dir: PathBuf::from("artifacts/e2e"),
-        schedule,
-        n_mb: 4,
-        steps,
-        lr: 0.03,
-        seed: 42,
-        verbose: true,
+    let mut cfg = TrainConfig::virtual_default();
+    cfg.backend = backend;
+    cfg.schedule = schedule;
+    cfg.steps = steps;
+    cfg.lr = 0.03;
+    cfg.verbose = true;
+    let vocab = match backend {
+        // The engine derives the same miniature dims when `dims` is None.
+        BackendKind::Virtual => virtual_dims(2, 2, 2, 8).vocab,
+        // The e2e preset's vocabulary (python/compile/config.py).
+        BackendKind::Pjrt => 8192,
     };
     eprintln!(
-        "training tiny-100m with the {} schedule, {steps} steps x {} microbatches",
+        "training with the {} schedule on the {} backend, {steps} steps x {} microbatches",
         schedule.name(),
+        backend.name(),
         cfg.n_mb
     );
 
@@ -48,21 +57,22 @@ fn main() -> stp::Result<()> {
     for s in &report.steps {
         println!("{:4}  {:.4}", s.step, s.mean_loss);
     }
-    let corpus = Corpus::new(8192, cfg.seed);
+    let corpus = Corpus::new(vocab, cfg.seed);
     println!(
         "\nfirst {:.4} -> last {:.4} (uniform ln V = {:.3}, corpus entropy floor ≈ {:.3})",
         report.first_loss(),
         report.last_loss(),
-        (8192f64).ln(),
+        (vocab as f64).ln(),
         corpus.entropy_floor(),
     );
     println!(
-        "wall {:.1}s | {} PJRT execs | {:.1} MB all-reduced | peak act/stage {:?} MB",
+        "wall {:.1}s | {} unit execs | {:.1} MB all-reduced | peak act/stage {:?} MB",
         report.wall_secs,
         report.executions,
         report.allreduce_bytes as f64 / 1e6,
         report.peak_activation_bytes.iter().map(|b| b / 1_000_000).collect::<Vec<_>>(),
     );
+    assert!(report.last_loss().is_finite(), "training diverged — non-finite loss");
     assert!(
         report.last_loss() < report.first_loss(),
         "loss did not decrease — training is broken"

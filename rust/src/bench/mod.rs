@@ -495,7 +495,9 @@ pub fn table11_sim() -> String {
 /// 16-GPU A800 budget and print the funnel plus the top plans, then run
 /// the search-perf sweep (exhaustive vs beam over growing GPU budgets)
 /// and record it in `BENCH_plan_search.json` at the repo root so future
-/// PRs can track the planner's perf trajectory.
+/// PRs can track the planner's perf trajectory. The winner's executable
+/// plan artifact lands next to it as `BENCH_plan_artifact.json`
+/// (`stp train --plan`-ready).
 pub fn plan16() -> String {
     use crate::plan::{plan, PlanModel, PlanQuery};
     let mut q = PlanQuery::new(
@@ -506,7 +508,18 @@ pub fn plan16() -> String {
     // Lighter sweep than the CLI default: the bench target is shape, not
     // exhaustiveness.
     q.n_mb_options = vec![16, 64];
-    format!("{}\n{}", plan(&q).render(10), plan_perf(true))
+    let report = plan(&q);
+    let artifact_note = match &report.best_artifact {
+        Some(a) => {
+            let path = "BENCH_plan_artifact.json";
+            match a.save(path) {
+                Ok(()) => format!("wrote {path} ({})", a.label()),
+                Err(e) => format!("could not write {path}: {e}"),
+            }
+        }
+        None => "no feasible plan — no artifact emitted".to_string(),
+    };
+    format!("{}\n{artifact_note}\n{}", report.render(10), plan_perf(true))
 }
 
 /// Search-perf sweep: plan the same model over growing GPU budgets with

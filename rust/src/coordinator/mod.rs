@@ -29,12 +29,19 @@ USAGE:
                mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
                [--seq N] [--mbsize N] [--topk N] [--threads N]
                [--search exhaustive|beam] [--beam-width N]
-  stp train    [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
-               [--lr F] [--seed N] [--quiet]   (needs the `pjrt` feature)
+               [--emit-plan FILE.json]
+  stp train    [--plan FILE.json] [--backend virtual|pjrt]
+               [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
+               [--lr F] [--seed N] [--quiet]
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
 Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
            without it the pool is uniform over --hw.
+Training:  the virtual backend (default) runs everywhere on miniature
+           deterministic tensors; --backend pjrt executes AOT artifacts
+           from --artifacts and needs the `pjrt` feature. --plan replays
+           a `stp plan --emit-plan` artifact (schedule, topology, layer
+           split) through the executor.
 ";
 
 /// Parse `--key value` pairs after the subcommand.
@@ -299,17 +306,36 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
     let topk = flag(flags, "topk", 10usize);
     let report = plan(&q);
     println!("{}", report.render(topk));
+    if let Some(path) = flags.get("emit-plan") {
+        match &report.best_artifact {
+            Some(a) => {
+                a.save(path)?;
+                println!("wrote plan artifact {path} ({})", a.label());
+            }
+            None => anyhow::bail!("no memory-feasible plan to emit"),
+        }
+    }
     Ok(if report.best().is_some() { 0 } else { 1 })
 }
 
-/// `stp train`: real PJRT pipeline training (requires the `pjrt` feature).
-#[cfg(feature = "pjrt")]
+/// `stp train`: pipeline training through the backend-abstract executor —
+/// the virtual backend in any build, PJRT with the `pjrt` feature, and
+/// optionally a `stp plan --emit-plan` artifact as the schedule source.
 fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
     use std::path::PathBuf;
 
-    use crate::exec::{train, TrainConfig};
+    use crate::exec::{train, BackendKind, TrainConfig};
+    use crate::plan::PlanArtifact;
 
+    let backend: BackendKind = flag::<String>(flags, "backend", "virtual".into())
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let plan_artifact = match flags.get("plan") {
+        Some(path) => Some(PlanArtifact::load(path)?),
+        None => None,
+    };
     let cfg = TrainConfig {
+        backend,
         artifacts_dir: PathBuf::from(flag::<String>(
             flags,
             "artifacts",
@@ -323,13 +349,19 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         lr: flag(flags, "lr", 0.1f32),
         seed: flag(flags, "seed", 42u64),
         verbose: !flags.contains_key("quiet"),
+        dims: None,
+        plan: plan_artifact,
+    };
+    let what = match &cfg.plan {
+        Some(p) => format!("plan {}", p.label()),
+        None => format!("{} schedule", cfg.schedule.name()),
     };
     let report = train(&cfg)?;
     println!(
-        "trained {} steps ({} schedule): loss {:.4} -> {:.4}, {:.1}s wall, \
-         {} PJRT execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
+        "trained {} steps ({what}, {} backend): loss {:.4} -> {:.4}, {:.1}s wall, \
+         {} unit execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
         report.steps.len(),
-        cfg.schedule.name(),
+        report.backend.name(),
         report.first_loss(),
         report.last_loss(),
         report.wall_secs,
@@ -341,17 +373,8 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
             .map(|b| (b / 1_000_000).to_string())
             .collect::<Vec<_>>(),
     );
+    anyhow::ensure!(report.last_loss().is_finite(), "training diverged: non-finite loss");
     Ok(0)
-}
-
-/// Without the `pjrt` feature there is no executor to train with.
-#[cfg(not(feature = "pjrt"))]
-fn run_train(_flags: &HashMap<String, String>) -> Result<i32> {
-    eprintln!(
-        "`stp train` needs the real PJRT executor — rebuild with \
-         `--features pjrt` (and real xla bindings, see rust/Cargo.toml)"
-    );
-    Ok(2)
 }
 
 #[cfg(test)]

@@ -1,0 +1,272 @@
+//! Pluggable execution backends for the pipeline engine.
+//!
+//! The engine (`exec::engine`) walks compiled schedules and manages the
+//! braided thread choreography — per-(stage, tp-rank) threads, aligned
+//! TP collectives, bounded P2P channels, activation store/offload —
+//! while everything *numerical* goes through one seam: [`Backend::run`],
+//! keyed by the nine AOT unit names (`python/compile/aot.py`).
+//!
+//! * [`VirtualBackend`] — always compiled: deterministic host tensors
+//!   through the reference-kernel math in [`super::kernels`]. This is
+//!   what makes the executor (and the planner→executor handoff)
+//!   testable in the default offline build.
+//! * `PjrtBackend` (feature `pjrt`) — a thin adapter over
+//!   [`crate::runtime::Runtime`]: AOT HLO artifacts executed through
+//!   PJRT, exactly the pre-refactor path.
+
+use std::str::FromStr;
+
+use crate::config::ManifestDims;
+use crate::runtime::Tensor;
+use crate::Result;
+
+use super::kernels;
+
+/// Which execution backend a training run uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Host reference kernels, no PJRT — available in every build.
+    Virtual,
+    /// AOT HLO artifacts through PJRT (needs the `pjrt` feature and a
+    /// compiled artifact directory).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Virtual => "virtual",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+}
+
+impl FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "virtual" | "cpu" | "host" => Ok(BackendKind::Virtual),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            other => Err(format!("unknown backend '{other}' (expected virtual|pjrt)")),
+        }
+    }
+}
+
+/// One device thread's compute provider: executes a named unit over host
+/// tensors. Implementations are constructed per OS thread (the PJRT
+/// wrapper types are `!Send`), so the trait needs no `Send` bound.
+pub trait Backend {
+    /// Execute unit `name` (an AOT artifact name) on `args`.
+    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>>;
+    /// Cumulative unit executions (metrics).
+    fn executions(&self) -> u64;
+    /// Stable backend label for reports.
+    fn kind(&self) -> BackendKind;
+}
+
+/// The deterministic no-PJRT backend: reference-kernel math on host
+/// tensors, shaped by the run's [`ManifestDims`].
+pub struct VirtualBackend {
+    dims: ManifestDims,
+    executions: u64,
+}
+
+impl VirtualBackend {
+    pub fn new(dims: ManifestDims) -> VirtualBackend {
+        VirtualBackend { dims, executions: 0 }
+    }
+}
+
+impl Backend for VirtualBackend {
+    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let out = match name {
+            "attn_fwd" => kernels::attn_fwd(args, &self.dims),
+            "attn_bwd_x" => kernels::attn_bwd_x(args, &self.dims),
+            "attn_bwd_w" => kernels::attn_bwd_w(args, &self.dims),
+            "mlp_fwd" => kernels::mlp_fwd(args, &self.dims),
+            "mlp_bwd_x" => kernels::mlp_bwd_x(args, &self.dims),
+            "mlp_bwd_w" => kernels::mlp_bwd_w(args, &self.dims),
+            "embed_fwd" => kernels::embed_fwd(args),
+            "embed_bwd" => kernels::embed_bwd(args, &self.dims),
+            "head_loss_grad" => kernels::head_loss_grad(args),
+            other => anyhow::bail!("virtual backend: unknown unit '{other}'"),
+        }?;
+        self.executions += 1;
+        Ok(out)
+    }
+
+    fn executions(&self) -> u64 {
+        self.executions
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Virtual
+    }
+}
+
+/// The unit names every backend must serve (the engine's working set).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+pub(crate) const UNIT_NAMES: [&str; 9] = [
+    "attn_fwd",
+    "attn_bwd_x",
+    "attn_bwd_w",
+    "mlp_fwd",
+    "mlp_bwd_x",
+    "mlp_bwd_w",
+    "embed_fwd",
+    "embed_bwd",
+    "head_loss_grad",
+];
+
+/// PJRT adapter: the pre-refactor execution path behind the seam.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    rt: crate::runtime::Runtime,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Compile the engine's unit set from `manifest`'s artifacts.
+    pub fn load(manifest: &crate::config::Manifest) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { rt: crate::runtime::Runtime::load(manifest, &UNIT_NAMES)? })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl Backend for PjrtBackend {
+    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.rt.run(name, args)
+    }
+
+    fn executions(&self) -> u64 {
+        self.rt.executions
+    }
+
+    fn kind(&self) -> BackendKind {
+        BackendKind::Pjrt
+    }
+}
+
+/// Construct the configured backend for one device thread.
+pub(crate) fn make_backend(
+    kind: BackendKind,
+    manifest: Option<&crate::config::Manifest>,
+    dims: &ManifestDims,
+) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Virtual => Ok(Box::new(VirtualBackend::new(dims.clone()))),
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => {
+            let m = manifest
+                .ok_or_else(|| anyhow::anyhow!("pjrt backend needs an artifact manifest"))?;
+            Ok(Box::new(PjrtBackend::load(m)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => {
+            let _ = manifest;
+            anyhow::bail!(
+                "the pjrt backend needs the PJRT runtime — rebuild with `--features pjrt` \
+                 (and real xla bindings, see rust/Cargo.toml), or use `--backend virtual`"
+            )
+        }
+    }
+}
+
+/// Miniature-but-consistent model dims for virtual execution of a plan:
+/// every TP divisibility rule holds for `tp` and the layer budget is the
+/// plan's, so the choreography (thread grid, channels, collectives,
+/// per-chunk parameter shapes) is exercised at negligible per-op cost.
+pub fn virtual_dims(tp: usize, pp: usize, vpp: usize, layers: usize) -> ManifestDims {
+    assert!(tp >= 1 && pp >= 1 && vpp >= 1);
+    ManifestDims {
+        vocab: 256,
+        d: 8 * tp,
+        q_heads: 2 * tp,
+        kv_heads: tp,
+        ffn: 16 * tp,
+        layers,
+        seq: 16,
+        mb: 2,
+        tp,
+        pp,
+        vpp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!("virtual".parse::<BackendKind>().unwrap(), BackendKind::Virtual);
+        assert_eq!("pjrt".parse::<BackendKind>().unwrap(), BackendKind::Pjrt);
+        assert!("gpu".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn virtual_backend_serves_every_unit_name() {
+        let dims = virtual_dims(1, 1, 1, 1);
+        let mut b = VirtualBackend::new(dims.clone());
+        // Shapes per the AOT signatures at these dims.
+        let d = dims.d;
+        let x = Tensor::f32(vec![0.1; dims.mb * dims.seq * d], &[dims.mb, dims.seq, d]);
+        let g = Tensor::f32(vec![1.0; d], &[d]);
+        let qr = dims.q_heads_per_rank() * dims.head_dim();
+        let kr = dims.kv_heads_per_rank() * dims.head_dim();
+        let fr = dims.ffn_per_rank();
+        let wq = Tensor::f32(vec![0.1; d * qr], &[d, qr]);
+        let wk = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
+        let wv = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
+        let wo = Tensor::f32(vec![0.1; qr * d], &[qr, d]);
+        let wg = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
+        let wu = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
+        let wd = Tensor::f32(vec![0.1; fr * d], &[fr, d]);
+        let tok = Tensor::i32(vec![3; dims.mb * dims.seq], &[dims.mb, dims.seq]);
+        let emb = Tensor::f32(vec![0.1; dims.vocab * d], &[dims.vocab, d]);
+        let wh = Tensor::f32(vec![0.1; d * dims.vocab], &[d, dims.vocab]);
+
+        let attn = [x.clone(), g.clone(), wq, wk, wv, wo];
+        assert_eq!(b.run("attn_fwd", &attn).unwrap().len(), 1);
+        let attn_b = [
+            attn[0].clone(),
+            x.clone(),
+            attn[1].clone(),
+            attn[2].clone(),
+            attn[3].clone(),
+            attn[4].clone(),
+            attn[5].clone(),
+        ];
+        assert_eq!(b.run("attn_bwd_x", &attn_b).unwrap().len(), 1);
+        assert_eq!(b.run("attn_bwd_w", &attn_b).unwrap().len(), 5);
+        let mlp = [x.clone(), g, wg, wu, wd];
+        assert_eq!(b.run("mlp_fwd", &mlp).unwrap().len(), 1);
+        let mlp_b = [
+            mlp[0].clone(),
+            x.clone(),
+            mlp[1].clone(),
+            mlp[2].clone(),
+            mlp[3].clone(),
+            mlp[4].clone(),
+        ];
+        assert_eq!(b.run("mlp_bwd_x", &mlp_b).unwrap().len(), 1);
+        assert_eq!(b.run("mlp_bwd_w", &mlp_b).unwrap().len(), 4);
+        assert_eq!(b.run("embed_fwd", &[tok.clone(), emb]).unwrap().len(), 1);
+        assert_eq!(b.run("embed_bwd", &[tok.clone(), x.clone()]).unwrap().len(), 1);
+        assert_eq!(b.run("head_loss_grad", &[x, wh, tok]).unwrap().len(), 3);
+        assert!(b.run("nope", &[]).is_err());
+        assert_eq!(b.executions(), 9);
+    }
+
+    #[test]
+    fn virtual_dims_respect_tp_divisibility() {
+        for tp in [1, 2, 4, 8] {
+            let d = virtual_dims(tp, 2, 2, 8);
+            assert_eq!(d.q_heads % tp, 0);
+            assert_eq!(d.kv_heads % tp, 0);
+            assert_eq!(d.ffn % tp, 0);
+            assert_eq!(d.d % d.q_heads, 0);
+            assert!(d.q_heads_per_rank() >= 1 && d.head_dim() >= 1);
+        }
+    }
+}

@@ -1,22 +1,28 @@
 //! The real pipeline executor and its support types.
 //!
-//! The executor itself (`train` / `TrainConfig` in `engine`) drives
-//! AOT HLO artifacts through PJRT and therefore requires the `pjrt`
-//! feature. The PJRT-free support types — the deterministic [`Rng`], the
-//! synthetic [`Corpus`], and the host-side parameter store
-//! ([`ChunkParams`]) — are always available; tests and the property-test
-//! harness use them without any accelerator runtime.
+//! Since the backend-abstraction refactor (DESIGN.md §10) the op-walking
+//! engine (`train` / `TrainConfig` in [`engine`]) is **always compiled**:
+//! it drives a pluggable [`Backend`] — the deterministic
+//! [`VirtualBackend`] (reference-kernel math on host tensors, no PJRT)
+//! in every build, or the PJRT runtime over AOT HLO artifacts behind the
+//! `pjrt` feature. The braided thread choreography (per-(stage, tp-rank)
+//! threads, aligned collectives, bounded P2P channels, activation
+//! store/offload) is therefore testable offline, and
+//! `stp plan --emit-plan` → `stp train --plan` hands planner-chosen
+//! schedules straight to it.
 
+mod backend;
 mod data;
+mod engine;
+mod kernels;
 mod params;
 mod rng;
 
-#[cfg(feature = "pjrt")]
-mod engine;
-
+pub use backend::{virtual_dims, Backend, BackendKind, VirtualBackend};
 pub use data::Corpus;
+pub use engine::{train, RunReport, StepStat, TrainConfig};
 pub use params::{ChunkParams, LayerGrads, LayerParams};
 pub use rng::Rng;
 
 #[cfg(feature = "pjrt")]
-pub use engine::{train, RunReport, StepStat, TrainConfig};
+pub use backend::PjrtBackend;

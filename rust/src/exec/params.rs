@@ -96,12 +96,14 @@ fn row_slice(rng: &mut Rng, rows: usize, cols: usize, r0: usize, r1: usize, scal
 }
 
 impl ChunkParams {
-    /// Initialize the rank's shard of `chunk` (layers plus the embed/head
-    /// endpoints this chunk owns).
+    /// Initialize the rank's shard of `chunk`: `n_layers` transformer
+    /// layers (the chunk's share under the run's stage plan — uniform or
+    /// weighted) plus the embed/head endpoints this chunk owns.
     pub fn init(
         dims: &ManifestDims,
         chunk: usize,
         tp_rank: usize,
+        n_layers: usize,
         has_embed: bool,
         has_head: bool,
         seed: u64,
@@ -123,7 +125,7 @@ impl ChunkParams {
         let s_res = s_d / (2.0 * dims.layers as f32).sqrt();
 
         let mut layers = Vec::new();
-        for l in 0..dims.layers_per_chunk() {
+        for l in 0..n_layers {
             let key = (chunk * 1000 + l) as u64;
             let r = |m: u64| Rng::for_purpose(seed, key, m, 0);
             layers.push(LayerParams {
@@ -233,7 +235,7 @@ mod tests {
     #[test]
     fn shard_shapes() {
         let d = dims();
-        let p = ChunkParams::init(&d, 0, 0, true, false, 7);
+        let p = ChunkParams::init(&d, 0, 0, 1, true, false, 7);
         assert_eq!(p.layers.len(), 1);
         assert_eq!(p.layers[0].wq.shape(), &[16, 8]); // qr = 2 heads * 4
         assert_eq!(p.layers[0].wk.shape(), &[16, 4]); // kr = 1 head * 4
@@ -247,8 +249,8 @@ mod tests {
     #[test]
     fn ranks_slice_the_same_full_matrix() {
         let d = dims();
-        let p0 = ChunkParams::init(&d, 1, 0, false, false, 7);
-        let p1 = ChunkParams::init(&d, 1, 1, false, false, 7);
+        let p0 = ChunkParams::init(&d, 1, 0, 1, false, false, 7);
+        let p1 = ChunkParams::init(&d, 1, 1, 1, false, false, 7);
         // Different shards of the same full wq (no overlap expected, but
         // deterministically regenerated from the same stream).
         assert_ne!(
@@ -256,7 +258,7 @@ mod tests {
             p1.layers[0].wq.as_f32().unwrap()
         );
         // And the same (chunk, rank) shard reproduces bit-for-bit.
-        let p0b = ChunkParams::init(&d, 1, 0, false, false, 7);
+        let p0b = ChunkParams::init(&d, 1, 0, 1, false, false, 7);
         assert_eq!(
             p0.layers[0].wq.as_f32().unwrap(),
             p0b.layers[0].wq.as_f32().unwrap()
@@ -266,7 +268,7 @@ mod tests {
     #[test]
     fn sgd_moves_params_and_clears_grads() {
         let d = dims();
-        let mut p = ChunkParams::init(&d, 0, 0, false, false, 7);
+        let mut p = ChunkParams::init(&d, 0, 0, 1, false, false, 7);
         let before = p.layers[0].wq.as_f32().unwrap()[0];
         // Small gradients (below the RMS clip): exact SGD step expected.
         p.grads[0].wq.iter_mut().for_each(|g| *g = 0.02);
@@ -279,7 +281,7 @@ mod tests {
     #[test]
     fn sgd_clips_large_updates() {
         let d = dims();
-        let mut p = ChunkParams::init(&d, 0, 0, false, false, 7);
+        let mut p = ChunkParams::init(&d, 0, 0, 1, false, false, 7);
         let before = p.layers[0].wq.as_f32().unwrap()[0];
         p.grads[0].wq.iter_mut().for_each(|g| *g = 100.0);
         p.sgd_step(0.1, 1);

@@ -15,9 +15,12 @@
 //!   discrete-event cluster simulator that regenerates every table and
 //!   figure of the paper's evaluation, a parallelism **auto-planner**
 //!   ([`plan`]) that searches (TP, PP, DP) × schedule × microbatch-count
-//!   for a GPU budget under a memory cap, and a real multi-threaded
-//!   pipeline executor that runs the AOT artifacts through PJRT with
-//!   in-process All-Reduce (feature `pjrt`).
+//!   for a GPU budget under a memory cap, and a real multi-threaded,
+//!   **backend-abstract** pipeline executor ([`exec`]) with in-process
+//!   All-Reduce: the deterministic virtual backend runs in every build
+//!   (`stp plan --emit-plan` → `stp train --plan` replays the planner's
+//!   winning schedule offline), while the AOT-artifact PJRT backend sits
+//!   behind the `pjrt` feature.
 //!
 //! ## Quick tour
 //!

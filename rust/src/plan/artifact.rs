@@ -1,0 +1,392 @@
+//! The executable **plan artifact**: the planner → executor handoff.
+//!
+//! `stp plan --emit-plan FILE.json` serializes the winning candidate as a
+//! versioned, strictly-validated JSON document carrying everything the
+//! executor needs to replay the *same* schedule the simulator ranked —
+//! the schedule kind, the (tp, pp, dp, vpp) shape, the microbatch count,
+//! the group-assignment order, the offload parameters, the weighted
+//! per-chunk layer split (the candidate's
+//! [`StagePlan`](crate::cluster::StagePlan)) and the chunk compute
+//! scales the scaled builders consumed. `stp train --plan FILE.json`
+//! lowers it through [`crate::schedule::CompiledSchedule`] into the
+//! engine, so sim and exec consume one schedule by construction
+//! (DESIGN.md §10).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::{ChunkContent, GroupOrder, StagePlan, Topology};
+use crate::config::json::Json;
+use crate::schedule::{
+    build_schedule_scaled, stp, OffloadParams, Schedule, ScheduleKind, ShapeCosts,
+};
+use crate::Result;
+
+use super::evaluate::{EvalContext, Evaluation};
+
+/// Schema tag of the artifact format this crate reads and writes.
+pub const PLAN_SCHEMA: &str = "stp-plan-v1";
+
+/// One executable plan — see the module docs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanArtifact {
+    /// Model the plan was searched for (informational).
+    pub model: String,
+    /// Pool the plan was searched on (informational).
+    pub cluster: String,
+    pub seq: usize,
+    pub mb_size: usize,
+    pub kind: ScheduleKind,
+    pub tp: usize,
+    pub pp: usize,
+    /// DP replica count the planner chose; the executor runs one replica.
+    pub dp: usize,
+    pub vpp: usize,
+    /// Microbatches per iteration per replica.
+    pub n_mb: usize,
+    pub order: GroupOrder,
+    pub offload: OffloadParams,
+    /// LM layers per chunk (the candidate's weighted split).
+    pub stage_layers: Vec<usize>,
+    /// ViT layers per chunk (MLLM plans; all zero for LLMs).
+    pub stage_vit_layers: Vec<usize>,
+    /// Relative per-chunk compute scales the schedule builders consumed.
+    pub chunk_scales: Vec<f64>,
+    /// Simulated whole-job throughput, samples/s (informational).
+    pub throughput: f64,
+}
+
+impl PlanArtifact {
+    /// Build the artifact for one simulated candidate (the winner, in
+    /// [`super::plan`]'s case).
+    pub fn for_evaluation(ctx: &EvalContext, e: &Evaluation) -> PlanArtifact {
+        let c = &e.candidate;
+        let cost = ctx.cost_model(c);
+        PlanArtifact {
+            model: ctx.model.name().to_string(),
+            cluster: ctx.cluster.name.clone(),
+            seq: ctx.seq,
+            mb_size: ctx.mb_size,
+            kind: c.kind,
+            tp: c.tp,
+            pp: c.pp,
+            dp: c.dp,
+            vpp: c.vpp(),
+            n_mb: c.n_mb,
+            order: c.order,
+            offload: c.offload,
+            stage_layers: cost.stage_plan.chunks.iter().map(|ch| ch.lm_layers).collect(),
+            stage_vit_layers: cost.stage_plan.chunks.iter().map(|ch| ch.vit_layers).collect(),
+            chunk_scales: cost.chunk_scales(),
+            throughput: e.throughput,
+        }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.pp * self.vpp
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.stage_layers.iter().sum()
+    }
+
+    pub fn total_vit_layers(&self) -> usize {
+        self.stage_vit_layers.iter().sum()
+    }
+
+    /// Compact label ("tp2-pp2-dp1 stp m4").
+    pub fn label(&self) -> String {
+        format!("tp{}-pp{}-dp{} {} m{}", self.tp, self.pp, self.dp, self.kind.name(), self.n_mb)
+    }
+
+    /// The single-replica topology the executor runs (DP is a planner
+    /// dimension; each replica runs this schedule independently).
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.tp, self.pp, 1).with_vpp(self.vpp)
+    }
+
+    /// The chunk → content split the executor partitions parameters by.
+    pub fn stage_plan(&self) -> StagePlan {
+        let last = self.n_chunks() - 1;
+        StagePlan {
+            chunks: self
+                .stage_layers
+                .iter()
+                .zip(&self.stage_vit_layers)
+                .enumerate()
+                .map(|(i, (&lm, &vit))| ChunkContent {
+                    lm_layers: lm,
+                    vit_layers: vit,
+                    has_embed: i == 0,
+                    has_head: i == last,
+                })
+                .collect(),
+        }
+    }
+
+    /// Rebuild the candidate's schedule — the exact op lists the planner
+    /// simulated (same kind, topology, n_mb, chunk scales and offload
+    /// parameters ⇒ the builders are deterministic).
+    pub fn build_schedule(&self) -> Schedule {
+        let topo = self.topology();
+        match self.kind {
+            ScheduleKind::StpOffload => stp::build_stp_offload(
+                &topo,
+                self.n_mb,
+                ShapeCosts::default(),
+                self.chunk_scales.clone(),
+                self.offload,
+            ),
+            kind => build_schedule_scaled(kind, &topo, self.n_mb, self.chunk_scales.clone()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("schema".into(), Json::Str(PLAN_SCHEMA.into()));
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("cluster".into(), Json::Str(self.cluster.clone()));
+        o.insert("seq".into(), Json::Num(self.seq as f64));
+        o.insert("mb_size".into(), Json::Num(self.mb_size as f64));
+        o.insert("schedule".into(), Json::Str(self.kind.name().into()));
+        o.insert("tp".into(), Json::Num(self.tp as f64));
+        o.insert("pp".into(), Json::Num(self.pp as f64));
+        o.insert("dp".into(), Json::Num(self.dp as f64));
+        o.insert("vpp".into(), Json::Num(self.vpp as f64));
+        o.insert("n_mb".into(), Json::Num(self.n_mb as f64));
+        o.insert("order".into(), Json::Str(self.order.name().into()));
+        let mut off = BTreeMap::new();
+        off.insert("alpha_warmup".into(), Json::Num(self.offload.alpha_warmup as f64));
+        off.insert("alpha_steady".into(), Json::Num(self.offload.alpha_steady as f64));
+        off.insert("reload_lead".into(), Json::Num(self.offload.reload_lead as f64));
+        o.insert("offload".into(), Json::Obj(off));
+        o.insert(
+            "stage_layers".into(),
+            Json::Arr(self.stage_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        o.insert(
+            "stage_vit_layers".into(),
+            Json::Arr(self.stage_vit_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        o.insert(
+            "chunk_scales".into(),
+            Json::Arr(self.chunk_scales.iter().map(|&s| Json::Num(s)).collect()),
+        );
+        o.insert("throughput".into(), Json::Num(self.throughput));
+        Json::Obj(o)
+    }
+
+    /// Strict deserialization: unknown schema, missing fields, wrong
+    /// types and inconsistent shapes are all hard errors — a plan that
+    /// fails validation must never reach the executor half-parsed.
+    pub fn from_json(v: &Json) -> Result<PlanArtifact> {
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("plan artifact: missing 'schema'"))?;
+        anyhow::ensure!(
+            schema == PLAN_SCHEMA,
+            "plan artifact: unsupported schema '{schema}' (this build reads '{PLAN_SCHEMA}')"
+        );
+        let req_str = |key: &str| -> Result<String> {
+            v.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing string '{key}'"))
+        };
+        let req_usize = |key: &str| -> Result<usize> {
+            v.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing number '{key}'"))
+        };
+        let req_f64 = |of: &Json, key: &str| -> Result<f64> {
+            of.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing number '{key}'"))
+        };
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            let arr = v
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing array '{key}'"))?;
+            arr.iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("plan artifact: non-number in '{key}'"))
+                })
+                .collect()
+        };
+
+        let kind: ScheduleKind = req_str("schedule")?
+            .parse()
+            .map_err(|e| anyhow::anyhow!("plan artifact: {e}"))?;
+        let order = match req_str("order")?.as_str() {
+            "declared" => GroupOrder::Declared,
+            "fast-first" => GroupOrder::FastFirst,
+            "interleaved" => GroupOrder::Interleaved,
+            other => anyhow::bail!("plan artifact: unknown order '{other}'"),
+        };
+        let off = v
+            .get("offload")
+            .ok_or_else(|| anyhow::anyhow!("plan artifact: missing 'offload'"))?;
+        let offload = OffloadParams {
+            alpha_warmup: req_f64(off, "alpha_warmup")? as f32,
+            alpha_steady: req_f64(off, "alpha_steady")? as f32,
+            reload_lead: off
+                .get("reload_lead")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing number 'reload_lead'"))?,
+        };
+        let chunk_scales: Vec<f64> = {
+            let arr = v
+                .get("chunk_scales")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("plan artifact: missing array 'chunk_scales'"))?;
+            arr.iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("plan artifact: non-number in 'chunk_scales'")
+                    })
+                })
+                .collect::<Result<_>>()?
+        };
+
+        let a = PlanArtifact {
+            model: req_str("model")?,
+            cluster: req_str("cluster")?,
+            seq: req_usize("seq")?,
+            mb_size: req_usize("mb_size")?,
+            kind,
+            tp: req_usize("tp")?,
+            pp: req_usize("pp")?,
+            dp: req_usize("dp")?,
+            vpp: req_usize("vpp")?,
+            n_mb: req_usize("n_mb")?,
+            order,
+            offload,
+            stage_layers: usize_arr("stage_layers")?,
+            stage_vit_layers: usize_arr("stage_vit_layers")?,
+            chunk_scales,
+            throughput: v.get("throughput").and_then(Json::as_f64).unwrap_or(0.0),
+        };
+        a.validate()?;
+        Ok(a)
+    }
+
+    /// Shape consistency (shared by `from_json` and direct constructors).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.tp >= 1 && self.pp >= 1 && self.dp >= 1 && self.vpp >= 1 && self.n_mb >= 1,
+            "plan artifact: tp/pp/dp/vpp/n_mb must be positive"
+        );
+        let chunks = self.n_chunks();
+        anyhow::ensure!(
+            self.stage_layers.len() == chunks,
+            "plan artifact: {} stage_layers for {} chunks (pp·vpp)",
+            self.stage_layers.len(),
+            chunks
+        );
+        anyhow::ensure!(
+            self.stage_vit_layers.len() == chunks,
+            "plan artifact: {} stage_vit_layers for {} chunks",
+            self.stage_vit_layers.len(),
+            chunks
+        );
+        anyhow::ensure!(
+            self.chunk_scales.len() == chunks,
+            "plan artifact: {} chunk_scales for {} chunks",
+            self.chunk_scales.len(),
+            chunks
+        );
+        anyhow::ensure!(
+            self.chunk_scales.iter().all(|&s| s.is_finite() && s > 0.0),
+            "plan artifact: chunk_scales must be positive and finite"
+        );
+        anyhow::ensure!(
+            self.stage_layers
+                .iter()
+                .zip(&self.stage_vit_layers)
+                .all(|(&lm, &vit)| lm + vit >= 1),
+            "plan artifact: every chunk needs at least one layer"
+        );
+        Ok(())
+    }
+
+    /// Write the artifact to `path` as pretty-enough JSON.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing plan artifact {path}: {e}"))
+    }
+
+    /// Load and strictly validate an artifact from `path`.
+    pub fn load(path: &str) -> Result<PlanArtifact> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading plan artifact {path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan artifact {path}: {e}"))?;
+        Self::from_json(&v).map_err(|e| anyhow::anyhow!("plan artifact {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, HardwareProfile};
+    use crate::model::ModelConfig;
+    use crate::plan::{PlanModel, PlanQuery};
+    use crate::schedule::assert_valid;
+
+    fn tiny_artifact() -> PlanArtifact {
+        let mut q = PlanQuery::new(
+            PlanModel::Llm(ModelConfig::tiny_100m()),
+            ClusterSpec::uniform(HardwareProfile::a800()),
+            4,
+        );
+        q.seq = 1024;
+        q.n_mb_options = vec![4];
+        q.threads = 2;
+        let r = crate::plan::plan(&q);
+        r.best_artifact.expect("tiny model on 4 GPUs must produce a plan")
+    }
+
+    #[test]
+    fn winning_plan_roundtrips_through_json() {
+        let a = tiny_artifact();
+        let text = a.to_json().to_string();
+        let b = PlanArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.total_layers(), ModelConfig::tiny_100m().layers);
+        assert_eq!(b.total_vit_layers(), 0);
+    }
+
+    #[test]
+    fn artifact_schedule_is_valid_and_matches_shape() {
+        let a = tiny_artifact();
+        let s = a.build_schedule();
+        assert_valid(&s);
+        assert_eq!(s.n_mb, a.n_mb);
+        assert_eq!(s.n_chunks(), a.n_chunks());
+        assert_eq!(s.kind, a.kind);
+        let sp = a.stage_plan();
+        assert_eq!(sp.num_chunks(), a.n_chunks());
+        assert!(sp.chunks[0].has_embed);
+        assert!(sp.chunks[a.n_chunks() - 1].has_head);
+    }
+
+    #[test]
+    fn strict_validation_rejects_bad_documents() {
+        let a = tiny_artifact();
+        // Unknown schema version.
+        let mut txt = a.to_json().to_string().replace(PLAN_SCHEMA, "stp-plan-v999");
+        assert!(PlanArtifact::from_json(&Json::parse(&txt).unwrap()).is_err());
+        // Missing a required field.
+        txt = a.to_json().to_string().replace("\"tp\"", "\"tp_gone\"");
+        assert!(PlanArtifact::from_json(&Json::parse(&txt).unwrap()).is_err());
+        // Inconsistent stage_layers length.
+        let mut broken = a.clone();
+        broken.stage_layers.push(1);
+        assert!(PlanArtifact::from_json(&broken.to_json()).is_err());
+        // Non-positive chunk scale.
+        let mut broken = a;
+        broken.chunk_scales[0] = 0.0;
+        assert!(PlanArtifact::from_json(&broken.to_json()).is_err());
+    }
+}

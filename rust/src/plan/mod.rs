@@ -29,12 +29,14 @@
 //! subcommand and `examples/auto_plan.rs`), [`evaluate::evaluate`] /
 //! [`evaluate::simulate_candidate`] for inspecting individual candidates.
 
+pub mod artifact;
 pub mod constraints;
 pub mod evaluate;
 pub mod report;
 pub mod search;
 pub mod space;
 
+pub use artifact::{PlanArtifact, PLAN_SCHEMA};
 pub use constraints::Reject;
 pub use evaluate::{evaluate, simulate_candidate, EvalContext, Evaluation};
 pub use report::PlanReport;

@@ -36,6 +36,10 @@ pub struct PlanReport {
     pub n_pruned_theory: usize,
     /// Simulated candidates, ranked (feasible first, throughput desc).
     pub ranked: Vec<Evaluation>,
+    /// Executable handoff for the winner (`None` when nothing fit):
+    /// serialized by `stp plan --emit-plan`, consumed by
+    /// `stp train --plan`.
+    pub best_artifact: Option<super::artifact::PlanArtifact>,
 }
 
 impl PlanReport {
@@ -214,6 +218,7 @@ mod tests {
                 eval(1, ScheduleKind::OneF1BInterleaved, 25.0, true),
                 eval(2, ScheduleKind::GPipe, 40.0, false),
             ],
+            best_artifact: None,
         }
     }
 

@@ -230,6 +230,13 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
             .then(a.candidate.id.cmp(&b.candidate.id))
     });
 
+    // The executable handoff for the winner (`stp plan --emit-plan`,
+    // `stp train --plan`).
+    let best_artifact = ranked
+        .first()
+        .filter(|e| e.feasible)
+        .map(|e| super::artifact::PlanArtifact::for_evaluation(&ctx, e));
+
     PlanReport {
         model_name: q.model.name().to_string(),
         cluster_name: q.cluster.name.clone(),
@@ -243,6 +250,7 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
         n_pruned_memory,
         n_pruned_theory,
         ranked,
+        best_artifact,
     }
 }
 

@@ -297,13 +297,17 @@ pub const NO_OP: u32 = u32::MAX;
 /// that must land before the op may start. Replay is then a single
 /// ready-queue pass in O(ops) instead of round-robin polling.
 ///
-/// The compiled replay requires producer uniqueness (at most one op
-/// performs the forward / backward of a given `(chunk, mb)`), which
-/// every builder guarantees and `validate` checks. Compilation detects
-/// violations and records them in [`CompiledSchedule::unique_producers`];
-/// the event-driven simulator falls back to the fully general
-/// `sim::reference` oracle for such schedules instead of silently
-/// mis-replaying them.
+/// When every `(chunk, mb)` forward/backward has exactly one producing
+/// op (which every builder guarantees and `validate` checks), consumers
+/// are resolved through the producer tables directly. Schedules with
+/// **duplicate producers** (recomputation-style hand-built shapes) are
+/// still replayed natively: compilation records the violation in
+/// [`CompiledSchedule::unique_producers`] and additionally builds
+/// per-slot **consumer lists** (CSR over the `(chunk, mb)` slots), so
+/// the replay can count dependencies per *edge* — the first completion
+/// of any producer of a slot releases that slot's consumers exactly
+/// once, mirroring the polling oracle's "ready as soon as some producer
+/// has finished" rule.
 #[derive(Debug, Clone, Default)]
 pub struct CompiledSchedule {
     pub n_chunks: usize,
@@ -326,9 +330,19 @@ pub struct CompiledSchedule {
     /// Chunk → executing device under the schedule's placement.
     pub chunk_dev: Vec<u32>,
     /// False when some `(chunk, mb)` forward/backward has more than one
-    /// producing op — the dependency counts are then unsound and the
-    /// event-driven replay must not use this compilation.
+    /// producing op. The producer tables then keep only the last writer,
+    /// so the replay must resolve consumers through the CSR consumer
+    /// lists below instead.
     pub unique_producers: bool,
+    /// CSR consumer lists, built only for duplicate-producer schedules
+    /// (empty otherwise): `f_cons[f_cons_start[s]..f_cons_start[s+1]]`
+    /// are the ops consuming the *forward* of slot `s` (the next chunk's
+    /// forward and the slot's own backward); `b_cons*` likewise for ops
+    /// consuming the slot's *backward* (the previous chunk's backward).
+    pub f_cons_start: Vec<u32>,
+    pub f_cons: Vec<u32>,
+    pub b_cons_start: Vec<u32>,
+    pub b_cons: Vec<u32>,
 }
 
 impl CompiledSchedule {
@@ -341,6 +355,25 @@ impl CompiledSchedule {
     #[inline]
     pub fn slot(&self, chunk: usize, mb: usize) -> usize {
         chunk * self.n_mb + mb
+    }
+
+    /// Ops consuming the forward of `slot` (duplicate-producer schedules
+    /// only; empty for unique-producer compilations).
+    #[inline]
+    pub fn f_consumers(&self, slot: usize) -> &[u32] {
+        if self.f_cons_start.is_empty() {
+            return &[];
+        }
+        &self.f_cons[self.f_cons_start[slot] as usize..self.f_cons_start[slot + 1] as usize]
+    }
+
+    /// Ops consuming the backward of `slot` (see [`Self::f_consumers`]).
+    #[inline]
+    pub fn b_consumers(&self, slot: usize) -> &[u32] {
+        if self.b_cons_start.is_empty() {
+            return &[];
+        }
+        &self.b_cons[self.b_cons_start[slot] as usize..self.b_cons_start[slot + 1] as usize]
     }
 
     /// Recompile in place, reusing every buffer (the planner compiles one
@@ -412,6 +445,58 @@ impl CompiledSchedule {
                 }
             }
             self.base_deps.push(deps);
+        }
+
+        // Pass 3 (duplicate producers only): CSR consumer lists, one entry
+        // per dependency edge counted above, so the replay can release a
+        // slot's consumers on the *first* producer completion.
+        self.f_cons_start.clear();
+        self.b_cons_start.clear();
+        self.f_cons.clear();
+        self.b_cons.clear();
+        if !self.unique_producers {
+            self.f_cons_start.resize(slots + 1, 0);
+            self.b_cons_start.resize(slots + 1, 0);
+            for op in &self.ops {
+                if let Some((c, m)) = op.forward_part() {
+                    if c > 0 {
+                        self.f_cons_start[(c - 1) * n_mb + m + 1] += 1;
+                    }
+                }
+                if let Some((c, m)) = op.backward_part() {
+                    self.f_cons_start[c * n_mb + m + 1] += 1;
+                    if c + 1 < n_chunks {
+                        self.b_cons_start[(c + 1) * n_mb + m + 1] += 1;
+                    }
+                }
+            }
+            for s in 0..slots {
+                self.f_cons_start[s + 1] += self.f_cons_start[s];
+                self.b_cons_start[s + 1] += self.b_cons_start[s];
+            }
+            self.f_cons.resize(self.f_cons_start[slots] as usize, 0);
+            self.b_cons.resize(self.b_cons_start[slots] as usize, 0);
+            let mut f_cur: Vec<u32> = self.f_cons_start[..slots].to_vec();
+            let mut b_cur: Vec<u32> = self.b_cons_start[..slots].to_vec();
+            for (j, op) in self.ops.iter().enumerate() {
+                if let Some((c, m)) = op.forward_part() {
+                    if c > 0 {
+                        let s = (c - 1) * n_mb + m;
+                        self.f_cons[f_cur[s] as usize] = j as u32;
+                        f_cur[s] += 1;
+                    }
+                }
+                if let Some((c, m)) = op.backward_part() {
+                    let s = c * n_mb + m;
+                    self.f_cons[f_cur[s] as usize] = j as u32;
+                    f_cur[s] += 1;
+                    if c + 1 < n_chunks {
+                        let s = (c + 1) * n_mb + m;
+                        self.b_cons[b_cur[s] as usize] = j as u32;
+                        b_cur[s] += 1;
+                    }
+                }
+            }
         }
     }
 }
@@ -524,6 +609,54 @@ mod tests {
         assert_eq!(c.f_producer, fresh.f_producer);
         assert_eq!(c.b_producer, fresh.b_producer);
         assert_eq!(c.dev_start, fresh.dev_start);
+    }
+
+    #[test]
+    fn unique_schedules_skip_consumer_tables() {
+        let topo = Topology::new(1, 2, 1);
+        let c = crate::schedule::build_schedule(ScheduleKind::Stp, &topo, 4).compile();
+        assert!(c.unique_producers);
+        assert!(c.f_cons_start.is_empty() && c.b_cons_start.is_empty());
+        assert!(c.f_consumers(0).is_empty() && c.b_consumers(0).is_empty());
+    }
+
+    #[test]
+    fn duplicate_producers_build_per_edge_consumer_lists() {
+        // Recomputation shape: F(0,0) twice, then the full backward; a
+        // second chunk so the cross-chunk edges exist too.
+        let topo = Topology::new(1, 2, 1).with_vpp(1);
+        let s = Schedule {
+            kind: ScheduleKind::GPipe,
+            topo,
+            n_mb: 1,
+            placement: Placement::Interleaved,
+            devices: vec![
+                vec![Op::f(0, 0), Op::f(0, 0), Op::b_full(0, 0)],
+                vec![Op::f(1, 0), Op::b_full(1, 0)],
+            ],
+        };
+        let c = s.compile();
+        assert!(!c.unique_producers);
+        // Consumers of F(0,0): F(1,0) (op 3) and B(0,0) (op 2).
+        let mut f0: Vec<u32> = c.f_consumers(c.slot(0, 0)).to_vec();
+        f0.sort_unstable();
+        assert_eq!(f0, vec![2, 3]);
+        // Consumers of F(1,0): its own backward (op 4).
+        assert_eq!(c.f_consumers(c.slot(1, 0)), &[4]);
+        // Consumers of B(1,0): B(0,0) (op 2); B(0,0) itself has none.
+        assert_eq!(c.b_consumers(c.slot(1, 0)), &[2]);
+        assert!(c.b_consumers(c.slot(0, 0)).is_empty());
+        // One CSR entry per counted cross edge.
+        let cross: u32 = c
+            .base_deps
+            .iter()
+            .enumerate()
+            .map(|(j, &d)| {
+                let dev = c.op_dev[j] as usize;
+                d - u32::from(j as u32 > c.dev_start[dev])
+            })
+            .sum();
+        assert_eq!(cross as usize, c.f_cons.len() + c.b_cons.len());
     }
 
     #[test]

@@ -223,7 +223,7 @@ pub fn build_stp_memeff(topo: &Topology, n_mb: usize, costs: ShapeCosts, chunk_s
 }
 
 /// Offloading parameters for the enhanced variant (§4.4).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OffloadParams {
     /// Warm-up offload ratio (constrained so `T_o < T_F`).
     pub alpha_warmup: f32,

@@ -53,6 +53,12 @@ pub struct SimArena {
     offload_done: Vec<f64>,
     pcie_time: Vec<f64>,
     pcie_busy: Vec<f64>,
+    // Per-slot "already released my consumers" flags — only used for
+    // duplicate-producer schedules (per-edge dependency counting: the
+    // first completion of any producer of a slot releases its consumers
+    // exactly once).
+    f_emitted: Vec<bool>,
+    b_emitted: Vec<bool>,
     // Timing memo (reset per run — the cost model may change between
     // runs): plain passes by (pass kind, chunk), braided blocks by
     // (b_full, f_chunk, b_chunk), F&W braids by (f_chunk, w_chunk).
@@ -219,6 +225,8 @@ impl<'a> Simulator<'a> {
             offload_done,
             pcie_time,
             pcie_busy,
+            f_emitted,
+            b_emitted,
             timing_plain,
             timing_braided,
             timing_braided_fw,
@@ -226,22 +234,6 @@ impl<'a> Simulator<'a> {
         } = arena;
 
         compiled.compile_from(s);
-        if !compiled.unique_producers {
-            // Duplicate F/B producers (e.g. recomputation-style hand-built
-            // schedules): outside the compiled replay's contract, so the
-            // dependency counts would be unsound. Delegate to the fully
-            // general polling oracle, whose semantics this core
-            // reproduces, instead of silently mis-replaying.
-            let mut oracle = super::reference::Simulator::new(self.cost);
-            if let Some(v) = self.explicit_p2p {
-                oracle = oracle.with_explicit_p2p(v);
-            }
-            let mut r = oracle.try_run(s)?;
-            if !self.trace {
-                r.events = Vec::new();
-            }
-            return Ok(r);
-        }
         self.cost.hop_table_into(s, hops);
         let c: &CompiledSchedule = compiled;
         let n_chunks = c.n_chunks;
@@ -268,6 +260,11 @@ impl<'a> Simulator<'a> {
         reset(offload_done, slots, 0.0);
         reset(pcie_time, n_dev, 0.0);
         reset(pcie_busy, n_dev, 0.0);
+        let unique = c.unique_producers;
+        if !unique {
+            reset(f_emitted, slots, false);
+            reset(b_emitted, slots, false);
+        }
         reset(timing_plain, 4 * n_chunks, None);
         reset(timing_braided, 2 * n_chunks * n_chunks, None);
         reset(timing_braided_fw, n_chunks * n_chunks, None);
@@ -409,23 +406,58 @@ impl<'a> Simulator<'a> {
                 }
             }
 
-            // --- completion: release program successor and consumers ----
+            // --- completion: release consumers, then the program
+            // successor. The successor is released *last* so the LIFO
+            // ready stack pops it first — the same greedy
+            // advance-this-device-as-far-as-possible order the polling
+            // oracle's rescan loop produces, which is what keeps the
+            // done-time overwrites of duplicate-producer schedules
+            // bit-aligned with it.
             remaining -= 1;
             done_per_dev[d] += 1;
+            if unique {
+                // Single producer per slot: its consumers are the next
+                // chunk's forward producer and the slot's own backward
+                // producer, resolved through the producer tables.
+                if let Some((cc, m)) = op.forward_part() {
+                    if cc + 1 < n_chunks {
+                        dec(n_deps, ready, c.f_producer[(cc + 1) * n_mb + m]);
+                    }
+                    dec(n_deps, ready, c.b_producer[cc * n_mb + m]);
+                }
+                if let Some((cc, m)) = op.backward_part() {
+                    if cc > 0 {
+                        dec(n_deps, ready, c.b_producer[(cc - 1) * n_mb + m]);
+                    }
+                }
+            } else {
+                // Duplicate producers (recomputation-style schedules):
+                // per-edge counting through the CSR consumer lists. The
+                // first producer to complete releases the slot's
+                // consumers; later producers only refresh the done time —
+                // exactly the polling oracle's readiness rule.
+                if let Some((cc, m)) = op.forward_part() {
+                    let slot = cc * n_mb + m;
+                    if !f_emitted[slot] {
+                        f_emitted[slot] = true;
+                        for &k in c.f_consumers(slot) {
+                            dec(n_deps, ready, k);
+                        }
+                    }
+                }
+                if let Some((cc, m)) = op.backward_part() {
+                    let slot = cc * n_mb + m;
+                    if !b_emitted[slot] {
+                        b_emitted[slot] = true;
+                        for &k in c.b_consumers(slot) {
+                            dec(n_deps, ready, k);
+                        }
+                    }
+                }
+            }
             let next = id + 1;
             if next < c.dev_start[d + 1] {
                 dec(n_deps, ready, next);
-            }
-            if let Some((cc, m)) = op.forward_part() {
-                if cc + 1 < n_chunks {
-                    dec(n_deps, ready, c.f_producer[(cc + 1) * n_mb + m]);
-                }
-                dec(n_deps, ready, c.b_producer[cc * n_mb + m]);
-            }
-            if let Some((cc, m)) = op.backward_part() {
-                if cc > 0 {
-                    dec(n_deps, ready, c.b_producer[(cc - 1) * n_mb + m]);
-                }
             }
         }
 

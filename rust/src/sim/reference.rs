@@ -2,10 +2,11 @@
 //!
 //! Each round rescans every device and retries its next op until nothing
 //! advances (quadratic in the worst case). The event-driven core in
-//! [`super::engine`] replaces it on every hot path; this module survives
-//! so the golden equivalence suite (`tests/sim_equivalence.rs`) can prove
-//! the rewrite bit-identical, and as the fully general fallback that
-//! assumes nothing about producer uniqueness.
+//! [`super::engine`] replaces it on every path — including
+//! duplicate-producer schedules, replayed natively via per-edge
+//! dependency counting; this module survives so the golden equivalence
+//! suite (`tests/sim_equivalence.rs`) can prove the rewrite
+//! bit-identical against a core that assumes nothing about the program.
 
 use crate::schedule::{Op, PassKind, Schedule, ScheduleKind};
 

@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use stp::exec::{train, TrainConfig};
+use stp::exec::{train, BackendKind, TrainConfig};
 use stp::schedule::ScheduleKind;
 
 fn have_artifacts() -> bool {
@@ -16,6 +16,7 @@ fn have_artifacts() -> bool {
 
 fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
     TrainConfig {
+        backend: BackendKind::Pjrt,
         artifacts_dir: PathBuf::from("artifacts/test"),
         schedule: kind,
         n_mb: 4,
@@ -23,6 +24,8 @@ fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
         lr: 0.3,
         seed: 42,
         verbose: false,
+        dims: None,
+        plan: None,
     }
 }
 

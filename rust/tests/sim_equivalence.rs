@@ -177,11 +177,12 @@ fn deadlock_is_an_error_in_both_cores() {
 }
 
 #[test]
-fn duplicate_producers_fall_back_to_the_oracle() {
+fn duplicate_producers_replay_natively_and_match_the_oracle() {
     // Two ops produce F(0,0) — a recomputation-style shape no builder
-    // emits. That is outside the compiled replay's contract (producer
-    // tables keep one writer), so the event-driven core must delegate to
-    // the general oracle and still match it, not mis-replay silently.
+    // emits. The compiled replay handles it natively (per-edge dependency
+    // counting through CSR consumer lists: the first producer completion
+    // releases the slot's consumers, later ones only refresh the done
+    // time) and must still match the polling oracle bit-for-bit.
     let m = ModelConfig::qwen2_12b();
     let cluster = ClusterSpec::uniform(HardwareProfile::a800());
     let topo = Topology::new(1, 1, 1).with_vpp(1); // one chunk, one device
@@ -201,6 +202,37 @@ fn duplicate_producers_fall_back_to_the_oracle() {
     let oracle = reference::Simulator::new(&cost).run(&s);
     let event = Simulator::new(&cost).run(&s);
     assert_bit_identical(&oracle, &event, "duplicate producers");
+}
+
+#[test]
+fn duplicate_producers_across_stages_match_the_oracle() {
+    // Duplicate producers with real cross-stage edges: device 0 recomputes
+    // F(0,0) before its full backward while device 1 runs the steady
+    // F(1,0)/B(1,0) pair. Program order keeps one writer per device, so
+    // the event core's first-completion rule reproduces the oracle's
+    // polling times exactly.
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(1, 2, 1).with_vpp(1);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 2048, 1);
+    let s = Schedule {
+        kind: ScheduleKind::GPipe,
+        topo,
+        n_mb: 1,
+        placement: Placement::Interleaved,
+        devices: vec![
+            vec![
+                stp::schedule::Op::f(0, 0),
+                stp::schedule::Op::f(0, 0),
+                stp::schedule::Op::b_full(0, 0),
+            ],
+            vec![stp::schedule::Op::f(1, 0), stp::schedule::Op::b_full(1, 0)],
+        ],
+    };
+    assert!(!s.compile().unique_producers);
+    let oracle = reference::Simulator::new(&cost).run(&s);
+    let event = Simulator::new(&cost).run(&s);
+    assert_bit_identical(&oracle, &event, "duplicate producers across stages");
 }
 
 #[test]
