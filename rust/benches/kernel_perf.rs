@@ -1,0 +1,131 @@
+//! Bench: naive vs cache-blocked GEMM microkernels in isolation, on the
+//! shapes the nine AOT units actually hit (DESIGN.md §11) — so kernel
+//! regressions are visible without running the whole executor.
+//!
+//! Shapes are taken from the python `test` preset
+//! (rows = mb·seq = 32, d = 64, per-rank ffn = 48, vocab = 256) and the
+//! `--virtual-scale auto` proxy on a big host (rows = 32, d = 128,
+//! ffn = 256, vocab = 256), for each of the three layouts: `A·B`
+//! (forwards/projections), `Aᵀ·B` (weight grads), `A·Bᵀ` (input grads).
+//! The two paths are bit-equal (asserted here per shape), so the
+//! comparison is purely speed.
+//!
+//! `cargo bench --bench kernel_perf`
+
+use std::time::Instant;
+
+use stp::exec::kernels::{gemm, reference};
+use stp::exec::{Rng, Workspace};
+
+fn randn(seed: u64, n: usize) -> Vec<f32> {
+    Rng::for_purpose(7, seed, 3, 0).normal_vec(n, 1.0)
+}
+
+fn median_secs(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+/// Time `f` (median of `reps` runs after one warm-up).
+fn time(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    median_secs(times)
+}
+
+fn main() {
+    // (label, layout, n, k, m): the unit GEMMs at `test`-preset dims and
+    // at the auto-scaled proxy. rows = mb·seq; qkv/ffn/head projections.
+    let cases: &[(&str, &str, usize, usize, usize)] = &[
+        ("qkv proj (test)", "ab", 32, 64, 64),
+        ("ffn up (test)", "ab", 32, 64, 48),
+        ("ffn down (test)", "ab", 32, 48, 64),
+        ("head logits (test)", "ab", 32, 64, 256),
+        ("head dx (test)", "abt", 32, 256, 64),
+        ("head dw (test)", "atb", 32, 64, 256),
+        ("ffn dw (test)", "atb", 32, 64, 48),
+        ("ffn dx (test)", "abt", 32, 48, 64),
+        ("ffn up (scaled)", "ab", 32, 128, 256),
+        ("ffn down (scaled)", "ab", 32, 256, 128),
+        ("head logits (scaled)", "ab", 32, 128, 256),
+        ("head dx (scaled)", "abt", 32, 256, 128),
+        ("head dw (scaled)", "atb", 32, 128, 256),
+        ("big square", "ab", 256, 256, 256),
+        ("big dx", "abt", 256, 1024, 256),
+        ("big dw", "atb", 256, 256, 1024),
+    ];
+
+    let mut ws = Workspace::new();
+    // Checksum defeats dead-code elimination without `black_box` (which
+    // would raise the crate's MSRV).
+    let mut sink = 0.0f64;
+    println!(
+        "{:22} {:>4} {:>14} {:>11} {:>11} {:>9} {:>9} {:>8}",
+        "gemm", "lay", "n x k x m", "naive µs", "blocked µs", "naive GF", "blkd GF", "speedup"
+    );
+    for &(label, lay, n, k, m) in cases {
+        let reps = (1 << 22) / (n * k * m).max(1) + 3;
+        let (a, b) = match lay {
+            "ab" => (randn(1, n * k), randn(2, k * m)),
+            "atb" => (randn(3, k * n), randn(4, k * m)),
+            _ => (randn(5, n * k), randn(6, m * k)),
+        };
+        let mut out = vec![0.0f32; n * m];
+
+        let naive_s = time(reps, || {
+            let got = match lay {
+                "ab" => reference::matmul(&a, &b, n, k, m),
+                "atb" => reference::matmul_at(&a, &b, k, n, m),
+                _ => reference::matmul_bt(&a, &b, n, k, m),
+            };
+            sink += got[0] as f64;
+        });
+        let blocked_s = time(reps, || {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            match lay {
+                "ab" => gemm::matmul(&mut ws, &a, &b, n, k, m, &mut out),
+                "atb" => gemm::matmul_at(&mut ws, &a, &b, k, n, m, &mut out),
+                _ => gemm::matmul_bt(&mut ws, &a, &b, n, k, m, &mut out),
+            }
+            sink += out[0] as f64;
+        });
+
+        // Bit-parity sanity on the benched shape.
+        let want = match lay {
+            "ab" => reference::matmul(&a, &b, n, k, m),
+            "atb" => reference::matmul_at(&a, &b, k, n, m),
+            _ => reference::matmul_bt(&a, &b, n, k, m),
+        };
+        out.iter_mut().for_each(|v| *v = 0.0);
+        match lay {
+            "ab" => gemm::matmul(&mut ws, &a, &b, n, k, m, &mut out),
+            "atb" => gemm::matmul_at(&mut ws, &a, &b, k, n, m, &mut out),
+            _ => gemm::matmul_bt(&mut ws, &a, &b, n, k, m, &mut out),
+        }
+        assert!(
+            want.iter().zip(&out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{label}: blocked result diverged from naive"
+        );
+
+        let flops = 2.0 * (n * k * m) as f64;
+        println!(
+            "{:22} {:>4} {:>4}x{:>4}x{:>4} {:>11.1} {:>11.1} {:>9.2} {:>9.2} {:>7.2}x",
+            label,
+            lay,
+            n,
+            k,
+            m,
+            naive_s * 1e6,
+            blocked_s * 1e6,
+            flops / naive_s / 1e9,
+            flops / blocked_s / 1e9,
+            naive_s / blocked_s
+        );
+    }
+    eprintln!("(checksum {sink:.3})");
+}

@@ -35,7 +35,7 @@ fn main() {
     let wg = Tensor::f32(vec![0.01; d.d * d.ffn_per_rank()], &[d.d, d.ffn_per_rank()]);
     let wu = wg.clone();
     let wd = Tensor::f32(vec![0.01; d.ffn_per_rank() * d.d], &[d.ffn_per_rank(), d.d]);
-    let gemm_args = [x, g2, wg, wu, wd];
+    let gemm_args = [&x, &g2, &wg, &wu, &wd];
 
     let reps = 30;
     for (label, ar_elems) in [("GEMM dominates", 1usize << 14), ("AR dominates", 1usize << 22)] {

@@ -648,6 +648,118 @@ pub fn plan_mixed() -> String {
     )
 }
 
+/// `stp bench train` — the executor perf trajectory: time real virtual
+/// training across schedule kinds on the python `test` preset's dims
+/// (`python/compile/config.py::TEST`), with the naive
+/// `kernels::reference` path as the baseline, and record tokens/sec +
+/// per-step seconds in `BENCH_train_virtual.json` at the repo root so
+/// later PRs can prove they don't regress the hot path. `quick` trims
+/// the schedule sweep (the CI perf-smoke mode).
+pub fn train_virtual(quick: bool) -> String {
+    use std::collections::BTreeMap;
+
+    use crate::config::json::Json;
+    use crate::config::ManifestDims;
+    use crate::exec::{train, KernelPath, TrainConfig};
+
+    // The python `test` preset: miniature Qwen2 family, tp2·pp2·vpp2.
+    let dims = ManifestDims::test_preset();
+    let n_mb = 8;
+    let steps = if quick { 3 } else { 4 };
+    // vpp = 2 dims ⇒ the vpp-2 schedule families plus GPipe (which keeps
+    // arbitrary vpp); 1f1b/zb-h1 rebuild the topo at vpp = 1 and would
+    // not match the preset's chunk grid.
+    let kinds: &[ScheduleKind] = if quick {
+        &[ScheduleKind::Stp, ScheduleKind::ZbV]
+    } else {
+        &[ScheduleKind::Stp, ScheduleKind::ZbV, ScheduleKind::GPipe, ScheduleKind::StpMemEff]
+    };
+
+    let run_one = |kind: ScheduleKind, path: KernelPath| {
+        let mut cfg = TrainConfig::virtual_default();
+        cfg.schedule = kind;
+        cfg.steps = steps;
+        cfg.n_mb = n_mb;
+        cfg.dims = Some(dims.clone());
+        cfg.kernels = path;
+        train(&cfg).expect("virtual training failed in bench")
+    };
+
+    let mut t = Table::new(vec![
+        "schedule", "kernels", "tokens/s", "per-step s", "ws peak KB", "speedup",
+    ]);
+    let mut entries: Vec<Json> = Vec::new();
+    let mut speedup_stp = 0.0f64;
+    for &kind in kinds {
+        // The reference baseline runs once per kind (it is the slow leg).
+        let mut baseline_tps = 0.0f64;
+        for path in [KernelPath::Reference, KernelPath::Blocked] {
+            let r = run_one(kind, path);
+            // Steady-state: step 0 (spawn + arena warm-up) excluded.
+            let tps = r.tokens_per_sec(n_mb, dims.mb, dims.seq);
+            let speedup = match path {
+                KernelPath::Reference => {
+                    baseline_tps = tps;
+                    1.0
+                }
+                KernelPath::Blocked => tps / baseline_tps.max(1e-12),
+            };
+            if kind == ScheduleKind::Stp && path == KernelPath::Blocked {
+                speedup_stp = speedup;
+            }
+            let per_step: Vec<f64> = r.steps.iter().map(|s| s.secs).collect();
+            let ws_peak = r.workspace_peak_bytes.iter().copied().max().unwrap_or(0);
+            t.row(vec![
+                kind.name().to_string(),
+                path.name().to_string(),
+                format!("{tps:.0}"),
+                per_step.iter().skip(1).map(|s| format!("{s:.4}")).collect::<Vec<_>>().join(" "),
+                (ws_peak / 1024).to_string(),
+                format!("{speedup:.2}x"),
+            ]);
+            let mut o = BTreeMap::new();
+            o.insert("schedule".to_string(), Json::Str(kind.name().into()));
+            o.insert("kernels".to_string(), Json::Str(path.name().into()));
+            o.insert("tokens_per_sec".to_string(), Json::Num(tps));
+            o.insert(
+                "per_step_secs".to_string(),
+                Json::Arr(per_step.iter().map(|&s| Json::Num(s)).collect()),
+            );
+            o.insert("workspace_peak_bytes".to_string(), Json::Num(ws_peak as f64));
+            o.insert(
+                "workspace_steady_allocs".to_string(),
+                Json::Num(r.workspace_steady_allocs as f64),
+            );
+            o.insert("speedup_vs_reference".to_string(), Json::Num(speedup));
+            o.insert("first_loss".to_string(), Json::Num(r.first_loss() as f64));
+            o.insert("last_loss".to_string(), Json::Num(r.last_loss() as f64));
+            entries.push(Json::Obj(o));
+        }
+    }
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("train_virtual".into()));
+    root.insert("preset".to_string(), Json::Str("test".into()));
+    root.insert("quick".to_string(), Json::Bool(quick));
+    root.insert("n_mb".to_string(), Json::Num(n_mb as f64));
+    root.insert("steps".to_string(), Json::Num(steps as f64));
+    root.insert(
+        "tokens_per_step".to_string(),
+        Json::Num((n_mb * dims.mb * dims.seq) as f64),
+    );
+    root.insert("entries".to_string(), Json::Arr(entries));
+    let path = "BENCH_train_virtual.json";
+    let note = match std::fs::write(path, Json::Obj(root).to_string()) {
+        Ok(()) => format!("wrote {path}"),
+        Err(e) => format!("could not write {path}: {e}"),
+    };
+    format!(
+        "== train-virtual perf: blocked+arena kernels vs naive reference (test preset, \
+         tp2-pp2-vpp2, m{n_mb})\n{}\nstp blocked-vs-reference speedup: {speedup_stp:.2}x\n{note}",
+        t.render()
+    )
+}
+
 /// Run every regenerator (the `stp bench all` target).
 pub fn all() -> String {
     [
@@ -690,6 +802,8 @@ pub fn by_name(name: &str) -> Option<String> {
         "plan-perf" => plan_perf(false),
         "plan-quick" | "plan-perf-quick" => plan_perf(true),
         "plan-mixed" | "plan-hetero" => plan_mixed(),
+        "train" | "train-perf" => train_virtual(false),
+        "train-quick" => train_virtual(true),
         "all" => all(),
         _ => return None,
     })

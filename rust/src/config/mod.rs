@@ -68,6 +68,26 @@ pub struct ManifestDims {
 }
 
 impl ManifestDims {
+    /// The python `test` preset (`python/compile/config.py::TEST`) — the
+    /// miniature Qwen2-family dims the AOT pytest suite lowers. Single
+    /// source for everything rust-side that claims to mirror it
+    /// (`stp bench train`, the kernel parity suite).
+    pub fn test_preset() -> ManifestDims {
+        ManifestDims {
+            vocab: 256,
+            d: 64,
+            q_heads: 4,
+            kv_heads: 2,
+            ffn: 96,
+            layers: 4,
+            seq: 16,
+            mb: 2,
+            tp: 2,
+            pp: 2,
+            vpp: 2,
+        }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.d / self.q_heads
     }

@@ -21,7 +21,7 @@ USAGE:
                [--cluster mixed|FILE.json]
   stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
                 table8|fig13|table9|table10|table11|plan|plan-mixed|
-                plan-perf|plan-quick|all>
+                plan-perf|plan-quick|train|train-quick|all>
   stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
                [--chrome FILE] [--all-schedules] [--cluster mixed|FILE.json]
   stp validate [--schedule KIND] [--pp N] [--mb N]
@@ -31,6 +31,7 @@ USAGE:
                [--search exhaustive|beam] [--beam-width N]
                [--emit-plan FILE.json]
   stp train    [--plan FILE.json] [--backend virtual|pjrt]
+               [--kernels blocked|reference] [--virtual-scale auto|F]
                [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
                [--lr F] [--seed N] [--quiet]
 
@@ -41,7 +42,11 @@ Training:  the virtual backend (default) runs everywhere on miniature
            deterministic tensors; --backend pjrt executes AOT artifacts
            from --artifacts and needs the `pjrt` feature. --plan replays
            a `stp plan --emit-plan` artifact (schedule, topology, layer
-           split) through the executor.
+           split) through the executor. --kernels reference selects the
+           naive oracle kernels (bit-equal, slow — the bench baseline);
+           --virtual-scale widens the proxy model by an integer width
+           factor (fractional values round to the nearest factor;
+           auto = match the host's core count).
 ";
 
 /// Parse `--key value` pairs after the subcommand.
@@ -324,18 +329,36 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
 fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
     use std::path::PathBuf;
 
-    use crate::exec::{train, BackendKind, TrainConfig};
+    use crate::exec::{host_virtual_scale, train, BackendKind, KernelPath, TrainConfig};
     use crate::plan::PlanArtifact;
 
     let backend: BackendKind = flag::<String>(flags, "backend", "virtual".into())
         .parse()
         .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let kernels: KernelPath = flag::<String>(flags, "kernels", "blocked".into())
+        .parse()
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let virtual_scale = match flags.get("virtual-scale").map(String::as_str) {
+        None => 1.0,
+        Some("auto") => host_virtual_scale(),
+        Some(v) => {
+            let s: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("bad --virtual-scale '{v}' (expected 'auto' or a number ≥ 1)")
+            })?;
+            anyhow::ensure!(s.is_finite() && s >= 1.0, "--virtual-scale must be ≥ 1, got {s}");
+            if s.round() != s {
+                eprintln!("--virtual-scale {s} rounds to the integer width factor {}", s.round());
+            }
+            s
+        }
+    };
     let plan_artifact = match flags.get("plan") {
         Some(path) => Some(PlanArtifact::load(path)?),
         None => None,
     };
     let cfg = TrainConfig {
         backend,
+        kernels,
         artifacts_dir: PathBuf::from(flag::<String>(
             flags,
             "artifacts",
@@ -350,6 +373,7 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         seed: flag(flags, "seed", 42u64),
         verbose: !flags.contains_key("quiet"),
         dims: None,
+        virtual_scale,
         plan: plan_artifact,
     };
     let what = match &cfg.plan {
@@ -358,10 +382,12 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
     };
     let report = train(&cfg)?;
     println!(
-        "trained {} steps ({what}, {} backend): loss {:.4} -> {:.4}, {:.1}s wall, \
-         {} unit execs, {:.1} MB all-reduced, peak act/stage {:?} MB",
+        "trained {} steps ({what}, {} backend, {} kernels): loss {:.4} -> {:.4}, {:.1}s wall, \
+         {} unit execs, {:.1} MB all-reduced, peak act/stage {:?} MB, \
+         ws peak/stage {:?} KB ({} steady allocs)",
         report.steps.len(),
         report.backend.name(),
+        cfg.kernels.name(),
         report.first_loss(),
         report.last_loss(),
         report.wall_secs,
@@ -372,6 +398,12 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
             .iter()
             .map(|b| (b / 1_000_000).to_string())
             .collect::<Vec<_>>(),
+        report
+            .workspace_peak_bytes
+            .iter()
+            .map(|b| (b / 1024).to_string())
+            .collect::<Vec<_>>(),
+        report.workspace_steady_allocs,
     );
     anyhow::ensure!(report.last_loss().is_finite(), "training diverged: non-finite loss");
     Ok(0)

@@ -6,10 +6,17 @@
 //! while everything *numerical* goes through one seam: [`Backend::run`],
 //! keyed by the nine AOT unit names (`python/compile/aot.py`).
 //!
+//! `run` **borrows** its inputs (`&[&Tensor]`): the engine hands weight
+//! and activation tensors straight from its parameter tables and
+//! activation store, so the per-op clones the pre-arena executor paid
+//! (a full weight copy per layer per microbatch per step) are gone.
+//!
 //! * [`VirtualBackend`] — always compiled: deterministic host tensors
-//!   through the reference-kernel math in [`super::kernels`]. This is
-//!   what makes the executor (and the planner→executor handoff)
-//!   testable in the default offline build.
+//!   through the kernels in [`super::kernels`], either the cache-blocked
+//!   workspace-backed hot path ([`KernelPath::Blocked`], default) or the
+//!   preserved naive oracle ([`KernelPath::Reference`]). The two paths
+//!   are bit-equal (DESIGN.md §11), so the switch is a perf baseline,
+//!   not a numerics choice.
 //! * `PjrtBackend` (feature `pjrt`) — a thin adapter over
 //!   [`crate::runtime::Runtime`]: AOT HLO artifacts executed through
 //!   PJRT, exactly the pre-refactor path.
@@ -21,6 +28,7 @@ use crate::runtime::Tensor;
 use crate::Result;
 
 use super::kernels;
+use super::workspace::{Workspace, WorkspaceStats};
 
 /// Which execution backend a training run uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,44 +60,110 @@ impl FromStr for BackendKind {
     }
 }
 
+/// Which kernel implementation the virtual backend computes with. Both
+/// paths produce bit-identical tensors; `Reference` exists as the
+/// parity oracle and the bench baseline (`stp bench train`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Cache-blocked GEMM microkernels over the per-thread workspace
+    /// arena — the hot path.
+    Blocked,
+    /// The preserved naive kernels (`kernels::reference`): fresh
+    /// allocations per op, triple-loop GEMMs.
+    Reference,
+}
+
+impl KernelPath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Blocked => "blocked",
+            KernelPath::Reference => "reference",
+        }
+    }
+}
+
+impl FromStr for KernelPath {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "blocked" | "fast" | "arena" => Ok(KernelPath::Blocked),
+            "reference" | "naive" | "ref" => Ok(KernelPath::Reference),
+            other => Err(format!("unknown kernel path '{other}' (expected blocked|reference)")),
+        }
+    }
+}
+
 /// One device thread's compute provider: executes a named unit over host
 /// tensors. Implementations are constructed per OS thread (the PJRT
 /// wrapper types are `!Send`), so the trait needs no `Send` bound.
 pub trait Backend {
-    /// Execute unit `name` (an AOT artifact name) on `args`.
-    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>>;
+    /// Execute unit `name` (an AOT artifact name) on borrowed `args`.
+    fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>>;
     /// Cumulative unit executions (metrics).
     fn executions(&self) -> u64;
     /// Stable backend label for reports.
     fn kind(&self) -> BackendKind;
+    /// Scratch-arena counters, if this backend owns one (the virtual
+    /// backend's zero-steady-state-allocation contract is asserted
+    /// through this).
+    fn workspace_stats(&self) -> Option<WorkspaceStats> {
+        None
+    }
 }
 
-/// The deterministic no-PJRT backend: reference-kernel math on host
-/// tensors, shaped by the run's [`ManifestDims`].
+/// The deterministic no-PJRT backend: host kernels shaped by the run's
+/// [`ManifestDims`], with a per-thread [`Workspace`] scratch arena.
 pub struct VirtualBackend {
     dims: ManifestDims,
+    ws: Workspace,
+    path: KernelPath,
     executions: u64,
 }
 
 impl VirtualBackend {
     pub fn new(dims: ManifestDims) -> VirtualBackend {
-        VirtualBackend { dims, executions: 0 }
+        VirtualBackend::with_path(dims, KernelPath::Blocked)
+    }
+
+    pub fn with_path(dims: ManifestDims, path: KernelPath) -> VirtualBackend {
+        VirtualBackend { dims, ws: Workspace::new(), path, executions: 0 }
+    }
+
+    pub fn kernel_path(&self) -> KernelPath {
+        self.path
     }
 }
 
 impl Backend for VirtualBackend {
-    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
-        let out = match name {
-            "attn_fwd" => kernels::attn_fwd(args, &self.dims),
-            "attn_bwd_x" => kernels::attn_bwd_x(args, &self.dims),
-            "attn_bwd_w" => kernels::attn_bwd_w(args, &self.dims),
-            "mlp_fwd" => kernels::mlp_fwd(args, &self.dims),
-            "mlp_bwd_x" => kernels::mlp_bwd_x(args, &self.dims),
-            "mlp_bwd_w" => kernels::mlp_bwd_w(args, &self.dims),
-            "embed_fwd" => kernels::embed_fwd(args),
-            "embed_bwd" => kernels::embed_bwd(args, &self.dims),
-            "head_loss_grad" => kernels::head_loss_grad(args),
-            other => anyhow::bail!("virtual backend: unknown unit '{other}'"),
+    fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let out = match self.path {
+            KernelPath::Blocked => {
+                let ws = &mut self.ws;
+                match name {
+                    "attn_fwd" => kernels::attn_fwd(args, &self.dims, ws),
+                    "attn_bwd_x" => kernels::attn_bwd_x(args, &self.dims, ws),
+                    "attn_bwd_w" => kernels::attn_bwd_w(args, &self.dims, ws),
+                    "mlp_fwd" => kernels::mlp_fwd(args, &self.dims, ws),
+                    "mlp_bwd_x" => kernels::mlp_bwd_x(args, &self.dims, ws),
+                    "mlp_bwd_w" => kernels::mlp_bwd_w(args, &self.dims, ws),
+                    "embed_fwd" => kernels::embed_fwd(args),
+                    "embed_bwd" => kernels::embed_bwd(args, &self.dims),
+                    "head_loss_grad" => kernels::head_loss_grad(args, ws),
+                    other => anyhow::bail!("virtual backend: unknown unit '{other}'"),
+                }
+            }
+            KernelPath::Reference => match name {
+                "attn_fwd" => kernels::reference::attn_fwd(args, &self.dims),
+                "attn_bwd_x" => kernels::reference::attn_bwd_x(args, &self.dims),
+                "attn_bwd_w" => kernels::reference::attn_bwd_w(args, &self.dims),
+                "mlp_fwd" => kernels::reference::mlp_fwd(args, &self.dims),
+                "mlp_bwd_x" => kernels::reference::mlp_bwd_x(args, &self.dims),
+                "mlp_bwd_w" => kernels::reference::mlp_bwd_w(args, &self.dims),
+                "embed_fwd" => kernels::reference::embed_fwd(args),
+                "embed_bwd" => kernels::reference::embed_bwd(args, &self.dims),
+                "head_loss_grad" => kernels::reference::head_loss_grad(args),
+                other => anyhow::bail!("virtual backend: unknown unit '{other}'"),
+            },
         }?;
         self.executions += 1;
         Ok(out)
@@ -101,6 +175,10 @@ impl Backend for VirtualBackend {
 
     fn kind(&self) -> BackendKind {
         BackendKind::Virtual
+    }
+
+    fn workspace_stats(&self) -> Option<WorkspaceStats> {
+        Some(self.ws.stats())
     }
 }
 
@@ -134,7 +212,7 @@ impl PjrtBackend {
 
 #[cfg(feature = "pjrt")]
 impl Backend for PjrtBackend {
-    fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+    fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.rt.run(name, args)
     }
 
@@ -152,9 +230,10 @@ pub(crate) fn make_backend(
     kind: BackendKind,
     manifest: Option<&crate::config::Manifest>,
     dims: &ManifestDims,
+    path: KernelPath,
 ) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Virtual => Ok(Box::new(VirtualBackend::new(dims.clone()))),
+        BackendKind::Virtual => Ok(Box::new(VirtualBackend::with_path(dims.clone(), path))),
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
             let m = manifest
@@ -177,13 +256,30 @@ pub(crate) fn make_backend(
 /// plan's, so the choreography (thread grid, channels, collectives,
 /// per-chunk parameter shapes) is exercised at negligible per-op cost.
 pub fn virtual_dims(tp: usize, pp: usize, vpp: usize, layers: usize) -> ManifestDims {
+    virtual_dims_scaled(tp, pp, vpp, layers, 1.0)
+}
+
+/// [`virtual_dims`] with a width multiplier: `scale` (rounded to an
+/// integer factor ≥ 1) multiplies the hidden and ffn widths, preserving
+/// every TP divisibility rule. `scale = 1.0` is exactly the classic
+/// miniature proxy; larger factors make the per-op tensors big enough to
+/// be meaningful on beefy hosts (`stp train --virtual-scale auto`).
+pub fn virtual_dims_scaled(
+    tp: usize,
+    pp: usize,
+    vpp: usize,
+    layers: usize,
+    scale: f64,
+) -> ManifestDims {
     assert!(tp >= 1 && pp >= 1 && vpp >= 1);
+    assert!(scale.is_finite() && scale >= 1.0, "virtual scale must be ≥ 1, got {scale}");
+    let f = scale.round().max(1.0) as usize;
     ManifestDims {
         vocab: 256,
-        d: 8 * tp,
+        d: 8 * tp * f,
         q_heads: 2 * tp,
         kv_heads: tp,
-        ffn: 16 * tp,
+        ffn: 16 * tp * f,
         layers,
         seq: 16,
         mb: 2,
@@ -191,6 +287,14 @@ pub fn virtual_dims(tp: usize, pp: usize, vpp: usize, layers: usize) -> Manifest
         pp,
         vpp,
     }
+}
+
+/// Width factor matched to this host: 1 on small CI runners, growing
+/// with the core count so big machines exercise non-trivial tensors
+/// (clamped to 8 ⇒ d = 64·tp at most).
+pub fn host_virtual_scale() -> f64 {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+    (cores as f64 / 8.0).clamp(1.0, 8.0)
 }
 
 #[cfg(test)]
@@ -205,68 +309,80 @@ mod tests {
     }
 
     #[test]
-    fn virtual_backend_serves_every_unit_name() {
-        let dims = virtual_dims(1, 1, 1, 1);
-        let mut b = VirtualBackend::new(dims.clone());
-        // Shapes per the AOT signatures at these dims.
-        let d = dims.d;
-        let x = Tensor::f32(vec![0.1; dims.mb * dims.seq * d], &[dims.mb, dims.seq, d]);
-        let g = Tensor::f32(vec![1.0; d], &[d]);
-        let qr = dims.q_heads_per_rank() * dims.head_dim();
-        let kr = dims.kv_heads_per_rank() * dims.head_dim();
-        let fr = dims.ffn_per_rank();
-        let wq = Tensor::f32(vec![0.1; d * qr], &[d, qr]);
-        let wk = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
-        let wv = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
-        let wo = Tensor::f32(vec![0.1; qr * d], &[qr, d]);
-        let wg = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
-        let wu = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
-        let wd = Tensor::f32(vec![0.1; fr * d], &[fr, d]);
-        let tok = Tensor::i32(vec![3; dims.mb * dims.seq], &[dims.mb, dims.seq]);
-        let emb = Tensor::f32(vec![0.1; dims.vocab * d], &[dims.vocab, d]);
-        let wh = Tensor::f32(vec![0.1; d * dims.vocab], &[d, dims.vocab]);
+    fn kernel_path_parses() {
+        assert_eq!("blocked".parse::<KernelPath>().unwrap(), KernelPath::Blocked);
+        assert_eq!("naive".parse::<KernelPath>().unwrap(), KernelPath::Reference);
+        assert!("simd".parse::<KernelPath>().is_err());
+        assert_eq!(KernelPath::Blocked.name(), "blocked");
+    }
 
-        let attn = [x.clone(), g.clone(), wq, wk, wv, wo];
-        assert_eq!(b.run("attn_fwd", &attn).unwrap().len(), 1);
-        let attn_b = [
-            attn[0].clone(),
-            x.clone(),
-            attn[1].clone(),
-            attn[2].clone(),
-            attn[3].clone(),
-            attn[4].clone(),
-            attn[5].clone(),
-        ];
-        assert_eq!(b.run("attn_bwd_x", &attn_b).unwrap().len(), 1);
-        assert_eq!(b.run("attn_bwd_w", &attn_b).unwrap().len(), 5);
-        let mlp = [x.clone(), g, wg, wu, wd];
-        assert_eq!(b.run("mlp_fwd", &mlp).unwrap().len(), 1);
-        let mlp_b = [
-            mlp[0].clone(),
-            x.clone(),
-            mlp[1].clone(),
-            mlp[2].clone(),
-            mlp[3].clone(),
-            mlp[4].clone(),
-        ];
-        assert_eq!(b.run("mlp_bwd_x", &mlp_b).unwrap().len(), 1);
-        assert_eq!(b.run("mlp_bwd_w", &mlp_b).unwrap().len(), 4);
-        assert_eq!(b.run("embed_fwd", &[tok.clone(), emb]).unwrap().len(), 1);
-        assert_eq!(b.run("embed_bwd", &[tok.clone(), x.clone()]).unwrap().len(), 1);
-        assert_eq!(b.run("head_loss_grad", &[x, wh, tok]).unwrap().len(), 3);
-        assert!(b.run("nope", &[]).is_err());
-        assert_eq!(b.executions(), 9);
+    #[test]
+    fn virtual_backend_serves_every_unit_name() {
+        for path in [KernelPath::Blocked, KernelPath::Reference] {
+            let dims = virtual_dims(1, 1, 1, 1);
+            let mut b = VirtualBackend::with_path(dims.clone(), path);
+            // Shapes per the AOT signatures at these dims.
+            let d = dims.d;
+            let x = Tensor::f32(vec![0.1; dims.mb * dims.seq * d], &[dims.mb, dims.seq, d]);
+            let g = Tensor::f32(vec![1.0; d], &[d]);
+            let qr = dims.q_heads_per_rank() * dims.head_dim();
+            let kr = dims.kv_heads_per_rank() * dims.head_dim();
+            let fr = dims.ffn_per_rank();
+            let wq = Tensor::f32(vec![0.1; d * qr], &[d, qr]);
+            let wk = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
+            let wv = Tensor::f32(vec![0.1; d * kr], &[d, kr]);
+            let wo = Tensor::f32(vec![0.1; qr * d], &[qr, d]);
+            let wg = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
+            let wu = Tensor::f32(vec![0.1; d * fr], &[d, fr]);
+            let wd = Tensor::f32(vec![0.1; fr * d], &[fr, d]);
+            let tok = Tensor::i32(vec![3; dims.mb * dims.seq], &[dims.mb, dims.seq]);
+            let emb = Tensor::f32(vec![0.1; dims.vocab * d], &[dims.vocab, d]);
+            let wh = Tensor::f32(vec![0.1; d * dims.vocab], &[d, dims.vocab]);
+
+            assert_eq!(b.run("attn_fwd", &[&x, &g, &wq, &wk, &wv, &wo]).unwrap().len(), 1);
+            let attn_b = [&x, &x, &g, &wq, &wk, &wv, &wo];
+            assert_eq!(b.run("attn_bwd_x", &attn_b).unwrap().len(), 1);
+            assert_eq!(b.run("attn_bwd_w", &attn_b).unwrap().len(), 5);
+            assert_eq!(b.run("mlp_fwd", &[&x, &g, &wg, &wu, &wd]).unwrap().len(), 1);
+            let mlp_b = [&x, &x, &g, &wg, &wu, &wd];
+            assert_eq!(b.run("mlp_bwd_x", &mlp_b).unwrap().len(), 1);
+            assert_eq!(b.run("mlp_bwd_w", &mlp_b).unwrap().len(), 4);
+            assert_eq!(b.run("embed_fwd", &[&tok, &emb]).unwrap().len(), 1);
+            assert_eq!(b.run("embed_bwd", &[&tok, &x]).unwrap().len(), 1);
+            assert_eq!(b.run("head_loss_grad", &[&x, &wh, &tok]).unwrap().len(), 3);
+            assert!(b.run("nope", &[]).is_err());
+            assert_eq!(b.executions(), 9, "{path:?}");
+            let stats = b.workspace_stats().unwrap();
+            match path {
+                KernelPath::Blocked => assert!(stats.takes > 0, "blocked path must use the arena"),
+                KernelPath::Reference => assert_eq!(stats.takes, 0),
+            }
+        }
     }
 
     #[test]
     fn virtual_dims_respect_tp_divisibility() {
         for tp in [1, 2, 4, 8] {
-            let d = virtual_dims(tp, 2, 2, 8);
-            assert_eq!(d.q_heads % tp, 0);
-            assert_eq!(d.kv_heads % tp, 0);
-            assert_eq!(d.ffn % tp, 0);
-            assert_eq!(d.d % d.q_heads, 0);
-            assert!(d.q_heads_per_rank() >= 1 && d.head_dim() >= 1);
+            for scale in [1.0, 2.0, 4.0] {
+                let d = virtual_dims_scaled(tp, 2, 2, 8, scale);
+                assert_eq!(d.q_heads % tp, 0);
+                assert_eq!(d.kv_heads % tp, 0);
+                assert_eq!(d.ffn % tp, 0);
+                assert_eq!(d.d % d.q_heads, 0);
+                assert!(d.q_heads_per_rank() >= 1 && d.head_dim() >= 1);
+            }
         }
+    }
+
+    #[test]
+    fn scaled_dims_default_to_the_classic_miniature() {
+        let a = virtual_dims(2, 2, 2, 8);
+        let b = virtual_dims_scaled(2, 2, 2, 8, 1.0);
+        assert_eq!((a.d, a.ffn, a.vocab, a.seq), (b.d, b.ffn, b.vocab, b.seq));
+        assert_eq!(a.d, 16);
+        let big = virtual_dims_scaled(2, 2, 2, 8, 4.0);
+        assert_eq!(big.d, 64);
+        assert_eq!(big.ffn, 128);
+        assert!(host_virtual_scale() >= 1.0);
     }
 }

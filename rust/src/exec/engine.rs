@@ -12,10 +12,15 @@
 //! lowered IR the event-driven simulator replays — so sim and exec agree
 //! on the per-device op order *by construction* (DESIGN.md §10), and
 //! `stp plan --emit-plan` → `stp train --plan` hands the planner's
-//! winning candidate straight to this engine. Numerics go through the
-//! [`Backend`] seam: the always-available deterministic
-//! [`super::VirtualBackend`], or PJRT over AOT HLO artifacts behind the
-//! `pjrt` feature.
+//! winning candidate straight to this engine.
+//!
+//! The walks are **zero-copy** (DESIGN.md §11): [`Backend::run`] borrows
+//! its inputs, so weights go straight from the parameter tables and
+//! activations move in and out of the [`ActivationStore`] without the
+//! per-op clones the pre-arena executor paid; the virtual backend's
+//! kernel scratch comes from a per-thread workspace arena whose
+//! steady-state allocation count must be zero ([`RunReport`] reports it,
+//! `tests/train_virtual.rs` asserts it).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -23,7 +28,7 @@ use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
-use super::backend::{make_backend, virtual_dims, Backend, BackendKind};
+use super::backend::{make_backend, virtual_dims_scaled, Backend, BackendKind, KernelPath};
 use super::{ChunkParams, Corpus};
 use crate::cluster::{partition_llm, StagePlan, Topology};
 use crate::config::{Manifest, ManifestDims};
@@ -39,6 +44,9 @@ use crate::Result;
 pub struct TrainConfig {
     /// Which execution backend computes the units.
     pub backend: BackendKind,
+    /// Virtual-backend kernel implementation (blocked hot path vs the
+    /// naive reference oracle — bit-equal, see DESIGN.md §11).
+    pub kernels: KernelPath,
     /// Directory with `manifest.json` + HLO artifacts (PJRT backend).
     pub artifacts_dir: PathBuf,
     /// Schedule to build when no plan artifact is given.
@@ -51,8 +59,12 @@ pub struct TrainConfig {
     /// Print per-step losses.
     pub verbose: bool,
     /// Virtual-backend model dims; `None` derives a miniature default
-    /// (the PJRT backend always reads dims from the manifest).
+    /// scaled by `virtual_scale` (the PJRT backend always reads dims
+    /// from the manifest).
     pub dims: Option<ManifestDims>,
+    /// Width multiplier for the derived virtual dims (≥ 1; see
+    /// [`super::virtual_dims_scaled`] / `stp train --virtual-scale`).
+    pub virtual_scale: f64,
     /// Planner handoff: run this plan's schedule, topology and layer
     /// split instead of the `schedule`/`n_mb`/dims-derived defaults.
     pub plan: Option<PlanArtifact>,
@@ -64,6 +76,7 @@ impl TrainConfig {
     pub fn virtual_default() -> TrainConfig {
         TrainConfig {
             backend: BackendKind::Virtual,
+            kernels: KernelPath::Blocked,
             artifacts_dir: PathBuf::from("artifacts/e2e"),
             schedule: ScheduleKind::Stp,
             n_mb: 4,
@@ -72,6 +85,7 @@ impl TrainConfig {
             seed: 42,
             verbose: false,
             dims: None,
+            virtual_scale: 1.0,
             plan: None,
         }
     }
@@ -92,6 +106,13 @@ pub struct RunReport {
     pub steps: Vec<StepStat>,
     /// Peak activation bytes per PP stage (max over its TP ranks).
     pub peak_activation_bytes: Vec<usize>,
+    /// Peak kernel-workspace bytes per PP stage (max over its TP ranks;
+    /// all zero on the reference path and PJRT).
+    pub workspace_peak_bytes: Vec<usize>,
+    /// Workspace heap allocations after the warm-up step, summed over
+    /// every device thread — the arena contract says this is 0 for any
+    /// run with ≥ 2 steps.
+    pub workspace_steady_allocs: u64,
     /// Total bytes all-reduced across all TP groups.
     pub allreduce_bytes: u64,
     /// Total backend unit executions.
@@ -114,6 +135,15 @@ impl RunReport {
         let total: f64 = self.steps.iter().map(|s| s.secs).sum();
         (self.steps.len() * n_mb * mb) as f64 / total
     }
+    /// Steady-state trained tokens per wall-clock second (`mb · seq`
+    /// tokens per microbatch) — the `stp bench train` headline number.
+    /// When the run has more than one step, step 0 is excluded: it pays
+    /// thread spawn and workspace-arena warm-up.
+    pub fn tokens_per_sec(&self, n_mb: usize, mb: usize, seq: usize) -> f64 {
+        let skip = usize::from(self.steps.len() > 1);
+        let secs: f64 = self.steps.iter().skip(skip).map(|s| s.secs).sum();
+        ((self.steps.len() - skip) * n_mb * mb * seq) as f64 / secs.max(1e-12)
+    }
 }
 
 /// Per-thread slice of the run configuration (what [`DeviceThread`]
@@ -121,10 +151,18 @@ impl RunReport {
 #[derive(Debug, Clone, Copy)]
 struct RunParams {
     backend: BackendKind,
+    kernels: KernelPath,
     n_mb: usize,
     steps: usize,
     lr: f32,
     seed: u64,
+}
+
+/// What a device thread hands back when its walk completes.
+struct ThreadStats {
+    execs: u64,
+    /// Workspace heap allocations after step 0 (0 in steady state).
+    steady_allocs: u64,
 }
 
 /// Resolve the run's model dims (and, for PJRT, the manifest).
@@ -138,8 +176,10 @@ fn resolve_dims(cfg: &TrainConfig) -> Result<(Option<Manifest>, ManifestDims)> {
         BackendKind::Virtual => {
             let dims = match (&cfg.dims, &cfg.plan) {
                 (Some(d), _) => d.clone(),
-                (None, Some(p)) => virtual_dims(p.tp, p.pp, p.vpp, p.total_layers()),
-                (None, None) => virtual_dims(2, 2, 2, 8),
+                (None, Some(p)) => {
+                    virtual_dims_scaled(p.tp, p.pp, p.vpp, p.total_layers(), cfg.virtual_scale)
+                }
+                (None, None) => virtual_dims_scaled(2, 2, 2, 8, cfg.virtual_scale),
             };
             Ok((None, dims))
         }
@@ -176,6 +216,10 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         None => {
             let topo = Topology { tp: dims.tp, pp: dims.pp, dp: 1, cp: 1, vpp: dims.vpp };
             let schedule = build_schedule(cfg.schedule, &topo, cfg.n_mb);
+            // Some builders normalize the topology (1f1b/zb-h1 force
+            // vpp = 1) — the chunk plan must follow the schedule's grid,
+            // not the requested one.
+            let topo = schedule.topo;
             let mc = ModelConfig {
                 name: "exec".into(),
                 layers: dims.layers,
@@ -192,8 +236,14 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     };
     crate::schedule::assert_valid(&schedule);
     let compiled = Arc::new(schedule.compile());
-    let run =
-        RunParams { backend: cfg.backend, n_mb, steps: cfg.steps, lr: cfg.lr, seed: cfg.seed };
+    let run = RunParams {
+        backend: cfg.backend,
+        kernels: cfg.kernels,
+        n_mb,
+        steps: cfg.steps,
+        lr: cfg.lr,
+        seed: cfg.seed,
+    };
 
     let corpus = Arc::new(Corpus::new(dims.vocab, cfg.seed));
 
@@ -216,7 +266,8 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     let tp_groups: Vec<Arc<crate::comm::TpGroup>> =
         (0..topo.pp).map(|_| crate::comm::TpGroup::new(topo.tp)).collect();
     let (loss_tx, loss_rx) = std::sync::mpsc::channel::<(usize, f32)>();
-    let (stat_tx, stat_rx) = std::sync::mpsc::channel::<(usize, usize)>(); // (stage, peak bytes)
+    // (stage, activation-store peak bytes, workspace peak bytes)
+    let (stat_tx, stat_rx) = std::sync::mpsc::channel::<(usize, usize, usize)>();
     let (ops_tx, ops_rx) = std::sync::mpsc::channel::<(usize, Vec<Op>)>();
 
     let t0 = Instant::now();
@@ -254,15 +305,17 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
             let loss_tx = loss_tx.clone();
             let stat_tx = stat_tx.clone();
             let ops_tx = ops_tx.clone();
-            handles.push(std::thread::spawn(move || -> Result<u64> {
+            handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
                 let mut dev =
                     DeviceThread::new(ctx, my_fwd_tx, my_fwd_rx, my_bwd_tx, my_bwd_rx, loss_tx)?;
-                let execs = dev.run()?;
-                stat_tx.send((dev.ctx.stage, dev.store.peak_bytes())).ok();
+                let stats = dev.run()?;
+                let ws_peak =
+                    dev.backend.workspace_stats().map(|s| s.peak_bytes).unwrap_or(0);
+                stat_tx.send((dev.ctx.stage, dev.store.peak_bytes(), ws_peak)).ok();
                 if dev.ctx.rank == 0 {
                     ops_tx.send((dev.ctx.stage, std::mem::take(&mut dev.op_log))).ok();
                 }
-                Ok(execs)
+                Ok(stats)
             }));
         }
     }
@@ -290,12 +343,17 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     }
 
     let mut executions = 0;
+    let mut steady_allocs = 0;
     for h in handles {
-        executions += h.join().map_err(|_| anyhow::anyhow!("device thread panicked"))??;
+        let stats = h.join().map_err(|_| anyhow::anyhow!("device thread panicked"))??;
+        executions += stats.execs;
+        steady_allocs += stats.steady_allocs;
     }
     let mut peaks = vec![0usize; topo.pp];
-    for (stage, peak) in stat_rx {
+    let mut ws_peaks = vec![0usize; topo.pp];
+    for (stage, peak, ws_peak) in stat_rx {
         peaks[stage] = peaks[stage].max(peak);
+        ws_peaks[stage] = ws_peaks[stage].max(ws_peak);
     }
     let mut device_ops = vec![Vec::new(); topo.pp];
     for (stage, ops) in ops_rx {
@@ -316,6 +374,8 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         backend: cfg.backend,
         steps,
         peak_activation_bytes: peaks,
+        workspace_peak_bytes: ws_peaks,
+        workspace_steady_allocs: steady_allocs,
         allreduce_bytes: tp_groups.iter().map(|g| g.bytes_reduced()).sum(),
         executions,
         wall_secs: t0.elapsed().as_secs_f64(),
@@ -367,6 +427,47 @@ struct DeviceThread {
     op_log: Vec<Op>,
 }
 
+/// Accumulate one attention unit's weight gradients. A free function
+/// over the thread's disjoint fields so activation tensors can stay
+/// *borrowed* from the store while the backend runs.
+fn attn_weight_grad(
+    backend: &mut dyn Backend,
+    params: &mut HashMap<usize, ChunkParams>,
+    chunk: usize,
+    l: usize,
+    x: &Tensor,
+    dy: &Tensor,
+) -> Result<()> {
+    let p = &params[&chunk].layers[l];
+    let out = backend.run("attn_bwd_w", &[x, dy, &p.gamma1, &p.wq, &p.wk, &p.wv, &p.wo])?;
+    let g = &mut params.get_mut(&chunk).unwrap().grads[l];
+    ChunkParams::accumulate(&mut g.gamma1, &out[0]);
+    ChunkParams::accumulate(&mut g.wq, &out[1]);
+    ChunkParams::accumulate(&mut g.wk, &out[2]);
+    ChunkParams::accumulate(&mut g.wv, &out[3]);
+    ChunkParams::accumulate(&mut g.wo, &out[4]);
+    Ok(())
+}
+
+/// Accumulate one MLP unit's weight gradients (see [`attn_weight_grad`]).
+fn mlp_weight_grad(
+    backend: &mut dyn Backend,
+    params: &mut HashMap<usize, ChunkParams>,
+    chunk: usize,
+    l: usize,
+    y: &Tensor,
+    dz: &Tensor,
+) -> Result<()> {
+    let p = &params[&chunk].layers[l];
+    let out = backend.run("mlp_bwd_w", &[y, dz, &p.gamma2, &p.wg, &p.wu, &p.wd])?;
+    let g = &mut params.get_mut(&chunk).unwrap().grads[l];
+    ChunkParams::accumulate(&mut g.gamma2, &out[0]);
+    ChunkParams::accumulate(&mut g.wg, &out[1]);
+    ChunkParams::accumulate(&mut g.wu, &out[2]);
+    ChunkParams::accumulate(&mut g.wd, &out[3]);
+    Ok(())
+}
+
 impl DeviceThread {
     fn new(
         ctx: DeviceCtx,
@@ -376,7 +477,8 @@ impl DeviceThread {
         bwd_rx: HashMap<usize, Receiver<Tensor>>,
         loss_tx: std::sync::mpsc::Sender<(usize, f32)>,
     ) -> Result<DeviceThread> {
-        let backend = make_backend(ctx.run.backend, ctx.manifest.as_ref(), &ctx.dims)?;
+        let backend =
+            make_backend(ctx.run.backend, ctx.manifest.as_ref(), &ctx.dims, ctx.run.kernels)?;
         let mut params = HashMap::new();
         for c in 0..ctx.compiled.n_chunks {
             if ctx.compiled.chunk_dev[c] as usize == ctx.stage {
@@ -411,9 +513,14 @@ impl DeviceThread {
         })
     }
 
-    fn run(&mut self) -> Result<u64> {
+    fn ws_fresh_allocs(&self) -> u64 {
+        self.backend.workspace_stats().map(|s| s.fresh_allocs).unwrap_or(0)
+    }
+
+    fn run(&mut self) -> Result<ThreadStats> {
         let lo = self.ctx.compiled.dev_start[self.ctx.stage] as usize;
         let hi = self.ctx.compiled.dev_start[self.ctx.stage + 1] as usize;
+        let mut warm_allocs = 0;
         for step in 0..self.ctx.run.steps {
             self.step = step;
             for j in lo..hi {
@@ -424,8 +531,16 @@ impl DeviceThread {
                 self.exec_op(&op)?;
             }
             self.optimizer_step()?;
+            if step == 0 {
+                // Step 0 populates the workspace pools; everything after
+                // must recycle (the zero-steady-state-alloc contract).
+                warm_allocs = self.ws_fresh_allocs();
+            }
         }
-        Ok(self.backend.executions())
+        Ok(ThreadStats {
+            execs: self.backend.executions(),
+            steady_allocs: self.ws_fresh_allocs() - warm_allocs,
+        })
     }
 
     fn exec_op(&mut self, op: &Op) -> Result<()> {
@@ -457,20 +572,18 @@ impl DeviceThread {
     }
 
     fn forward(&mut self, chunk: usize, mb: usize) -> Result<()> {
-        let dims = self.ctx.dims.clone();
         let content = self.ctx.plan.chunks[chunk];
         let mut x = if content.has_embed {
             // Fixed tiny corpus: the e2e demo overfits a constant set of
             // microbatches so the loss curve is step-comparable.
-            let (tokens, _) = self.ctx.corpus.batch(0, mb, dims.mb, dims.seq);
-            let tok = Tensor::i32(tokens, &[dims.mb, dims.seq]);
-            let emb = self.params[&chunk].emb.as_ref().unwrap().clone();
+            let (mb_rows, seq) = (self.ctx.dims.mb, self.ctx.dims.seq);
+            let (tokens, _) = self.ctx.corpus.batch(0, mb, mb_rows, seq);
+            let tok = Tensor::i32(tokens, &[mb_rows, seq]);
+            let emb = self.params[&chunk].emb.as_ref().unwrap();
+            let out = self.backend.run("embed_fwd", &[&tok, emb])?.remove(0);
             // Stash tokens for the embedding backward.
-            self.store.put(
-                ActKey { chunk, mb, layer: usize::MAX, tag: ActTag::ChunkOut },
-                tok.clone(),
-            );
-            self.backend.run("embed_fwd", &[tok, emb])?.remove(0)
+            self.store.put(ActKey { chunk, mb, layer: usize::MAX, tag: ActTag::ChunkOut }, tok);
+            out
         } else {
             self.fwd_rx
                 .get(&chunk)
@@ -481,22 +594,21 @@ impl DeviceThread {
 
         for l in 0..content.lm_layers {
             let p = &self.params[&chunk].layers[l];
-            self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn }, x.clone());
             let mut partial = self
                 .backend
-                .run(
-                    "attn_fwd",
-                    &[x, p.gamma1.clone(), p.wq.clone(), p.wk.clone(), p.wv.clone(), p.wo.clone()],
-                )?
+                .run("attn_fwd", &[&x, &p.gamma1, &p.wq, &p.wk, &p.wv, &p.wo])?
                 .remove(0);
+            // The unit ran on a borrow, so `x` moves into the store
+            // without a copy.
+            self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn }, x);
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut partial)?;
             let y = partial;
-            self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn }, y.clone());
             let p = &self.params[&chunk].layers[l];
             let mut partial = self
                 .backend
-                .run("mlp_fwd", &[y, p.gamma2.clone(), p.wg.clone(), p.wu.clone(), p.wd.clone()])?
+                .run("mlp_fwd", &[&y, &p.gamma2, &p.wg, &p.wu, &p.wd])?
                 .remove(0);
+            self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn }, y);
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut partial)?;
             x = partial;
         }
@@ -514,16 +626,16 @@ impl DeviceThread {
     }
 
     fn backward(&mut self, chunk: usize, mb: usize, with_w: bool) -> Result<()> {
-        let dims = self.ctx.dims.clone();
         let content = self.ctx.plan.chunks[chunk];
         let mut dy = if content.has_head {
             let x = self
                 .store
                 .take(&ActKey { chunk, mb, layer: usize::MAX - 1, tag: ActTag::ChunkOut })?;
-            let (_, targets) = self.ctx.corpus.batch(0, mb, dims.mb, dims.seq);
-            let tgt = Tensor::i32(targets, &[dims.mb, dims.seq]);
-            let wh = self.params[&chunk].head.as_ref().unwrap().clone();
-            let mut out = self.backend.run("head_loss_grad", &[x, wh, tgt])?;
+            let (mb_rows, seq) = (self.ctx.dims.mb, self.ctx.dims.seq);
+            let (_, targets) = self.ctx.corpus.batch(0, mb, mb_rows, seq);
+            let tgt = Tensor::i32(targets, &[mb_rows, seq]);
+            let wh = self.params[&chunk].head.as_ref().unwrap();
+            let mut out = self.backend.run("head_loss_grad", &[&x, wh, &tgt])?;
             let loss = out[0].scalar_f32()?;
             let dx = out.remove(1);
             let dwh = out.remove(1);
@@ -542,52 +654,32 @@ impl DeviceThread {
         };
 
         for l in (0..content.lm_layers).rev() {
-            // MLP unit backward.
-            let y = self.store.get(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?.clone();
+            // MLP unit backward — `y` stays borrowed from the store.
+            let y = self.store.get(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             let p = &self.params[&chunk].layers[l];
             let mut dmid = self
                 .backend
-                .run(
-                    "mlp_bwd_x",
-                    &[
-                        y.clone(),
-                        dy.clone(),
-                        p.gamma2.clone(),
-                        p.wg.clone(),
-                        p.wu.clone(),
-                        p.wd.clone(),
-                    ],
-                )?
+                .run("mlp_bwd_x", &[y, &dy, &p.gamma2, &p.wg, &p.wu, &p.wd])?
                 .remove(0);
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut dmid)?;
             if with_w {
-                self.mlp_weight_grad(chunk, l, &y, &dy)?;
+                mlp_weight_grad(&mut *self.backend, &mut self.params, chunk, l, y, &dy)?;
                 self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             } else {
-                self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad }, dy.clone());
+                // `dy`'s last use on this path: move it into the stash.
+                self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad }, dy);
             }
 
             // Attn unit backward.
-            let x = self.store.get(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?.clone();
+            let x = self.store.get(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
             let p = &self.params[&chunk].layers[l];
             let mut dx = self
                 .backend
-                .run(
-                    "attn_bwd_x",
-                    &[
-                        x.clone(),
-                        dmid.clone(),
-                        p.gamma1.clone(),
-                        p.wq.clone(),
-                        p.wk.clone(),
-                        p.wv.clone(),
-                        p.wo.clone(),
-                    ],
-                )?
+                .run("attn_bwd_x", &[x, &dmid, &p.gamma1, &p.wq, &p.wk, &p.wv, &p.wo])?
                 .remove(0);
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut dx)?;
             if with_w {
-                self.attn_weight_grad(chunk, l, &x, &dmid)?;
+                attn_weight_grad(&mut *self.backend, &mut self.params, chunk, l, x, &dmid)?;
                 self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
             } else {
                 self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::AttnGrad }, dmid);
@@ -599,7 +691,7 @@ impl DeviceThread {
             let tok = self
                 .store
                 .take(&ActKey { chunk, mb, layer: usize::MAX, tag: ActTag::ChunkOut })?;
-            let demb = self.backend.run("embed_bwd", &[tok, dy])?.remove(0);
+            let demb = self.backend.run("embed_bwd", &[&tok, &dy])?.remove(0);
             let pc = self.params.get_mut(&chunk).unwrap();
             ChunkParams::accumulate(pc.emb_grad.as_mut().unwrap(), &demb);
         } else {
@@ -617,69 +709,28 @@ impl DeviceThread {
         for l in (0..content.lm_layers).rev() {
             let y = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             let dz = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad })?;
-            self.mlp_weight_grad(chunk, l, &y, &dz)?;
+            mlp_weight_grad(&mut *self.backend, &mut self.params, chunk, l, &y, &dz)?;
             let x = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
             let dmid = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnGrad })?;
-            self.attn_weight_grad(chunk, l, &x, &dmid)?;
+            attn_weight_grad(&mut *self.backend, &mut self.params, chunk, l, &x, &dmid)?;
         }
-        Ok(())
-    }
-
-    fn attn_weight_grad(&mut self, chunk: usize, l: usize, x: &Tensor, dy: &Tensor) -> Result<()> {
-        let p = &self.params[&chunk].layers[l];
-        let out = self.backend.run(
-            "attn_bwd_w",
-            &[
-                x.clone(),
-                dy.clone(),
-                p.gamma1.clone(),
-                p.wq.clone(),
-                p.wk.clone(),
-                p.wv.clone(),
-                p.wo.clone(),
-            ],
-        )?;
-        let g = &mut self.params.get_mut(&chunk).unwrap().grads[l];
-        ChunkParams::accumulate(&mut g.gamma1, &out[0]);
-        ChunkParams::accumulate(&mut g.wq, &out[1]);
-        ChunkParams::accumulate(&mut g.wk, &out[2]);
-        ChunkParams::accumulate(&mut g.wv, &out[3]);
-        ChunkParams::accumulate(&mut g.wo, &out[4]);
-        Ok(())
-    }
-
-    fn mlp_weight_grad(&mut self, chunk: usize, l: usize, y: &Tensor, dz: &Tensor) -> Result<()> {
-        let p = &self.params[&chunk].layers[l];
-        let out = self.backend.run(
-            "mlp_bwd_w",
-            &[y.clone(), dz.clone(), p.gamma2.clone(), p.wg.clone(), p.wu.clone(), p.wd.clone()],
-        )?;
-        let g = &mut self.params.get_mut(&chunk).unwrap().grads[l];
-        ChunkParams::accumulate(&mut g.gamma2, &out[0]);
-        ChunkParams::accumulate(&mut g.wg, &out[1]);
-        ChunkParams::accumulate(&mut g.wu, &out[2]);
-        ChunkParams::accumulate(&mut g.wd, &out[3]);
         Ok(())
     }
 
     fn optimizer_step(&mut self) -> Result<()> {
         // Replicated RMSNorm gammas: per-rank grads are partials — sum
         // them across the TP group before stepping (Megatron's layernorm
-        // gradient all-reduce).
-        let chunks: Vec<usize> = self.params.keys().copied().collect();
-        let mut sorted = chunks;
-        sorted.sort_unstable();
-        for c in sorted {
-            let n_layers = self.params[&c].layers.len();
-            for l in 0..n_layers {
-                let mut g1 = self.params[&c].grads[l].gamma1.clone();
-                self.ctx.tp.all_reduce(self.ctx.rank, &mut g1)?;
-                self.params.get_mut(&c).unwrap().grads[l].gamma1 = g1;
-                let mut g2 = self.params[&c].grads[l].gamma2.clone();
-                self.ctx.tp.all_reduce(self.ctx.rank, &mut g2)?;
-                self.params.get_mut(&c).unwrap().grads[l].gamma2 = g2;
+        // gradient all-reduce). The collectives run on the accumulators
+        // in place; every rank walks chunks and layers in the same order.
+        let mut chunks: Vec<usize> = self.params.keys().copied().collect();
+        chunks.sort_unstable();
+        for c in chunks {
+            let p = self.params.get_mut(&c).unwrap();
+            for g in p.grads.iter_mut() {
+                self.ctx.tp.all_reduce(self.ctx.rank, &mut g.gamma1)?;
+                self.ctx.tp.all_reduce(self.ctx.rank, &mut g.gamma2)?;
             }
-            self.params.get_mut(&c).unwrap().sgd_step(self.ctx.run.lr, self.ctx.run.n_mb);
+            p.sgd_step(self.ctx.run.lr, self.ctx.run.n_mb);
         }
         Ok(())
     }
@@ -688,11 +739,13 @@ impl DeviceThread {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::virtual_dims;
 
     #[test]
     fn virtual_default_config_is_virtual() {
         let cfg = TrainConfig::virtual_default();
         assert_eq!(cfg.backend, BackendKind::Virtual);
+        assert_eq!(cfg.kernels, KernelPath::Blocked);
         assert!(cfg.plan.is_none() && cfg.dims.is_none());
     }
 
@@ -754,5 +807,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn steady_state_workspace_allocations_are_zero() {
+        // The arena contract across every op shape the schedule families
+        // produce: after the warm-up step no device thread heap-allocates
+        // kernel scratch again.
+        for kind in [ScheduleKind::Stp, ScheduleKind::ZbV, ScheduleKind::GPipe] {
+            let mut cfg = TrainConfig::virtual_default();
+            cfg.schedule = kind;
+            cfg.steps = 3;
+            let r = train(&cfg).unwrap();
+            assert_eq!(r.workspace_steady_allocs, 0, "{kind:?}: steady state allocated");
+            assert!(
+                r.workspace_peak_bytes.iter().all(|&b| b > 0),
+                "{kind:?}: every stage must have used the arena: {:?}",
+                r.workspace_peak_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn reference_kernel_path_trains_too() {
+        let mut cfg = TrainConfig::virtual_default();
+        cfg.kernels = KernelPath::Reference;
+        cfg.steps = 2;
+        let r = train(&cfg).unwrap();
+        assert!(r.last_loss().is_finite());
+        // The reference path never touches the arena.
+        assert_eq!(r.workspace_steady_allocs, 0);
+        assert!(r.workspace_peak_bytes.iter().all(|&b| b == 0));
     }
 }

@@ -1,0 +1,441 @@
+//! Cache-blocked, register-tiled GEMM microkernels for the virtual
+//! backend's hot path.
+//!
+//! Classic three-level blocking (BLIS-style): B is packed into `KC×NC`
+//! panels and A into `MC×KC` panels (contiguous micro-panel access, one
+//! pass over each operand per block), and an `MR×NR` register tile
+//! accumulates the innermost product with the depth loop innermost. The
+//! three layouts the nine AOT units need — `A·B`, `Aᵀ·B` (weight grads)
+//! and `A·Bᵀ` (input grads) — share one core; transposition happens in
+//! the packing step, so the microkernel always streams contiguous panels.
+//!
+//! **Determinism argument** (DESIGN.md §11): every output element keeps a
+//! *single* accumulator whose terms are added in strictly increasing
+//! depth order — the register tile loads the current `C` values, adds the
+//! block's `kc` terms in order, and stores back, so splitting the depth
+//! loop into `KC` blocks never re-associates the sum (an f32
+//! store/reload is exact), and no `mul_add` is emitted (Rust does not
+//! contract `a*b + c`). The result is therefore **bit-equal** to the
+//! naive triple loops in [`super::reference`], which accumulate in the
+//! same order — `tests/kernel_parity.rs` pins that, and it is what keeps
+//! `stp train` bit-deterministic per seed with either kernel path.
+//!
+//! Packing buffers come from the caller's [`Workspace`], so steady-state
+//! calls allocate nothing.
+
+use crate::exec::workspace::Workspace;
+
+/// Register-tile rows.
+const MR: usize = 4;
+/// Register-tile columns (16 f32 = one cache line / two AVX vectors).
+const NR: usize = 16;
+/// A-panel rows per block.
+const MC: usize = 64;
+/// Depth (k) per block — A panel is MC·KC·4 = 64 KiB, inside L2.
+const KC: usize = 256;
+/// B-panel columns per block — B panel is KC·NC·4 = 512 KiB.
+const NC: usize = 512;
+
+/// Below this flop volume the packing overhead dominates; fall through to
+/// the naive loops (bit-equal, so dispatch is invisible to numerics).
+const SMALL_FLOPS: usize = 1 << 14;
+
+/// `C += A·B` with `A: [n,k]`, `B: [k,m]`, `C: [n,m]`.
+///
+/// Accumulates into `out` (pass a zeroed buffer for a plain product).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul(
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    if n * k * m <= SMALL_FLOPS {
+        return naive(a, b, n, k, m, out);
+    }
+    gemm_core(ws, n, k, m, out, a, k, false, b, m, false);
+}
+
+/// `C += Aᵀ·B` with `A: [k,n]`, `B: [k,m]`, `C: [n,m]` (weight grads).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_at(
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    debug_assert_eq!(out.len(), n * m);
+    if n * k * m <= SMALL_FLOPS {
+        return naive_at(a, b, k, n, m, out);
+    }
+    gemm_core(ws, n, k, m, out, a, n, true, b, m, false);
+}
+
+/// `C += A·Bᵀ` with `A: [n,k]`, `B: [m,k]`, `C: [n,m]` (input grads).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_bt(
+    ws: &mut Workspace,
+    a: &[f32],
+    b: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    debug_assert_eq!(out.len(), n * m);
+    if n * k * m <= SMALL_FLOPS {
+        return naive_bt(a, b, n, k, m, out);
+    }
+    gemm_core(ws, n, k, m, out, a, k, false, b, k, true);
+}
+
+/// The shared blocked core. `ta`/`tb` say whether the operand is stored
+/// transposed (`a` as `[k,n]` with leading dimension `lda = n`; `b` as
+/// `[m,k]` with `ldb = k`); packing normalizes both into row-major
+/// panels, so the micro loops never see a stride.
+#[allow(clippy::too_many_arguments)]
+fn gemm_core(
+    ws: &mut Workspace,
+    n: usize,
+    k: usize,
+    m: usize,
+    out: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    ta: bool,
+    b: &[f32],
+    ldb: usize,
+    tb: bool,
+) {
+    // Pack panels are fully overwritten before every read, so skip the
+    // zeroing memset a plain `take` would pay on each GEMM call.
+    let mut apack = ws.take_uninit(MC * KC);
+    let mut bpack = ws.take_uninit(KC * NC);
+    let mut jc = 0;
+    while jc < m {
+        let nc = NC.min(m - jc);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            pack_b(&mut bpack, b, ldb, tb, pc, kc, jc, nc);
+            let mut ic = 0;
+            while ic < n {
+                let mc = MC.min(n - ic);
+                pack_a(&mut apack, a, lda, ta, ic, mc, pc, kc);
+                let mut i0 = 0;
+                while i0 < mc {
+                    let mr = MR.min(mc - i0);
+                    let mut j0 = 0;
+                    while j0 < nc {
+                        let nr = NR.min(nc - j0);
+                        if mr == MR && nr == NR {
+                            micro_full(&apack, kc, i0, &bpack, nc, j0, out, m, ic, jc);
+                        } else {
+                            micro_edge(&apack, kc, i0, mr, &bpack, nc, j0, nr, out, m, ic, jc);
+                        }
+                        j0 += NR;
+                    }
+                    i0 += MR;
+                }
+                ic += MC;
+            }
+            pc += KC;
+        }
+        jc += NC;
+    }
+    ws.give(apack);
+    ws.give(bpack);
+}
+
+/// Pack `A[ic..ic+mc, pc..pc+kc]` into `apack[i*kc + p]` (row-major).
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    apack: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    ta: bool,
+    ic: usize,
+    mc: usize,
+    pc: usize,
+    kc: usize,
+) {
+    if !ta {
+        for i in 0..mc {
+            let src = (ic + i) * lda + pc;
+            apack[i * kc..i * kc + kc].copy_from_slice(&a[src..src + kc]);
+        }
+    } else {
+        // A stored as [k, n]: element (ic+i, pc+p) lives at a[(pc+p)*lda + ic+i].
+        for i in 0..mc {
+            let dst = &mut apack[i * kc..i * kc + kc];
+            for (p, d) in dst.iter_mut().enumerate() {
+                *d = a[(pc + p) * lda + ic + i];
+            }
+        }
+    }
+}
+
+/// Pack `B[pc..pc+kc, jc..jc+nc]` into `bpack[p*nc + j]` (row-major).
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    bpack: &mut [f32],
+    b: &[f32],
+    ldb: usize,
+    tb: bool,
+    pc: usize,
+    kc: usize,
+    jc: usize,
+    nc: usize,
+) {
+    if !tb {
+        for p in 0..kc {
+            let src = (pc + p) * ldb + jc;
+            bpack[p * nc..p * nc + nc].copy_from_slice(&b[src..src + nc]);
+        }
+    } else {
+        // B stored as [m, k]: element (pc+p, jc+j) lives at b[(jc+j)*ldb + pc+p].
+        for j in 0..nc {
+            let src = &b[(jc + j) * ldb + pc..(jc + j) * ldb + pc + kc];
+            for (p, &v) in src.iter().enumerate() {
+                bpack[p * nc + j] = v;
+            }
+        }
+    }
+}
+
+/// Full `MR×NR` register tile: load the C tile, accumulate `kc` depth
+/// terms in order, store back.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_full(
+    apack: &[f32],
+    kc: usize,
+    i0: usize,
+    bpack: &[f32],
+    nc: usize,
+    j0: usize,
+    out: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let row = (ic + i0 + r) * ldc + jc + j0;
+        accr.copy_from_slice(&out[row..row + NR]);
+    }
+    for p in 0..kc {
+        let brow = &bpack[p * nc + j0..p * nc + j0 + NR];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = apack[(i0 + r) * kc + p];
+            for j in 0..NR {
+                accr[j] += av * brow[j];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let row = (ic + i0 + r) * ldc + jc + j0;
+        out[row..row + NR].copy_from_slice(accr);
+    }
+}
+
+/// Edge tile (`mr < MR` or `nr < NR`): accumulate straight into `C` in
+/// the same depth order.
+#[allow(clippy::too_many_arguments)]
+fn micro_edge(
+    apack: &[f32],
+    kc: usize,
+    i0: usize,
+    mr: usize,
+    bpack: &[f32],
+    nc: usize,
+    j0: usize,
+    nr: usize,
+    out: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+) {
+    for p in 0..kc {
+        let brow = &bpack[p * nc + j0..p * nc + j0 + nr];
+        for r in 0..mr {
+            let av = apack[(i0 + r) * kc + p];
+            let row = (ic + i0 + r) * ldc + jc + j0;
+            let or = &mut out[row..row + nr];
+            for (o, &bv) in or.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Naive accumulate-into fallbacks for tiny products (identical loop
+// order to `super::reference`, hence identical bits).
+// ---------------------------------------------------------------------------
+
+fn naive(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    for i in 0..n {
+        for p in 0..k {
+            let av = a[i * k + p];
+            let br = &b[p * m..(p + 1) * m];
+            let or = &mut out[i * m..(i + 1) * m];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn naive_at(a: &[f32], b: &[f32], k: usize, n: usize, m: usize, out: &mut [f32]) {
+    for p in 0..k {
+        let ar = &a[p * n..(p + 1) * n];
+        let br = &b[p * m..(p + 1) * m];
+        for i in 0..n {
+            let av = ar[i];
+            let or = &mut out[i * m..(i + 1) * m];
+            for (o, &bv) in or.iter_mut().zip(br) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+fn naive_bt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    for i in 0..n {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * m..(i + 1) * m];
+        for j in 0..m {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = or[j];
+            for (&av, &bv) in ar.iter().zip(br) {
+                acc += av * bv;
+            }
+            or[j] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::reference;
+    use super::*;
+    use crate::exec::Rng;
+
+    fn randn(seed: u64, n: usize) -> Vec<f32> {
+        Rng::for_purpose(1234, seed, 1, 0).normal_vec(n, 1.0)
+    }
+
+    /// Shapes that force every code path: the small-product fallback,
+    /// single-block, multi-block with exact tile fits, and ragged edges
+    /// in every dimension.
+    fn shapes() -> Vec<(usize, usize, usize)> {
+        vec![
+            (1, 1, 1),
+            (3, 5, 7),
+            (4, 16, 16),
+            (32, 64, 48),
+            (65, 257, 33),
+            (64, 256, 512),
+            (70, 300, 530),
+            (128, 19, 1037),
+        ]
+    }
+
+    #[test]
+    fn blocked_matmul_is_bit_equal_to_reference() {
+        for (n, k, m) in shapes() {
+            let mut ws = Workspace::new();
+            let a = randn(n as u64, n * k);
+            let b = randn(m as u64 + 100, k * m);
+            let want = reference::matmul(&a, &b, n, k, m);
+            let mut got = vec![0.0f32; n * m];
+            matmul(&mut ws, &a, &b, n, k, m, &mut got);
+            assert!(
+                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "matmul {n}x{k}x{m} diverged from reference"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_at_is_bit_equal_to_reference() {
+        for (n, k, m) in shapes() {
+            let mut ws = Workspace::new();
+            let a = randn(n as u64 + 7, k * n);
+            let b = randn(m as u64 + 200, k * m);
+            let want = reference::matmul_at(&a, &b, k, n, m);
+            let mut got = vec![0.0f32; n * m];
+            matmul_at(&mut ws, &a, &b, k, n, m, &mut got);
+            assert!(
+                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "matmul_at {k}x{n}x{m} diverged from reference"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_bt_is_bit_equal_to_reference() {
+        for (n, k, m) in shapes() {
+            let mut ws = Workspace::new();
+            let a = randn(n as u64 + 13, n * k);
+            let b = randn(m as u64 + 300, m * k);
+            let want = reference::matmul_bt(&a, &b, n, k, m);
+            let mut got = vec![0.0f32; n * m];
+            matmul_bt(&mut ws, &a, &b, n, k, m, &mut got);
+            assert!(
+                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "matmul_bt {n}x{k}x{m} diverged from reference"
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_accumulates_into_out() {
+        // C += A·B semantics: a second call continues the accumulation
+        // chain — bit-identical to the naive accumulate run twice.
+        let (n, k, m) = (65, 257, 33);
+        let mut ws = Workspace::new();
+        let a = randn(1, n * k);
+        let b = randn(2, k * m);
+        let mut got = vec![0.0f32; n * m];
+        matmul(&mut ws, &a, &b, n, k, m, &mut got);
+        matmul(&mut ws, &a, &b, n, k, m, &mut got);
+        let mut want = vec![0.0f32; n * m];
+        naive(&a, &b, n, k, m, &mut want);
+        naive(&a, &b, n, k, m, &mut want);
+        assert!(
+            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "accumulation chain diverged"
+        );
+    }
+
+    #[test]
+    fn gemm_reuses_packing_buffers() {
+        let mut ws = Workspace::new();
+        let (n, k, m) = (70, 300, 530);
+        let a = randn(1, n * k);
+        let b = randn(2, k * m);
+        let mut out = vec![0.0f32; n * m];
+        matmul(&mut ws, &a, &b, n, k, m, &mut out);
+        let warm = ws.stats().fresh_allocs;
+        for _ in 0..5 {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul(&mut ws, &a, &b, n, k, m, &mut out);
+        }
+        assert_eq!(ws.stats().fresh_allocs, warm, "steady-state GEMM must not allocate");
+    }
+}

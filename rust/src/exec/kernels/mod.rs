@@ -1,102 +1,70 @@
-//! Host reference kernels for the **virtual backend**: the nine AOT unit
-//! signatures (`python/compile/aot.py::unit_signatures`) implemented as
-//! plain deterministic f32 loops with exactly the vendored reference
-//! kernels' math (`python/compile/kernels/ref.py`, `model.py`):
+//! Host kernels for the **virtual backend**: the nine AOT unit signatures
+//! (`python/compile/aot.py::unit_signatures`) on the crate's execution hot
+//! path — cache-blocked GEMM microkernels ([`gemm`]) over a per-thread
+//! scratch arena ([`super::workspace::Workspace`]), so a steady-state
+//! training step performs zero scratch allocations.
+//!
+//! The math is exactly the vendored reference kernels'
+//! (`python/compile/kernels/ref.py`, `model.py`):
 //!
 //! * forwards are per-TP-rank **partials** with the fused residual
 //!   `+ x/t` (paper Eq. 1–2) — summing over the TP group's ranks (the
 //!   engine's All-Reduce) reconstitutes the dense layer;
-//! * `*_bwd_x` returns the activation-gradient partial
-//!   `vjp_attention-path(dy) + dy/t` (the residual was detached in
-//!   forward, so its `+1` Jacobian is reconstituted explicitly across
-//!   the All-Reduce);
+//! * `*_bwd_x` returns the activation-gradient partial `vjp(dy) + dy/t`
+//!   (the residual was detached in forward, so its `+1` Jacobian is
+//!   reconstituted explicitly across the All-Reduce);
 //! * `*_bwd_w` returns rank-local weight gradients plus the replicated
 //!   RMSNorm gamma partials the engine All-Reduces at step time.
 //!
-//! Everything is sequential fixed-order accumulation — bit-deterministic
-//! across runs, which is what the executor's determinism contract
-//! (`tests/train_virtual.rs`) relies on. The analytic backwards are
-//! pinned against central finite differences in the tests below.
+//! Everything accumulates in a fixed order — bit-deterministic across
+//! runs, and (because the blocked GEMMs preserve the naive per-element
+//! accumulation order, see [`gemm`]) **bit-equal** to the preserved
+//! [`reference`] implementation, which `tests/kernel_parity.rs` pins.
+//! One deliberate work difference: `*_bwd_x` skips the weight-gradient
+//! GEMMs the reference computes and discards (outputs are unaffected).
+//! The analytic backwards are pinned against central finite differences
+//! in the tests below.
+//!
+//! Buffer discipline: scratch is `ws.take(..)`/`ws.give(..)` paired
+//! within each unit; only the tensors a unit *returns* are plain `Vec`
+//! allocations (they escape through the activation store and the P2P
+//! channels, so the arena cannot reclaim them).
 
 // Index-heavy tensor math: offset-based loops are the clearest way to
 // write the strided head/sequence indexing below.
 #![allow(clippy::needless_range_loop)]
 
+pub mod gemm;
+pub mod reference;
+
 use crate::config::ManifestDims;
 use crate::runtime::Tensor;
 use crate::Result;
 
+use super::workspace::Workspace;
+
+pub(crate) use reference::{embed_bwd, embed_fwd};
+
 const EPS: f32 = 1e-6;
 
-// ---------------------------------------------------------------------------
-// Small dense building blocks (fixed accumulation order).
-// ---------------------------------------------------------------------------
-
-/// `[n,k] @ [k,m] -> [n,m]`.
-fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        for p in 0..k {
-            let av = a[i * k + p];
-            let br = &b[p * m..(p + 1) * m];
-            let or = &mut out[i * m..(i + 1) * m];
-            for j in 0..m {
-                or[j] += av * br[j];
-            }
-        }
-    }
-    out
-}
-
-/// `aᵀ @ b` where `a: [k,n]`, `b: [k,m]` → `[n,m]` (weight gradients).
-fn matmul_at(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * n);
-    debug_assert_eq!(b.len(), k * m);
-    let mut out = vec![0.0f32; n * m];
-    for p in 0..k {
-        let ar = &a[p * n..(p + 1) * n];
-        let br = &b[p * m..(p + 1) * m];
-        for i in 0..n {
-            let av = ar[i];
-            let or = &mut out[i * m..(i + 1) * m];
-            for j in 0..m {
-                or[j] += av * br[j];
-            }
-        }
-    }
-    out
-}
-
-/// `a @ bᵀ` where `a: [n,k]`, `b: [m,k]` → `[n,m]` (input gradients).
-fn matmul_bt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), n * k);
-    debug_assert_eq!(b.len(), m * k);
-    let mut out = vec![0.0f32; n * m];
-    for i in 0..n {
-        let ar = &a[i * k..(i + 1) * k];
-        let or = &mut out[i * m..(i + 1) * m];
-        for j in 0..m {
-            let br = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += ar[p] * br[p];
-            }
-            or[j] = acc;
-        }
-    }
-    out
+/// Checked fixed-arity argument destructuring.
+pub(crate) fn expect_args<'a, const N: usize>(
+    name: &str,
+    args: &[&'a Tensor],
+) -> Result<[&'a Tensor; N]> {
+    anyhow::ensure!(args.len() == N, "{name}: got {} args, expected {N}", args.len());
+    let mut it = args.iter().copied();
+    Ok(std::array::from_fn(|_| it.next().unwrap()))
 }
 
 fn sigmoid(x: f32) -> f32 {
     1.0 / (1.0 + (-x).exp())
 }
 
-/// RMSNorm forward: `y = x · rsqrt(mean(x²)+ε) · γ`, per length-`d` row.
-fn rmsnorm(x: &[f32], gamma: &[f32], d: usize) -> Vec<f32> {
+/// RMSNorm forward into a caller-provided row buffer:
+/// `y = x · rsqrt(mean(x²)+ε) · γ`, per length-`d` row.
+fn rmsnorm_into(x: &[f32], gamma: &[f32], d: usize, y: &mut [f32]) {
     let rows = x.len() / d;
-    let mut y = vec![0.0f32; x.len()];
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
@@ -105,18 +73,22 @@ fn rmsnorm(x: &[f32], gamma: &[f32], d: usize) -> Vec<f32> {
             y[r * d + i] = xr[i] * inv * gamma[i];
         }
     }
-    y
 }
 
-/// RMSNorm backward: given the gradient `dy` at the norm's output,
-/// returns `(dx, dγ)`.
+/// RMSNorm backward into caller-provided buffers. `dx` is assigned; `dg`
+/// is *accumulated* and must arrive zeroed (`ws.take` zeroes).
 ///
 /// With `r = rsqrt(mean(x²)+ε)`: `dx_j = r·γ_j·dy_j − (r³/d)·x_j·Σᵢ
 /// dyᵢγᵢxᵢ` and `dγ_i = Σ_rows dyᵢ·xᵢ·r`.
-fn rmsnorm_bwd(x: &[f32], gamma: &[f32], dy: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+fn rmsnorm_bwd_into(
+    x: &[f32],
+    gamma: &[f32],
+    dy: &[f32],
+    d: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+) {
     let rows = x.len() / d;
-    let mut dx = vec![0.0f32; x.len()];
-    let mut dg = vec![0.0f32; d];
     for r in 0..rows {
         let xr = &x[r * d..(r + 1) * d];
         let dyr = &dy[r * d..(r + 1) * d];
@@ -132,14 +104,14 @@ fn rmsnorm_bwd(x: &[f32], gamma: &[f32], dy: &[f32], d: usize) -> (Vec<f32>, Vec
             dx[r * d + i] = inv * gamma[i] * dyr[i] - k * xr[i];
         }
     }
-    (dx, dg)
 }
 
 // ---------------------------------------------------------------------------
 // Attention unit (per-rank head slice, causal, GQA).
 // ---------------------------------------------------------------------------
 
-/// Saved forward state of one attention-core evaluation.
+/// Saved forward state of one attention-core evaluation — every buffer is
+/// workspace scratch; call [`AttnCache::release`] when done.
 struct AttnCache {
     xln: Vec<f32>,   // [rows, d]
     q: Vec<f32>,     // [rows, hq*dh]
@@ -147,6 +119,17 @@ struct AttnCache {
     v: Vec<f32>,     // [rows, hkv*dh]
     probs: Vec<f32>, // [mb, hq, s, s] (0 above the diagonal)
     ctx: Vec<f32>,   // [rows, hq*dh]
+}
+
+impl AttnCache {
+    fn release(self, ws: &mut Workspace) {
+        ws.give(self.xln);
+        ws.give(self.q);
+        ws.give(self.k);
+        ws.give(self.v);
+        ws.give(self.probs);
+        ws.give(self.ctx);
+    }
 }
 
 struct AttnShape {
@@ -185,6 +168,7 @@ fn head(buf: &[f32], row: usize, stride: usize, h: usize, dh: usize) -> &[f32] {
 /// Forward of `attention_core(rmsnorm(x, γ1), …)` keeping everything the
 /// backward needs.
 fn attn_core(
+    ws: &mut Workspace,
     x: &[f32],
     gamma1: &[f32],
     wq: &[f32],
@@ -194,14 +178,20 @@ fn attn_core(
 ) -> AttnCache {
     let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
     let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
-    let xln = rmsnorm(x, gamma1, d);
-    let q = matmul(&xln, wq, rows, d, qr);
-    let k = matmul(&xln, wk, rows, d, kr);
-    let v = matmul(&xln, wv, rows, d, kr);
+    let mut xln = ws.take(rows * d);
+    rmsnorm_into(x, gamma1, d, &mut xln);
+    let mut q = ws.take(rows * qr);
+    gemm::matmul(ws, &xln, wq, rows, d, qr, &mut q);
+    let mut k = ws.take(rows * kr);
+    gemm::matmul(ws, &xln, wk, rows, d, kr, &mut k);
+    let mut v = ws.take(rows * kr);
+    gemm::matmul(ws, &xln, wv, rows, d, kr, &mut v);
     let group = sh.hq / sh.hkv;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut probs = vec![0.0f32; sh.mb * sh.hq * sh.s * sh.s];
-    let mut ctx = vec![0.0f32; rows * qr];
+    let mut probs = ws.take(sh.mb * sh.hq * sh.s * sh.s);
+    let mut ctx = ws.take(rows * qr);
+    // One reusable score row (the reference allocates one per (n,h,t)).
+    let mut scores = ws.take(sh.s);
     for n in 0..sh.mb {
         for h in 0..sh.hq {
             let kh = h / group;
@@ -209,7 +199,7 @@ fn attn_core(
             for t in 0..sh.s {
                 let qrow = head(&q, n * sh.s + t, qr, h, dh);
                 // Causal scores for u <= t, stable softmax.
-                let mut scores = vec![0.0f32; t + 1];
+                let scores = &mut scores[..t + 1];
                 let mut maxv = f32::NEG_INFINITY;
                 for (u, sc) in scores.iter_mut().enumerate() {
                     let krow = head(&k, n * sh.s + u, kr, kh, dh);
@@ -237,39 +227,33 @@ fn attn_core(
             }
         }
     }
+    ws.give(scores);
     AttnCache { xln, q, k, v, probs, ctx }
 }
 
-/// Gradients of the attention core at `dout` (the gradient of the
-/// attention-path output `ctx @ wo`, before the residual).
-struct AttnCoreGrads {
-    dxln: Vec<f32>,
-    dwq: Vec<f32>,
-    dwk: Vec<f32>,
-    dwv: Vec<f32>,
-    dwo: Vec<f32>,
-}
-
-fn attn_core_bwd(
+/// Shared attention-core backward: gradients at Q/K/V from `dout` (the
+/// gradient of the attention-path output `ctx @ wo`, before the
+/// residual). Returned buffers are workspace scratch the caller gives
+/// back.
+fn attn_qkv_grads(
+    ws: &mut Workspace,
     cache: &AttnCache,
-    wq: &[f32],
-    wk: &[f32],
-    wv: &[f32],
     wo: &[f32],
     dout: &[f32],
     sh: &AttnShape,
-) -> AttnCoreGrads {
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
     let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
     let group = sh.hq / sh.hkv;
     let scale = 1.0 / (dh as f32).sqrt();
 
-    let dctx = matmul_bt(dout, wo, rows, d, qr);
-    let dwo = matmul_at(&cache.ctx, dout, rows, qr, d);
+    let mut dctx = ws.take(rows * qr);
+    gemm::matmul_bt(ws, dout, wo, rows, d, qr, &mut dctx);
 
-    let mut dq = vec![0.0f32; rows * qr];
-    let mut dk = vec![0.0f32; rows * kr];
-    let mut dv = vec![0.0f32; rows * kr];
+    let mut dq = ws.take(rows * qr);
+    let mut dk = ws.take(rows * kr);
+    let mut dv = ws.take(rows * kr);
+    let mut dp = ws.take(sh.s);
     for n in 0..sh.mb {
         for h in 0..sh.hq {
             let kh = h / group;
@@ -277,7 +261,7 @@ fn attn_core_bwd(
             for t in 0..sh.s {
                 let dcrow = head(&dctx, n * sh.s + t, qr, h, dh);
                 // dP[t,u] and the softmax-backward row sum.
-                let mut dp = vec![0.0f32; t + 1];
+                let dp = &mut dp[..t + 1];
                 let mut rho = 0.0f32;
                 for (u, dpu) in dp.iter_mut().enumerate() {
                     let vrow = head(&cache.v, n * sh.s + u, kr, kh, dh);
@@ -302,44 +286,85 @@ fn attn_core_bwd(
             }
         }
     }
+    ws.give(dp);
+    ws.give(dctx);
+    (dq, dk, dv)
+}
 
-    let mut dxln = matmul_bt(&dq, wq, rows, qr, d);
-    let dk_x = matmul_bt(&dk, wk, rows, kr, d);
-    let dv_x = matmul_bt(&dv, wv, rows, kr, d);
+/// `dxln = dq·wqᵀ + dk·wkᵀ + dv·wvᵀ` (same association as the
+/// reference: the wk/wv products are formed separately, then added as
+/// `dxln += dk_x + dv_x`). Workspace scratch; caller gives it back.
+#[allow(clippy::too_many_arguments)]
+fn attn_dxln(
+    ws: &mut Workspace,
+    dq: &[f32],
+    dk: &[f32],
+    dv: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    sh: &AttnShape,
+) -> Vec<f32> {
+    let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
+    let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
+    let mut dxln = ws.take(rows * d);
+    gemm::matmul_bt(ws, dq, wq, rows, qr, d, &mut dxln);
+    let mut dk_x = ws.take(rows * d);
+    gemm::matmul_bt(ws, dk, wk, rows, kr, d, &mut dk_x);
+    let mut dv_x = ws.take(rows * d);
+    gemm::matmul_bt(ws, dv, wv, rows, kr, d, &mut dv_x);
     for ((a, b), c) in dxln.iter_mut().zip(&dk_x).zip(&dv_x) {
         *a += *b + *c;
     }
-    let dwq = matmul_at(&cache.xln, &dq, rows, d, qr);
-    let dwk = matmul_at(&cache.xln, &dk, rows, d, kr);
-    let dwv = matmul_at(&cache.xln, &dv, rows, d, kr);
-    AttnCoreGrads { dxln, dwq, dwk, dwv, dwo }
+    ws.give(dk_x);
+    ws.give(dv_x);
+    dxln
 }
 
 /// `attn_fwd`: per-rank partial `Attention_r(RMSNorm(x)) + x/t`.
-pub(crate) fn attn_fwd(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+pub(crate) fn attn_fwd(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
     let [x, g1, wq, wk, wv, wo] = expect_args::<6>("attn_fwd", args)?;
     let sh = AttnShape::of(x, dims);
-    let cache =
-        attn_core(x.as_f32()?, g1.as_f32()?, wq.as_f32()?, wk.as_f32()?, wv.as_f32()?, &sh);
-    let mut out = matmul(&cache.ctx, wo.as_f32()?, sh.rows(), sh.hq * sh.dh, sh.d);
+    let xs = x.as_f32()?;
+    let cache = attn_core(ws, xs, g1.as_f32()?, wq.as_f32()?, wk.as_f32()?, wv.as_f32()?, &sh);
+    let mut out = vec![0.0f32; sh.rows() * sh.d];
+    gemm::matmul(ws, &cache.ctx, wo.as_f32()?, sh.rows(), sh.hq * sh.dh, sh.d, &mut out);
+    cache.release(ws);
     let inv_t = 1.0 / dims.tp as f32;
-    for (o, xi) in out.iter_mut().zip(x.as_f32()?) {
+    for (o, xi) in out.iter_mut().zip(xs) {
         *o += xi * inv_t;
     }
     Ok(vec![Tensor::f32(out, x.shape())])
 }
 
 /// `attn_bwd_x`: activation-gradient partial `vjp(dy) + dy/t`.
-pub(crate) fn attn_bwd_x(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+pub(crate) fn attn_bwd_x(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
     let [x, dy, g1, wq, wk, wv, wo] = expect_args::<7>("attn_bwd_x", args)?;
     let sh = AttnShape::of(x, dims);
-    let (xs, g1s) = (x.as_f32()?, g1.as_f32()?);
+    let (xs, g1s, dys) = (x.as_f32()?, g1.as_f32()?, dy.as_f32()?);
     let (wqs, wks, wvs) = (wq.as_f32()?, wk.as_f32()?, wv.as_f32()?);
-    let cache = attn_core(xs, g1s, wqs, wks, wvs, &sh);
-    let g = attn_core_bwd(&cache, wqs, wks, wvs, wo.as_f32()?, dy.as_f32()?, &sh);
-    let (mut dx, _) = rmsnorm_bwd(xs, g1s, &g.dxln, sh.d);
+    let cache = attn_core(ws, xs, g1s, wqs, wks, wvs, &sh);
+    let (dq, dk, dv) = attn_qkv_grads(ws, &cache, wo.as_f32()?, dys, &sh);
+    cache.release(ws);
+    let dxln = attn_dxln(ws, &dq, &dk, &dv, wqs, wks, wvs, &sh);
+    ws.give(dq);
+    ws.give(dk);
+    ws.give(dv);
+    let mut dx = vec![0.0f32; sh.rows() * sh.d];
+    let mut dg_scratch = ws.take(sh.d);
+    rmsnorm_bwd_into(xs, g1s, &dxln, sh.d, &mut dx, &mut dg_scratch);
+    ws.give(dg_scratch);
+    ws.give(dxln);
     let inv_t = 1.0 / dims.tp as f32;
-    for (o, dyi) in dx.iter_mut().zip(dy.as_f32()?) {
+    for (o, dyi) in dx.iter_mut().zip(dys) {
         *o += dyi * inv_t;
     }
     Ok(vec![Tensor::f32(dx, x.shape())])
@@ -347,20 +372,46 @@ pub(crate) fn attn_bwd_x(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Ten
 
 /// `attn_bwd_w`: `(dγ1, dwq, dwk, dwv, dwo)` — dγ1 is a partial the
 /// engine All-Reduces, the matrix grads are rank-local.
-pub(crate) fn attn_bwd_w(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+pub(crate) fn attn_bwd_w(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
     let [x, dy, g1, wq, wk, wv, wo] = expect_args::<7>("attn_bwd_w", args)?;
     let sh = AttnShape::of(x, dims);
-    let (xs, g1s) = (x.as_f32()?, g1.as_f32()?);
+    let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
+    let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
+    let (xs, g1s, dys) = (x.as_f32()?, g1.as_f32()?, dy.as_f32()?);
     let (wqs, wks, wvs) = (wq.as_f32()?, wk.as_f32()?, wv.as_f32()?);
-    let cache = attn_core(xs, g1s, wqs, wks, wvs, &sh);
-    let g = attn_core_bwd(&cache, wqs, wks, wvs, wo.as_f32()?, dy.as_f32()?, &sh);
-    let (_, dg1) = rmsnorm_bwd(xs, g1s, &g.dxln, sh.d);
+    let cache = attn_core(ws, xs, g1s, wqs, wks, wvs, &sh);
+    let (dq, dk, dv) = attn_qkv_grads(ws, &cache, wo.as_f32()?, dys, &sh);
+
+    // Rank-local weight gradients (unit outputs: plain allocations).
+    let mut dwo = vec![0.0f32; qr * d];
+    gemm::matmul_at(ws, &cache.ctx, dys, rows, qr, d, &mut dwo);
+    let mut dwq = vec![0.0f32; d * qr];
+    gemm::matmul_at(ws, &cache.xln, &dq, rows, d, qr, &mut dwq);
+    let mut dwk = vec![0.0f32; d * kr];
+    gemm::matmul_at(ws, &cache.xln, &dk, rows, d, kr, &mut dwk);
+    let mut dwv = vec![0.0f32; d * kr];
+    gemm::matmul_at(ws, &cache.xln, &dv, rows, d, kr, &mut dwv);
+
+    let dxln = attn_dxln(ws, &dq, &dk, &dv, wqs, wks, wvs, &sh);
+    ws.give(dq);
+    ws.give(dk);
+    ws.give(dv);
+    cache.release(ws);
+    let mut dg1 = vec![0.0f32; d];
+    let mut dx_scratch = ws.take(rows * d);
+    rmsnorm_bwd_into(xs, g1s, &dxln, d, &mut dx_scratch, &mut dg1);
+    ws.give(dx_scratch);
+    ws.give(dxln);
     Ok(vec![
         Tensor::f32(dg1, g1.shape()),
-        Tensor::f32(g.dwq, wq.shape()),
-        Tensor::f32(g.dwk, wk.shape()),
-        Tensor::f32(g.dwv, wv.shape()),
-        Tensor::f32(g.dwo, wo.shape()),
+        Tensor::f32(dwq, wq.shape()),
+        Tensor::f32(dwk, wk.shape()),
+        Tensor::f32(dwv, wv.shape()),
+        Tensor::f32(dwo, wo.shape()),
     ])
 }
 
@@ -368,6 +419,7 @@ pub(crate) fn attn_bwd_w(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Ten
 // MLP unit (SwiGLU, per-rank ffn slice).
 // ---------------------------------------------------------------------------
 
+/// Saved SwiGLU forward state — workspace scratch, release when done.
 struct MlpCache {
     xln: Vec<f32>, // [rows, d]
     a: Vec<f32>,   // [rows, fr] gate pre-activation
@@ -375,54 +427,53 @@ struct MlpCache {
     h: Vec<f32>,   // [rows, fr] silu(a)·b
 }
 
-fn mlp_core(x: &[f32], gamma2: &[f32], wg: &[f32], wu: &[f32], d: usize, fr: usize) -> MlpCache {
+impl MlpCache {
+    fn release(self, ws: &mut Workspace) {
+        ws.give(self.xln);
+        ws.give(self.a);
+        ws.give(self.b);
+        ws.give(self.h);
+    }
+}
+
+fn mlp_core(
+    ws: &mut Workspace,
+    x: &[f32],
+    gamma2: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    d: usize,
+    fr: usize,
+) -> MlpCache {
     let rows = x.len() / d;
-    let xln = rmsnorm(x, gamma2, d);
-    let a = matmul(&xln, wg, rows, d, fr);
-    let b = matmul(&xln, wu, rows, d, fr);
-    let mut h = vec![0.0f32; rows * fr];
+    let mut xln = ws.take(rows * d);
+    rmsnorm_into(x, gamma2, d, &mut xln);
+    let mut a = ws.take(rows * fr);
+    gemm::matmul(ws, &xln, wg, rows, d, fr, &mut a);
+    let mut b = ws.take(rows * fr);
+    gemm::matmul(ws, &xln, wu, rows, d, fr, &mut b);
+    let mut h = ws.take(rows * fr);
     for ((hv, &av), &bv) in h.iter_mut().zip(&a).zip(&b) {
         *hv = av * sigmoid(av) * bv;
     }
     MlpCache { xln, a, b, h }
 }
 
-/// `mlp_fwd`: per-rank partial `(silu(x̂Wg)·(x̂Wu))Wd + x/t`.
-pub(crate) fn mlp_fwd(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
-    let [x, g2, wg, wu, wd] = expect_args::<5>("mlp_fwd", args)?;
-    let d = x.shape()[2];
-    let fr = dims.ffn_per_rank();
-    let rows = x.len() / d;
-    let cache = mlp_core(x.as_f32()?, g2.as_f32()?, wg.as_f32()?, wu.as_f32()?, d, fr);
-    let mut out = matmul(&cache.h, wd.as_f32()?, rows, fr, d);
-    let inv_t = 1.0 / dims.tp as f32;
-    for (o, xi) in out.iter_mut().zip(x.as_f32()?) {
-        *o += xi * inv_t;
-    }
-    Ok(vec![Tensor::f32(out, x.shape())])
-}
-
-struct MlpCoreGrads {
-    dxln: Vec<f32>,
-    dwg: Vec<f32>,
-    dwu: Vec<f32>,
-    dwd: Vec<f32>,
-}
-
-fn mlp_core_bwd(
+/// Gradients at the gate/up pre-activations from `dy` (before the
+/// residual). Workspace scratch; caller gives both back.
+fn mlp_da_db(
+    ws: &mut Workspace,
     cache: &MlpCache,
-    wg: &[f32],
-    wu: &[f32],
     wd: &[f32],
     dy: &[f32],
     d: usize,
     fr: usize,
-) -> MlpCoreGrads {
+) -> (Vec<f32>, Vec<f32>) {
     let rows = cache.xln.len() / d;
-    let dh_ = matmul_bt(dy, wd, rows, d, fr);
-    let dwd = matmul_at(&cache.h, dy, rows, fr, d);
-    let mut da = vec![0.0f32; rows * fr];
-    let mut db = vec![0.0f32; rows * fr];
+    let mut dh_ = ws.take(rows * fr);
+    gemm::matmul_bt(ws, dy, wd, rows, d, fr, &mut dh_);
+    let mut da = ws.take(rows * fr);
+    let mut db = ws.take(rows * fr);
     for i in 0..rows * fr {
         let sig = sigmoid(cache.a[i]);
         let silu = cache.a[i] * sig;
@@ -430,98 +481,131 @@ fn mlp_core_bwd(
         da[i] = dh_[i] * cache.b[i] * sig * (1.0 + cache.a[i] * (1.0 - sig));
         db[i] = dh_[i] * silu;
     }
-    let mut dxln = matmul_bt(&da, wg, rows, fr, d);
-    let du_x = matmul_bt(&db, wu, rows, fr, d);
+    ws.give(dh_);
+    (da, db)
+}
+
+/// `dxln = da·wgᵀ + db·wuᵀ` (reference association: `dxln += du_x`).
+fn mlp_dxln(
+    ws: &mut Workspace,
+    da: &[f32],
+    db: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    d: usize,
+    fr: usize,
+) -> Vec<f32> {
+    let rows = da.len() / fr;
+    let mut dxln = ws.take(rows * d);
+    gemm::matmul_bt(ws, da, wg, rows, fr, d, &mut dxln);
+    let mut du_x = ws.take(rows * d);
+    gemm::matmul_bt(ws, db, wu, rows, fr, d, &mut du_x);
     for (a, b) in dxln.iter_mut().zip(&du_x) {
         *a += b;
     }
-    let dwg = matmul_at(&cache.xln, &da, rows, d, fr);
-    let dwu = matmul_at(&cache.xln, &db, rows, d, fr);
-    MlpCoreGrads { dxln, dwg, dwu, dwd }
+    ws.give(du_x);
+    dxln
+}
+
+/// `mlp_fwd`: per-rank partial `(silu(x̂Wg)·(x̂Wu))Wd + x/t`.
+pub(crate) fn mlp_fwd(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
+    let [x, g2, wg, wu, wd] = expect_args::<5>("mlp_fwd", args)?;
+    let d = x.shape()[2];
+    let fr = dims.ffn_per_rank();
+    let rows = x.len() / d;
+    let xs = x.as_f32()?;
+    let cache = mlp_core(ws, xs, g2.as_f32()?, wg.as_f32()?, wu.as_f32()?, d, fr);
+    let mut out = vec![0.0f32; rows * d];
+    gemm::matmul(ws, &cache.h, wd.as_f32()?, rows, fr, d, &mut out);
+    cache.release(ws);
+    let inv_t = 1.0 / dims.tp as f32;
+    for (o, xi) in out.iter_mut().zip(xs) {
+        *o += xi * inv_t;
+    }
+    Ok(vec![Tensor::f32(out, x.shape())])
 }
 
 /// `mlp_bwd_x`: activation-gradient partial `vjp(dy) + dy/t`.
-pub(crate) fn mlp_bwd_x(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+pub(crate) fn mlp_bwd_x(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
     let [x, dy, g2, wg, wu, wd] = expect_args::<6>("mlp_bwd_x", args)?;
     let d = x.shape()[2];
     let fr = dims.ffn_per_rank();
-    let xs = x.as_f32()?;
-    let g2s = g2.as_f32()?;
-    let cache = mlp_core(xs, g2s, wg.as_f32()?, wu.as_f32()?, d, fr);
-    let g = mlp_core_bwd(&cache, wg.as_f32()?, wu.as_f32()?, wd.as_f32()?, dy.as_f32()?, d, fr);
-    let (mut dx, _) = rmsnorm_bwd(xs, g2s, &g.dxln, d);
+    let (xs, g2s, dys) = (x.as_f32()?, g2.as_f32()?, dy.as_f32()?);
+    let (wgs, wus) = (wg.as_f32()?, wu.as_f32()?);
+    let cache = mlp_core(ws, xs, g2s, wgs, wus, d, fr);
+    let (da, db) = mlp_da_db(ws, &cache, wd.as_f32()?, dys, d, fr);
+    cache.release(ws);
+    let dxln = mlp_dxln(ws, &da, &db, wgs, wus, d, fr);
+    ws.give(da);
+    ws.give(db);
+    let mut dx = vec![0.0f32; xs.len()];
+    let mut dg_scratch = ws.take(d);
+    rmsnorm_bwd_into(xs, g2s, &dxln, d, &mut dx, &mut dg_scratch);
+    ws.give(dg_scratch);
+    ws.give(dxln);
     let inv_t = 1.0 / dims.tp as f32;
-    for (o, dyi) in dx.iter_mut().zip(dy.as_f32()?) {
+    for (o, dyi) in dx.iter_mut().zip(dys) {
         *o += dyi * inv_t;
     }
     Ok(vec![Tensor::f32(dx, x.shape())])
 }
 
 /// `mlp_bwd_w`: `(dγ2, dwg, dwu, dwd)`.
-pub(crate) fn mlp_bwd_w(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+pub(crate) fn mlp_bwd_w(
+    args: &[&Tensor],
+    dims: &ManifestDims,
+    ws: &mut Workspace,
+) -> Result<Vec<Tensor>> {
     let [x, dy, g2, wg, wu, wd] = expect_args::<6>("mlp_bwd_w", args)?;
     let d = x.shape()[2];
     let fr = dims.ffn_per_rank();
-    let xs = x.as_f32()?;
-    let g2s = g2.as_f32()?;
-    let cache = mlp_core(xs, g2s, wg.as_f32()?, wu.as_f32()?, d, fr);
-    let g = mlp_core_bwd(&cache, wg.as_f32()?, wu.as_f32()?, wd.as_f32()?, dy.as_f32()?, d, fr);
-    let (_, dg2) = rmsnorm_bwd(xs, g2s, &g.dxln, d);
+    let rows = x.len() / d;
+    let (xs, g2s, dys) = (x.as_f32()?, g2.as_f32()?, dy.as_f32()?);
+    let (wgs, wus) = (wg.as_f32()?, wu.as_f32()?);
+    let cache = mlp_core(ws, xs, g2s, wgs, wus, d, fr);
+    let (da, db) = mlp_da_db(ws, &cache, wd.as_f32()?, dys, d, fr);
+
+    let mut dwd = vec![0.0f32; fr * d];
+    gemm::matmul_at(ws, &cache.h, dys, rows, fr, d, &mut dwd);
+    let mut dwg = vec![0.0f32; d * fr];
+    gemm::matmul_at(ws, &cache.xln, &da, rows, d, fr, &mut dwg);
+    let mut dwu = vec![0.0f32; d * fr];
+    gemm::matmul_at(ws, &cache.xln, &db, rows, d, fr, &mut dwu);
+
+    let dxln = mlp_dxln(ws, &da, &db, wgs, wus, d, fr);
+    ws.give(da);
+    ws.give(db);
+    cache.release(ws);
+    let mut dg2 = vec![0.0f32; d];
+    let mut dx_scratch = ws.take(rows * d);
+    rmsnorm_bwd_into(xs, g2s, &dxln, d, &mut dx_scratch, &mut dg2);
+    ws.give(dx_scratch);
+    ws.give(dxln);
     Ok(vec![
         Tensor::f32(dg2, g2.shape()),
-        Tensor::f32(g.dwg, wg.shape()),
-        Tensor::f32(g.dwu, wu.shape()),
-        Tensor::f32(g.dwd, wd.shape()),
+        Tensor::f32(dwg, wg.shape()),
+        Tensor::f32(dwu, wu.shape()),
+        Tensor::f32(dwd, wd.shape()),
     ])
 }
 
 // ---------------------------------------------------------------------------
-// Pipeline endpoints.
+// Pipeline endpoints. `embed_fwd`/`embed_bwd` have no GEMM and no scratch
+// worth pooling — the reference implementations are re-exported above and
+// serve both kernel paths.
 // ---------------------------------------------------------------------------
-
-/// `embed_fwd`: token lookup, `tokens [mb,s] i32 × emb [V,d] → [mb,s,d]`.
-pub(crate) fn embed_fwd(args: &[Tensor]) -> Result<Vec<Tensor>> {
-    let [tok, emb] = expect_args::<2>("embed_fwd", args)?;
-    let d = emb.shape()[1];
-    let vocab = emb.shape()[0];
-    let toks = match tok {
-        Tensor::I32 { data, .. } => data,
-        _ => anyhow::bail!("embed_fwd: tokens must be i32"),
-    };
-    let es = emb.as_f32()?;
-    let mut out = Vec::with_capacity(toks.len() * d);
-    for &t in toks {
-        let t = t as usize;
-        anyhow::ensure!(t < vocab, "embed_fwd: token {t} out of vocab {vocab}");
-        out.extend_from_slice(&es[t * d..(t + 1) * d]);
-    }
-    let shape = [tok.shape()[0], tok.shape()[1], d];
-    Ok(vec![Tensor::f32(out, &shape)])
-}
-
-/// `embed_bwd`: scatter-add of `dy` rows into token slots → `[V,d]`.
-pub(crate) fn embed_bwd(args: &[Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
-    let [tok, dy] = expect_args::<2>("embed_bwd", args)?;
-    let d = dy.shape()[2];
-    let toks = match tok {
-        Tensor::I32 { data, .. } => data,
-        _ => anyhow::bail!("embed_bwd: tokens must be i32"),
-    };
-    let dys = dy.as_f32()?;
-    let mut out = vec![0.0f32; dims.vocab * d];
-    for (r, &t) in toks.iter().enumerate() {
-        let t = t as usize;
-        anyhow::ensure!(t < dims.vocab, "embed_bwd: token {t} out of vocab {}", dims.vocab);
-        for e in 0..d {
-            out[t * d + e] += dys[r * d + e];
-        }
-    }
-    Ok(vec![Tensor::f32(out, &[dims.vocab, d])])
-}
 
 /// `head_loss_grad`: fused LM head + mean token cross-entropy; returns
 /// `(loss, dx, dw_head)`.
-pub(crate) fn head_loss_grad(args: &[Tensor]) -> Result<Vec<Tensor>> {
+pub(crate) fn head_loss_grad(args: &[&Tensor], ws: &mut Workspace) -> Result<Vec<Tensor>> {
     let [x, wh, tgt] = expect_args::<3>("head_loss_grad", args)?;
     let d = x.shape()[2];
     let v = wh.shape()[1];
@@ -534,8 +618,9 @@ pub(crate) fn head_loss_grad(args: &[Tensor]) -> Result<Vec<Tensor>> {
     };
     anyhow::ensure!(tgts.len() == rows, "head_loss_grad: {} targets for {rows} rows", tgts.len());
 
-    let logits = matmul(xs, whs, rows, d, v);
-    let mut dlogits = vec![0.0f32; rows * v];
+    let mut logits = ws.take(rows * v);
+    gemm::matmul(ws, xs, whs, rows, d, v, &mut logits);
+    let mut dlogits = ws.take(rows * v);
     let inv_n = 1.0 / rows as f32;
     let mut loss = 0.0f32;
     for r in 0..rows {
@@ -557,20 +642,17 @@ pub(crate) fn head_loss_grad(args: &[Tensor]) -> Result<Vec<Tensor>> {
     }
     loss *= inv_n;
 
-    let dx = matmul_bt(&dlogits, whs, rows, v, d);
-    let dwh = matmul_at(xs, &dlogits, rows, d, v);
+    let mut dx = vec![0.0f32; rows * d];
+    gemm::matmul_bt(ws, &dlogits, whs, rows, v, d, &mut dx);
+    let mut dwh = vec![0.0f32; d * v];
+    gemm::matmul_at(ws, xs, &dlogits, rows, d, v, &mut dwh);
+    ws.give(logits);
+    ws.give(dlogits);
     Ok(vec![
         Tensor::f32(vec![loss], &[]),
         Tensor::f32(dx, x.shape()),
         Tensor::f32(dwh, wh.shape()),
     ])
-}
-
-/// Checked fixed-arity argument destructuring.
-fn expect_args<'a, const N: usize>(name: &str, args: &'a [Tensor]) -> Result<[&'a Tensor; N]> {
-    anyhow::ensure!(args.len() == N, "{name}: got {} args, expected {N}", args.len());
-    let mut it = args.iter();
-    Ok(std::array::from_fn(|_| it.next().unwrap()))
 }
 
 #[cfg(test)]
@@ -613,12 +695,7 @@ mod tests {
     /// coordinate subset. f32 noise bounds the achievable agreement; the
     /// tolerances are loose but reject any wrong formula (errors there
     /// are O(grad), two orders of magnitude larger).
-    fn fd_check(
-        mut f: impl FnMut(&[f32]) -> f32,
-        x: &[f32],
-        analytic: &[f32],
-        label: &str,
-    ) {
+    fn fd_check(mut f: impl FnMut(&[f32]) -> f32, x: &[f32], analytic: &[f32], label: &str) {
         assert_eq!(x.len(), analytic.len(), "{label}: length");
         let eps = 1e-2f32;
         let stride = (x.len() / 17).max(1);
@@ -666,26 +743,17 @@ mod tests {
     fn attn_bwd_x_matches_finite_differences() {
         let dm = dims(2); // exercises the /t residual terms
         let su = attn_setup(&dm);
-        let args = [
-            su.x.clone(),
-            t3(su.dy.clone(), dm.mb, dm.seq, dm.d),
-            su.g1.clone(),
-            su.wq.clone(),
-            su.wk.clone(),
-            su.wv.clone(),
-            su.wo.clone(),
-        ];
-        let dx = attn_bwd_x(&args, &dm).unwrap().remove(0);
+        let dyt = t3(su.dy.clone(), dm.mb, dm.seq, dm.d);
+        let mut ws = Workspace::new();
+        let dx = attn_bwd_x(&[&su.x, &dyt, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, &mut ws)
+            .unwrap()
+            .remove(0);
         let f = |xs: &[f32]| {
-            let a = [
-                t3(xs.to_vec(), dm.mb, dm.seq, dm.d),
-                su.g1.clone(),
-                su.wq.clone(),
-                su.wk.clone(),
-                su.wv.clone(),
-                su.wo.clone(),
-            ];
-            weighted(&attn_fwd(&a, &dm).unwrap()[0], &su.dy)
+            let mut w = Workspace::new();
+            let xt = t3(xs.to_vec(), dm.mb, dm.seq, dm.d);
+            let out =
+                attn_fwd(&[&xt, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, &mut w).unwrap();
+            weighted(&out[0], &su.dy)
         };
         fd_check(f, su.x.as_f32().unwrap(), dx.as_f32().unwrap(), "attn dx");
     }
@@ -694,16 +762,10 @@ mod tests {
     fn attn_bwd_w_matches_finite_differences() {
         let dm = dims(1);
         let su = attn_setup(&dm);
-        let args = [
-            su.x.clone(),
-            t3(su.dy.clone(), dm.mb, dm.seq, dm.d),
-            su.g1.clone(),
-            su.wq.clone(),
-            su.wk.clone(),
-            su.wv.clone(),
-            su.wo.clone(),
-        ];
-        let grads = attn_bwd_w(&args, &dm).unwrap();
+        let dyt = t3(su.dy.clone(), dm.mb, dm.seq, dm.d);
+        let mut ws = Workspace::new();
+        let grads = attn_bwd_w(&[&su.x, &dyt, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, &mut ws)
+            .unwrap();
         // Perturb each weight tensor in turn (index 0 = gamma1 … 4 = wo).
         for (wi, (name, base)) in [
             ("dgamma1", &su.g1),
@@ -715,18 +777,14 @@ mod tests {
         .into_iter()
         .enumerate()
         {
-            let f = |ws: &[f32]| {
-                let mut params = [
-                    su.g1.clone(),
-                    su.wq.clone(),
-                    su.wk.clone(),
-                    su.wv.clone(),
-                    su.wo.clone(),
-                ];
-                params[wi] = Tensor::f32(ws.to_vec(), base.shape());
-                let [g1, wq, wk, wv, wo] = params;
-                let a = [su.x.clone(), g1, wq, wk, wv, wo];
-                weighted(&attn_fwd(&a, &dm).unwrap()[0], &su.dy)
+            let f = |wsl: &[f32]| {
+                let mut w = Workspace::new();
+                let mut params =
+                    [su.g1.clone(), su.wq.clone(), su.wk.clone(), su.wv.clone(), su.wo.clone()];
+                params[wi] = Tensor::f32(wsl.to_vec(), base.shape());
+                let [g1, wq, wk, wv, wo] = &params;
+                let out = attn_fwd(&[&su.x, g1, wq, wk, wv, wo], &dm, &mut w).unwrap();
+                weighted(&out[0], &su.dy)
             };
             fd_check(f, base.as_f32().unwrap(), grads[wi].as_f32().unwrap(), name);
         }
@@ -758,24 +816,16 @@ mod tests {
     fn mlp_bwd_x_matches_finite_differences() {
         let dm = dims(2);
         let su = mlp_setup(&dm);
-        let args = [
-            su.x.clone(),
-            t3(su.dy.clone(), dm.mb, dm.seq, dm.d),
-            su.g2.clone(),
-            su.wg.clone(),
-            su.wu.clone(),
-            su.wd.clone(),
-        ];
-        let dx = mlp_bwd_x(&args, &dm).unwrap().remove(0);
+        let dyt = t3(su.dy.clone(), dm.mb, dm.seq, dm.d);
+        let mut ws = Workspace::new();
+        let dx = mlp_bwd_x(&[&su.x, &dyt, &su.g2, &su.wg, &su.wu, &su.wd], &dm, &mut ws)
+            .unwrap()
+            .remove(0);
         let f = |xs: &[f32]| {
-            let a = [
-                t3(xs.to_vec(), dm.mb, dm.seq, dm.d),
-                su.g2.clone(),
-                su.wg.clone(),
-                su.wu.clone(),
-                su.wd.clone(),
-            ];
-            weighted(&mlp_fwd(&a, &dm).unwrap()[0], &su.dy)
+            let mut w = Workspace::new();
+            let xt = t3(xs.to_vec(), dm.mb, dm.seq, dm.d);
+            let out = mlp_fwd(&[&xt, &su.g2, &su.wg, &su.wu, &su.wd], &dm, &mut w).unwrap();
+            weighted(&out[0], &su.dy)
         };
         fd_check(f, su.x.as_f32().unwrap(), dx.as_f32().unwrap(), "mlp dx");
     }
@@ -784,26 +834,22 @@ mod tests {
     fn mlp_bwd_w_matches_finite_differences() {
         let dm = dims(1);
         let su = mlp_setup(&dm);
-        let args = [
-            su.x.clone(),
-            t3(su.dy.clone(), dm.mb, dm.seq, dm.d),
-            su.g2.clone(),
-            su.wg.clone(),
-            su.wu.clone(),
-            su.wd.clone(),
-        ];
-        let grads = mlp_bwd_w(&args, &dm).unwrap();
+        let dyt = t3(su.dy.clone(), dm.mb, dm.seq, dm.d);
+        let mut ws = Workspace::new();
+        let grads =
+            mlp_bwd_w(&[&su.x, &dyt, &su.g2, &su.wg, &su.wu, &su.wd], &dm, &mut ws).unwrap();
         for (wi, (name, base)) in
             [("dgamma2", &su.g2), ("dwg", &su.wg), ("dwu", &su.wu), ("dwd", &su.wd)]
                 .into_iter()
                 .enumerate()
         {
-            let f = |ws: &[f32]| {
+            let f = |wsl: &[f32]| {
+                let mut w = Workspace::new();
                 let mut params = [su.g2.clone(), su.wg.clone(), su.wu.clone(), su.wd.clone()];
-                params[wi] = Tensor::f32(ws.to_vec(), base.shape());
-                let [g2, wg, wu, wd] = params;
-                let a = [su.x.clone(), g2, wg, wu, wd];
-                weighted(&mlp_fwd(&a, &dm).unwrap()[0], &su.dy)
+                params[wi] = Tensor::f32(wsl.to_vec(), base.shape());
+                let [g2, wg, wu, wd] = &params;
+                let out = mlp_fwd(&[&su.x, g2, wg, wu, wd], &dm, &mut w).unwrap();
+                weighted(&out[0], &su.dy)
             };
             fd_check(f, base.as_f32().unwrap(), grads[wi].as_f32().unwrap(), name);
         }
@@ -816,18 +862,21 @@ mod tests {
         let x = t3(randn(21, mb * s * d, 0.5), mb, s, d);
         let wh = Tensor::f32(randn(22, d * v, 0.3), &[d, v]);
         let tgt = Tensor::i32((0..(mb * s) as i32).map(|i| i % v as i32).collect(), &[mb, s]);
-        let out = head_loss_grad(&[x.clone(), wh.clone(), tgt.clone()]).unwrap();
+        let mut ws = Workspace::new();
+        let out = head_loss_grad(&[&x, &wh, &tgt], &mut ws).unwrap();
         let loss = out[0].scalar_f32().unwrap();
         assert!(loss.is_finite() && loss > 0.0);
 
         let fx = |xs: &[f32]| {
-            let a = [t3(xs.to_vec(), mb, s, d), wh.clone(), tgt.clone()];
-            head_loss_grad(&a).unwrap()[0].scalar_f32().unwrap()
+            let mut w = Workspace::new();
+            let xt = t3(xs.to_vec(), mb, s, d);
+            head_loss_grad(&[&xt, &wh, &tgt], &mut w).unwrap()[0].scalar_f32().unwrap()
         };
         fd_check(fx, x.as_f32().unwrap(), out[1].as_f32().unwrap(), "head dx");
-        let fw = |ws: &[f32]| {
-            let a = [x.clone(), Tensor::f32(ws.to_vec(), &[d, v]), tgt.clone()];
-            head_loss_grad(&a).unwrap()[0].scalar_f32().unwrap()
+        let fw = |wsl: &[f32]| {
+            let mut w = Workspace::new();
+            let wt = Tensor::f32(wsl.to_vec(), &[d, v]);
+            head_loss_grad(&[&x, &wt, &tgt], &mut w).unwrap()[0].scalar_f32().unwrap()
         };
         fd_check(fw, wh.as_f32().unwrap(), out[2].as_f32().unwrap(), "head dwh");
     }
@@ -837,14 +886,14 @@ mod tests {
         let dm = dims(1);
         let tok = Tensor::i32(vec![1, 4, 1, 0, 2, 3], &[dm.mb, dm.seq]);
         let emb = Tensor::f32(randn(31, dm.vocab * dm.d, 0.5), &[dm.vocab, dm.d]);
-        let x = embed_fwd(&[tok.clone(), emb.clone()]).unwrap().remove(0);
+        let x = embed_fwd(&[&tok, &emb]).unwrap().remove(0);
         assert_eq!(x.shape(), &[dm.mb, dm.seq, dm.d]);
         // Row 0 of the output is embedding row of token 1.
         assert_eq!(&x.as_f32().unwrap()[..dm.d], &emb.as_f32().unwrap()[dm.d..2 * dm.d]);
 
         // Gradient: scatter-add — duplicated token 1 accumulates twice.
         let dy = t3(vec![1.0; dm.mb * dm.seq * dm.d], dm.mb, dm.seq, dm.d);
-        let de = embed_bwd(&[tok, dy], &dm).unwrap().remove(0);
+        let de = embed_bwd(&[&tok, &dy], &dm).unwrap().remove(0);
         assert_eq!(de.shape(), &[dm.vocab, dm.d]);
         let des = de.as_f32().unwrap();
         assert_eq!(des[dm.d], 2.0); // token 1 appears twice
@@ -873,19 +922,13 @@ mod tests {
         let wv = randn(44, d * kd, 0.3);
         let wo = randn(45, qd * d, 0.3);
 
-        let dense = attn_fwd(
-            &[
-                x.clone(),
-                g1.clone(),
-                Tensor::f32(wq.clone(), &[d, qd]),
-                Tensor::f32(wk.clone(), &[d, kd]),
-                Tensor::f32(wv.clone(), &[d, kd]),
-                Tensor::f32(wo.clone(), &[qd, d]),
-            ],
-            &dm1,
-        )
-        .unwrap()
-        .remove(0);
+        let mut ws = Workspace::new();
+        let wqt = Tensor::f32(wq.clone(), &[d, qd]);
+        let wkt = Tensor::f32(wk.clone(), &[d, kd]);
+        let wvt = Tensor::f32(wv.clone(), &[d, kd]);
+        let wot = Tensor::f32(wo.clone(), &[qd, d]);
+        let dense =
+            attn_fwd(&[&x, &g1, &wqt, &wkt, &wvt, &wot], &dm1, &mut ws).unwrap().remove(0);
 
         let col = |w: &[f32], cols: usize, c0: usize, c1: usize| -> Vec<f32> {
             let rows = w.len() / cols;
@@ -898,19 +941,12 @@ mod tests {
         let mut summed = vec![0.0f32; mb * s * d];
         for r in 0..2 {
             let (qr, kr) = (qd / 2, kd / 2);
-            let part = attn_fwd(
-                &[
-                    x.clone(),
-                    g1.clone(),
-                    Tensor::f32(col(&wq, qd, r * qr, (r + 1) * qr), &[d, qr]),
-                    Tensor::f32(col(&wk, kd, r * kr, (r + 1) * kr), &[d, kr]),
-                    Tensor::f32(col(&wv, kd, r * kr, (r + 1) * kr), &[d, kr]),
-                    Tensor::f32(wo[r * qr * d..(r + 1) * qr * d].to_vec(), &[qr, d]),
-                ],
-                &dm2,
-            )
-            .unwrap()
-            .remove(0);
+            let wqs = Tensor::f32(col(&wq, qd, r * qr, (r + 1) * qr), &[d, qr]);
+            let wks = Tensor::f32(col(&wk, kd, r * kr, (r + 1) * kr), &[d, kr]);
+            let wvs = Tensor::f32(col(&wv, kd, r * kr, (r + 1) * kr), &[d, kr]);
+            let wos = Tensor::f32(wo[r * qr * d..(r + 1) * qr * d].to_vec(), &[qr, d]);
+            let part =
+                attn_fwd(&[&x, &g1, &wqs, &wks, &wvs, &wos], &dm2, &mut ws).unwrap().remove(0);
             for (a, b) in summed.iter_mut().zip(part.as_f32().unwrap()) {
                 *a += b;
             }
@@ -918,5 +954,34 @@ mod tests {
         for (i, (a, b)) in summed.iter().zip(dense.as_f32().unwrap()).enumerate() {
             assert!((a - b).abs() < 1e-4, "elem {i}: sharded {a} vs dense {b}");
         }
+    }
+
+    #[test]
+    fn units_return_all_workspace_scratch() {
+        // Take/give pairing: running every arena-backed unit a second
+        // time on the same workspace allocates nothing — a leaked buffer
+        // would surface here (and as a nonzero steady-state count in
+        // `tests/train_virtual.rs`).
+        let dm = dims(2);
+        let su = attn_setup(&dm);
+        let mu = mlp_setup(&dm);
+        let dyt = t3(su.dy.clone(), dm.mb, dm.seq, dm.d);
+        let wh = Tensor::f32(randn(51, dm.d * dm.vocab, 0.3), &[dm.d, dm.vocab]);
+        let tgt = Tensor::i32(vec![1; dm.mb * dm.seq], &[dm.mb, dm.seq]);
+        let mut ws = Workspace::new();
+        let mut run_all = |ws: &mut Workspace| {
+            attn_fwd(&[&su.x, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, ws).unwrap();
+            attn_bwd_x(&[&su.x, &dyt, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, ws).unwrap();
+            attn_bwd_w(&[&su.x, &dyt, &su.g1, &su.wq, &su.wk, &su.wv, &su.wo], &dm, ws).unwrap();
+            mlp_fwd(&[&mu.x, &mu.g2, &mu.wg, &mu.wu, &mu.wd], &dm, ws).unwrap();
+            mlp_bwd_x(&[&mu.x, &dyt, &mu.g2, &mu.wg, &mu.wu, &mu.wd], &dm, ws).unwrap();
+            mlp_bwd_w(&[&mu.x, &dyt, &mu.g2, &mu.wg, &mu.wu, &mu.wd], &dm, ws).unwrap();
+            head_loss_grad(&[&su.x, &wh, &tgt], ws).unwrap();
+        };
+        run_all(&mut ws);
+        let warm = ws.stats().fresh_allocs;
+        assert!(warm > 0, "arena-backed units must use the workspace");
+        run_all(&mut ws);
+        assert_eq!(ws.stats().fresh_allocs, warm, "second run must recycle every buffer");
     }
 }

@@ -1,0 +1,573 @@
+//! The **naive reference kernels** — the virtual backend's numeric oracle.
+//!
+//! This is the original (pre-arena, pre-blocking) implementation of the
+//! nine AOT unit signatures, preserved as-is when the hot path moved to
+//! the cache-blocked, workspace-backed kernels in [`super`] — exactly the
+//! way the polling simulator survives as `sim::reference`. Plain
+//! deterministic f32 triple loops, a fresh `Vec<f32>` per intermediate,
+//! no scratch reuse: slow, obviously correct, and bit-deterministic.
+//!
+//! Two consumers keep it alive:
+//! * the **parity suite** (`tests/kernel_parity.rs`) pins the blocked
+//!   kernels against these — and the blocked GEMMs are constructed to be
+//!   *bit-equal* (they preserve the per-element accumulation order, see
+//!   [`super::gemm`]);
+//! * the **bench baselines** (`stp bench train` with
+//!   `KernelPath::Reference`, `benches/kernel_perf.rs`) measure the
+//!   speedup the blocked path buys.
+//!
+//! The math itself is `python/compile/kernels/ref.py` / `model.py`:
+//! forwards are per-TP-rank partials with the fused residual `+ x/t`
+//! (paper Eq. 1–2); `*_bwd_x` returns the activation-gradient partial
+//! `vjp(dy) + dy/t`; `*_bwd_w` returns rank-local weight gradients plus
+//! replicated RMSNorm gamma partials.
+
+// Index-heavy tensor math: offset-based loops are the clearest way to
+// write the strided head/sequence indexing below.
+#![allow(clippy::needless_range_loop)]
+
+use crate::config::ManifestDims;
+use crate::runtime::Tensor;
+use crate::Result;
+
+use super::expect_args;
+
+const EPS: f32 = 1e-6;
+
+// ---------------------------------------------------------------------------
+// Small dense building blocks (fixed accumulation order).
+// ---------------------------------------------------------------------------
+
+/// `[n,k] @ [k,m] -> [n,m]`.
+pub fn matmul(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        for p in 0..k {
+            let av = a[i * k + p];
+            let br = &b[p * m..(p + 1) * m];
+            let or = &mut out[i * m..(i + 1) * m];
+            for j in 0..m {
+                or[j] += av * br[j];
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ @ b` where `a: [k,n]`, `b: [k,m]` → `[n,m]` (weight gradients).
+pub fn matmul_at(a: &[f32], b: &[f32], k: usize, n: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * n);
+    debug_assert_eq!(b.len(), k * m);
+    let mut out = vec![0.0f32; n * m];
+    for p in 0..k {
+        let ar = &a[p * n..(p + 1) * n];
+        let br = &b[p * m..(p + 1) * m];
+        for i in 0..n {
+            let av = ar[i];
+            let or = &mut out[i * m..(i + 1) * m];
+            for j in 0..m {
+                or[j] += av * br[j];
+            }
+        }
+    }
+    out
+}
+
+/// `a @ bᵀ` where `a: [n,k]`, `b: [m,k]` → `[n,m]` (input gradients).
+pub fn matmul_bt(a: &[f32], b: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), n * k);
+    debug_assert_eq!(b.len(), m * k);
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let ar = &a[i * k..(i + 1) * k];
+        let or = &mut out[i * m..(i + 1) * m];
+        for j in 0..m {
+            let br = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += ar[p] * br[p];
+            }
+            or[j] = acc;
+        }
+    }
+    out
+}
+
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// RMSNorm forward: `y = x · rsqrt(mean(x²)+ε) · γ`, per length-`d` row.
+fn rmsnorm(x: &[f32], gamma: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        for i in 0..d {
+            y[r * d + i] = xr[i] * inv * gamma[i];
+        }
+    }
+    y
+}
+
+/// RMSNorm backward: given the gradient `dy` at the norm's output,
+/// returns `(dx, dγ)`.
+///
+/// With `r = rsqrt(mean(x²)+ε)`: `dx_j = r·γ_j·dy_j − (r³/d)·x_j·Σᵢ
+/// dyᵢγᵢxᵢ` and `dγ_i = Σ_rows dyᵢ·xᵢ·r`.
+fn rmsnorm_bwd(x: &[f32], gamma: &[f32], dy: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dg = vec![0.0f32; d];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + EPS).sqrt();
+        let mut s = 0.0f32;
+        for i in 0..d {
+            s += dyr[i] * gamma[i] * xr[i];
+            dg[i] += dyr[i] * xr[i] * inv;
+        }
+        let k = inv * inv * inv * s / d as f32;
+        for i in 0..d {
+            dx[r * d + i] = inv * gamma[i] * dyr[i] - k * xr[i];
+        }
+    }
+    (dx, dg)
+}
+
+// ---------------------------------------------------------------------------
+// Attention unit (per-rank head slice, causal, GQA).
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one attention-core evaluation.
+struct AttnCache {
+    xln: Vec<f32>,   // [rows, d]
+    q: Vec<f32>,     // [rows, hq*dh]
+    k: Vec<f32>,     // [rows, hkv*dh]
+    v: Vec<f32>,     // [rows, hkv*dh]
+    probs: Vec<f32>, // [mb, hq, s, s] (0 above the diagonal)
+    ctx: Vec<f32>,   // [rows, hq*dh]
+}
+
+struct AttnShape {
+    mb: usize,
+    s: usize,
+    d: usize,
+    hq: usize,
+    hkv: usize,
+    dh: usize,
+}
+
+impl AttnShape {
+    fn of(x: &Tensor, dims: &ManifestDims) -> AttnShape {
+        let sh = x.shape();
+        AttnShape {
+            mb: sh[0],
+            s: sh[1],
+            d: sh[2],
+            hq: dims.q_heads_per_rank(),
+            hkv: dims.kv_heads_per_rank(),
+            dh: dims.head_dim(),
+        }
+    }
+    fn rows(&self) -> usize {
+        self.mb * self.s
+    }
+}
+
+/// The `[h·dh, (h+1)·dh)` head slice of row `row` in a `[rows, stride]`
+/// buffer.
+#[inline]
+fn head(buf: &[f32], row: usize, stride: usize, h: usize, dh: usize) -> &[f32] {
+    &buf[row * stride + h * dh..row * stride + (h + 1) * dh]
+}
+
+/// Forward of `attention_core(rmsnorm(x, γ1), …)` keeping everything the
+/// backward needs.
+fn attn_core(
+    x: &[f32],
+    gamma1: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    sh: &AttnShape,
+) -> AttnCache {
+    let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
+    let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
+    let xln = rmsnorm(x, gamma1, d);
+    let q = matmul(&xln, wq, rows, d, qr);
+    let k = matmul(&xln, wk, rows, d, kr);
+    let v = matmul(&xln, wv, rows, d, kr);
+    let group = sh.hq / sh.hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut probs = vec![0.0f32; sh.mb * sh.hq * sh.s * sh.s];
+    let mut ctx = vec![0.0f32; rows * qr];
+    for n in 0..sh.mb {
+        for h in 0..sh.hq {
+            let kh = h / group;
+            let pbase = ((n * sh.hq) + h) * sh.s * sh.s;
+            for t in 0..sh.s {
+                let qrow = head(&q, n * sh.s + t, qr, h, dh);
+                // Causal scores for u <= t, stable softmax.
+                let mut scores = vec![0.0f32; t + 1];
+                let mut maxv = f32::NEG_INFINITY;
+                for (u, sc) in scores.iter_mut().enumerate() {
+                    let krow = head(&k, n * sh.s + u, kr, kh, dh);
+                    let mut acc = 0.0f32;
+                    for e in 0..dh {
+                        acc += qrow[e] * krow[e];
+                    }
+                    *sc = acc * scale;
+                    maxv = maxv.max(*sc);
+                }
+                let mut z = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - maxv).exp();
+                    z += *sc;
+                }
+                let cbase = (n * sh.s + t) * qr + h * dh;
+                for (u, sc) in scores.iter().enumerate() {
+                    let p = sc / z;
+                    probs[pbase + t * sh.s + u] = p;
+                    let vrow = head(&v, n * sh.s + u, kr, kh, dh);
+                    for e in 0..dh {
+                        ctx[cbase + e] += p * vrow[e];
+                    }
+                }
+            }
+        }
+    }
+    AttnCache { xln, q, k, v, probs, ctx }
+}
+
+/// Gradients of the attention core at `dout` (the gradient of the
+/// attention-path output `ctx @ wo`, before the residual).
+struct AttnCoreGrads {
+    dxln: Vec<f32>,
+    dwq: Vec<f32>,
+    dwk: Vec<f32>,
+    dwv: Vec<f32>,
+    dwo: Vec<f32>,
+}
+
+fn attn_core_bwd(
+    cache: &AttnCache,
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    dout: &[f32],
+    sh: &AttnShape,
+) -> AttnCoreGrads {
+    let (rows, d, dh) = (sh.rows(), sh.d, sh.dh);
+    let (qr, kr) = (sh.hq * dh, sh.hkv * dh);
+    let group = sh.hq / sh.hkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    let dctx = matmul_bt(dout, wo, rows, d, qr);
+    let dwo = matmul_at(&cache.ctx, dout, rows, qr, d);
+
+    let mut dq = vec![0.0f32; rows * qr];
+    let mut dk = vec![0.0f32; rows * kr];
+    let mut dv = vec![0.0f32; rows * kr];
+    for n in 0..sh.mb {
+        for h in 0..sh.hq {
+            let kh = h / group;
+            let pbase = ((n * sh.hq) + h) * sh.s * sh.s;
+            for t in 0..sh.s {
+                let dcrow = head(&dctx, n * sh.s + t, qr, h, dh);
+                // dP[t,u] and the softmax-backward row sum.
+                let mut dp = vec![0.0f32; t + 1];
+                let mut rho = 0.0f32;
+                for (u, dpu) in dp.iter_mut().enumerate() {
+                    let vrow = head(&cache.v, n * sh.s + u, kr, kh, dh);
+                    let mut acc = 0.0f32;
+                    for e in 0..dh {
+                        acc += dcrow[e] * vrow[e];
+                    }
+                    *dpu = acc;
+                    rho += acc * cache.probs[pbase + t * sh.s + u];
+                }
+                let qrow_base = (n * sh.s + t) * qr + h * dh;
+                for (u, dpu) in dp.iter().enumerate() {
+                    let p = cache.probs[pbase + t * sh.s + u];
+                    let ds = p * (dpu - rho) * scale;
+                    let krow_base = (n * sh.s + u) * kr + kh * dh;
+                    for e in 0..dh {
+                        dq[qrow_base + e] += ds * cache.k[krow_base + e];
+                        dk[krow_base + e] += ds * cache.q[qrow_base + e];
+                        dv[krow_base + e] += p * dcrow[e];
+                    }
+                }
+            }
+        }
+    }
+
+    let mut dxln = matmul_bt(&dq, wq, rows, qr, d);
+    let dk_x = matmul_bt(&dk, wk, rows, kr, d);
+    let dv_x = matmul_bt(&dv, wv, rows, kr, d);
+    for ((a, b), c) in dxln.iter_mut().zip(&dk_x).zip(&dv_x) {
+        *a += *b + *c;
+    }
+    let dwq = matmul_at(&cache.xln, &dq, rows, d, qr);
+    let dwk = matmul_at(&cache.xln, &dk, rows, d, kr);
+    let dwv = matmul_at(&cache.xln, &dv, rows, d, kr);
+    AttnCoreGrads { dxln, dwq, dwk, dwv, dwo }
+}
+
+/// `attn_fwd`: per-rank partial `Attention_r(RMSNorm(x)) + x/t`.
+pub(crate) fn attn_fwd(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, g1, wq, wk, wv, wo] = expect_args::<6>("attn_fwd", args)?;
+    let sh = AttnShape::of(x, dims);
+    let cache =
+        attn_core(x.as_f32()?, g1.as_f32()?, wq.as_f32()?, wk.as_f32()?, wv.as_f32()?, &sh);
+    let mut out = matmul(&cache.ctx, wo.as_f32()?, sh.rows(), sh.hq * sh.dh, sh.d);
+    let inv_t = 1.0 / dims.tp as f32;
+    for (o, xi) in out.iter_mut().zip(x.as_f32()?) {
+        *o += xi * inv_t;
+    }
+    Ok(vec![Tensor::f32(out, x.shape())])
+}
+
+/// `attn_bwd_x`: activation-gradient partial `vjp(dy) + dy/t`.
+pub(crate) fn attn_bwd_x(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, dy, g1, wq, wk, wv, wo] = expect_args::<7>("attn_bwd_x", args)?;
+    let sh = AttnShape::of(x, dims);
+    let (xs, g1s) = (x.as_f32()?, g1.as_f32()?);
+    let (wqs, wks, wvs) = (wq.as_f32()?, wk.as_f32()?, wv.as_f32()?);
+    let cache = attn_core(xs, g1s, wqs, wks, wvs, &sh);
+    let g = attn_core_bwd(&cache, wqs, wks, wvs, wo.as_f32()?, dy.as_f32()?, &sh);
+    let (mut dx, _) = rmsnorm_bwd(xs, g1s, &g.dxln, sh.d);
+    let inv_t = 1.0 / dims.tp as f32;
+    for (o, dyi) in dx.iter_mut().zip(dy.as_f32()?) {
+        *o += dyi * inv_t;
+    }
+    Ok(vec![Tensor::f32(dx, x.shape())])
+}
+
+/// `attn_bwd_w`: `(dγ1, dwq, dwk, dwv, dwo)` — dγ1 is a partial the
+/// engine All-Reduces, the matrix grads are rank-local.
+pub(crate) fn attn_bwd_w(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, dy, g1, wq, wk, wv, wo] = expect_args::<7>("attn_bwd_w", args)?;
+    let sh = AttnShape::of(x, dims);
+    let (xs, g1s) = (x.as_f32()?, g1.as_f32()?);
+    let (wqs, wks, wvs) = (wq.as_f32()?, wk.as_f32()?, wv.as_f32()?);
+    let cache = attn_core(xs, g1s, wqs, wks, wvs, &sh);
+    let g = attn_core_bwd(&cache, wqs, wks, wvs, wo.as_f32()?, dy.as_f32()?, &sh);
+    let (_, dg1) = rmsnorm_bwd(xs, g1s, &g.dxln, sh.d);
+    Ok(vec![
+        Tensor::f32(dg1, g1.shape()),
+        Tensor::f32(g.dwq, wq.shape()),
+        Tensor::f32(g.dwk, wk.shape()),
+        Tensor::f32(g.dwv, wv.shape()),
+        Tensor::f32(g.dwo, wo.shape()),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// MLP unit (SwiGLU, per-rank ffn slice).
+// ---------------------------------------------------------------------------
+
+struct MlpCache {
+    xln: Vec<f32>, // [rows, d]
+    a: Vec<f32>,   // [rows, fr] gate pre-activation
+    b: Vec<f32>,   // [rows, fr] up projection
+    h: Vec<f32>,   // [rows, fr] silu(a)·b
+}
+
+fn mlp_core(x: &[f32], gamma2: &[f32], wg: &[f32], wu: &[f32], d: usize, fr: usize) -> MlpCache {
+    let rows = x.len() / d;
+    let xln = rmsnorm(x, gamma2, d);
+    let a = matmul(&xln, wg, rows, d, fr);
+    let b = matmul(&xln, wu, rows, d, fr);
+    let mut h = vec![0.0f32; rows * fr];
+    for ((hv, &av), &bv) in h.iter_mut().zip(&a).zip(&b) {
+        *hv = av * sigmoid(av) * bv;
+    }
+    MlpCache { xln, a, b, h }
+}
+
+/// `mlp_fwd`: per-rank partial `(silu(x̂Wg)·(x̂Wu))Wd + x/t`.
+pub(crate) fn mlp_fwd(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, g2, wg, wu, wd] = expect_args::<5>("mlp_fwd", args)?;
+    let d = x.shape()[2];
+    let fr = dims.ffn_per_rank();
+    let rows = x.len() / d;
+    let cache = mlp_core(x.as_f32()?, g2.as_f32()?, wg.as_f32()?, wu.as_f32()?, d, fr);
+    let mut out = matmul(&cache.h, wd.as_f32()?, rows, fr, d);
+    let inv_t = 1.0 / dims.tp as f32;
+    for (o, xi) in out.iter_mut().zip(x.as_f32()?) {
+        *o += xi * inv_t;
+    }
+    Ok(vec![Tensor::f32(out, x.shape())])
+}
+
+struct MlpCoreGrads {
+    dxln: Vec<f32>,
+    dwg: Vec<f32>,
+    dwu: Vec<f32>,
+    dwd: Vec<f32>,
+}
+
+fn mlp_core_bwd(
+    cache: &MlpCache,
+    wg: &[f32],
+    wu: &[f32],
+    wd: &[f32],
+    dy: &[f32],
+    d: usize,
+    fr: usize,
+) -> MlpCoreGrads {
+    let rows = cache.xln.len() / d;
+    let dh_ = matmul_bt(dy, wd, rows, d, fr);
+    let dwd = matmul_at(&cache.h, dy, rows, fr, d);
+    let mut da = vec![0.0f32; rows * fr];
+    let mut db = vec![0.0f32; rows * fr];
+    for i in 0..rows * fr {
+        let sig = sigmoid(cache.a[i]);
+        let silu = cache.a[i] * sig;
+        // d silu / da = σ(a)·(1 + a·(1−σ(a)))
+        da[i] = dh_[i] * cache.b[i] * sig * (1.0 + cache.a[i] * (1.0 - sig));
+        db[i] = dh_[i] * silu;
+    }
+    let mut dxln = matmul_bt(&da, wg, rows, fr, d);
+    let du_x = matmul_bt(&db, wu, rows, fr, d);
+    for (a, b) in dxln.iter_mut().zip(&du_x) {
+        *a += b;
+    }
+    let dwg = matmul_at(&cache.xln, &da, rows, d, fr);
+    let dwu = matmul_at(&cache.xln, &db, rows, d, fr);
+    MlpCoreGrads { dxln, dwg, dwu, dwd }
+}
+
+/// `mlp_bwd_x`: activation-gradient partial `vjp(dy) + dy/t`.
+pub(crate) fn mlp_bwd_x(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, dy, g2, wg, wu, wd] = expect_args::<6>("mlp_bwd_x", args)?;
+    let d = x.shape()[2];
+    let fr = dims.ffn_per_rank();
+    let xs = x.as_f32()?;
+    let g2s = g2.as_f32()?;
+    let cache = mlp_core(xs, g2s, wg.as_f32()?, wu.as_f32()?, d, fr);
+    let g = mlp_core_bwd(&cache, wg.as_f32()?, wu.as_f32()?, wd.as_f32()?, dy.as_f32()?, d, fr);
+    let (mut dx, _) = rmsnorm_bwd(xs, g2s, &g.dxln, d);
+    let inv_t = 1.0 / dims.tp as f32;
+    for (o, dyi) in dx.iter_mut().zip(dy.as_f32()?) {
+        *o += dyi * inv_t;
+    }
+    Ok(vec![Tensor::f32(dx, x.shape())])
+}
+
+/// `mlp_bwd_w`: `(dγ2, dwg, dwu, dwd)`.
+pub(crate) fn mlp_bwd_w(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [x, dy, g2, wg, wu, wd] = expect_args::<6>("mlp_bwd_w", args)?;
+    let d = x.shape()[2];
+    let fr = dims.ffn_per_rank();
+    let xs = x.as_f32()?;
+    let g2s = g2.as_f32()?;
+    let cache = mlp_core(xs, g2s, wg.as_f32()?, wu.as_f32()?, d, fr);
+    let g = mlp_core_bwd(&cache, wg.as_f32()?, wu.as_f32()?, wd.as_f32()?, dy.as_f32()?, d, fr);
+    let (_, dg2) = rmsnorm_bwd(xs, g2s, &g.dxln, d);
+    Ok(vec![
+        Tensor::f32(dg2, g2.shape()),
+        Tensor::f32(g.dwg, wg.shape()),
+        Tensor::f32(g.dwu, wu.shape()),
+        Tensor::f32(g.dwd, wd.shape()),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline endpoints.
+// ---------------------------------------------------------------------------
+
+/// `embed_fwd`: token lookup, `tokens [mb,s] i32 × emb [V,d] → [mb,s,d]`.
+pub(crate) fn embed_fwd(args: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let [tok, emb] = expect_args::<2>("embed_fwd", args)?;
+    let d = emb.shape()[1];
+    let vocab = emb.shape()[0];
+    let toks = match tok {
+        Tensor::I32 { data, .. } => data,
+        _ => anyhow::bail!("embed_fwd: tokens must be i32"),
+    };
+    let es = emb.as_f32()?;
+    let mut out = Vec::with_capacity(toks.len() * d);
+    for &t in toks {
+        let t = t as usize;
+        anyhow::ensure!(t < vocab, "embed_fwd: token {t} out of vocab {vocab}");
+        out.extend_from_slice(&es[t * d..(t + 1) * d]);
+    }
+    let shape = [tok.shape()[0], tok.shape()[1], d];
+    Ok(vec![Tensor::f32(out, &shape)])
+}
+
+/// `embed_bwd`: scatter-add of `dy` rows into token slots → `[V,d]`.
+pub(crate) fn embed_bwd(args: &[&Tensor], dims: &ManifestDims) -> Result<Vec<Tensor>> {
+    let [tok, dy] = expect_args::<2>("embed_bwd", args)?;
+    let d = dy.shape()[2];
+    let toks = match tok {
+        Tensor::I32 { data, .. } => data,
+        _ => anyhow::bail!("embed_bwd: tokens must be i32"),
+    };
+    let dys = dy.as_f32()?;
+    let mut out = vec![0.0f32; dims.vocab * d];
+    for (r, &t) in toks.iter().enumerate() {
+        let t = t as usize;
+        anyhow::ensure!(t < dims.vocab, "embed_bwd: token {t} out of vocab {}", dims.vocab);
+        for e in 0..d {
+            out[t * d + e] += dys[r * d + e];
+        }
+    }
+    Ok(vec![Tensor::f32(out, &[dims.vocab, d])])
+}
+
+/// `head_loss_grad`: fused LM head + mean token cross-entropy; returns
+/// `(loss, dx, dw_head)`.
+pub(crate) fn head_loss_grad(args: &[&Tensor]) -> Result<Vec<Tensor>> {
+    let [x, wh, tgt] = expect_args::<3>("head_loss_grad", args)?;
+    let d = x.shape()[2];
+    let v = wh.shape()[1];
+    let rows = x.len() / d;
+    let xs = x.as_f32()?;
+    let whs = wh.as_f32()?;
+    let tgts = match tgt {
+        Tensor::I32 { data, .. } => data,
+        _ => anyhow::bail!("head_loss_grad: targets must be i32"),
+    };
+    anyhow::ensure!(tgts.len() == rows, "head_loss_grad: {} targets for {rows} rows", tgts.len());
+
+    let logits = matmul(xs, whs, rows, d, v);
+    let mut dlogits = vec![0.0f32; rows * v];
+    let inv_n = 1.0 / rows as f32;
+    let mut loss = 0.0f32;
+    for r in 0..rows {
+        let lr = &logits[r * v..(r + 1) * v];
+        let t = tgts[r] as usize;
+        anyhow::ensure!(t < v, "head_loss_grad: target {t} out of vocab {v}");
+        let maxv = lr.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for &l in lr {
+            z += (l - maxv).exp();
+        }
+        loss += -(lr[t] - maxv - z.ln());
+        let dr = &mut dlogits[r * v..(r + 1) * v];
+        for j in 0..v {
+            let p = (lr[j] - maxv).exp() / z;
+            let hot = if j == t { 1.0 } else { 0.0 };
+            dr[j] = (p - hot) * inv_n;
+        }
+    }
+    loss *= inv_n;
+
+    let dx = matmul_bt(&dlogits, whs, rows, v, d);
+    let dwh = matmul_at(xs, &dlogits, rows, d, v);
+    Ok(vec![
+        Tensor::f32(vec![loss], &[]),
+        Tensor::f32(dx, x.shape()),
+        Tensor::f32(dwh, wh.shape()),
+    ])
+}

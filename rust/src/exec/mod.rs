@@ -3,26 +3,36 @@
 //! Since the backend-abstraction refactor (DESIGN.md §10) the op-walking
 //! engine (`train` / `TrainConfig` in [`engine`]) is **always compiled**:
 //! it drives a pluggable [`Backend`] — the deterministic
-//! [`VirtualBackend`] (reference-kernel math on host tensors, no PJRT)
-//! in every build, or the PJRT runtime over AOT HLO artifacts behind the
-//! `pjrt` feature. The braided thread choreography (per-(stage, tp-rank)
-//! threads, aligned collectives, bounded P2P channels, activation
-//! store/offload) is therefore testable offline, and
-//! `stp plan --emit-plan` → `stp train --plan` hands planner-chosen
-//! schedules straight to it.
+//! [`VirtualBackend`] (host kernels, no PJRT) in every build, or the PJRT
+//! runtime over AOT HLO artifacts behind the `pjrt` feature. The braided
+//! thread choreography (per-(stage, tp-rank) threads, aligned
+//! collectives, bounded P2P channels, activation store/offload) is
+//! therefore testable offline, and `stp plan --emit-plan` →
+//! `stp train --plan` hands planner-chosen schedules straight to it.
+//!
+//! The execution hot path is zero-copy and allocation-free at steady
+//! state (DESIGN.md §11): [`Backend::run`] borrows its inputs, kernel
+//! scratch lives in a per-thread [`Workspace`] arena, and the GEMMs are
+//! cache-blocked microkernels ([`kernels::gemm`]) that stay bit-equal to
+//! the preserved naive oracle ([`kernels::reference`]).
 
 mod backend;
 mod data;
 mod engine;
-mod kernels;
+pub mod kernels;
 mod params;
 mod rng;
+mod workspace;
 
-pub use backend::{virtual_dims, Backend, BackendKind, VirtualBackend};
+pub use backend::{
+    host_virtual_scale, virtual_dims, virtual_dims_scaled, Backend, BackendKind, KernelPath,
+    VirtualBackend,
+};
 pub use data::Corpus;
 pub use engine::{train, RunReport, StepStat, TrainConfig};
 pub use params::{ChunkParams, LayerGrads, LayerParams};
 pub use rng::Rng;
+pub use workspace::{Workspace, WorkspaceStats};
 
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

@@ -1,0 +1,217 @@
+//! Per-device-thread scratch arena for the virtual backend's kernels.
+//!
+//! Every kernel-internal buffer (normed activations, Q/K/V projections,
+//! attention probabilities, packed GEMM panels, …) is borrowed from a
+//! [`Workspace`] and returned when the op finishes, so a steady-state
+//! training step performs **zero** scratch allocations: the first step
+//! populates the size-classed pools, every later step recycles them.
+//! `tests/train_virtual.rs` pins that contract through
+//! [`RunReport::workspace_steady_allocs`](super::RunReport).
+//!
+//! Buffers are plain `Vec<f32>`s handed out by value (no lifetimes to
+//! fight through the kernel call graph); discipline is take/give pairing
+//! inside one kernel. A leaked buffer is not a correctness bug — the next
+//! `take` of that class simply heap-allocates — but it shows up as a
+//! nonzero steady-state allocation count, which is exactly what the test
+//! watches.
+
+/// Snapshot of a workspace's counters (cheap, `Copy`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// Heap allocations performed because no pooled buffer fit.
+    pub fresh_allocs: u64,
+    /// Total take calls served (pooled + fresh).
+    pub takes: u64,
+    /// High-water mark of arena-tracked bytes (pooled + checked out).
+    pub peak_bytes: usize,
+}
+
+/// Size-classed (power-of-two) free-list pool of `Vec<f32>` buffers.
+#[derive(Default)]
+pub struct Workspace {
+    /// `pools[c]` holds buffers with capacity in `[2^c, 2^(c+1))`.
+    pools: Vec<Vec<Vec<f32>>>,
+    /// f32 slots currently sitting in the pools.
+    pooled: usize,
+    /// f32 slots currently checked out to kernels.
+    out: usize,
+    stats: WorkspaceStats,
+}
+
+/// Class that can serve a request for `n` elements (`2^c >= n`).
+fn class_for_request(n: usize) -> usize {
+    n.next_power_of_two().trailing_zeros() as usize
+}
+
+/// Class a buffer of capacity `cap` belongs to (`2^c <= cap`).
+fn class_for_capacity(cap: usize) -> usize {
+    debug_assert!(cap > 0);
+    (usize::BITS - 1 - cap.leading_zeros()) as usize
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Borrow a zeroed buffer of exactly `n` elements. The capacity is the
+    /// request's power-of-two class, so a recycled buffer never reallocates
+    /// when resized for a different `n` of the same class.
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        self.take_inner(n, true)
+    }
+
+    /// Like [`Workspace::take`] but recycled contents are **not** zeroed —
+    /// for buffers the caller fully overwrites before reading (the GEMM
+    /// packing panels). Length is still exactly `n`; values are
+    /// unspecified-but-initialized f32s.
+    pub fn take_uninit(&mut self, n: usize) -> Vec<f32> {
+        self.take_inner(n, false)
+    }
+
+    fn take_inner(&mut self, n: usize, zero: bool) -> Vec<f32> {
+        self.stats.takes += 1;
+        let class = class_for_request(n.max(1));
+        let mut buf = match self.pools.get_mut(class).and_then(Vec::pop) {
+            Some(b) => {
+                self.pooled -= b.capacity();
+                b
+            }
+            None => {
+                self.stats.fresh_allocs += 1;
+                Vec::with_capacity(1usize << class)
+            }
+        };
+        if zero {
+            buf.clear();
+        }
+        // Without `zero` this only pads growth (stale prefix kept) or
+        // truncates — no memset over contents the caller will overwrite.
+        buf.resize(n, 0.0);
+        self.out += buf.capacity();
+        self.stats.peak_bytes = self.stats.peak_bytes.max(4 * (self.pooled + self.out));
+        buf
+    }
+
+    /// Return a buffer to the pool. Accepts any `Vec<f32>` (classed by its
+    /// capacity), so buffers survive round-trips through callers that
+    /// resized them within their capacity.
+    pub fn give(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let class = class_for_capacity(buf.capacity());
+        if self.pools.len() <= class {
+            self.pools.resize_with(class + 1, Vec::new);
+        }
+        self.out = self.out.saturating_sub(buf.capacity());
+        self.pooled += buf.capacity();
+        self.stats.peak_bytes = self.stats.peak_bytes.max(4 * (self.pooled + self.out));
+        self.pools[class].push(buf);
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_give_recycles_by_class() {
+        let mut ws = Workspace::new();
+        let a = ws.take(100); // class 7 (128)
+        assert_eq!(a.len(), 100);
+        assert!(a.iter().all(|&v| v == 0.0));
+        assert!(a.capacity() >= 128);
+        ws.give(a);
+        // Same class, different length: served from the pool, re-zeroed.
+        let mut b = ws.take(65);
+        assert_eq!(b.len(), 65);
+        assert_eq!(ws.stats().fresh_allocs, 1);
+        b.iter_mut().for_each(|v| *v = 9.0);
+        ws.give(b);
+        let c = ws.take(128);
+        assert!(c.iter().all(|&v| v == 0.0), "recycled buffer must be zeroed");
+        assert_eq!(ws.stats().fresh_allocs, 1);
+        assert_eq!(ws.stats().takes, 3);
+    }
+
+    #[test]
+    fn distinct_classes_do_not_share() {
+        let mut ws = Workspace::new();
+        let a = ws.take(16);
+        ws.give(a);
+        let _b = ws.take(17); // class 5 (32): pool for class 4 cannot serve it
+        assert_eq!(ws.stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let mut ws = Workspace::new();
+        // Simulated op: three concurrent buffers of repeating shapes.
+        for _ in 0..10 {
+            let x = ws.take(300);
+            let y = ws.take(300);
+            let z = ws.take(40);
+            ws.give(x);
+            ws.give(y);
+            ws.give(z);
+        }
+        let warm = ws.stats().fresh_allocs;
+        assert_eq!(warm, 3);
+        for _ in 0..100 {
+            let x = ws.take(300);
+            let y = ws.take(257); // same class as 300
+            let z = ws.take(33);
+            ws.give(z);
+            ws.give(y);
+            ws.give(x);
+        }
+        assert_eq!(ws.stats().fresh_allocs, warm, "steady state must not allocate");
+    }
+
+    #[test]
+    fn peak_bytes_tracks_high_water() {
+        let mut ws = Workspace::new();
+        let a = ws.take(1024);
+        let b = ws.take(1024);
+        ws.give(a);
+        ws.give(b);
+        let peak = ws.stats().peak_bytes;
+        assert!(peak >= 2 * 1024 * 4, "peak {peak}");
+        // Reuse does not move the peak.
+        let c = ws.take(1024);
+        ws.give(c);
+        assert_eq!(ws.stats().peak_bytes, peak);
+    }
+
+    #[test]
+    fn zero_length_requests_are_served() {
+        let mut ws = Workspace::new();
+        let a = ws.take(0);
+        assert!(a.is_empty());
+        ws.give(a);
+    }
+
+    #[test]
+    fn take_uninit_recycles_without_zeroing_guarantee() {
+        let mut ws = Workspace::new();
+        let mut a = ws.take_uninit(64);
+        assert_eq!(a.len(), 64);
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        // Same class: recycled, correct length, no fresh allocation —
+        // contents are unspecified, so only shape is asserted.
+        let b = ws.take_uninit(40);
+        assert_eq!(b.len(), 40);
+        assert_eq!(ws.stats().fresh_allocs, 1);
+        ws.give(b);
+        // A zeroed take of the same class must still come back clean.
+        let c = ws.take(64);
+        assert!(c.iter().all(|&v| v == 0.0));
+        assert_eq!(ws.stats().fresh_allocs, 1);
+    }
+}

@@ -146,10 +146,12 @@ impl Runtime {
         self.execs.contains_key(name)
     }
 
-    /// Execute artifact `name`. Inputs are validated against the manifest;
-    /// the lowered module returns a tuple (return_tuple=True) which is
-    /// decomposed into per-output tensors.
-    pub fn run(&mut self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+    /// Execute artifact `name` on borrowed inputs (the executor hands
+    /// weight tensors straight from its parameter tables — no clones).
+    /// Inputs are validated against the manifest; the lowered module
+    /// returns a tuple (return_tuple=True) which is decomposed into
+    /// per-output tensors.
+    pub fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         let spec = self.manifest.artifact(name)?.clone();
         anyhow::ensure!(
             args.len() == spec.args.len(),

@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 
-use stp::exec::{train, BackendKind, TrainConfig};
+use stp::exec::{train, BackendKind, KernelPath, TrainConfig};
 use stp::schedule::ScheduleKind;
 
 fn have_artifacts() -> bool {
@@ -17,6 +17,7 @@ fn have_artifacts() -> bool {
 fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
     TrainConfig {
         backend: BackendKind::Pjrt,
+        kernels: KernelPath::Blocked,
         artifacts_dir: PathBuf::from("artifacts/test"),
         schedule: kind,
         n_mb: 4,
@@ -25,6 +26,7 @@ fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
         seed: 42,
         verbose: false,
         dims: None,
+        virtual_scale: 1.0,
         plan: None,
     }
 }

@@ -56,7 +56,7 @@ fn smoke_artifact_known_answer() {
     let mut rt = Runtime::load(&m, &["smoke"]).unwrap();
     let x = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
     let y = Tensor::f32(vec![1.0, 1.0, 1.0, 1.0], &[2, 2]);
-    let out = rt.run("smoke", &[x, y]).unwrap();
+    let out = rt.run("smoke", &[&x, &y]).unwrap();
     assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
 }
 
@@ -82,19 +82,12 @@ fn pallas_units_match_python_golden() {
     let kr = d.kv_heads_per_rank() * dh;
 
     // Attn unit: rust-executed HLO vs python-executed pallas kernel.
-    let out = rt
-        .run(
-            "attn_fwd",
-            &[
-                x.clone(),
-                Tensor::f32(vec_of("gamma1"), &[d.d]),
-                Tensor::f32(vec_of("wq"), &[d.d, qr]),
-                Tensor::f32(vec_of("wk"), &[d.d, kr]),
-                Tensor::f32(vec_of("wv"), &[d.d, kr]),
-                Tensor::f32(vec_of("wo"), &[qr, d.d]),
-            ],
-        )
-        .unwrap();
+    let g1 = Tensor::f32(vec_of("gamma1"), &[d.d]);
+    let wq = Tensor::f32(vec_of("wq"), &[d.d, qr]);
+    let wk = Tensor::f32(vec_of("wk"), &[d.d, kr]);
+    let wv = Tensor::f32(vec_of("wv"), &[d.d, kr]);
+    let wo = Tensor::f32(vec_of("wo"), &[qr, d.d]);
+    let out = rt.run("attn_fwd", &[&x, &g1, &wq, &wk, &wv, &wo]).unwrap();
     let want = vec_of("attn_fwd_out");
     let got = out[0].as_f32().unwrap();
     assert_eq!(got.len(), want.len());
@@ -103,18 +96,11 @@ fn pallas_units_match_python_golden() {
     }
 
     // MLP unit.
-    let out = rt
-        .run(
-            "mlp_fwd",
-            &[
-                x,
-                Tensor::f32(vec_of("gamma2"), &[d.d]),
-                Tensor::f32(vec_of("wg"), &[d.d, d.ffn_per_rank()]),
-                Tensor::f32(vec_of("wu"), &[d.d, d.ffn_per_rank()]),
-                Tensor::f32(vec_of("wd"), &[d.ffn_per_rank(), d.d]),
-            ],
-        )
-        .unwrap();
+    let g2 = Tensor::f32(vec_of("gamma2"), &[d.d]);
+    let wg = Tensor::f32(vec_of("wg"), &[d.d, d.ffn_per_rank()]);
+    let wu = Tensor::f32(vec_of("wu"), &[d.d, d.ffn_per_rank()]);
+    let wd = Tensor::f32(vec_of("wd"), &[d.ffn_per_rank(), d.d]);
+    let out = rt.run("mlp_fwd", &[&x, &g2, &wg, &wu, &wd]).unwrap();
     let want = vec_of("mlp_fwd_out");
     let got = out[0].as_f32().unwrap();
     for (i, (a, b)) in got.iter().zip(&want).enumerate() {
@@ -131,9 +117,9 @@ fn runtime_rejects_shape_mismatch() {
     let mut rt = Runtime::load(&m, &["smoke"]).unwrap();
     let bad = Tensor::f32(vec![0.0; 9], &[3, 3]);
     let ok = Tensor::f32(vec![0.0; 4], &[2, 2]);
-    assert!(rt.run("smoke", &[bad, ok.clone()]).is_err());
-    assert!(rt.run("smoke", &[ok.clone()]).is_err());
-    assert!(rt.run("nonexistent", &[ok]).is_err());
+    assert!(rt.run("smoke", &[&bad, &ok]).is_err());
+    assert!(rt.run("smoke", &[&ok]).is_err());
+    assert!(rt.run("nonexistent", &[&ok]).is_err());
 }
 
 #[test]
@@ -147,7 +133,7 @@ fn head_loss_of_uniform_logits_is_ln_vocab() {
     let x = Tensor::zeros(&[d.mb, d.seq, d.d]);
     let wh = Tensor::zeros(&[d.d, d.vocab]);
     let targets = Tensor::i32(vec![0; d.mb * d.seq], &[d.mb, d.seq]);
-    let out = rt.run("head_loss_grad", &[x, wh, targets]).unwrap();
+    let out = rt.run("head_loss_grad", &[&x, &wh, &targets]).unwrap();
     let loss = out[0].scalar_f32().unwrap();
     let want = (d.vocab as f32).ln();
     assert!((loss - want).abs() < 1e-3, "loss {loss} != ln V {want}");

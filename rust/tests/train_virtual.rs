@@ -89,6 +89,22 @@ fn braided_plan_executes_and_matches_the_compiled_order() {
 }
 
 #[test]
+fn steady_state_workspace_allocations_are_zero_under_a_plan() {
+    // The arena contract (DESIGN.md §11) on the braided multi-stage
+    // path: step 0 populates every device thread's workspace pools, and
+    // no thread heap-allocates kernel scratch again for the rest of the
+    // run.
+    let a = braided_artifact();
+    let r = train(&train_cfg(&a, 3, 11)).unwrap();
+    assert_eq!(r.workspace_steady_allocs, 0, "steady-state steps must not allocate scratch");
+    assert!(
+        r.workspace_peak_bytes.iter().all(|&b| b > 0),
+        "every stage must report arena usage: {:?}",
+        r.workspace_peak_bytes
+    );
+}
+
+#[test]
 fn virtual_training_is_bit_deterministic_across_runs() {
     let a = braided_artifact();
     let r1 = train(&train_cfg(&a, 2, 7)).unwrap();
