@@ -17,6 +17,7 @@
 //! corpus's entropy floor; the process exits non-zero on a flat or
 //! non-finite curve (the CI train-smoke leg relies on this).
 
+use stp::config::ManifestDims;
 use stp::exec::{train, virtual_dims, BackendKind, Corpus, TrainConfig};
 use stp::schedule::ScheduleKind;
 
@@ -38,12 +39,19 @@ fn main() -> stp::Result<()> {
     cfg.steps = steps;
     cfg.lr = 0.03;
     cfg.verbose = true;
-    let vocab = match backend {
-        // The engine derives the same miniature dims when `dims` is None.
-        BackendKind::Virtual => virtual_dims(2, 2, 2, 8).vocab,
-        // The e2e preset's vocabulary (python/compile/config.py).
-        BackendKind::Pjrt => 8192,
+    let dims = match backend {
+        // Pin the miniature grid explicitly instead of relying on the
+        // engine's implicit default for `dims: None`.
+        BackendKind::Virtual => virtual_dims(2, 2, 2, 8),
+        // PJRT reads its dims from the manifest; this copy only feeds
+        // the log line (the e2e preset is the test grid at vocab 8192,
+        // python/compile/config.py).
+        BackendKind::Pjrt => ManifestDims { vocab: 8192, ..ManifestDims::test_preset() },
     };
+    if backend == BackendKind::Virtual {
+        cfg.dims = Some(dims.clone());
+    }
+    let vocab = dims.vocab;
     eprintln!(
         "training with the {} schedule on the {} backend, {steps} steps x {} microbatches",
         schedule.name(),

@@ -52,7 +52,7 @@ pub struct ArtifactSpec {
 
 /// Model dimensions as recorded by the AOT pipeline (mirrors
 /// `python/compile/config.py::Dims`).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ManifestDims {
     pub vocab: usize,
     pub d: usize,

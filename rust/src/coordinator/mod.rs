@@ -29,11 +29,13 @@ USAGE:
                mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
                [--seq N] [--mbsize N] [--topk N] [--threads N]
                [--search exhaustive|beam] [--beam-width N]
-               [--emit-plan FILE.json]
+               [--emit-plan FILE.json] [--verbose]
   stp train    [--plan FILE.json] [--backend virtual|pjrt]
                [--kernels blocked|reference] [--virtual-scale auto|F]
                [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
                [--lr F] [--seed N] [--quiet]
+               [--faults FILE.json] [--checkpoint-dir DIR]
+               [--resume CKPT.json] [--replan [--beam-width N]]
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
 Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
@@ -47,6 +49,12 @@ Training:  the virtual backend (default) runs everywhere on miniature
            --virtual-scale widens the proxy model by an integer width
            factor (fractional values round to the nearest factor;
            auto = match the host's core count).
+Elastic:   --faults injects a deterministic stp-faults-v1 script (a dead
+           rank halts the run at that step's cut and --checkpoint-dir
+           receives an stp-ckpt-v1 snapshot); --resume restarts from a
+           snapshot bit-identically; --replan additionally shrinks the
+           pool, re-searches the plan and migrates the checkpoint on
+           every device loss (requires --plan).
 ";
 
 /// Parse `--key value` pairs after the subcommand.
@@ -76,8 +84,8 @@ fn flag<T: std::str::FromStr>(f: &HashMap<String, String>, key: &str, default: T
 /// Model lookup shared by the CLI and the examples.
 pub fn model_by_name(name: &str) -> ModelConfig {
     match name {
-        "26b" | "qwen2-26b" => ModelConfig::qwen2_26b(),
-        "tiny" => ModelConfig::tiny_100m(),
+        "26b" | "qwen2-26b" | "qwen2-26.3b" => ModelConfig::qwen2_26b(),
+        "tiny" | "tiny-100m" => ModelConfig::tiny_100m(),
         _ => ModelConfig::qwen2_12b(),
     }
 }
@@ -86,8 +94,12 @@ pub fn model_by_name(name: &str) -> ModelConfig {
 pub fn plan_model_by_name(name: &str) -> crate::plan::PlanModel {
     use crate::plan::PlanModel;
     match name {
-        "mllm-14.9b" | "mllm-14.9" => PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_14_9b()),
-        "mllm-28.8b" | "mllm-28.8" => PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_28_8b()),
+        "mllm-14.9b" | "mllm-14.9" | "qwen2vl-14.9b" => {
+            PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_14_9b())
+        }
+        "mllm-28.8b" | "mllm-28.8" | "qwen2vl-28.8b" => {
+            PlanModel::Mllm(crate::model::MllmConfig::qwen2vl_28_8b())
+        }
         _ => PlanModel::Llm(model_by_name(name)),
     }
 }
@@ -95,8 +107,8 @@ pub fn plan_model_by_name(name: &str) -> crate::plan::PlanModel {
 /// Hardware-profile lookup shared by the CLI and the examples.
 pub fn hw_by_name(name: &str) -> HardwareProfile {
     match name {
-        "h20" => HardwareProfile::h20(),
-        "cpu" => HardwareProfile::cpu_sim(),
+        "h20" | "h20-96g" => HardwareProfile::h20(),
+        "cpu" | "cpu-sim" => HardwareProfile::cpu_sim(),
         _ => HardwareProfile::a800(),
     }
 }
@@ -114,7 +126,11 @@ pub fn cluster_by_name(name: &str) -> Result<ClusterSpec> {
                 .map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))?;
             ClusterSpec::from_json(&json).map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))
         }
-        "a800" | "h20" | "cpu" => Ok(ClusterSpec::uniform(hw_by_name(name))),
+        // Bare names and the full profile names a plan artifact records
+        // as its `cluster` field — replanning resolves pools from those.
+        "a800" | "h20" | "cpu" | "a800-sxm4-80g" | "h20-96g" | "cpu-sim" => {
+            Ok(ClusterSpec::uniform(hw_by_name(name)))
+        }
         other => Err(anyhow::anyhow!(
             "unknown cluster '{other}' (expected 'mixed', a .json spec path, or a800|h20|cpu)"
         )),
@@ -311,6 +327,9 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
     let topk = flag(flags, "topk", 10usize);
     let report = plan(&q);
     println!("{}", report.render(topk));
+    if flags.contains_key("verbose") {
+        println!("{}", report.reject_tally_line());
+    }
     if let Some(path) = flags.get("emit-plan") {
         match &report.best_artifact {
             Some(a) => {
@@ -320,7 +339,13 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
             None => anyhow::bail!("no memory-feasible plan to emit"),
         }
     }
-    Ok(if report.best().is_some() { 0 } else { 1 })
+    match report.best() {
+        Some(_) => Ok(0),
+        None => {
+            eprintln!("{}", report.no_plan_diagnostic());
+            Ok(1)
+        }
+    }
 }
 
 /// `stp train`: pipeline training through the backend-abstract executor —
@@ -356,6 +381,15 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         Some(path) => Some(PlanArtifact::load(path)?),
         None => None,
     };
+    let faults = match flags.get("faults") {
+        Some(path) => Some(crate::elastic::FaultPlan::load(path)?),
+        None => None,
+    };
+    let checkpoint_dir = flags.get("checkpoint-dir").map(PathBuf::from);
+    let resume = match flags.get("resume") {
+        Some(path) => Some(crate::elastic::Checkpoint::load(std::path::Path::new(path))?),
+        None => None,
+    };
     let cfg = TrainConfig {
         backend,
         kernels,
@@ -375,11 +409,45 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         dims: None,
         virtual_scale,
         plan: plan_artifact,
+        faults,
+        checkpoint_dir,
+        resume,
     };
     let what = match &cfg.plan {
         Some(p) => format!("plan {}", p.label()),
         None => format!("{} schedule", cfg.schedule.name()),
     };
+
+    if flags.contains_key("replan") {
+        use crate::elastic::{run_elastic, ElasticConfig, ReplanContext};
+        let artifact = cfg
+            .plan
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("--replan needs --plan FILE.json to re-search from"))?;
+        let replan = ReplanContext {
+            model: plan_model_by_name(&artifact.model),
+            cluster: cluster_by_name(&artifact.cluster)?,
+            seq: artifact.seq,
+            mb_size: artifact.mb_size,
+            mem_cap_gib: flag(flags, "mem-gib", 0.0f64),
+            beam_width: flag(flags, "beam-width", 8usize),
+        };
+        let ecfg = ElasticConfig { train: cfg, replan: Some(replan) };
+        let report = run_elastic(&ecfg)?;
+        println!(
+            "elastic: {} segments, {} replans ({what}): loss {:.4} -> {:.4}",
+            report.segments.len(),
+            report.replanned.len(),
+            report.first_loss(),
+            report.last_loss(),
+        );
+        for plan in &report.replanned {
+            println!("replanned onto {}", plan.label());
+        }
+        anyhow::ensure!(report.last_loss().is_finite(), "training diverged: non-finite loss");
+        return Ok(0);
+    }
+
     let report = train(&cfg)?;
     println!(
         "trained {} steps ({what}, {} backend, {} kernels): loss {:.4} -> {:.4}, {:.1}s wall, \
@@ -405,6 +473,17 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
             .collect::<Vec<_>>(),
         report.workspace_steady_allocs,
     );
+    if let Some(halt) = report.interrupted_at {
+        println!(
+            "fault: stage {} died, halted at the step-{halt} cut{}",
+            report.fault_stage.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
+            report
+                .checkpoint_path
+                .as_ref()
+                .map(|p| format!(", checkpoint {}", p.display()))
+                .unwrap_or_default(),
+        );
+    }
     anyhow::ensure!(report.last_loss().is_finite(), "training diverged: non-finite loss");
     Ok(0)
 }

@@ -1,0 +1,539 @@
+//! Bit-exact training snapshots: the `stp-ckpt-v1` document.
+//!
+//! A [`Checkpoint`] captures everything the virtual executor needs to
+//! continue a run as if it had never stopped: the per-(chunk, tp-rank)
+//! parameter shards ([`ChunkShard`]), the optimizer state (the SGD
+//! engine is momentless, so moments serialize empty — the field exists
+//! so Adam-class optimizers slot into the same schema), every device
+//! thread's `exec::rng` stream position, the data-loader cursor and the
+//! step counter.
+//!
+//! **Bit-exactness is the contract**, not an aspiration: f32 tensors are
+//! serialized as their IEEE-754 bit patterns (`f32::to_bits`, printed as
+//! JSON integers — exact in the f64-backed parser), gradient
+//! accumulators are provably zero at the step boundary the snapshot is
+//! taken on (`sgd_step` zeroes them), and `tests/elastic.rs` asserts
+//! save→restore→train equals an uninterrupted run bit-for-bit.
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+use crate::config::ManifestDims;
+use crate::exec::LayerParams;
+use crate::runtime::Tensor;
+use crate::Result;
+
+/// Schema tag of the checkpoint format this crate reads and writes.
+pub const CKPT_SCHEMA: &str = "stp-ckpt-v1";
+
+/// Map key for a (chunk, tp-rank) shard.
+pub fn shard_key(chunk: usize, rank: usize) -> String {
+    format!("c{chunk}r{rank}")
+}
+
+/// Map key for a (stage, tp-rank) device thread's RNG stream.
+pub fn rng_key(stage: usize, rank: usize) -> String {
+    format!("s{stage}r{rank}")
+}
+
+/// One (chunk, tp-rank)'s parameters — the executor's ownership unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkShard {
+    pub chunk: usize,
+    pub rank: usize,
+    pub layers: Vec<LayerParams>,
+    /// Embedding table (chunk 0 only; replicated across TP ranks).
+    pub emb: Option<Tensor>,
+    /// LM head (last chunk only; replicated).
+    pub head: Option<Tensor>,
+}
+
+/// A versioned, bit-exact snapshot of one training run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Next step to run (steps `0..step` are complete).
+    pub step: usize,
+    pub seed: u64,
+    pub n_mb: usize,
+    /// Schedule kind name the segment ran ("stp", "zb-v", ...).
+    pub schedule: String,
+    pub tp: usize,
+    pub pp: usize,
+    pub vpp: usize,
+    pub dims: ManifestDims,
+    /// LM layers per chunk (the split the shards were trained under).
+    pub stage_layers: Vec<usize>,
+    /// Data-loader cursor. The corpus keys batches by (step, mb) with a
+    /// step-pinned stream today, so this equals `step`; recorded so a
+    /// streaming loader can adopt the schema unchanged.
+    pub data_cursor: usize,
+    /// Optimizer family ("sgd"); moments are empty for it.
+    pub optimizer: String,
+    /// Per-device-thread RNG positions, keyed by [`rng_key`].
+    pub rng_states: BTreeMap<String, u64>,
+    /// Parameter shards, keyed by [`shard_key`].
+    pub shards: BTreeMap<String, ChunkShard>,
+}
+
+/// f32 tensor → `{"shape": [...], "bits": [u32...]}` (bit-exact: a u32
+/// is exactly representable in the parser's f64 numbers).
+fn tensor_to_json(t: &Tensor) -> Result<Json> {
+    let data = t.as_f32()?;
+    let mut o = BTreeMap::new();
+    o.insert(
+        "shape".into(),
+        Json::Arr(t.shape().iter().map(|&d| Json::Num(d as f64)).collect()),
+    );
+    o.insert(
+        "bits".into(),
+        Json::Arr(data.iter().map(|x| Json::Num(x.to_bits() as f64)).collect()),
+    );
+    Ok(Json::Obj(o))
+}
+
+fn tensor_from_json(v: &Json, what: &str) -> Result<Tensor> {
+    let shape: Vec<usize> = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint: {what}: missing 'shape'"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("checkpoint: {what}: bad shape")))
+        .collect::<Result<_>>()?;
+    let bits = v
+        .get("bits")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint: {what}: missing 'bits'"))?;
+    let data: Vec<f32> = bits
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .filter(|b| b.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(b))
+                .map(|b| f32::from_bits(b as u32))
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: {what}: bad bits entry"))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        data.len() == shape.iter().product::<usize>(),
+        "checkpoint: {what}: {} values for shape {:?}",
+        data.len(),
+        shape
+    );
+    Ok(Tensor::f32(data, &shape))
+}
+
+/// The nine per-layer tensors, in artifact-signature order.
+const LAYER_FIELDS: [&str; 9] =
+    ["gamma1", "wq", "wk", "wv", "wo", "gamma2", "wg", "wu", "wd"];
+
+fn layer_to_json(p: &LayerParams) -> Result<Json> {
+    let mut o = BTreeMap::new();
+    for (name, t) in LAYER_FIELDS.iter().zip([
+        &p.gamma1, &p.wq, &p.wk, &p.wv, &p.wo, &p.gamma2, &p.wg, &p.wu, &p.wd,
+    ]) {
+        o.insert((*name).into(), tensor_to_json(t)?);
+    }
+    Ok(Json::Obj(o))
+}
+
+fn layer_from_json(v: &Json, what: &str) -> Result<LayerParams> {
+    let mut get = |name: &str| -> Result<Tensor> {
+        let t = v
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: {what}: missing tensor '{name}'"))?;
+        tensor_from_json(t, &format!("{what}.{name}"))
+    };
+    Ok(LayerParams {
+        gamma1: get("gamma1")?,
+        wq: get("wq")?,
+        wk: get("wk")?,
+        wv: get("wv")?,
+        wo: get("wo")?,
+        gamma2: get("gamma2")?,
+        wg: get("wg")?,
+        wu: get("wu")?,
+        wd: get("wd")?,
+    })
+}
+
+fn dims_to_json(d: &ManifestDims) -> Json {
+    let mut o = BTreeMap::new();
+    for (k, v) in [
+        ("vocab", d.vocab),
+        ("d", d.d),
+        ("q_heads", d.q_heads),
+        ("kv_heads", d.kv_heads),
+        ("ffn", d.ffn),
+        ("layers", d.layers),
+        ("seq", d.seq),
+        ("mb", d.mb),
+        ("tp", d.tp),
+        ("pp", d.pp),
+        ("vpp", d.vpp),
+    ] {
+        o.insert(k.into(), Json::Num(v as f64));
+    }
+    Json::Obj(o)
+}
+
+fn dims_from_json(v: &Json) -> Result<ManifestDims> {
+    let req = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: dims: missing number '{k}'"))
+    };
+    Ok(ManifestDims {
+        vocab: req("vocab")?,
+        d: req("d")?,
+        q_heads: req("q_heads")?,
+        kv_heads: req("kv_heads")?,
+        ffn: req("ffn")?,
+        layers: req("layers")?,
+        seq: req("seq")?,
+        mb: req("mb")?,
+        tp: req("tp")?,
+        pp: req("pp")?,
+        vpp: req("vpp")?,
+    })
+}
+
+impl Checkpoint {
+    /// The shard for a (chunk, rank), if present.
+    pub fn shard(&self, chunk: usize, rank: usize) -> Option<&ChunkShard> {
+        self.shards.get(&shard_key(chunk, rank))
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.pp * self.vpp
+    }
+
+    pub fn total_layers(&self) -> usize {
+        self.stage_layers.iter().sum()
+    }
+
+    /// Shape consistency: every (chunk, rank) shard present, layer
+    /// counts matching `stage_layers`, endpoints on the right chunks.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.tp >= 1 && self.pp >= 1 && self.vpp >= 1 && self.n_mb >= 1,
+            "checkpoint: tp/pp/vpp/n_mb must be positive"
+        );
+        let chunks = self.n_chunks();
+        anyhow::ensure!(
+            self.stage_layers.len() == chunks,
+            "checkpoint: {} stage_layers for {} chunks (pp·vpp)",
+            self.stage_layers.len(),
+            chunks
+        );
+        for c in 0..chunks {
+            for r in 0..self.tp {
+                let s = self
+                    .shard(c, r)
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint: missing shard c{c}r{r}"))?;
+                anyhow::ensure!(
+                    s.chunk == c && s.rank == r,
+                    "checkpoint: shard keyed c{c}r{r} claims (chunk {}, rank {})",
+                    s.chunk,
+                    s.rank
+                );
+                anyhow::ensure!(
+                    s.layers.len() == self.stage_layers[c],
+                    "checkpoint: shard c{c}r{r} has {} layers, stage_layers says {}",
+                    s.layers.len(),
+                    self.stage_layers[c]
+                );
+                anyhow::ensure!(
+                    s.emb.is_some() == (c == 0),
+                    "checkpoint: shard c{c}r{r}: embedding belongs to chunk 0 only"
+                );
+                anyhow::ensure!(
+                    s.head.is_some() == (c == chunks - 1),
+                    "checkpoint: shard c{c}r{r}: head belongs to the last chunk only"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Result<Json> {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(CKPT_SCHEMA.into()));
+        root.insert("step".into(), Json::Num(self.step as f64));
+        root.insert("seed".into(), Json::Num(self.seed as f64));
+        root.insert("n_mb".into(), Json::Num(self.n_mb as f64));
+        root.insert("schedule".into(), Json::Str(self.schedule.clone()));
+        root.insert("tp".into(), Json::Num(self.tp as f64));
+        root.insert("pp".into(), Json::Num(self.pp as f64));
+        root.insert("vpp".into(), Json::Num(self.vpp as f64));
+        root.insert("dims".into(), dims_to_json(&self.dims));
+        root.insert(
+            "stage_layers".into(),
+            Json::Arr(self.stage_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        root.insert("data_cursor".into(), Json::Num(self.data_cursor as f64));
+        let mut opt = BTreeMap::new();
+        opt.insert("family".into(), Json::Str(self.optimizer.clone()));
+        opt.insert("moments".into(), Json::Obj(BTreeMap::new()));
+        root.insert("optimizer".into(), Json::Obj(opt));
+        root.insert(
+            "rng_states".into(),
+            Json::Obj(
+                self.rng_states
+                    .iter()
+                    .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                    .collect(),
+            ),
+        );
+        let mut shards = BTreeMap::new();
+        for (key, s) in &self.shards {
+            let mut o = BTreeMap::new();
+            o.insert("chunk".into(), Json::Num(s.chunk as f64));
+            o.insert("rank".into(), Json::Num(s.rank as f64));
+            o.insert(
+                "layers".into(),
+                Json::Arr(s.layers.iter().map(layer_to_json).collect::<Result<_>>()?),
+            );
+            if let Some(e) = &s.emb {
+                o.insert("emb".into(), tensor_to_json(e)?);
+            }
+            if let Some(h) = &s.head {
+                o.insert("head".into(), tensor_to_json(h)?);
+            }
+            shards.insert(key.clone(), Json::Obj(o));
+        }
+        root.insert("shards".into(), Json::Obj(shards));
+        Ok(Json::Obj(root))
+    }
+
+    /// Strict parse + validate (the plan-artifact idiom: a half-parsed
+    /// snapshot must never seed a training run).
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing 'schema'"))?;
+        anyhow::ensure!(
+            schema == CKPT_SCHEMA,
+            "checkpoint: unsupported schema '{schema}' (this build reads '{CKPT_SCHEMA}')"
+        );
+        let req = |k: &str| -> Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: missing number '{k}'"))
+        };
+        let seed = v
+            .get("seed")
+            .and_then(Json::as_f64)
+            .filter(|s| s.fract() == 0.0 && *s >= 0.0)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing number 'seed'"))?
+            as u64;
+        let dims = dims_from_json(
+            v.get("dims").ok_or_else(|| anyhow::anyhow!("checkpoint: missing 'dims'"))?,
+        )?;
+        let stage_layers: Vec<usize> = v
+            .get("stage_layers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing array 'stage_layers'"))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("checkpoint: non-number in 'stage_layers'"))
+            })
+            .collect::<Result<_>>()?;
+        let optimizer = v
+            .get("optimizer")
+            .and_then(|o| o.get("family"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing 'optimizer.family'"))?
+            .to_string();
+        let mut rng_states = BTreeMap::new();
+        for (k, x) in v
+            .get("rng_states")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing object 'rng_states'"))?
+        {
+            let s = x
+                .as_f64()
+                .filter(|b| b.fract() == 0.0 && *b >= 0.0)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: rng_states['{k}'] not an integer"))?;
+            rng_states.insert(k.clone(), s as u64);
+        }
+        let mut shards = BTreeMap::new();
+        for (key, s) in v
+            .get("shards")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing object 'shards'"))?
+        {
+            let chunk = s
+                .get("chunk")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'chunk'"))?;
+            let rank = s
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'rank'"))?;
+            let layers = s
+                .get("layers")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'layers'"))?
+                .iter()
+                .enumerate()
+                .map(|(l, lv)| layer_from_json(lv, &format!("shard {key} layer {l}")))
+                .collect::<Result<Vec<_>>>()?;
+            let emb = s
+                .get("emb")
+                .map(|t| tensor_from_json(t, &format!("shard {key} emb")))
+                .transpose()?;
+            let head = s
+                .get("head")
+                .map(|t| tensor_from_json(t, &format!("shard {key} head")))
+                .transpose()?;
+            shards.insert(key.clone(), ChunkShard { chunk, rank, layers, emb, head });
+        }
+        let ck = Checkpoint {
+            step: req("step")?,
+            seed,
+            n_mb: req("n_mb")?,
+            schedule: v
+                .get("schedule")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: missing string 'schedule'"))?
+                .to_string(),
+            tp: req("tp")?,
+            pp: req("pp")?,
+            vpp: req("vpp")?,
+            dims,
+            stage_layers,
+            data_cursor: req("data_cursor")?,
+            optimizer,
+            rng_states,
+            shards,
+        };
+        ck.validate()?;
+        Ok(ck)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        let text = self.to_json()?.to_string();
+        std::fs::write(path, text)
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
+        Self::from_json(&v).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::ChunkParams;
+
+    fn tiny() -> Checkpoint {
+        let dims = ManifestDims {
+            vocab: 32,
+            d: 16,
+            q_heads: 4,
+            kv_heads: 2,
+            ffn: 24,
+            layers: 2,
+            seq: 8,
+            mb: 1,
+            tp: 2,
+            pp: 2,
+            vpp: 1,
+        };
+        let mut shards = BTreeMap::new();
+        for c in 0..2 {
+            for r in 0..2 {
+                let p = ChunkParams::init(&dims, c, r, 1, c == 0, c == 1, 7);
+                shards.insert(
+                    shard_key(c, r),
+                    ChunkShard {
+                        chunk: c,
+                        rank: r,
+                        layers: p.layers.clone(),
+                        emb: p.emb.clone(),
+                        head: p.head.clone(),
+                    },
+                );
+            }
+        }
+        let mut rng_states = BTreeMap::new();
+        rng_states.insert(rng_key(0, 0), 0xDEAD_BEEFu64);
+        Checkpoint {
+            step: 3,
+            seed: 7,
+            n_mb: 4,
+            schedule: "stp".into(),
+            tp: 2,
+            pp: 2,
+            vpp: 1,
+            dims,
+            stage_layers: vec![1, 1],
+            data_cursor: 3,
+            optimizer: "sgd".into(),
+            rng_states,
+            shards,
+        }
+    }
+
+    #[test]
+    fn roundtrips_bit_exactly_through_json() {
+        let ck = tiny();
+        let text = ck.to_json().unwrap().to_string();
+        let back = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        // PartialEq on Tensor compares the f32 payloads exactly, so this
+        // is the bit-exactness assertion (to_bits spot-check included).
+        assert_eq!(ck, back);
+        let a = ck.shard(0, 0).unwrap().layers[0].wq.as_f32().unwrap();
+        let b = back.shard(0, 0).unwrap().layers[0].wq.as_f32().unwrap();
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn extreme_bit_patterns_survive_serialization() {
+        // Denormals, infinities, NaN payloads, -0.0: the bits channel
+        // must carry them all unchanged.
+        let vals = [0.0f32, -0.0, f32::MIN_POSITIVE / 2.0, f32::INFINITY, f32::NEG_INFINITY,
+            f32::from_bits(0x7FC0_1234), f32::MAX, -f32::MIN_POSITIVE];
+        let t = Tensor::f32(vals.to_vec(), &[vals.len()]);
+        let j = tensor_to_json(&t).unwrap();
+        let back = tensor_from_json(&Json::parse(&j.to_string()).unwrap(), "x").unwrap();
+        for (a, b) in vals.iter().zip(back.as_f32().unwrap()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_snapshots() {
+        let ck = tiny();
+        // Missing shard.
+        let mut broken = ck.clone();
+        broken.shards.remove(&shard_key(1, 1));
+        assert!(broken.validate().is_err());
+        // Layer count mismatch.
+        let mut broken = ck.clone();
+        broken.stage_layers = vec![2, 0];
+        assert!(broken.validate().is_err());
+        // Wrong schema tag.
+        let text = ck.to_json().unwrap().to_string().replace(CKPT_SCHEMA, "stp-ckpt-v9");
+        assert!(Checkpoint::from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("stp-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let ck = tiny();
+        ck.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,331 @@
+//! Deterministic fault injection: the `stp-faults-v1` document.
+//!
+//! A [`FaultPlan`] is an explicit, replayable list of failure events —
+//! dead ranks and stragglers — consumed by *both* replay engines:
+//!
+//! * the event-driven simulator ([`crate::sim::Simulator::with_faults`])
+//!   applies events in **simulated time** (`at_secs` / `from_secs`
+//!   within its single replayed iteration);
+//! * the virtual executor ([`crate::exec::train`]) applies events in
+//!   **step time**: device threads consult the plan at op boundaries,
+//!   and a `dead-rank` at step `k` halts the whole pipeline at the
+//!   step-`k` boundary — a consistent cut at which parameters equal the
+//!   post-step-`k-1` state and gradient accumulators are zero, which is
+//!   exactly what `stp-ckpt-v1` snapshots.
+//!
+//! The fail-stop model is deliberate: real elastic runners (and the
+//! multi-controller design sketched in DESIGN.md §12) detect loss via
+//! heartbeat and fence the step boundary before acting; injecting the
+//! same announced boundary keeps recovery testable and bit-exact.
+//!
+//! Plans are JSON-loadable (`stp train --faults F.json`, hand-writable
+//! for CI) and preset-generatable from a seed ([`FaultPlan::seeded`]),
+//! so chaos runs are reproducible by construction.
+
+use std::collections::BTreeMap;
+
+use crate::config::json::Json;
+use crate::exec::Rng;
+use crate::Result;
+
+/// Schema tag of the fault-plan format this crate reads and writes.
+pub const FAULTS_SCHEMA: &str = "stp-faults-v1";
+
+/// One injected failure event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    /// A pipeline stage's device fails before executing `step`. The
+    /// simulator kills the device at `at_secs` into its iteration
+    /// instead (ops not yet *started* there never run).
+    DeadRank { step: usize, stage: usize, at_secs: f64 },
+    /// A stage computes `slowdown`× slower from `step` on (executor) /
+    /// from `from_secs` on (simulator). Wall-clock only — numerics are
+    /// untouched, so bit-determinism survives straggler injection.
+    Straggler { step: usize, stage: usize, slowdown: f64, from_secs: f64 },
+}
+
+impl FaultEvent {
+    /// The pipeline stage this event targets.
+    pub fn stage(&self) -> usize {
+        match *self {
+            FaultEvent::DeadRank { stage, .. } => stage,
+            FaultEvent::Straggler { stage, .. } => stage,
+        }
+    }
+
+    /// The executor step this event fires at.
+    pub fn step(&self) -> usize {
+        match *self {
+            FaultEvent::DeadRank { step, .. } => step,
+            FaultEvent::Straggler { step, .. } => step,
+        }
+    }
+}
+
+/// A deterministic, replayable failure script.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: machinery compiled in, nothing injected. Runs
+    /// under `Some(FaultPlan::none())` must be bit-equal to `None`.
+    pub fn none() -> FaultPlan {
+        FaultPlan { events: Vec::new() }
+    }
+
+    /// A single dead-rank event: `stage` fails before executing `step`.
+    pub fn dead_rank_at(step: usize, stage: usize) -> FaultPlan {
+        FaultPlan { events: vec![FaultEvent::DeadRank { step, stage, at_secs: 0.0 }] }
+    }
+
+    /// Seeded chaos preset: `n` events over `steps × stages`, roughly
+    /// one straggler per death, reproducible from the seed alone.
+    pub fn seeded(seed: u64, n: usize, steps: usize, stages: usize) -> FaultPlan {
+        let mut rng = Rng::for_purpose(seed, 0xFA, 0x17, 0);
+        let events = (0..n)
+            .map(|_| {
+                let step = rng.below(steps.max(1));
+                let stage = rng.below(stages.max(1));
+                if rng.uniform() < 0.5 {
+                    FaultEvent::DeadRank { step, stage, at_secs: 0.0 }
+                } else {
+                    FaultEvent::Straggler {
+                        step,
+                        stage,
+                        slowdown: 1.5 + 2.0 * rng.uniform(),
+                        from_secs: 0.0,
+                    }
+                }
+            })
+            .collect();
+        FaultPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Earliest dead-rank event in `[start, end)` as `(step, stage)` —
+    /// the executor's halt boundary for one segment.
+    pub fn first_death_in(&self, start: usize, end: usize) -> Option<(usize, usize)> {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::DeadRank { step, stage, .. } if (start..end).contains(&step) => {
+                    Some((step, stage))
+                }
+                _ => None,
+            })
+            .min()
+    }
+
+    /// Combined slowdown factor for `stage` active at `step` (events
+    /// with `step' <= step` persist; 1.0 = healthy).
+    pub fn straggler_factor(&self, step: usize, stage: usize) -> f64 {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::Straggler { step: s, stage: d, slowdown, .. }
+                    if d == stage && s <= step =>
+                {
+                    Some(slowdown)
+                }
+                _ => None,
+            })
+            .product::<f64>()
+            .max(1.0)
+    }
+
+    /// The plan that remains after recovering from a halt at `step`:
+    /// consumed events (step ≤ halt) are dropped so the resumed segment
+    /// does not re-fire them. Post-replan, surviving events address the
+    /// *new* stage numbering (documented in DESIGN.md §12).
+    pub fn after(&self, step: usize) -> FaultPlan {
+        FaultPlan { events: self.events.iter().filter(|e| e.step() > step).cloned().collect() }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            if let FaultEvent::Straggler { slowdown, .. } = e {
+                anyhow::ensure!(
+                    slowdown.is_finite() && *slowdown >= 1.0,
+                    "fault plan: event {i}: slowdown must be finite and >= 1.0, got {slowdown}"
+                );
+            }
+            let secs = match *e {
+                FaultEvent::DeadRank { at_secs, .. } => at_secs,
+                FaultEvent::Straggler { from_secs, .. } => from_secs,
+            };
+            anyhow::ensure!(
+                secs.is_finite() && secs >= 0.0,
+                "fault plan: event {i}: sim time must be finite and >= 0"
+            );
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let events: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = BTreeMap::new();
+                match *e {
+                    FaultEvent::DeadRank { step, stage, at_secs } => {
+                        o.insert("kind".into(), Json::Str("dead-rank".into()));
+                        o.insert("step".into(), Json::Num(step as f64));
+                        o.insert("stage".into(), Json::Num(stage as f64));
+                        o.insert("at_secs".into(), Json::Num(at_secs));
+                    }
+                    FaultEvent::Straggler { step, stage, slowdown, from_secs } => {
+                        o.insert("kind".into(), Json::Str("straggler".into()));
+                        o.insert("step".into(), Json::Num(step as f64));
+                        o.insert("stage".into(), Json::Num(stage as f64));
+                        o.insert("slowdown".into(), Json::Num(slowdown));
+                        o.insert("from_secs".into(), Json::Num(from_secs));
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(FAULTS_SCHEMA.into()));
+        root.insert("events".into(), Json::Arr(events));
+        Json::Obj(root)
+    }
+
+    /// Strict parse: unknown schema, kinds or missing fields are hard
+    /// errors (the plan-artifact idiom — a half-parsed fault script must
+    /// never drive a run).
+    pub fn from_json(v: &Json) -> Result<FaultPlan> {
+        let schema = v
+            .get("schema")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("fault plan: missing 'schema'"))?;
+        anyhow::ensure!(
+            schema == FAULTS_SCHEMA,
+            "fault plan: unsupported schema '{schema}' (this build reads '{FAULTS_SCHEMA}')"
+        );
+        let arr = v
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("fault plan: missing array 'events'"))?;
+        let mut events = Vec::with_capacity(arr.len());
+        for (i, e) in arr.iter().enumerate() {
+            let req = |key: &str| -> Result<usize> {
+                e.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("fault plan: event {i}: missing number '{key}'"))
+            };
+            let kind = e
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("fault plan: event {i}: missing 'kind'"))?;
+            match kind {
+                "dead-rank" => events.push(FaultEvent::DeadRank {
+                    step: req("step")?,
+                    stage: req("stage")?,
+                    at_secs: e.get("at_secs").and_then(Json::as_f64).unwrap_or(0.0),
+                }),
+                "straggler" => events.push(FaultEvent::Straggler {
+                    step: req("step")?,
+                    stage: req("stage")?,
+                    slowdown: e.get("slowdown").and_then(Json::as_f64).ok_or_else(|| {
+                        anyhow::anyhow!("fault plan: event {i}: missing number 'slowdown'")
+                    })?,
+                    from_secs: e.get("from_secs").and_then(Json::as_f64).unwrap_or(0.0),
+                }),
+                other => anyhow::bail!("fault plan: event {i}: unknown kind '{other}'"),
+            }
+        }
+        let plan = FaultPlan { events };
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing fault plan {path}: {e}"))
+    }
+
+    pub fn load(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading fault plan {path}: {e}"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow::anyhow!("fault plan {path}: {e}"))?;
+        Self::from_json(&v).map_err(|e| anyhow::anyhow!("fault plan {path}: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_through_json() {
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent::DeadRank { step: 2, stage: 1, at_secs: 0.5 },
+                FaultEvent::Straggler { step: 0, stage: 0, slowdown: 3.0, from_secs: 0.1 },
+            ],
+        };
+        let back = FaultPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn hand_written_minimal_document_parses() {
+        // The CI heredoc format: sim-time fields are optional.
+        let txt = r#"{"schema":"stp-faults-v1","events":[{"kind":"dead-rank","step":2,"stage":1}]}"#;
+        let p = FaultPlan::from_json(&Json::parse(txt).unwrap()).unwrap();
+        assert_eq!(p.first_death_in(0, 10), Some((2, 1)));
+        assert_eq!(p.first_death_in(3, 10), None);
+    }
+
+    #[test]
+    fn strict_parse_rejects_bad_documents() {
+        let parse = |s: &str| FaultPlan::from_json(&Json::parse(s).unwrap());
+        assert!(parse(r#"{"schema":"stp-faults-v99","events":[]}"#).is_err());
+        assert!(parse(r#"{"schema":"stp-faults-v1"}"#).is_err());
+        assert!(parse(r#"{"schema":"stp-faults-v1","events":[{"kind":"meteor","step":1,"stage":0}]}"#).is_err());
+        assert!(parse(r#"{"schema":"stp-faults-v1","events":[{"kind":"straggler","step":1,"stage":0,"slowdown":0.5}]}"#).is_err());
+    }
+
+    #[test]
+    fn seeded_preset_is_reproducible() {
+        let a = FaultPlan::seeded(7, 5, 10, 4);
+        let b = FaultPlan::seeded(7, 5, 10, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.events.len(), 5);
+        assert_ne!(a, FaultPlan::seeded(8, 5, 10, 4));
+        a.validate().unwrap();
+    }
+
+    #[test]
+    fn straggler_factors_compose_and_persist() {
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent::Straggler { step: 1, stage: 0, slowdown: 2.0, from_secs: 0.0 },
+                FaultEvent::Straggler { step: 3, stage: 0, slowdown: 1.5, from_secs: 0.0 },
+            ],
+        };
+        assert_eq!(p.straggler_factor(0, 0), 1.0);
+        assert_eq!(p.straggler_factor(1, 0), 2.0);
+        assert_eq!(p.straggler_factor(4, 0), 3.0);
+        assert_eq!(p.straggler_factor(4, 1), 1.0);
+    }
+
+    #[test]
+    fn after_drops_consumed_events() {
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent::DeadRank { step: 2, stage: 1, at_secs: 0.0 },
+                FaultEvent::DeadRank { step: 5, stage: 0, at_secs: 0.0 },
+            ],
+        };
+        let rest = p.after(2);
+        assert_eq!(rest.events.len(), 1);
+        assert_eq!(rest.first_death_in(0, 10), Some((5, 0)));
+    }
+}

@@ -1,0 +1,167 @@
+//! Elastic training: fault injection, bit-exact checkpoint/restore and
+//! mid-run replanning (DESIGN.md §12).
+//!
+//! This subsystem closes the plan → train handoff into a self-healing
+//! loop. The three braided pieces:
+//!
+//! - [`fault`] — a deterministic, seeded [`FaultPlan`] (dead-rank and
+//!   straggler events; JSON `stp-faults-v1`) injected into both the
+//!   event-driven simulator and the virtual executor.
+//! - [`checkpoint`] — versioned `stp-ckpt-v1` snapshots of the engine
+//!   state, with save → restore → train proven *bit-identical* to an
+//!   uninterrupted run (`tests/elastic.rs`).
+//! - [`replan`] — on device loss, shrink the [`ClusterSpec`], re-invoke
+//!   the planner's beam search under the fixed global batch, migrate the
+//!   checkpoint onto the new stage split and resume.
+//!
+//! [`run_elastic`] is the driver state machine:
+//!
+//! ```text
+//!   TRAIN ──(segment completes)──────────────────────────▶ DONE
+//!     │
+//!     └─(dead rank at step k: halt at the step-k cut,
+//!        snapshot written)
+//!          │
+//!          ├─ replan off: RESTORE(ckpt) ────────────────▶ TRAIN
+//!          └─ replan on:  SHRINK ▶ RE-SEARCH ▶ MIGRATE ──▶ TRAIN
+//! ```
+//!
+//! Every transition is deterministic, so an elastic run is replayable
+//! end-to-end from (seed, plan, fault plan).
+
+pub mod checkpoint;
+pub mod fault;
+pub mod replan;
+
+pub use checkpoint::{rng_key, shard_key, Checkpoint, ChunkShard, CKPT_SCHEMA};
+pub use fault::{FaultEvent, FaultPlan, FAULTS_SCHEMA};
+pub use replan::{migrate_checkpoint, replan_after_loss, shrink_cluster};
+
+use crate::cluster::ClusterSpec;
+use crate::exec::{train, RunReport, StepStat, TrainConfig};
+use crate::plan::{PlanArtifact, PlanModel};
+use crate::Result;
+
+/// What the driver needs to re-plan after a device loss (the planner
+/// query the original plan was searched with, minus the dead node).
+#[derive(Debug, Clone)]
+pub struct ReplanContext {
+    pub model: PlanModel,
+    /// The pool the *current* plan runs on; shrunk on every loss.
+    pub cluster: ClusterSpec,
+    pub seq: usize,
+    pub mb_size: usize,
+    /// `<= 0` uses the pool's default cap.
+    pub mem_cap_gib: f64,
+    pub beam_width: usize,
+}
+
+/// An elastic run: a base training config plus the optional replanning
+/// context (`None` = restore-in-place on the original shape).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    pub train: TrainConfig,
+    pub replan: Option<ReplanContext>,
+}
+
+/// The full multi-segment outcome.
+#[derive(Debug)]
+pub struct ElasticReport {
+    /// One [`RunReport`] per segment, in order.
+    pub segments: Vec<RunReport>,
+    /// The artifacts adopted at each replan (empty when replanning is
+    /// off or no device died).
+    pub replanned: Vec<PlanArtifact>,
+    /// The surviving pool after all losses (replanning runs only).
+    pub cluster: Option<ClusterSpec>,
+    /// Concatenated per-step stats across segments — the continuous
+    /// loss trajectory `tests/elastic.rs` checks.
+    pub steps: Vec<StepStat>,
+}
+
+impl ElasticReport {
+    pub fn first_loss(&self) -> f32 {
+        self.steps.first().map(|s| s.mean_loss).unwrap_or(f32::NAN)
+    }
+    pub fn last_loss(&self) -> f32 {
+        self.steps.last().map(|s| s.mean_loss).unwrap_or(f32::NAN)
+    }
+}
+
+/// Run training to the configured step target, surviving every injected
+/// dead-rank fault: each death halts the segment at a step-boundary cut,
+/// the snapshot is reloaded (after replan + migration when enabled) and
+/// training resumes until the target is reached.
+pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
+    let mut seg_cfg = cfg.train.clone();
+    let start = seg_cfg.resume.as_ref().map(|c| c.step).unwrap_or(0);
+    let target_end = start + seg_cfg.steps;
+    let has_faults = seg_cfg.faults.as_ref().map(|f| !f.is_empty()).unwrap_or(false);
+    anyhow::ensure!(
+        !has_faults || seg_cfg.checkpoint_dir.is_some(),
+        "elastic: fault injection requires --checkpoint-dir (a restart needs a snapshot)"
+    );
+
+    let mut cluster = cfg.replan.as_ref().map(|r| r.cluster.clone());
+    let mut segments: Vec<RunReport> = Vec::new();
+    let mut replanned: Vec<PlanArtifact> = Vec::new();
+    // Each segment consumes at least one fault event, so this bounds the
+    // loop without ever cutting a legitimate run short.
+    let max_segments = seg_cfg.faults.as_ref().map(|f| f.events.len()).unwrap_or(0) + 1;
+    for _ in 0..max_segments {
+        let report = train(&seg_cfg)?;
+        let halt = report.interrupted_at;
+        let stage = report.fault_stage;
+        let ckpt_path = report.checkpoint_path.clone();
+        segments.push(report);
+        let Some(halt) = halt else { break };
+
+        let path = ckpt_path.ok_or_else(|| {
+            anyhow::anyhow!("elastic: fault halted step {halt} but no checkpoint was written")
+        })?;
+        let mut ck = Checkpoint::load(&path)?;
+        if let Some(rc) = &cfg.replan {
+            let stage = stage.expect("interrupted segments report the dead stage");
+            let pool = cluster.as_ref().expect("replan context carries the pool");
+            let old = seg_cfg.plan.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("elastic: replanning requires running from a plan artifact")
+            })?;
+            let (shrunk, new_plan) = replan_after_loss(
+                &rc.model,
+                pool,
+                old,
+                stage,
+                rc.seq,
+                rc.mb_size,
+                rc.mem_cap_gib,
+                rc.beam_width,
+            )?;
+            ck = migrate_checkpoint(&ck, &new_plan)?;
+            // The migrated dims carry the new (pp, vpp); pin them so the
+            // engine cannot re-derive a mismatching grid.
+            seg_cfg.dims = Some(ck.dims.clone());
+            seg_cfg.plan = Some(new_plan.clone());
+            replanned.push(new_plan);
+            cluster = Some(shrunk);
+        }
+        seg_cfg.faults = seg_cfg.faults.as_ref().map(|f| f.after(halt));
+        seg_cfg.steps = target_end - halt;
+        seg_cfg.resume = Some(ck);
+    }
+
+    let steps = segments.iter().flat_map(|r| r.steps.iter().cloned()).collect();
+    Ok(ElasticReport { segments, replanned, cluster, steps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faults_without_a_checkpoint_dir_are_rejected_up_front() {
+        let mut train = TrainConfig::virtual_default();
+        train.faults = Some(FaultPlan::dead_rank_at(1, 0));
+        let err = run_elastic(&ElasticConfig { train, replan: None }).unwrap_err();
+        assert!(err.to_string().contains("checkpoint-dir"), "{err}");
+    }
+}

@@ -1,0 +1,427 @@
+//! Mid-run replanning: device loss → shrink the pool → re-search → migrate.
+//!
+//! When a dead-rank fault halts a segment, the elastic driver (1) shrinks
+//! the [`ClusterSpec`] by the node that hosted the dead stage
+//! ([`shrink_cluster`]), (2) re-invokes the planner's beam search on the
+//! surviving pool under the **fixed global batch** (`n_mb` is pinned —
+//! elasticity must not silently change the optimization trajectory's
+//! batch size) and (3) re-buckets the last checkpoint's parameter shards
+//! across the new plan's stage split ([`migrate_checkpoint`]).
+//!
+//! One invariant makes migration a pure re-bucketing instead of a
+//! resharding: **TP width is fixed across replans**. Shards are
+//! Megatron-partitioned by `(tp_rank, dims)` only — the chunk a layer
+//! lives in never affects its rank slice — so moving layers between
+//! chunks is a move of whole `LayerParams`, bit-exact by construction.
+//! The replanner therefore only considers candidates with the old `tp`.
+
+use crate::cluster::ClusterSpec;
+use crate::plan::{plan, PlanArtifact, PlanModel, PlanQuery, SearchMode};
+use crate::Result;
+
+use super::checkpoint::{shard_key, Checkpoint, ChunkShard};
+
+/// Remove the node that died from `group`. Bounded groups lose one node
+/// (the whole group disappears when its last node dies); the unbounded
+/// uniform sentinel (`nodes == 0`) is returned unchanged — its capacity
+/// already hosts any topology, so the shrink is carried entirely by the
+/// caller's reduced GPU budget.
+pub fn shrink_cluster(spec: &ClusterSpec, group: usize) -> Result<ClusterSpec> {
+    anyhow::ensure!(
+        group < spec.groups.len(),
+        "shrink_cluster: group {group} out of range ({} groups)",
+        spec.groups.len()
+    );
+    let mut out = spec.clone();
+    match out.groups[group].nodes {
+        0 => {}
+        1 => {
+            out.groups.remove(group);
+            anyhow::ensure!(
+                !out.groups.is_empty(),
+                "shrink_cluster: losing group {group} empties the pool"
+            );
+        }
+        n => out.groups[group].nodes = n - 1,
+    }
+    Ok(out)
+}
+
+/// Re-plan after losing the node hosting pipeline stage `dead_stage` of
+/// `old`. Returns the shrunk pool and the new beam-searched artifact.
+///
+/// The search is constrained to the old plan's `tp` (see module docs)
+/// and `n_mb` (fixed global batch); everything else — pp, vpp, schedule
+/// kind, weighted split, group order, offload — is re-optimized on the
+/// surviving devices. `mem_cap_gib <= 0` means "use the pool default".
+#[allow(clippy::too_many_arguments)]
+pub fn replan_after_loss(
+    model: &PlanModel,
+    cluster: &ClusterSpec,
+    old: &PlanArtifact,
+    dead_stage: usize,
+    seq: usize,
+    mb_size: usize,
+    mem_cap_gib: f64,
+    beam_width: usize,
+) -> Result<(ClusterSpec, PlanArtifact)> {
+    anyhow::ensure!(
+        dead_stage < old.pp,
+        "replan: dead stage {dead_stage} out of range (pp {})",
+        old.pp
+    );
+    let topo = crate::cluster::Topology::new(old.tp, old.pp, old.dp).with_vpp(old.vpp);
+    let view = cluster
+        .device_view(&topo, old.order)
+        .ok_or_else(|| anyhow::anyhow!("replan: pool cannot host the old topology"))?;
+    let group = view.group_of(dead_stage);
+
+    let shrunk = shrink_cluster(cluster, group)?;
+    let old_gpus = old.tp * old.pp * old.dp;
+    // Bounded groups lose the dead node's full complement; the unbounded
+    // sentinel has no node accounting, so exactly the dead stage's
+    // devices leave the budget.
+    let lost = if cluster.groups[group].nodes == 0 {
+        old.tp * old.dp
+    } else {
+        cluster.groups[group].hw.gpus_per_node
+    };
+    anyhow::ensure!(
+        old_gpus > lost,
+        "replan: losing {lost} of {old_gpus} GPUs leaves nothing to train on"
+    );
+
+    let mut q = PlanQuery::new(model.clone(), shrunk.clone(), old_gpus - lost);
+    q.seq = seq;
+    q.mb_size = mb_size;
+    if mem_cap_gib > 0.0 {
+        q.mem_cap_gib = mem_cap_gib;
+    }
+    q.n_mb_options = vec![old.n_mb];
+    q.search = SearchMode::Beam { width: beam_width.max(1) };
+    let report = plan(&q);
+
+    let ctx = q.eval_context();
+    let e = report
+        .ranked
+        .iter()
+        .find(|e| e.feasible && e.candidate.tp == old.tp)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "replan: no feasible plan at tp{} n_mb{} on {} GPUs",
+                old.tp,
+                old.n_mb,
+                old_gpus - lost
+            )
+        })?;
+    Ok((shrunk, PlanArtifact::for_evaluation(&ctx, e)))
+}
+
+/// Re-bucket a checkpoint's shards onto `new`'s stage split. The global
+/// layer order is chunk-index-major, so per rank this concatenates the
+/// old chunks' layer lists and re-splits them at `new.stage_layers`'
+/// prefix sums; the embedding moves to the new chunk 0 and the head to
+/// the new last chunk. RNG stream positions are dropped (stages are
+/// renumbered — device threads re-derive and fast-forward on resume).
+pub fn migrate_checkpoint(ck: &Checkpoint, new: &PlanArtifact) -> Result<Checkpoint> {
+    anyhow::ensure!(
+        new.tp == ck.tp,
+        "migrate: TP width is fixed across replans (checkpoint tp{}, plan tp{})",
+        ck.tp,
+        new.tp
+    );
+    anyhow::ensure!(
+        new.total_layers() == ck.total_layers(),
+        "migrate: plan covers {} layers, checkpoint holds {}",
+        new.total_layers(),
+        ck.total_layers()
+    );
+    anyhow::ensure!(
+        new.total_vit_layers() == 0,
+        "migrate: ViT chunks are not supported by the virtual executor"
+    );
+    ck.validate()?;
+
+    let old_chunks = ck.n_chunks();
+    let new_chunks = new.n_chunks();
+    let mut shards = std::collections::BTreeMap::new();
+    for rank in 0..ck.tp {
+        let mut flat: Vec<crate::exec::LayerParams> = Vec::with_capacity(ck.total_layers());
+        for c in 0..old_chunks {
+            let s = ck
+                .shard(c, rank)
+                .ok_or_else(|| anyhow::anyhow!("migrate: missing shard c{c}r{rank}"))?;
+            flat.extend(s.layers.iter().cloned());
+        }
+        let emb = ck.shard(0, rank).and_then(|s| s.emb.clone());
+        let head = ck.shard(old_chunks - 1, rank).and_then(|s| s.head.clone());
+
+        let mut taken = 0;
+        for (c, &n) in new.stage_layers.iter().enumerate() {
+            let layers = flat[taken..taken + n].to_vec();
+            taken += n;
+            shards.insert(
+                shard_key(c, rank),
+                ChunkShard {
+                    chunk: c,
+                    rank,
+                    layers,
+                    emb: if c == 0 { emb.clone() } else { None },
+                    head: if c == new_chunks - 1 { head.clone() } else { None },
+                },
+            );
+        }
+    }
+
+    let mut dims = ck.dims.clone();
+    dims.pp = new.pp;
+    dims.vpp = new.vpp;
+    let migrated = Checkpoint {
+        step: ck.step,
+        seed: ck.seed,
+        n_mb: ck.n_mb,
+        schedule: new.kind.name().to_string(),
+        tp: ck.tp,
+        pp: new.pp,
+        vpp: new.vpp,
+        dims,
+        stage_layers: new.stage_layers.clone(),
+        data_cursor: ck.data_cursor,
+        optimizer: ck.optimizer.clone(),
+        rng_states: std::collections::BTreeMap::new(),
+        shards,
+    };
+    migrated.validate()?;
+    Ok(migrated)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GroupOrder, HardwareProfile, NodeGroup};
+    use crate::config::ManifestDims;
+    use crate::exec::ChunkParams;
+    use crate::model::ModelConfig;
+    use crate::schedule::{OffloadParams, ScheduleKind};
+    use std::collections::BTreeMap;
+
+    fn bounded_pool(groups: usize, gpus_per_node: usize) -> ClusterSpec {
+        let mut hw = HardwareProfile::a800();
+        hw.gpus_per_node = gpus_per_node;
+        ClusterSpec {
+            name: format!("bounded-{groups}x{gpus_per_node}"),
+            groups: (0..groups).map(|_| NodeGroup { nodes: 1, hw: hw.clone() }).collect(),
+            intergroup_gbps: 0.0,
+        }
+    }
+
+    #[test]
+    fn shrink_removes_nodes_then_groups() {
+        let mut pool = bounded_pool(2, 4);
+        pool.groups[0].nodes = 3;
+        let s = shrink_cluster(&pool, 0).unwrap();
+        assert_eq!(s.groups[0].nodes, 2);
+        assert_eq!(s.groups.len(), 2);
+        // A single-node group disappears entirely.
+        let s = shrink_cluster(&pool, 1).unwrap();
+        assert_eq!(s.groups.len(), 1);
+        assert_eq!(s.groups[0].nodes, 3);
+        // Unbounded sentinel passes through untouched.
+        let uni = ClusterSpec::uniform(HardwareProfile::a800());
+        assert_eq!(shrink_cluster(&uni, 0).unwrap(), uni);
+        // Out-of-range group is an error.
+        assert!(shrink_cluster(&pool, 9).is_err());
+    }
+
+    fn tiny_ckpt(stage_layers: &[usize], tp: usize) -> Checkpoint {
+        let n_chunks = stage_layers.len();
+        let dims = ManifestDims {
+            vocab: 32,
+            d: 16,
+            q_heads: 4,
+            kv_heads: 2,
+            ffn: 24,
+            layers: stage_layers.iter().sum(),
+            seq: 8,
+            mb: 1,
+            tp,
+            pp: n_chunks,
+            vpp: 1,
+        };
+        let mut shards = BTreeMap::new();
+        for c in 0..n_chunks {
+            for r in 0..tp {
+                let p = ChunkParams::init(
+                    &dims,
+                    c,
+                    r,
+                    stage_layers[c],
+                    c == 0,
+                    c == n_chunks - 1,
+                    7,
+                );
+                shards.insert(
+                    shard_key(c, r),
+                    ChunkShard {
+                        chunk: c,
+                        rank: r,
+                        layers: p.layers,
+                        emb: p.emb,
+                        head: p.head,
+                    },
+                );
+            }
+        }
+        Checkpoint {
+            step: 2,
+            seed: 7,
+            n_mb: 4,
+            schedule: "stp".into(),
+            tp,
+            pp: n_chunks,
+            vpp: 1,
+            dims,
+            stage_layers: stage_layers.to_vec(),
+            data_cursor: 2,
+            optimizer: "sgd".into(),
+            rng_states: BTreeMap::new(),
+            shards,
+        }
+    }
+
+    fn artifact(tp: usize, pp: usize, vpp: usize, stage_layers: Vec<usize>) -> PlanArtifact {
+        let chunks = pp * vpp;
+        assert_eq!(stage_layers.len(), chunks);
+        PlanArtifact {
+            model: "tiny".into(),
+            cluster: "test".into(),
+            seq: 8,
+            mb_size: 1,
+            kind: ScheduleKind::Stp,
+            tp,
+            pp,
+            dp: 1,
+            vpp,
+            n_mb: 4,
+            order: GroupOrder::Declared,
+            offload: OffloadParams::default(),
+            stage_layers,
+            stage_vit_layers: vec![0; chunks],
+            chunk_scales: vec![1.0; chunks],
+            throughput: 0.0,
+        }
+    }
+
+    #[test]
+    fn migration_rebuckets_layers_in_global_order() {
+        // 4 layers over [2, 2] → non-uniform [3, 1]: the third layer of
+        // the new chunk 0 must be (bit-equal to) the first layer of the
+        // old chunk 1, for every rank.
+        let ck = tiny_ckpt(&[2, 2], 2);
+        let m = migrate_checkpoint(&ck, &artifact(2, 2, 1, vec![3, 1])).unwrap();
+        for r in 0..2 {
+            let new0 = &m.shard(0, r).unwrap().layers;
+            assert_eq!(new0.len(), 3);
+            assert_eq!(new0[2], ck.shard(1, r).unwrap().layers[0]);
+            assert_eq!(new0[0], ck.shard(0, r).unwrap().layers[0]);
+            // Endpoints rode along to the new first/last chunks.
+            assert_eq!(m.shard(0, r).unwrap().emb, ck.shard(0, r).unwrap().emb);
+            assert_eq!(m.shard(1, r).unwrap().head, ck.shard(1, r).unwrap().head);
+        }
+        assert_eq!(m.step, ck.step);
+        assert!(m.rng_states.is_empty(), "stage renumbering invalidates RNG keys");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn migration_collapses_chunks_and_preserves_totals() {
+        // Two chunks fold into one: emb AND head land on the same shard.
+        let ck = tiny_ckpt(&[1, 1], 2);
+        let m = migrate_checkpoint(&ck, &artifact(2, 1, 1, vec![2])).unwrap();
+        for r in 0..2 {
+            let s = m.shard(0, r).unwrap();
+            assert_eq!(s.layers.len(), 2);
+            assert!(s.emb.is_some() && s.head.is_some());
+        }
+        // TP or layer-count mismatches are hard errors.
+        assert!(migrate_checkpoint(&ck, &artifact(1, 1, 1, vec![2])).is_err());
+        assert!(migrate_checkpoint(&ck, &artifact(2, 1, 1, vec![3])).is_err());
+    }
+
+    #[test]
+    fn replan_moves_to_a_shallower_pipeline_on_the_shrunk_pool() {
+        // 4 nodes x 2 GPUs, tiny model at tp2-pp4-dp1 m8. Killing stage 1
+        // removes its node: 6 GPUs survive, and the only tp2 shape left
+        // that any group can host is pp3 (a stage needs tp·dp = 2 GPUs;
+        // each surviving group holds exactly one).
+        let pool = bounded_pool(4, 2);
+        let model = PlanModel::Llm(ModelConfig::tiny_100m());
+        let mut q = PlanQuery::new(model.clone(), pool.clone(), 8);
+        q.seq = 512;
+        q.n_mb_options = vec![8];
+        q.threads = 2;
+        let ctx = q.eval_context();
+        let c = crate::plan::Candidate {
+            id: 0,
+            tp: 2,
+            pp: 4,
+            dp: 1,
+            kind: ScheduleKind::Stp,
+            n_mb: 8,
+            order: GroupOrder::Declared,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+        };
+        let e = crate::plan::evaluate(&ctx, &c);
+        assert!(e.feasible, "tiny model at tp2-pp4 must fit");
+        let old = PlanArtifact::for_evaluation(&ctx, &e);
+
+        let (shrunk, new) =
+            replan_after_loss(&model, &pool, &old, 1, 512, 1, 0.0, 4).unwrap();
+        assert_eq!(shrunk.groups.len(), 3);
+        assert_eq!(new.tp, 2, "TP must be preserved");
+        assert_eq!(new.n_mb, old.n_mb, "global batch must be preserved");
+        assert_eq!(new.pp, 3);
+        assert_eq!(new.total_layers(), ModelConfig::tiny_100m().layers);
+
+        // And the checkpoint migrates onto the new split.
+        let ck = tiny_ckpt_for(&old);
+        let m = migrate_checkpoint(&ck, &new).unwrap();
+        assert_eq!(m.pp, 3);
+        assert_eq!(m.total_layers(), ck.total_layers());
+    }
+
+    /// A checkpoint shaped like `a`'s split (init-weight payload — enough
+    /// for migration shape tests).
+    fn tiny_ckpt_for(a: &PlanArtifact) -> Checkpoint {
+        let mut ck = tiny_ckpt(&vec![1; a.n_chunks()], a.tp);
+        // Rewrite the split to the artifact's (layer payloads are per
+        // (chunk, layer-index) inits; only shapes matter here).
+        let dims = ManifestDims { layers: a.total_layers(), ..ck.dims.clone() };
+        let mut shards = BTreeMap::new();
+        for c in 0..a.n_chunks() {
+            for r in 0..a.tp {
+                let p = ChunkParams::init(
+                    &dims,
+                    c,
+                    r,
+                    a.stage_layers[c],
+                    c == 0,
+                    c == a.n_chunks() - 1,
+                    7,
+                );
+                shards.insert(
+                    shard_key(c, r),
+                    ChunkShard { chunk: c, rank: r, layers: p.layers, emb: p.emb, head: p.head },
+                );
+            }
+        }
+        ck.dims = ManifestDims { pp: a.pp, vpp: a.vpp, ..dims };
+        ck.pp = a.pp;
+        ck.vpp = a.vpp;
+        ck.stage_layers = a.stage_layers.clone();
+        ck.shards = shards;
+        ck.validate().unwrap();
+        ck
+    }
+}

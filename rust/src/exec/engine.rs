@@ -22,16 +22,18 @@
 //! steady-state allocation count must be zero ([`RunReport`] reports it,
 //! `tests/train_virtual.rs` asserts it).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::{make_backend, virtual_dims_scaled, Backend, BackendKind, KernelPath};
-use super::{ChunkParams, Corpus};
+use super::rng::Rng;
+use super::{ChunkParams, Corpus, LayerGrads};
 use crate::cluster::{partition_llm, StagePlan, Topology};
 use crate::config::{Manifest, ManifestDims};
+use crate::elastic::{rng_key, shard_key, Checkpoint, ChunkShard, FaultPlan};
 use crate::memory::{ActKey, ActTag, ActivationStore, OffloadManager};
 use crate::model::ModelConfig;
 use crate::plan::PlanArtifact;
@@ -68,6 +70,15 @@ pub struct TrainConfig {
     /// Planner handoff: run this plan's schedule, topology and layer
     /// split instead of the `schedule`/`n_mb`/dims-derived defaults.
     pub plan: Option<PlanArtifact>,
+    /// Deterministic fault schedule. A dead rank halts the segment at
+    /// that step's boundary (a consistent cut — no step is half-applied);
+    /// stragglers stretch wall-clock at op boundaries, numerics untouched.
+    pub faults: Option<FaultPlan>,
+    /// Write an `stp-ckpt-v1` snapshot here when the segment ends,
+    /// whether it ran to completion or halted at a fault.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from this snapshot instead of initializing at step 0.
+    pub resume: Option<Checkpoint>,
 }
 
 impl TrainConfig {
@@ -87,6 +98,9 @@ impl TrainConfig {
             dims: None,
             virtual_scale: 1.0,
             plan: None,
+            faults: None,
+            checkpoint_dir: None,
+            resume: None,
         }
     }
 }
@@ -122,6 +136,13 @@ pub struct RunReport {
     /// 0's log) — the handoff evidence `tests/train_virtual.rs` compares
     /// against the simulator's [`CompiledSchedule`] order.
     pub device_ops: Vec<Vec<Op>>,
+    /// Absolute step a dead-rank fault halted the segment at (`None`:
+    /// the segment ran to its planned end).
+    pub interrupted_at: Option<usize>,
+    /// Pipeline stage whose device died, when `interrupted_at` is set.
+    pub fault_stage: Option<usize>,
+    /// The snapshot written at segment end (requires `checkpoint_dir`).
+    pub checkpoint_path: Option<PathBuf>,
 }
 
 impl RunReport {
@@ -153,9 +174,14 @@ struct RunParams {
     backend: BackendKind,
     kernels: KernelPath,
     n_mb: usize,
-    steps: usize,
+    /// First step this segment runs (the resume point; 0 for fresh runs).
+    start_step: usize,
+    /// One past the last step (already clamped to any dead-rank halt).
+    end_step: usize,
     lr: f32,
     seed: u64,
+    /// Send parameter shards + RNG positions back for a checkpoint.
+    snapshot: bool,
 }
 
 /// What a device thread hands back when its walk completes.
@@ -235,15 +261,72 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         }
     };
     crate::schedule::assert_valid(&schedule);
+    let sched_kind = schedule.kind;
     let compiled = Arc::new(schedule.compile());
+
+    // Elastic envelope: resume point, fault-clamped end, snapshotting.
+    if let Some(f) = &cfg.faults {
+        f.validate()?;
+        for ev in &f.events {
+            anyhow::ensure!(
+                ev.stage() < topo.pp,
+                "fault plan: stage {} out of range (pp {})",
+                ev.stage(),
+                topo.pp
+            );
+        }
+    }
+    let start_step = cfg.resume.as_ref().map(|ck| ck.step).unwrap_or(0);
+    if let Some(ck) = &cfg.resume {
+        ck.validate()?;
+        anyhow::ensure!(
+            ck.tp == topo.tp && ck.pp == topo.pp && ck.vpp == topo.vpp,
+            "resume: checkpoint shape tp{}-pp{}-v{} != run shape tp{}-pp{}-v{}",
+            ck.tp,
+            ck.pp,
+            ck.vpp,
+            topo.tp,
+            topo.pp,
+            topo.vpp
+        );
+        anyhow::ensure!(
+            ck.n_mb == n_mb,
+            "resume: checkpoint n_mb {} != run n_mb {n_mb}",
+            ck.n_mb
+        );
+        anyhow::ensure!(
+            ck.seed == cfg.seed,
+            "resume: checkpoint seed {} != run seed {}",
+            ck.seed,
+            cfg.seed
+        );
+        anyhow::ensure!(
+            ck.dims == dims,
+            "resume: checkpoint dims do not match the run's resolved dims"
+        );
+        let split: Vec<usize> = plan.chunks.iter().map(|c| c.lm_layers).collect();
+        anyhow::ensure!(
+            ck.stage_layers == split,
+            "resume: checkpoint split {:?} != run split {split:?}",
+            ck.stage_layers
+        );
+    }
+    let end_step = start_step + cfg.steps;
+    let halt = cfg.faults.as_ref().and_then(|f| f.first_death_in(start_step, end_step));
+    let run_end = halt.map(|(s, _)| s).unwrap_or(end_step);
+
     let run = RunParams {
         backend: cfg.backend,
         kernels: cfg.kernels,
         n_mb,
-        steps: cfg.steps,
+        start_step,
+        end_step: run_end,
         lr: cfg.lr,
         seed: cfg.seed,
+        snapshot: cfg.checkpoint_dir.is_some(),
     };
+    let faults = cfg.faults.clone().map(Arc::new);
+    let resume = cfg.resume.clone().map(Arc::new);
 
     let corpus = Arc::new(Corpus::new(dims.vocab, cfg.seed));
 
@@ -269,6 +352,9 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     // (stage, activation-store peak bytes, workspace peak bytes)
     let (stat_tx, stat_rx) = std::sync::mpsc::channel::<(usize, usize, usize)>();
     let (ops_tx, ops_rx) = std::sync::mpsc::channel::<(usize, Vec<Op>)>();
+    // (stage, rank, the thread's chunk shards, RNG stream position)
+    let (ckpt_tx, ckpt_rx) =
+        std::sync::mpsc::channel::<(usize, usize, Vec<ChunkShard>, u64)>();
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
@@ -284,6 +370,8 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
                 tp: tp_groups[stage].clone(),
                 corpus: corpus.clone(),
                 run,
+                faults: faults.clone(),
+                resume: resume.clone(),
             };
             // Move this thread's channel endpoints in.
             let mut my_fwd_tx = HashMap::new();
@@ -305,6 +393,7 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
             let loss_tx = loss_tx.clone();
             let stat_tx = stat_tx.clone();
             let ops_tx = ops_tx.clone();
+            let ckpt_tx = ckpt_tx.clone();
             handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
                 let mut dev =
                     DeviceThread::new(ctx, my_fwd_tx, my_fwd_rx, my_bwd_tx, my_bwd_rx, loss_tx)?;
@@ -315,6 +404,23 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
                 if dev.ctx.rank == 0 {
                     ops_tx.send((dev.ctx.stage, std::mem::take(&mut dev.op_log))).ok();
                 }
+                if dev.ctx.run.snapshot {
+                    let mut shards: Vec<ChunkShard> = dev
+                        .params
+                        .iter()
+                        .map(|(&c, p)| ChunkShard {
+                            chunk: c,
+                            rank: dev.ctx.rank,
+                            layers: p.layers.clone(),
+                            emb: p.emb.clone(),
+                            head: p.head.clone(),
+                        })
+                        .collect();
+                    shards.sort_by_key(|s| s.chunk);
+                    ckpt_tx
+                        .send((dev.ctx.stage, dev.ctx.rank, shards, dev.rng.state()))
+                        .ok();
+                }
                 Ok(stats)
             }));
         }
@@ -322,22 +428,26 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     drop(loss_tx);
     drop(stat_tx);
     drop(ops_tx);
+    drop(ckpt_tx);
 
     // Collect per-step losses from the head owner (tp rank 0 of the last
-    // chunk's stage reports every microbatch loss).
-    let mut step_losses: Vec<Vec<f32>> = vec![Vec::new(); cfg.steps];
-    let mut step_t: Vec<f64> = vec![0.0; cfg.steps];
+    // chunk's stage reports every microbatch loss). Steps are absolute;
+    // a resumed segment's first entry is `start_step`.
+    let seg_steps = run_end - start_step;
+    let mut step_losses: Vec<Vec<f32>> = vec![Vec::new(); seg_steps];
+    let mut step_t: Vec<f64> = vec![0.0; seg_steps];
     let mut last = t0.elapsed().as_secs_f64();
     for (step, loss) in loss_rx {
-        step_losses[step].push(loss);
-        if step_losses[step].len() == n_mb {
+        let i = step - start_step;
+        step_losses[i].push(loss);
+        if step_losses[i].len() == n_mb {
             let now = t0.elapsed().as_secs_f64();
-            step_t[step] = now - last;
+            step_t[i] = now - last;
             last = now;
             if cfg.verbose {
                 let mean: f32 =
-                    step_losses[step].iter().sum::<f32>() / step_losses[step].len() as f32;
-                eprintln!("step {step:4}  loss {mean:.4}  ({:.2}s)", step_t[step]);
+                    step_losses[i].iter().sum::<f32>() / step_losses[i].len() as f32;
+                eprintln!("step {step:4}  loss {mean:.4}  ({:.2}s)", step_t[i]);
             }
         }
     }
@@ -360,11 +470,49 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         device_ops[stage] = ops;
     }
 
+    // Assemble and write the `stp-ckpt-v1` snapshot. Threads stopped at
+    // the `run_end` step boundary (sgd_step zeroed every accumulator),
+    // so parameters + RNG positions are the complete engine state.
+    let mut checkpoint_path = None;
+    if let Some(dir) = &cfg.checkpoint_dir {
+        let mut shard_map = BTreeMap::new();
+        let mut rng_states = BTreeMap::new();
+        for (stage, rank, shards, rng_state) in ckpt_rx {
+            rng_states.insert(rng_key(stage, rank), rng_state);
+            for s in shards {
+                shard_map.insert(shard_key(s.chunk, s.rank), s);
+            }
+        }
+        let ck = Checkpoint {
+            step: run_end,
+            seed: cfg.seed,
+            n_mb,
+            schedule: sched_kind.name().to_string(),
+            tp: topo.tp,
+            pp: topo.pp,
+            vpp: topo.vpp,
+            dims: dims.clone(),
+            stage_layers: plan.chunks.iter().map(|c| c.lm_layers).collect(),
+            data_cursor: run_end,
+            optimizer: "sgd".into(),
+            rng_states,
+            shards: shard_map,
+        };
+        ck.validate()?;
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow::anyhow!("creating checkpoint dir {}: {e}", dir.display()))?;
+        let path = dir.join(format!("ckpt-step-{run_end}.json"));
+        ck.save(&path)?;
+        // A stable alias the CLI's `--resume latest` convention reads.
+        ck.save(&dir.join("latest.json"))?;
+        checkpoint_path = Some(path);
+    }
+
     let steps = step_losses
         .iter()
         .enumerate()
         .map(|(i, ls)| StepStat {
-            step: i,
+            step: start_step + i,
             mean_loss: ls.iter().sum::<f32>() / ls.len().max(1) as f32,
             secs: step_t[i],
         })
@@ -380,6 +528,9 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         executions,
         wall_secs: t0.elapsed().as_secs_f64(),
         device_ops,
+        interrupted_at: halt.map(|(s, _)| s),
+        fault_stage: halt.map(|(_, st)| st),
+        checkpoint_path,
     })
 }
 
@@ -409,6 +560,8 @@ struct DeviceCtx {
     tp: Arc<crate::comm::TpGroup>,
     corpus: Arc<Corpus>,
     run: RunParams,
+    faults: Option<Arc<FaultPlan>>,
+    resume: Option<Arc<Checkpoint>>,
 }
 
 struct DeviceThread {
@@ -425,6 +578,22 @@ struct DeviceThread {
     step: usize,
     /// Ops executed in step 0 (rank 0 reports them for the handoff check).
     op_log: Vec<Op>,
+    /// This thread's reserved stream: one draw per step, position
+    /// snapshotted into `stp-ckpt-v1` and restored bit-exactly on resume.
+    rng: Rng,
+}
+
+/// Rebuild one chunk's parameters from a checkpoint shard. Gradient
+/// accumulators come back as zeros: snapshots are taken at step
+/// boundaries, where `sgd_step` has just zeroed them.
+fn restore_chunk(shard: &ChunkShard) -> ChunkParams {
+    let layers: Vec<_> = shard.layers.clone();
+    let grads = layers.iter().map(LayerGrads::zeros_like).collect();
+    let emb = shard.emb.clone();
+    let head = shard.head.clone();
+    let emb_grad = emb.as_ref().map(|t| vec![0.0; t.len()]);
+    let head_grad = head.as_ref().map(|t| vec![0.0; t.len()]);
+    ChunkParams { layers, grads, emb, emb_grad, head, head_grad }
 }
 
 /// Accumulate one attention unit's weight gradients. A free function
@@ -483,9 +652,11 @@ impl DeviceThread {
         for c in 0..ctx.compiled.n_chunks {
             if ctx.compiled.chunk_dev[c] as usize == ctx.stage {
                 let content = ctx.plan.chunks[c];
-                params.insert(
-                    c,
-                    ChunkParams::init(
+                let cp = match &ctx.resume {
+                    Some(ck) => restore_chunk(ck.shard(c, ctx.rank).ok_or_else(|| {
+                        anyhow::anyhow!("resume: checkpoint missing shard c{c}r{}", ctx.rank)
+                    })?),
+                    None => ChunkParams::init(
                         &ctx.dims,
                         c,
                         ctx.rank,
@@ -494,9 +665,27 @@ impl DeviceThread {
                         content.has_head,
                         ctx.run.seed,
                     ),
-                );
+                };
+                params.insert(c, cp);
             }
         }
+        // Saved stream position if the checkpoint has one for this
+        // (stage, rank); otherwise derive and fast-forward — a migrated
+        // checkpoint renumbers stages, so its RNG map is empty and the
+        // two paths must land on the same position.
+        let rng = match ctx
+            .resume
+            .as_ref()
+            .and_then(|ck| ck.rng_states.get(&rng_key(ctx.stage, ctx.rank)))
+        {
+            Some(&state) => Rng::from_state(state),
+            None => {
+                let mut r =
+                    Rng::for_purpose(ctx.run.seed, ctx.stage as u64, ctx.rank as u64, 99);
+                r.advance(ctx.run.start_step as u64);
+                r
+            }
+        };
         Ok(DeviceThread {
             ctx,
             backend,
@@ -510,6 +699,7 @@ impl DeviceThread {
             loss_tx,
             step: 0,
             op_log: Vec::new(),
+            rng,
         })
     }
 
@@ -520,20 +710,40 @@ impl DeviceThread {
     fn run(&mut self) -> Result<ThreadStats> {
         let lo = self.ctx.compiled.dev_start[self.ctx.stage] as usize;
         let hi = self.ctx.compiled.dev_start[self.ctx.stage + 1] as usize;
+        let start = self.ctx.run.start_step;
         let mut warm_allocs = 0;
-        for step in 0..self.ctx.run.steps {
+        for step in start..self.ctx.run.end_step {
             self.step = step;
+            // Op-boundary fault observation: stragglers stretch wall-clock
+            // (numerics untouched — fault-free bit-parity holds by
+            // construction); dead ranks were lowered into `end_step` by
+            // `train`, so every thread stops at the same consistent cut.
+            let slow = self
+                .ctx
+                .faults
+                .as_ref()
+                .map(|f| f.straggler_factor(step, self.ctx.stage))
+                .unwrap_or(1.0);
             for j in lo..hi {
                 let op = self.ctx.compiled.ops[j];
-                if step == 0 && self.ctx.rank == 0 {
+                if step == start && self.ctx.rank == 0 {
                     self.op_log.push(op);
+                }
+                if slow > 1.0 {
+                    std::thread::sleep(std::time::Duration::from_micros(
+                        ((slow - 1.0) * 100.0) as u64,
+                    ));
                 }
                 self.exec_op(&op)?;
             }
             self.optimizer_step()?;
-            if step == 0 {
-                // Step 0 populates the workspace pools; everything after
-                // must recycle (the zero-steady-state-alloc contract).
+            // One reserved draw per step: the position (not the values)
+            // is the state `stp-ckpt-v1` must round-trip.
+            self.rng.advance(1);
+            if step == start {
+                // The segment's first step populates the workspace pools;
+                // everything after must recycle (the zero-steady-state-
+                // alloc contract).
                 warm_allocs = self.ws_fresh_allocs();
             }
         }

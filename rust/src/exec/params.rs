@@ -24,7 +24,7 @@ const M_HEAD: u64 = 9;
 
 /// One transformer layer's per-rank parameters (order matches the AOT
 /// artifact signatures).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerParams {
     pub gamma1: Tensor,
     pub wq: Tensor,
@@ -38,7 +38,7 @@ pub struct LayerParams {
 }
 
 /// Gradient accumulator mirroring [`LayerParams`].
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LayerGrads {
     pub gamma1: Vec<f32>,
     pub wq: Vec<f32>,
@@ -52,7 +52,10 @@ pub struct LayerGrads {
 }
 
 impl LayerGrads {
-    fn zeros_like(p: &LayerParams) -> LayerGrads {
+    /// Fresh zero accumulators matching `p`'s shapes (checkpoint restore
+    /// rebuilds grads this way: snapshots are taken at step boundaries,
+    /// where `sgd_step` has provably zeroed them).
+    pub fn zeros_like(p: &LayerParams) -> LayerGrads {
         LayerGrads {
             gamma1: vec![0.0; p.gamma1.len()],
             wq: vec![0.0; p.wq.len()],

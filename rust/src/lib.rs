@@ -48,6 +48,7 @@ pub mod cluster;
 pub mod comm;
 pub mod config;
 pub mod coordinator;
+pub mod elastic;
 pub mod exec;
 pub mod memory;
 pub mod metrics;

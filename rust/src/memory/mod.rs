@@ -12,6 +12,21 @@ use std::collections::HashMap;
 use crate::runtime::Tensor;
 use crate::Result;
 
+/// Per-device static (weights + grads + optimizer-state) bytes under an
+/// arbitrary layer→device split: each device gets a layer-proportional
+/// share of `state_bytes` (the whole job's parameter state for one TP
+/// shard, i.e. params × bytes-per-param ÷ tp) plus the fixed per-device
+/// `overhead`. The uniform split reduces to the historical
+/// `state ÷ pp + overhead` scalar; weighted splits (heterogeneous pools,
+/// DESIGN.md §8) concentrate state on the layer-heavy devices.
+pub fn split_static_bytes(state_bytes: f64, dev_layers: &[usize], overhead: usize) -> Vec<usize> {
+    let total: usize = dev_layers.iter().sum();
+    dev_layers
+        .iter()
+        .map(|&l| (state_bytes * l as f64 / total.max(1) as f64) as usize + overhead)
+        .collect()
+}
+
 /// Key of a stored activation: (chunk, microbatch, layer-in-chunk, tag).
 /// Tags distinguish the unit inputs within a layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -185,6 +200,17 @@ mod tests {
 
     fn key(chunk: usize, mb: usize, layer: usize) -> ActKey {
         ActKey { chunk, mb, layer, tag: ActTag::AttnIn }
+    }
+
+    #[test]
+    fn split_static_bytes_is_layer_proportional() {
+        let v = split_static_bytes(1200.0, &[3, 1], 10);
+        assert_eq!(v, vec![910, 310]);
+        // Uniform split collapses to the scalar formula.
+        let u = split_static_bytes(1200.0, &[2, 2], 10);
+        assert_eq!(u, vec![610, 610]);
+        // Degenerate empty split must not divide by zero.
+        assert_eq!(split_static_bytes(1200.0, &[0, 0], 10), vec![10, 10]);
     }
 
     #[test]

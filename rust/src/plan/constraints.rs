@@ -32,6 +32,25 @@ pub enum Reject {
     TheoryBound,
 }
 
+impl Reject {
+    /// Stable diagnostic label (CLI `--verbose` reject tallies).
+    pub fn name(self) -> &'static str {
+        match self {
+            Reject::TpShape => "tp-shape",
+            Reject::PipelineShape => "pipeline-shape",
+            Reject::MicrobatchShape => "microbatch-shape",
+            Reject::ClusterShape => "cluster-shape",
+            Reject::Memory => "memory",
+            Reject::TheoryBound => "theory-bound",
+        }
+    }
+
+    /// Every rejection reason the stage-1 shape filter can produce, in
+    /// tally order.
+    pub const SHAPE_KINDS: [Reject; 4] =
+        [Reject::TpShape, Reject::PipelineShape, Reject::MicrobatchShape, Reject::ClusterShape];
+}
+
 /// Check everything that can be decided without a cost model.
 pub fn admissible(model: &PlanModel, cluster: &ClusterSpec, c: &Candidate) -> Result<(), Reject> {
     let lm = model.lm();

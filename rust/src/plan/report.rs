@@ -9,6 +9,7 @@ use crate::config::json::Json;
 use crate::metrics::{pct, Table};
 use crate::schedule::ScheduleKind;
 
+use super::constraints::Reject;
 use super::evaluate::Evaluation;
 
 /// Outcome of one [`super::plan`] query: the pruning funnel plus every
@@ -30,6 +31,10 @@ pub struct PlanReport {
     pub n_enumerated: usize,
     /// Dropped by shape rules (TP divisibility, pipeline depth, n_mb).
     pub n_rejected_shape: usize,
+    /// Shape rejections broken down by [`Reject`] reason, in
+    /// [`Reject::SHAPE_KINDS`] order; the counts sum to
+    /// `n_rejected_shape` (CLI `--verbose` prints them).
+    pub shape_reject_tallies: Vec<(Reject, usize)>,
     /// Dropped by the closed-form memory pre-filter.
     pub n_pruned_memory: usize,
     /// Dropped by the theory-estimate bound.
@@ -118,6 +123,38 @@ impl PlanReport {
         )
     }
 
+    /// One line of per-reason shape-reject counts (zero-count reasons
+    /// skipped), e.g. `shape rejects: tp-shape 40 | cluster-shape 12`.
+    pub fn reject_tally_line(&self) -> String {
+        let parts: Vec<String> = self
+            .shape_reject_tallies
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(r, n)| format!("{} {}", r.name(), n))
+            .collect();
+        if parts.is_empty() {
+            "shape rejects: none".to_string()
+        } else {
+            format!("shape rejects: {}", parts.join(" | "))
+        }
+    }
+
+    /// When no candidate was chosen, a one-line diagnosis of where the
+    /// funnel consumed the space (the `stp plan` nonzero-exit message).
+    pub fn no_plan_diagnostic(&self) -> String {
+        let simulated_oom = self.ranked.iter().filter(|e| !e.feasible).count();
+        format!(
+            "no feasible plan: {} enumerated, {} shape-rejected, {} memory-pruned, \
+             {} theory-pruned, {} simulated but over the {:.0} GiB cap",
+            self.n_enumerated,
+            self.n_rejected_shape,
+            self.n_pruned_memory,
+            self.n_pruned_theory,
+            simulated_oom,
+            self.mem_cap_bytes as f64 / (1u64 << 30) as f64,
+        )
+    }
+
     /// Serialize the whole report (query echo + funnel + ranked list).
     pub fn to_json(&self) -> Json {
         let mut root = BTreeMap::new();
@@ -133,6 +170,11 @@ impl PlanReport {
         root.insert("search_mode".into(), Json::Str(self.search_mode.clone()));
         root.insert("enumerated".into(), Json::Num(self.n_enumerated as f64));
         root.insert("rejected_shape".into(), Json::Num(self.n_rejected_shape as f64));
+        let mut tallies = BTreeMap::new();
+        for (r, n) in &self.shape_reject_tallies {
+            tallies.insert(r.name().to_string(), Json::Num(*n as f64));
+        }
+        root.insert("rejected_shape_by_reason".into(), Json::Obj(tallies));
         root.insert("pruned_memory".into(), Json::Num(self.n_pruned_memory as f64));
         root.insert("pruned_theory".into(), Json::Num(self.n_pruned_theory as f64));
         root.insert("simulated".into(), Json::Num(self.n_simulated() as f64));
@@ -211,6 +253,12 @@ mod tests {
             search_mode: "exhaustive".into(),
             n_enumerated: 10,
             n_rejected_shape: 4,
+            shape_reject_tallies: vec![
+                (Reject::TpShape, 3),
+                (Reject::PipelineShape, 0),
+                (Reject::MicrobatchShape, 1),
+                (Reject::ClusterShape, 0),
+            ],
             n_pruned_memory: 2,
             n_pruned_theory: 1,
             ranked: vec![
@@ -239,11 +287,25 @@ mod tests {
     }
 
     #[test]
+    fn reject_tallies_render_and_diagnose() {
+        let mut r = report();
+        assert_eq!(r.reject_tally_line(), "shape rejects: tp-shape 3 | microbatch-shape 1");
+        // Empty ranking: the diagnostic names every funnel stage.
+        r.ranked.clear();
+        let d = r.no_plan_diagnostic();
+        assert!(d.contains("no feasible plan"), "{d}");
+        assert!(d.contains("4 shape-rejected"), "{d}");
+        assert!(d.contains("2 memory-pruned"), "{d}");
+    }
+
+    #[test]
     fn json_is_parseable_and_complete() {
         let r = report();
         let j = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(j.get("gpus").unwrap().as_usize(), Some(16));
         assert_eq!(j.get("search_mode").unwrap().as_str(), Some("exhaustive"));
+        let by_reason = j.get("rejected_shape_by_reason").unwrap();
+        assert_eq!(by_reason.get("tp-shape").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("candidates").unwrap().as_arr().unwrap().len(), 3);
         let top = j.get("candidates").unwrap().idx(0).unwrap();
         assert_eq!(top.get("schedule").unwrap().as_str(), Some("stp"));

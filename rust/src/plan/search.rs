@@ -31,7 +31,7 @@ use crate::cluster::ClusterSpec;
 use crate::schedule::{OffloadParams, ScheduleKind};
 use crate::sim::{CostModel, SimArena};
 
-use super::constraints::{admissible, memory_feasible};
+use super::constraints::{admissible, memory_feasible, Reject};
 use super::evaluate::{estimated_throughput, evaluate_in, EvalContext, Evaluation};
 use super::report::PlanReport;
 use super::space::{enumerate, Candidate, PlanModel};
@@ -162,10 +162,17 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
     // microbatch rules, cluster capacity under the candidate's order).
     let mut shaped: Vec<Candidate> = Vec::with_capacity(all.len());
     let mut n_rejected_shape = 0;
+    let mut shape_reject_tallies: Vec<(Reject, usize)> =
+        Reject::SHAPE_KINDS.iter().map(|&r| (r, 0)).collect();
     for c in &all {
         match admissible(&q.model, &q.cluster, c) {
             Ok(()) => shaped.push(*c),
-            Err(_) => n_rejected_shape += 1,
+            Err(r) => {
+                n_rejected_shape += 1;
+                if let Some(t) = shape_reject_tallies.iter_mut().find(|(k, _)| *k == r) {
+                    t.1 += 1;
+                }
+            }
         }
     }
 
@@ -247,6 +254,7 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
         search_mode: q.search.label(),
         n_enumerated,
         n_rejected_shape,
+        shape_reject_tallies,
         n_pruned_memory,
         n_pruned_theory,
         ranked,

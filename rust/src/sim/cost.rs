@@ -80,8 +80,14 @@ pub struct CostModel {
     pub stage_plan: StagePlan,
     /// Topology (TP size decides AR cost; PP for hop locality).
     pub topo: Topology,
-    /// Per-device static bytes (weights + grads + optimizer state).
+    /// Uniform-split static bytes per device (weights + grads + optimizer
+    /// state), the historical scalar every theory bound was derived with.
     pub static_bytes: usize,
+    /// Per-device static bytes under the *actual* layer split: device `d`
+    /// holds its owned chunks' layers, so a non-uniform weighted split
+    /// (mixed pools, DESIGN.md §8) concentrates parameter state on the
+    /// layer-heavy devices. Indexed by PP rank.
+    pub static_bytes_per_dev: Vec<usize>,
     /// Samples per microbatch (micro batch size).
     pub mb_size: usize,
     /// Model-FLOPs per sample fwd+bwd (for MFU), whole model.
@@ -248,6 +254,20 @@ impl CostModel {
         let static_bytes = (total_params as f64 * 18.0 / (tp as f64 * topo.pp as f64)) as usize
             + RUNTIME_OVERHEAD_BYTES;
 
+        // Per-device static state follows the layer split: a device's
+        // parameter (and grad/optimizer) bytes are proportional to the
+        // layers its chunks actually hold, not to 1/pp. The uniform
+        // scalar above is preserved for the theory-bound arithmetic.
+        let mut dev_layers = vec![0usize; topo.pp];
+        for (c, content) in plan.chunks.iter().enumerate() {
+            dev_layers[chunk_dev[c]] += content.lm_layers + content.vit_layers;
+        }
+        let static_bytes_per_dev = crate::memory::split_static_bytes(
+            total_params as f64 * 18.0 / tp as f64,
+            &dev_layers,
+            RUNTIME_OVERHEAD_BYTES,
+        );
+
         let model_flops_per_sample = lm.train_flops_per_token(seq) * seq as f64
             + vit
                 .map(|v| 3.0 * v.layer_fwd_flops(vit_tokens) * v.layers as f64)
@@ -264,6 +284,7 @@ impl CostModel {
             stage_plan: plan.clone(),
             topo: *topo,
             static_bytes,
+            static_bytes_per_dev,
             mb_size,
             model_flops_per_sample,
         }
@@ -561,6 +582,60 @@ mod tests {
         let a = CostModel::analytic(&m, &Topology::new(4, 4, 1), &cluster, 4096, 1).static_bytes;
         let b = CostModel::analytic(&m, &Topology::new(8, 4, 1), &cluster, 4096, 1).static_bytes;
         assert!(b < a);
+    }
+
+    #[test]
+    fn per_device_static_follows_the_weighted_split() {
+        // Satellite of DESIGN.md §12: under the stage-time-balanced split
+        // on a mixed pool the fast device carries more layers, hence more
+        // parameter/optimizer state. The per-device vector must (a) order
+        // like the layer counts, (b) conserve the total parameter bytes
+        // of the uniform scalar, and (c) collapse to the scalar when the
+        // split is uniform.
+        let m = ModelConfig::qwen2_12b();
+        let topo = Topology::new(8, 2, 1);
+        let spec = ClusterSpec::mixed_a800_h20();
+        let cm = CostModel::analytic_for(
+            &m,
+            &topo,
+            &spec,
+            GroupOrder::FastFirst,
+            Placement::VShape,
+            4096,
+            1,
+        );
+        let dev_layers = |d: usize| -> usize {
+            cm.stage_plan
+                .chunks
+                .iter()
+                .enumerate()
+                .filter(|(c, _)| cm.chunk_dev[*c] == d)
+                .map(|(_, ch)| ch.lm_layers)
+                .sum()
+        };
+        assert_eq!(cm.static_bytes_per_dev.len(), topo.pp);
+        assert!(dev_layers(0) > dev_layers(1), "fast device should hold more layers");
+        assert!(
+            cm.static_bytes_per_dev[0] > cm.static_bytes_per_dev[1],
+            "static bytes must follow the layer split: {:?}",
+            cm.static_bytes_per_dev
+        );
+        // Parameter bytes (overhead excluded) are conserved across the split.
+        let split_params: usize =
+            cm.static_bytes_per_dev.iter().map(|&b| b - RUNTIME_OVERHEAD_BYTES).sum();
+        let scalar_params = (cm.static_bytes - RUNTIME_OVERHEAD_BYTES) * topo.pp;
+        let diff = split_params.abs_diff(scalar_params);
+        assert!(diff < 1 << 20, "split {split_params} vs scalar {scalar_params}");
+
+        // Uniform pool, evenly divisible split: per-device == scalar.
+        let even = CostModel::analytic(&m, &Topology::new(8, 2, 1), &a800(), 4096, 1);
+        let uniform_counts: Vec<usize> =
+            even.stage_plan.chunks.iter().map(|c| c.lm_layers).collect();
+        if uniform_counts.iter().all(|&c| c == uniform_counts[0]) {
+            for &b in &even.static_bytes_per_dev {
+                assert!(b.abs_diff(even.static_bytes) < 1 << 20);
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! allocating. The golden suite (`tests/sim_equivalence.rs`) pins this
 //! core bit-identical to the oracle.
 
+use crate::elastic::{FaultEvent, FaultPlan};
 use crate::schedule::{CompiledSchedule, Op, PassKind, Schedule, ScheduleKind, NO_OP};
 
 use super::block::BlockTiming;
@@ -77,6 +78,10 @@ pub struct Simulator<'a> {
     explicit_p2p: Option<bool>,
     /// Collect per-op [`TraceEvent`]s (planning only needs the scalars).
     trace: bool,
+    /// Event-time fault injection (DESIGN.md §12). `None` (the default)
+    /// keeps the replay bit-identical to the fault-free core: no fault
+    /// code path touches a timing unless a fault is actually active.
+    faults: Option<FaultPlan>,
 }
 
 /// Earliest start implied by the forward pipeline edge of `(c, m)`.
@@ -165,7 +170,18 @@ fn timing_for(
 
 impl<'a> Simulator<'a> {
     pub fn new(cost: &'a CostModel) -> Self {
-        Simulator { cost, explicit_p2p: None, trace: true }
+        Simulator { cost, explicit_p2p: None, trace: true, faults: None }
+    }
+
+    /// Inject a deterministic fault plan into the replay. A dead device
+    /// executes nothing from its death time onward, so its surviving
+    /// consumers starve and the replay surfaces the loss through the
+    /// existing stuck-device [`SimError`] — that error *is* the
+    /// detection signal. Stragglers stretch op durations (event-time)
+    /// from their onset; an empty plan changes nothing, bit-for-bit.
+    pub fn with_faults(mut self, f: FaultPlan) -> Self {
+        self.faults = Some(f);
+        self
     }
 
     /// Override the explicit-P2P rule (default: STP-family schedules only).
@@ -276,6 +292,27 @@ impl<'a> Simulator<'a> {
             events.reserve_exact(n_ops);
         }
 
+        // Fold the fault plan into per-device views. Allocates only when
+        // faults are injected — the planner's hot no-fault loop stays
+        // arena-only. Event steps are irrelevant here (one-iteration
+        // replay); the wall-clock fields place each event in time.
+        let fault_view = self.faults.as_ref().map(|f| {
+            let mut dead_at = vec![f64::INFINITY; n_dev];
+            let mut slow: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_dev];
+            for ev in &f.events {
+                match *ev {
+                    FaultEvent::DeadRank { stage, at_secs, .. } if stage < n_dev => {
+                        dead_at[stage] = dead_at[stage].min(at_secs);
+                    }
+                    FaultEvent::Straggler { stage, slowdown, from_secs, .. } if stage < n_dev => {
+                        slow[stage].push((from_secs, slowdown));
+                    }
+                    _ => {}
+                }
+            }
+            (dead_at, slow)
+        });
+
         for (j, &d) in n_deps.iter().enumerate() {
             if d == 0 {
                 ready.push(j as u32);
@@ -312,6 +349,14 @@ impl<'a> Simulator<'a> {
 
             // --- duration & bookkeeping ---------------------------------
             let start = dev_time[d].max(ready_t);
+            if let Some((dead_at, _)) = &fault_view {
+                if start >= dead_at[d] {
+                    // Device lost before this op could start: it never
+                    // runs, its consumers are never released, and the
+                    // stuck-device scan below reports the casualty.
+                    continue;
+                }
+            }
             match op {
                 Op::Offload { chunk, mb, ratio } => {
                     // Runs on the PCIe stream in parallel with compute;
@@ -358,7 +403,26 @@ impl<'a> Simulator<'a> {
                         timing_braided_fw,
                         &op,
                     );
-                    let mut finish = start + timing.duration;
+                    // Active stragglers stretch this op (compound, like
+                    // the executor's `straggler_factor`). Scale only when
+                    // a fault is live so the `None` path stays bit-exact.
+                    let mut dur = timing.duration;
+                    let mut f_off = timing.f_done;
+                    let mut b_off = timing.b_done;
+                    if let Some((_, slow)) = &fault_view {
+                        let mut factor = 1.0f64;
+                        for &(from, s) in &slow[d] {
+                            if start >= from {
+                                factor *= s.max(1.0);
+                            }
+                        }
+                        if factor > 1.0 {
+                            dur *= factor;
+                            f_off *= factor;
+                            b_off *= factor;
+                        }
+                    }
+                    let mut finish = start + dur;
 
                     // Explicit (non-overlapped) pipeline sends: the
                     // producer's compute stream pays the hop right after
@@ -382,12 +446,12 @@ impl<'a> Simulator<'a> {
                     // sub-stream time — a braid does not serialize the
                     // pipeline chain behind its full duration.
                     if let Some((cc, m)) = op.forward_part() {
-                        done_f[cc * n_mb + m] = start + timing.f_done + hop;
+                        done_f[cc * n_mb + m] = start + f_off + hop;
                         mem[d] += self.cost.act_bytes[cc] as i64;
                         mem_peak[d] = mem_peak[d].max(mem[d]);
                     }
                     if let Some((cc, m)) = op.backward_part() {
-                        done_b[cc * n_mb + m] = start + timing.b_done + hop;
+                        done_b[cc * n_mb + m] = start + b_off + hop;
                         let act = self.cost.act_bytes[cc] as f64;
                         let kept = offloaded[cc * n_mb + m] as f64; // already subtracted
                         if op.weight_part() == Some((cc, m)) {
@@ -657,6 +721,60 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_faults() {
+        // Compiling the fault machinery in must not perturb a single
+        // timing: `with_faults(none)` and no faults at all agree to the
+        // bit on every schedule kind.
+        let (cost, topo) = setup(4, 4);
+        for kind in ScheduleKind::all() {
+            let s = build_schedule(kind, &topo, 12);
+            let plain = Simulator::new(&cost).run(&s);
+            let faulted = Simulator::new(&cost).with_faults(FaultPlan::none()).run(&s);
+            assert_eq!(
+                plain.iteration_secs.to_bits(),
+                faulted.iteration_secs.to_bits(),
+                "{kind:?}"
+            );
+            for (a, b) in plain.devices.iter().zip(&faulted.devices) {
+                assert_eq!(a.busy.to_bits(), b.busy.to_bits(), "{kind:?}");
+                assert_eq!(a.peak_activation_bytes, b.peak_activation_bytes, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_stretches_the_iteration() {
+        let (cost, topo) = setup(4, 4);
+        let s = build_schedule(ScheduleKind::Stp, &topo, 8);
+        let base = Simulator::new(&cost).run(&s).iteration_secs;
+        let mut faults = FaultPlan::none();
+        faults.events.push(FaultEvent::Straggler {
+            step: 0,
+            stage: 1,
+            slowdown: 1.5,
+            from_secs: 0.0,
+        });
+        let slow = Simulator::new(&cost).with_faults(faults).run(&s).iteration_secs;
+        // The pipeline serializes behind the slow stage, but the other
+        // stages' work is unchanged — strictly slower, less than 1.5×.
+        assert!(slow > base, "straggler {slow:.4}s !> baseline {base:.4}s");
+        assert!(slow < base * 1.5, "straggler {slow:.4}s !< 1.5x baseline {base:.4}s");
+    }
+
+    #[test]
+    fn dead_device_surfaces_as_a_stuck_replay() {
+        let (cost, topo) = setup(4, 4);
+        let s = build_schedule(ScheduleKind::Stp, &topo, 8);
+        let base = Simulator::new(&cost).run(&s).iteration_secs;
+        let mut faults = FaultPlan::none();
+        // Kill stage 1 halfway through the iteration: everything it had
+        // not started stays unexecuted and its peers starve.
+        faults.events.push(FaultEvent::DeadRank { step: 0, stage: 1, at_secs: base / 2.0 });
+        let err = Simulator::new(&cost).with_faults(faults).try_run(&s).unwrap_err();
+        assert!(err.ops_left > 0);
     }
 
     #[test]

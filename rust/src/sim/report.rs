@@ -22,6 +22,10 @@ pub struct DeviceReport {
     pub idle: f64,
     /// Peak live activation bytes.
     pub peak_activation_bytes: usize,
+    /// This device's static (weights + grads + optimizer) bytes under
+    /// the actual layer split — non-uniform weighted splits concentrate
+    /// parameter state on layer-heavy devices.
+    pub static_bytes: usize,
     /// PCIe stream occupancy (offload variant).
     pub pcie_busy: f64,
     /// This device's own memory capacity (its profile's `mem_gib`) —
@@ -91,6 +95,11 @@ pub(crate) fn finalize_report(
                 exposed_ar: t.exposed_ar[d],
                 idle: iteration - t.busy[d],
                 peak_activation_bytes: t.mem_peak[d].max(0) as usize,
+                static_bytes: cost
+                    .static_bytes_per_dev
+                    .get(d)
+                    .copied()
+                    .unwrap_or(cost.static_bytes),
                 pcie_busy: t.pcie_busy[d],
                 mem_capacity_bytes: (hw.mem_gib * (1u64 << 30) as f64) as usize,
                 hw_name: hw.name.clone(),
@@ -166,10 +175,12 @@ impl SimReport {
     }
 
     /// Peak total memory (static + activations) across devices, bytes.
+    /// Each device contributes its *own* static share — under a weighted
+    /// layer split the layer-heavy device carries more parameter state.
     pub fn peak_memory_bytes(&self) -> usize {
         self.devices
             .iter()
-            .map(|d| d.peak_activation_bytes + self.static_bytes)
+            .map(|d| d.peak_activation_bytes + d.static_bytes)
             .max()
             .unwrap_or(0)
     }
@@ -185,11 +196,12 @@ impl SimReport {
     }
 
     /// Would this run OOM? Each device is checked against its *own*
-    /// memory capacity (mixed pools have per-group `mem_gib`).
+    /// memory capacity (mixed pools have per-group `mem_gib`) and its
+    /// own static share (weighted splits have per-device parameters).
     pub fn is_oom(&self) -> bool {
         self.devices
             .iter()
-            .any(|d| d.peak_activation_bytes + self.static_bytes > d.mem_capacity_bytes)
+            .any(|d| d.peak_activation_bytes + d.static_bytes > d.mem_capacity_bytes)
     }
 }
 
@@ -209,6 +221,7 @@ mod tests {
                     exposed_ar: iter * 0.1,
                     idle: iter * 0.1,
                     peak_activation_bytes: 10 << 30,
+                    static_bytes: 30 << 30,
                     pcie_busy: 0.0,
                     mem_capacity_bytes: 80 << 30,
                     hw_name: "a800-sxm4-80g".into(),
@@ -219,6 +232,7 @@ mod tests {
                     exposed_ar: iter * 0.1,
                     idle: 0.0,
                     peak_activation_bytes: 20 << 30,
+                    static_bytes: 30 << 30,
                     pcie_busy: 0.0,
                     mem_capacity_bytes: 96 << 30,
                     hw_name: "h20-96g".into(),

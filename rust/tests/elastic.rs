@@ -1,0 +1,151 @@
+//! Elastic-training acceptance (DESIGN.md §12): checkpoint/restore is
+//! bit-exact, dead-rank faults trigger replanning onto a shrunk pool,
+//! and the fault machinery is invisible when no fault fires.
+
+use stp::cluster::{ClusterSpec, GroupOrder, HardwareProfile, NodeGroup};
+use stp::elastic::{run_elastic, Checkpoint, ElasticConfig, FaultPlan, ReplanContext};
+use stp::exec::{train, TrainConfig};
+use stp::model::ModelConfig;
+use stp::plan::{PlanArtifact, PlanModel, PlanQuery};
+use stp::schedule::{OffloadParams, ScheduleKind};
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("stp-elastic-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn loss_bits(steps: &[stp::exec::StepStat]) -> Vec<(usize, u32)> {
+    steps.iter().map(|s| (s.step, s.mean_loss.to_bits())).collect()
+}
+
+/// Checkpoint at step 2, restore, train 2 more: every per-step loss must
+/// be bit-identical to the uninterrupted 4-step run — for the paper's
+/// schedule and the baselines with different grids (ZB-V's vpp=2 V-shape,
+/// GPipe's single-chunk pipeline).
+#[test]
+fn restore_is_bit_identical_to_an_uninterrupted_run() {
+    for kind in [ScheduleKind::Stp, ScheduleKind::ZbV, ScheduleKind::GPipe] {
+        let mut base = TrainConfig::virtual_default();
+        base.schedule = kind;
+        base.steps = 4;
+        base.seed = 7;
+
+        let uninterrupted = train(&base).unwrap();
+        assert_eq!(uninterrupted.steps.len(), 4);
+
+        let dir = tmp_dir(kind.name());
+        let mut first = base.clone();
+        first.steps = 2;
+        first.checkpoint_dir = Some(dir.clone());
+        let seg1 = train(&first).unwrap();
+        let ckpt_path = seg1.checkpoint_path.clone().expect("segment must snapshot");
+        assert!(ckpt_path.ends_with("ckpt-step-2.json"));
+
+        let ck = Checkpoint::load(&dir.join("latest.json")).unwrap();
+        assert_eq!(ck.step, 2, "{}: snapshot taken at the wrong cut", kind.name());
+        let mut second = base.clone();
+        second.steps = 2;
+        second.resume = Some(ck);
+        let seg2 = train(&second).unwrap();
+
+        let mut stitched = loss_bits(&seg1.steps);
+        stitched.extend(loss_bits(&seg2.steps));
+        assert_eq!(
+            stitched,
+            loss_bits(&uninterrupted.steps),
+            "{}: restore diverged from the uninterrupted run",
+            kind.name()
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A bounded pool of 4 single-node groups x 2 GPUs, with the tiny model
+/// braided at tp2-pp4. Killing stage 1's device mid-run must shrink the
+/// pool to 3 groups, re-search onto pp3, migrate the snapshot and run to
+/// the original step target with a finite, decreasing loss trajectory.
+#[test]
+fn dead_rank_replans_onto_the_shrunk_pool_and_finishes() {
+    let mut hw = HardwareProfile::a800();
+    hw.gpus_per_node = 2;
+    let pool = ClusterSpec {
+        name: "bounded-4x2".into(),
+        groups: (0..4).map(|_| NodeGroup { nodes: 1, hw: hw.clone() }).collect(),
+        intergroup_gbps: 0.0,
+    };
+    let model = PlanModel::Llm(ModelConfig::tiny_100m());
+    let mut q = PlanQuery::new(model.clone(), pool.clone(), 8);
+    q.seq = 512;
+    q.n_mb_options = vec![8];
+    q.threads = 2;
+    let ctx = q.eval_context();
+    let c = stp::plan::Candidate {
+        id: 0,
+        tp: 2,
+        pp: 4,
+        dp: 1,
+        kind: ScheduleKind::Stp,
+        n_mb: 8,
+        order: GroupOrder::Declared,
+        offload: OffloadParams::default(),
+        offload_variant: 0,
+    };
+    let e = stp::plan::evaluate(&ctx, &c);
+    assert!(e.feasible, "tiny model at tp2-pp4 must fit");
+    let artifact = PlanArtifact::for_evaluation(&ctx, &e);
+
+    let dir = tmp_dir("replan");
+    let mut cfg = TrainConfig::virtual_default();
+    cfg.steps = 4;
+    cfg.seed = 11;
+    cfg.plan = Some(artifact.clone());
+    cfg.faults = Some(FaultPlan::dead_rank_at(2, 1));
+    cfg.checkpoint_dir = Some(dir.clone());
+    let replan = ReplanContext {
+        model,
+        cluster: pool,
+        seq: 512,
+        mb_size: 1,
+        mem_cap_gib: 0.0,
+        beam_width: 4,
+    };
+    let report = run_elastic(&ElasticConfig { train: cfg, replan: Some(replan) }).unwrap();
+
+    assert_eq!(report.segments.len(), 2, "one fault, two segments");
+    assert_eq!(report.replanned.len(), 1, "the loss must trigger exactly one replan");
+    let new_plan = &report.replanned[0];
+    assert_eq!(new_plan.tp, 2, "TP width is fixed across replans");
+    assert_eq!(new_plan.pp, 3, "6 surviving GPUs in 2-GPU groups force pp3");
+    assert_eq!(new_plan.n_mb, artifact.n_mb, "global batch is pinned");
+    assert_eq!(report.cluster.as_ref().unwrap().groups.len(), 3);
+
+    // Loss trajectory is continuous to the original target and trains.
+    let steps: Vec<usize> = report.steps.iter().map(|s| s.step).collect();
+    assert_eq!(steps, vec![0, 1, 2, 3], "steps must be contiguous across the replan");
+    assert!(report.steps.iter().all(|s| s.mean_loss.is_finite()));
+    assert!(
+        report.last_loss() < report.first_loss(),
+        "loss must keep decreasing across the migration: {} -> {}",
+        report.first_loss(),
+        report.last_loss()
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fault machinery compiled in but never firing must not perturb a
+/// single bit: an empty fault plan trains bit-equal to `faults: None`.
+#[test]
+fn empty_fault_plan_is_bit_equal_to_no_faults() {
+    let mut plain = TrainConfig::virtual_default();
+    plain.steps = 3;
+    plain.seed = 5;
+    let mut armed = plain.clone();
+    armed.faults = Some(FaultPlan::none());
+
+    let r1 = train(&plain).unwrap();
+    let r2 = train(&armed).unwrap();
+    assert_eq!(loss_bits(&r1.steps), loss_bits(&r2.steps));
+    assert!(r2.interrupted_at.is_none());
+    assert!(r2.checkpoint_path.is_none(), "no checkpoint dir, no snapshot");
+}

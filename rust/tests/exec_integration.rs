@@ -28,6 +28,9 @@ fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
         dims: None,
         virtual_scale: 1.0,
         plan: None,
+        faults: None,
+        checkpoint_dir: None,
+        resume: None,
     }
 }
 
