@@ -1,21 +1,28 @@
-//! Bench: naive vs cache-blocked GEMM microkernels in isolation, on the
-//! shapes the nine AOT units actually hit (DESIGN.md §11) — so kernel
-//! regressions are visible without running the whole executor.
+//! Bench: naive vs cache-blocked vs SIMD GEMM microkernels in isolation,
+//! on the shapes the nine AOT units actually hit (DESIGN.md §11, §13) —
+//! so kernel regressions are visible without running the whole executor.
 //!
 //! Shapes are taken from the python `test` preset
 //! (rows = mb·seq = 32, d = 64, per-rank ffn = 48, vocab = 256) and the
 //! `--virtual-scale auto` proxy on a big host (rows = 32, d = 128,
 //! ffn = 256, vocab = 256), for each of the three layouts: `A·B`
 //! (forwards/projections), `Aᵀ·B` (weight grads), `A·Bᵀ` (input grads).
-//! The two paths are bit-equal (asserted here per shape), so the
-//! comparison is purely speed.
+//! All three paths are bit-equal (asserted here per shape — the SIMD
+//! tile keeps one accumulator per output element in depth order), so the
+//! comparison is purely speed. The SIMD leg runs with a 4-wide worker
+//! pool; only the `big *` shapes clear the parallel-engagement floor.
+//!
+//! GFLOP/s per (shape, path) also land in `BENCH_kernel_perf.json` at
+//! the repo root (a CI perf-smoke artifact).
 //!
 //! `cargo bench --bench kernel_perf`
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
-use stp::exec::kernels::{gemm, reference};
-use stp::exec::{Rng, Workspace};
+use stp::config::Json;
+use stp::exec::kernels::{gemm, reference, KernelCtx};
+use stp::exec::Rng;
 
 fn randn(seed: u64, n: usize) -> Vec<f32> {
     Rng::for_purpose(7, seed, 3, 0).normal_vec(n, 1.0)
@@ -36,6 +43,15 @@ fn time(reps: usize, mut f: impl FnMut()) -> f64 {
         times.push(t0.elapsed().as_secs_f64());
     }
     median_secs(times)
+}
+
+fn run_gemm(cx: &mut KernelCtx, lay: &str, a: &[f32], b: &[f32], n: usize, k: usize, m: usize, out: &mut [f32]) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    match lay {
+        "ab" => gemm::matmul(cx, a, b, n, k, m, out),
+        "atb" => gemm::matmul_at(cx, a, b, k, n, m, out),
+        _ => gemm::matmul_bt(cx, a, b, n, k, m, out),
+    }
 }
 
 fn main() {
@@ -60,13 +76,25 @@ fn main() {
         ("big dw", "atb", 256, 256, 1024),
     ];
 
-    let mut ws = Workspace::new();
+    let mut blocked_cx = KernelCtx::serial(false);
+    let mut simd_cx = KernelCtx::with_workers(true, 4);
     // Checksum defeats dead-code elimination without `black_box` (which
     // would raise the crate's MSRV).
     let mut sink = 0.0f64;
+    let mut entries: Vec<Json> = Vec::new();
     println!(
-        "{:22} {:>4} {:>14} {:>11} {:>11} {:>9} {:>9} {:>8}",
-        "gemm", "lay", "n x k x m", "naive µs", "blocked µs", "naive GF", "blkd GF", "speedup"
+        "{:22} {:>4} {:>14} {:>11} {:>11} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "gemm",
+        "lay",
+        "n x k x m",
+        "naive µs",
+        "blocked µs",
+        "simd µs",
+        "naive GF",
+        "blkd GF",
+        "simd GF",
+        "blk spd",
+        "simd spd"
     );
     for &(label, lay, n, k, m) in cases {
         let reps = (1 << 22) / (n * k * m).max(1) + 3;
@@ -86,35 +114,34 @@ fn main() {
             sink += got[0] as f64;
         });
         let blocked_s = time(reps, || {
-            out.iter_mut().for_each(|v| *v = 0.0);
-            match lay {
-                "ab" => gemm::matmul(&mut ws, &a, &b, n, k, m, &mut out),
-                "atb" => gemm::matmul_at(&mut ws, &a, &b, k, n, m, &mut out),
-                _ => gemm::matmul_bt(&mut ws, &a, &b, n, k, m, &mut out),
-            }
+            run_gemm(&mut blocked_cx, lay, &a, &b, n, k, m, &mut out);
+            sink += out[0] as f64;
+        });
+        let simd_s = time(reps, || {
+            run_gemm(&mut simd_cx, lay, &a, &b, n, k, m, &mut out);
             sink += out[0] as f64;
         });
 
-        // Bit-parity sanity on the benched shape.
+        // Bit-parity sanity on the benched shape — both fast paths.
         let want = match lay {
             "ab" => reference::matmul(&a, &b, n, k, m),
             "atb" => reference::matmul_at(&a, &b, k, n, m),
             _ => reference::matmul_bt(&a, &b, n, k, m),
         };
-        out.iter_mut().for_each(|v| *v = 0.0);
-        match lay {
-            "ab" => gemm::matmul(&mut ws, &a, &b, n, k, m, &mut out),
-            "atb" => gemm::matmul_at(&mut ws, &a, &b, k, n, m, &mut out),
-            _ => gemm::matmul_bt(&mut ws, &a, &b, n, k, m, &mut out),
-        }
+        run_gemm(&mut blocked_cx, lay, &a, &b, n, k, m, &mut out);
         assert!(
             want.iter().zip(&out).all(|(x, y)| x.to_bits() == y.to_bits()),
             "{label}: blocked result diverged from naive"
         );
+        run_gemm(&mut simd_cx, lay, &a, &b, n, k, m, &mut out);
+        assert!(
+            want.iter().zip(&out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{label}: simd result diverged from naive"
+        );
 
         let flops = 2.0 * (n * k * m) as f64;
         println!(
-            "{:22} {:>4} {:>4}x{:>4}x{:>4} {:>11.1} {:>11.1} {:>9.2} {:>9.2} {:>7.2}x",
+            "{:22} {:>4} {:>4}x{:>4}x{:>4} {:>11.1} {:>11.1} {:>11.1} {:>9.2} {:>9.2} {:>9.2} {:>7.2}x {:>7.2}x",
             label,
             lay,
             n,
@@ -122,10 +149,38 @@ fn main() {
             m,
             naive_s * 1e6,
             blocked_s * 1e6,
+            simd_s * 1e6,
             flops / naive_s / 1e9,
             flops / blocked_s / 1e9,
-            naive_s / blocked_s
+            flops / simd_s / 1e9,
+            naive_s / blocked_s,
+            naive_s / simd_s
         );
+        let mut o = BTreeMap::new();
+        o.insert("label".to_string(), Json::Str(label.into()));
+        o.insert("layout".to_string(), Json::Str(lay.into()));
+        o.insert("n".to_string(), Json::Num(n as f64));
+        o.insert("k".to_string(), Json::Num(k as f64));
+        o.insert("m".to_string(), Json::Num(m as f64));
+        o.insert("naive_gflops".to_string(), Json::Num(flops / naive_s / 1e9));
+        o.insert("blocked_gflops".to_string(), Json::Num(flops / blocked_s / 1e9));
+        o.insert("simd_gflops".to_string(), Json::Num(flops / simd_s / 1e9));
+        o.insert("blocked_speedup".to_string(), Json::Num(naive_s / blocked_s));
+        o.insert("simd_speedup".to_string(), Json::Num(naive_s / simd_s));
+        entries.push(Json::Obj(o));
     }
     eprintln!("(checksum {sink:.3})");
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("kernel_perf".into()));
+    root.insert("simd_workers".to_string(), Json::Num(4.0));
+    root.insert("entries".to_string(), Json::Arr(entries));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|r| r.join("BENCH_kernel_perf.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_kernel_perf.json"));
+    match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => println!("could not write {}: {e}", path.display()),
+    }
 }

@@ -652,10 +652,13 @@ pub fn plan_mixed() -> String {
 /// training across schedule kinds on the python `test` preset's dims
 /// (`python/compile/config.py::TEST`), with the naive
 /// `kernels::reference` path as the baseline, and record tokens/sec +
-/// per-step seconds in `BENCH_train_virtual.json` at the repo root so
-/// later PRs can prove they don't regress the hot path. `quick` trims
-/// the schedule sweep (the CI perf-smoke mode).
-pub fn train_virtual(quick: bool) -> String {
+/// per-step seconds in `BENCH_train_virtual.json` at the **repo root**
+/// (resolved from the crate manifest, not the cwd) so later PRs can
+/// prove they don't regress the hot path. `quick` trims the schedule
+/// sweep (the CI perf-smoke mode); `filter` restricts the kernel paths
+/// measured (`--kernels simd` times reference + simd only — the
+/// reference baseline always runs so speedups stay comparable).
+pub fn train_virtual(quick: bool, filter: Option<crate::exec::KernelPath>) -> String {
     use std::collections::BTreeMap;
 
     use crate::config::json::Json;
@@ -673,6 +676,11 @@ pub fn train_virtual(quick: bool) -> String {
         &[ScheduleKind::Stp, ScheduleKind::ZbV]
     } else {
         &[ScheduleKind::Stp, ScheduleKind::ZbV, ScheduleKind::GPipe, ScheduleKind::StpMemEff]
+    };
+    let paths: Vec<KernelPath> = match filter {
+        None => vec![KernelPath::Reference, KernelPath::Blocked, KernelPath::Simd],
+        Some(KernelPath::Reference) => vec![KernelPath::Reference],
+        Some(k) => vec![KernelPath::Reference, k],
     };
 
     let run_one = |kind: ScheduleKind, path: KernelPath| {
@@ -693,7 +701,8 @@ pub fn train_virtual(quick: bool) -> String {
     for &kind in kinds {
         // The reference baseline runs once per kind (it is the slow leg).
         let mut baseline_tps = 0.0f64;
-        for path in [KernelPath::Reference, KernelPath::Blocked] {
+        let mut blocked_tps = 0.0f64;
+        for &path in &paths {
             let r = run_one(kind, path);
             // Steady-state: step 0 (spawn + arena warm-up) excluded.
             let tps = r.tokens_per_sec(n_mb, dims.mb, dims.seq);
@@ -702,9 +711,14 @@ pub fn train_virtual(quick: bool) -> String {
                     baseline_tps = tps;
                     1.0
                 }
-                KernelPath::Blocked => tps / baseline_tps.max(1e-12),
+                _ => {
+                    if path == KernelPath::Blocked {
+                        blocked_tps = tps;
+                    }
+                    tps / baseline_tps.max(1e-12)
+                }
             };
-            if kind == ScheduleKind::Stp && path == KernelPath::Blocked {
+            if kind == ScheduleKind::Stp && path != KernelPath::Reference {
                 speedup_stp = speedup;
             }
             let per_step: Vec<f64> = r.steps.iter().map(|s| s.secs).collect();
@@ -731,6 +745,14 @@ pub fn train_virtual(quick: bool) -> String {
                 Json::Num(r.workspace_steady_allocs as f64),
             );
             o.insert("speedup_vs_reference".to_string(), Json::Num(speedup));
+            if path == KernelPath::Simd && blocked_tps > 0.0 {
+                // The tentpole number: SIMD + workers + flash vs the PR-5
+                // blocked kernels, same schedule, same preset.
+                o.insert(
+                    "speedup_vs_blocked".to_string(),
+                    Json::Num(tps / blocked_tps.max(1e-12)),
+                );
+            }
             o.insert("first_loss".to_string(), Json::Num(r.first_loss() as f64));
             o.insert("last_loss".to_string(), Json::Num(r.last_loss() as f64));
             entries.push(Json::Obj(o));
@@ -748,14 +770,19 @@ pub fn train_virtual(quick: bool) -> String {
         Json::Num((n_mb * dims.mb * dims.seq) as f64),
     );
     root.insert("entries".to_string(), Json::Arr(entries));
-    let path = "BENCH_train_virtual.json";
-    let note = match std::fs::write(path, Json::Obj(root).to_string()) {
-        Ok(()) => format!("wrote {path}"),
-        Err(e) => format!("could not write {path}: {e}"),
+    // Anchor at the repo root (the crate lives in rust/) so CI and local
+    // runs agree on where the trajectory record lands, cwd-independent.
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|r| r.join("BENCH_train_virtual.json"))
+        .unwrap_or_else(|| std::path::PathBuf::from("BENCH_train_virtual.json"));
+    let note = match std::fs::write(&path, Json::Obj(root).to_string()) {
+        Ok(()) => format!("wrote {}", path.display()),
+        Err(e) => format!("could not write {}: {e}", path.display()),
     };
     format!(
-        "== train-virtual perf: blocked+arena kernels vs naive reference (test preset, \
-         tp2-pp2-vpp2, m{n_mb})\n{}\nstp blocked-vs-reference speedup: {speedup_stp:.2}x\n{note}",
+        "== train-virtual perf: arena kernel paths vs naive reference (test preset, \
+         tp2-pp2-vpp2, m{n_mb})\n{}\nstp fastest-vs-reference speedup: {speedup_stp:.2}x\n{note}",
         t.render()
     )
 }
@@ -783,6 +810,13 @@ pub fn all() -> String {
 
 /// Dispatch by experiment id.
 pub fn by_name(name: &str) -> Option<String> {
+    by_name_with(name, None)
+}
+
+/// Dispatch by experiment id, with an optional kernel-path filter for the
+/// training benches (`stp bench train --kernels simd`). Non-training
+/// benches ignore the filter.
+pub fn by_name_with(name: &str, kernels: Option<crate::exec::KernelPath>) -> Option<String> {
     Some(match name {
         "fig1" => fig1(),
         "table1" => table1(),
@@ -802,8 +836,8 @@ pub fn by_name(name: &str) -> Option<String> {
         "plan-perf" => plan_perf(false),
         "plan-quick" | "plan-perf-quick" => plan_perf(true),
         "plan-mixed" | "plan-hetero" => plan_mixed(),
-        "train" | "train-perf" => train_virtual(false),
-        "train-quick" => train_virtual(true),
+        "train" | "train-perf" => train_virtual(false, kernels),
+        "train-quick" => train_virtual(true, kernels),
         "all" => all(),
         _ => return None,
     })

@@ -22,6 +22,7 @@ USAGE:
   stp bench    <fig1|table1|fig7|fig8|fig9|table3|fig10|table4|table567|
                 table8|fig13|table9|table10|table11|plan|plan-mixed|
                 plan-perf|plan-quick|train|train-quick|all>
+               [--kernels blocked|simd|reference]
   stp trace    [--schedule KIND] [--pp N] [--tp N] [--mb N] [--width N]
                [--chrome FILE] [--all-schedules] [--cluster mixed|FILE.json]
   stp validate [--schedule KIND] [--pp N] [--mb N]
@@ -31,7 +32,8 @@ USAGE:
                [--search exhaustive|beam] [--beam-width N]
                [--emit-plan FILE.json] [--verbose]
   stp train    [--plan FILE.json] [--backend virtual|pjrt]
-               [--kernels blocked|reference] [--virtual-scale auto|F]
+               [--kernels blocked|simd|reference] [--workers N]
+               [--virtual-scale auto|F]
                [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
                [--lr F] [--seed N] [--quiet]
                [--faults FILE.json] [--checkpoint-dir DIR]
@@ -46,6 +48,9 @@ Training:  the virtual backend (default) runs everywhere on miniature
            a `stp plan --emit-plan` artifact (schedule, topology, layer
            split) through the executor. --kernels reference selects the
            naive oracle kernels (bit-equal, slow — the bench baseline);
+           --kernels simd adds register-tiled SIMD GEMMs, a worker pool
+           (--workers N threads per device thread, 0 = auto) and flash
+           attention (deterministic at any width, ≤1e-5 vs the oracle);
            --virtual-scale widens the proxy model by an integer width
            factor (fractional values round to the nearest factor;
            auto = match the host's core count).
@@ -224,7 +229,13 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
         }
         "bench" => {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
-            match crate::bench::by_name(which) {
+            let kfilter = match flags.get("kernels") {
+                Some(k) => Some(
+                    k.parse::<crate::exec::KernelPath>().map_err(|e| anyhow::anyhow!("{e}"))?,
+                ),
+                None => None,
+            };
+            match crate::bench::by_name_with(which, kfilter) {
                 Some(out) => {
                     println!("{out}");
                     Ok(0)
@@ -412,6 +423,7 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         faults,
         checkpoint_dir,
         resume,
+        workers: flag(flags, "workers", 0usize),
     };
     let what = match &cfg.plan {
         Some(p) => format!("plan {}", p.label()),

@@ -9,14 +9,20 @@
 //! `run` **borrows** its inputs (`&[&Tensor]`): the engine hands weight
 //! and activation tensors straight from its parameter tables and
 //! activation store, so the per-op clones the pre-arena executor paid
-//! (a full weight copy per layer per microbatch per step) are gone.
+//! (a full weight copy per layer per microbatch per step) are gone. The
+//! return leg is closed by [`Backend::recycle`]: when the engine is done
+//! with an output tensor (consumed activation, accumulated gradient), it
+//! hands the storage back so the arena can serve the next op from the
+//! pool — zero steady-state allocations in *both* directions.
 //!
 //! * [`VirtualBackend`] — always compiled: deterministic host tensors
-//!   through the kernels in [`super::kernels`], either the cache-blocked
-//!   workspace-backed hot path ([`KernelPath::Blocked`], default) or the
-//!   preserved naive oracle ([`KernelPath::Reference`]). The two paths
-//!   are bit-equal (DESIGN.md §11), so the switch is a perf baseline,
-//!   not a numerics choice.
+//!   through the kernels in [`super::kernels`]. Three paths: the
+//!   cache-blocked workspace-backed hot path ([`KernelPath::Blocked`],
+//!   default), the SIMD-tiled multithreaded flash-attention path
+//!   ([`KernelPath::Simd`]), and the preserved naive oracle
+//!   ([`KernelPath::Reference`]). Blocked is bit-equal to Reference
+//!   (DESIGN.md §11); Simd is bit-equal on every GEMM and ≤1e-5 on the
+//!   flash-reassociated attention path (DESIGN.md §13).
 //! * `PjrtBackend` (feature `pjrt`) — a thin adapter over
 //!   [`crate::runtime::Runtime`]: AOT HLO artifacts executed through
 //!   PJRT, exactly the pre-refactor path.
@@ -28,7 +34,7 @@ use crate::runtime::Tensor;
 use crate::Result;
 
 use super::kernels;
-use super::workspace::{Workspace, WorkspaceStats};
+use super::workspace::WorkspaceStats;
 
 /// Which execution backend a training run uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,14 +66,19 @@ impl FromStr for BackendKind {
     }
 }
 
-/// Which kernel implementation the virtual backend computes with. Both
-/// paths produce bit-identical tensors; `Reference` exists as the
-/// parity oracle and the bench baseline (`stp bench train`).
+/// Which kernel implementation the virtual backend computes with.
+/// `Blocked` and `Reference` produce bit-identical tensors; `Simd` keeps
+/// bit equality on every GEMM and holds the flash-tiled attention core
+/// to a documented ≤1e-5 tolerance (DESIGN.md §13). `Reference` exists
+/// as the parity oracle and the bench baseline (`stp bench train`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum KernelPath {
-    /// Cache-blocked GEMM microkernels over the per-thread workspace
-    /// arena — the hot path.
+    /// Cache-blocked scalar GEMM microkernels over the per-thread
+    /// workspace arena.
     Blocked,
+    /// SIMD register tiles, the GEMM worker pool, and flash-tiled
+    /// attention — the fastest path.
+    Simd,
     /// The preserved naive kernels (`kernels::reference`): fresh
     /// allocations per op, triple-loop GEMMs.
     Reference,
@@ -77,6 +88,7 @@ impl KernelPath {
     pub fn name(&self) -> &'static str {
         match self {
             KernelPath::Blocked => "blocked",
+            KernelPath::Simd => "simd",
             KernelPath::Reference => "reference",
         }
     }
@@ -86,9 +98,12 @@ impl FromStr for KernelPath {
     type Err = String;
     fn from_str(s: &str) -> std::result::Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
-            "blocked" | "fast" | "arena" => Ok(KernelPath::Blocked),
+            "blocked" | "arena" => Ok(KernelPath::Blocked),
+            "simd" | "vector" | "fast" => Ok(KernelPath::Simd),
             "reference" | "naive" | "ref" => Ok(KernelPath::Reference),
-            other => Err(format!("unknown kernel path '{other}' (expected blocked|reference)")),
+            other => {
+                Err(format!("unknown kernel path '{other}' (expected blocked|simd|reference)"))
+            }
         }
     }
 }
@@ -99,6 +114,13 @@ impl FromStr for KernelPath {
 pub trait Backend {
     /// Execute unit `name` (an AOT artifact name) on borrowed `args`.
     fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>>;
+    /// Return a tensor this backend produced (via [`Backend::run`]) whose
+    /// life is over, letting the backend reclaim the storage. Optional:
+    /// the default drops the tensor, which is always correct — recycling
+    /// is purely an allocation-count optimization.
+    fn recycle(&mut self, t: Tensor) {
+        let _ = t;
+    }
     /// Cumulative unit executions (metrics).
     fn executions(&self) -> u64;
     /// Stable backend label for reports.
@@ -112,10 +134,12 @@ pub trait Backend {
 }
 
 /// The deterministic no-PJRT backend: host kernels shaped by the run's
-/// [`ManifestDims`], with a per-thread [`Workspace`] scratch arena.
+/// [`ManifestDims`], with a per-thread [`kernels::KernelCtx`] carrying
+/// the scratch arena, the tile selection, and (for [`KernelPath::Simd`])
+/// the GEMM worker-pool arenas.
 pub struct VirtualBackend {
     dims: ManifestDims,
-    ws: Workspace,
+    cx: kernels::KernelCtx,
     path: KernelPath,
     executions: u64,
 }
@@ -126,7 +150,17 @@ impl VirtualBackend {
     }
 
     pub fn with_path(dims: ManifestDims, path: KernelPath) -> VirtualBackend {
-        VirtualBackend { dims, ws: Workspace::new(), path, executions: 0 }
+        VirtualBackend::with_opts(dims, path, 1)
+    }
+
+    /// Full constructor: `workers` sizes the GEMM worker pool (only the
+    /// `Simd` path uses it; `< 2` means all GEMMs stay on this thread).
+    pub fn with_opts(dims: ManifestDims, path: KernelPath, workers: usize) -> VirtualBackend {
+        let cx = match path {
+            KernelPath::Simd => kernels::KernelCtx::with_workers(true, workers),
+            KernelPath::Blocked | KernelPath::Reference => kernels::KernelCtx::serial(false),
+        };
+        VirtualBackend { dims, cx, path, executions: 0 }
     }
 
     pub fn kernel_path(&self) -> KernelPath {
@@ -137,18 +171,18 @@ impl VirtualBackend {
 impl Backend for VirtualBackend {
     fn run(&mut self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
         let out = match self.path {
-            KernelPath::Blocked => {
-                let ws = &mut self.ws;
+            KernelPath::Blocked | KernelPath::Simd => {
+                let cx = &mut self.cx;
                 match name {
-                    "attn_fwd" => kernels::attn_fwd(args, &self.dims, ws),
-                    "attn_bwd_x" => kernels::attn_bwd_x(args, &self.dims, ws),
-                    "attn_bwd_w" => kernels::attn_bwd_w(args, &self.dims, ws),
-                    "mlp_fwd" => kernels::mlp_fwd(args, &self.dims, ws),
-                    "mlp_bwd_x" => kernels::mlp_bwd_x(args, &self.dims, ws),
-                    "mlp_bwd_w" => kernels::mlp_bwd_w(args, &self.dims, ws),
-                    "embed_fwd" => kernels::embed_fwd(args),
-                    "embed_bwd" => kernels::embed_bwd(args, &self.dims),
-                    "head_loss_grad" => kernels::head_loss_grad(args, ws),
+                    "attn_fwd" => kernels::attn_fwd(args, &self.dims, cx),
+                    "attn_bwd_x" => kernels::attn_bwd_x(args, &self.dims, cx),
+                    "attn_bwd_w" => kernels::attn_bwd_w(args, &self.dims, cx),
+                    "mlp_fwd" => kernels::mlp_fwd(args, &self.dims, cx),
+                    "mlp_bwd_x" => kernels::mlp_bwd_x(args, &self.dims, cx),
+                    "mlp_bwd_w" => kernels::mlp_bwd_w(args, &self.dims, cx),
+                    "embed_fwd" => kernels::embed_fwd(args, cx),
+                    "embed_bwd" => kernels::embed_bwd(args, &self.dims, cx),
+                    "head_loss_grad" => kernels::head_loss_grad(args, cx),
                     other => anyhow::bail!("virtual backend: unknown unit '{other}'"),
                 }
             }
@@ -169,6 +203,19 @@ impl Backend for VirtualBackend {
         Ok(out)
     }
 
+    fn recycle(&mut self, t: Tensor) {
+        // Reference outputs are plain allocations sized to their tensor,
+        // not to a pool class — feeding them in would skew the pools and
+        // the path is not perf-relevant anyway. I32 tensors (tokens,
+        // targets) never come from the f32 arena.
+        if self.path == KernelPath::Reference {
+            return;
+        }
+        if let Tensor::F32 { data, .. } = t {
+            self.cx.ws.give(data);
+        }
+    }
+
     fn executions(&self) -> u64 {
         self.executions
     }
@@ -178,7 +225,7 @@ impl Backend for VirtualBackend {
     }
 
     fn workspace_stats(&self) -> Option<WorkspaceStats> {
-        Some(self.ws.stats())
+        Some(self.cx.stats())
     }
 }
 
@@ -225,15 +272,19 @@ impl Backend for PjrtBackend {
     }
 }
 
-/// Construct the configured backend for one device thread.
+/// Construct the configured backend for one device thread. `workers`
+/// sizes the virtual backend's GEMM worker pool (ignored elsewhere).
 pub(crate) fn make_backend(
     kind: BackendKind,
     manifest: Option<&crate::config::Manifest>,
     dims: &ManifestDims,
     path: KernelPath,
+    workers: usize,
 ) -> Result<Box<dyn Backend>> {
     match kind {
-        BackendKind::Virtual => Ok(Box::new(VirtualBackend::with_path(dims.clone(), path))),
+        BackendKind::Virtual => {
+            Ok(Box::new(VirtualBackend::with_opts(dims.clone(), path, workers)))
+        }
         #[cfg(feature = "pjrt")]
         BackendKind::Pjrt => {
             let m = manifest
@@ -312,15 +363,18 @@ mod tests {
     fn kernel_path_parses() {
         assert_eq!("blocked".parse::<KernelPath>().unwrap(), KernelPath::Blocked);
         assert_eq!("naive".parse::<KernelPath>().unwrap(), KernelPath::Reference);
-        assert!("simd".parse::<KernelPath>().is_err());
+        assert_eq!("simd".parse::<KernelPath>().unwrap(), KernelPath::Simd);
+        assert_eq!("vector".parse::<KernelPath>().unwrap(), KernelPath::Simd);
+        assert!("avx9".parse::<KernelPath>().is_err());
         assert_eq!(KernelPath::Blocked.name(), "blocked");
+        assert_eq!(KernelPath::Simd.name(), "simd");
     }
 
     #[test]
     fn virtual_backend_serves_every_unit_name() {
-        for path in [KernelPath::Blocked, KernelPath::Reference] {
+        for path in [KernelPath::Blocked, KernelPath::Simd, KernelPath::Reference] {
             let dims = virtual_dims(1, 1, 1, 1);
-            let mut b = VirtualBackend::with_path(dims.clone(), path);
+            let mut b = VirtualBackend::with_opts(dims.clone(), path, 2);
             // Shapes per the AOT signatures at these dims.
             let d = dims.d;
             let x = Tensor::f32(vec![0.1; dims.mb * dims.seq * d], &[dims.mb, dims.seq, d]);
@@ -354,10 +408,46 @@ mod tests {
             assert_eq!(b.executions(), 9, "{path:?}");
             let stats = b.workspace_stats().unwrap();
             match path {
-                KernelPath::Blocked => assert!(stats.takes > 0, "blocked path must use the arena"),
+                KernelPath::Blocked | KernelPath::Simd => {
+                    assert!(stats.takes > 0, "{path:?} path must use the arena")
+                }
                 KernelPath::Reference => assert_eq!(stats.takes, 0),
             }
         }
+    }
+
+    #[test]
+    fn recycled_outputs_feed_the_next_run() {
+        // The recycle seam's contract: running a unit, recycling its
+        // outputs, and running again serves the second run's outputs
+        // from the pool (no fresh allocations).
+        let dims = virtual_dims(1, 1, 1, 1);
+        let mut b = VirtualBackend::with_path(dims.clone(), KernelPath::Simd);
+        let d = dims.d;
+        let x = Tensor::f32(vec![0.1; dims.mb * dims.seq * d], &[dims.mb, dims.seq, d]);
+        let wh = Tensor::f32(vec![0.1; d * dims.vocab], &[d, dims.vocab]);
+        let tgt = Tensor::i32(vec![3; dims.mb * dims.seq], &[dims.mb, dims.seq]);
+        let mut go = |b: &mut VirtualBackend| {
+            let outs = b.run("head_loss_grad", &[&x, &wh, &tgt]).unwrap();
+            for t in outs {
+                b.recycle(t);
+            }
+        };
+        go(&mut b);
+        let warm = b.workspace_stats().unwrap().fresh_allocs;
+        assert!(warm > 0);
+        for _ in 0..3 {
+            go(&mut b);
+        }
+        assert_eq!(b.workspace_stats().unwrap().fresh_allocs, warm, "recycle must close the loop");
+
+        // Reference path: recycle is a deliberate no-op (plain Vecs).
+        let mut r = VirtualBackend::with_path(dims, KernelPath::Reference);
+        let outs = r.run("head_loss_grad", &[&x, &wh, &tgt]).unwrap();
+        for t in outs {
+            r.recycle(t);
+        }
+        assert_eq!(r.workspace_stats().unwrap().takes, 0);
     }
 
     #[test]

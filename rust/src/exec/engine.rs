@@ -79,6 +79,10 @@ pub struct TrainConfig {
     pub checkpoint_dir: Option<PathBuf>,
     /// Resume from this snapshot instead of initializing at step 0.
     pub resume: Option<Checkpoint>,
+    /// GEMM worker-pool threads per device thread (virtual backend,
+    /// `--kernels simd` only). `0` auto-sizes from the host's cores
+    /// divided by the thread grid, clamped to [1, 8].
+    pub workers: usize,
 }
 
 impl TrainConfig {
@@ -101,6 +105,7 @@ impl TrainConfig {
             faults: None,
             checkpoint_dir: None,
             resume: None,
+            workers: 0,
         }
     }
 }
@@ -182,6 +187,8 @@ struct RunParams {
     seed: u64,
     /// Send parameter shards + RNG positions back for a checkpoint.
     snapshot: bool,
+    /// Resolved GEMM worker-pool width per device thread.
+    workers: usize,
 }
 
 /// What a device thread hands back when its walk completes.
@@ -315,6 +322,16 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     let halt = cfg.faults.as_ref().and_then(|f| f.first_death_in(start_step, end_step));
     let run_end = halt.map(|(s, _)| s).unwrap_or(end_step);
 
+    // Worker-pool width per device thread: explicit, or the host's cores
+    // spread over the (pp × tp) thread grid so the pools never oversubscribe
+    // the machine.
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        (cores / (topo.pp * topo.tp).max(1)).clamp(1, 8)
+    };
+
     let run = RunParams {
         backend: cfg.backend,
         kernels: cfg.kernels,
@@ -324,6 +341,7 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         lr: cfg.lr,
         seed: cfg.seed,
         snapshot: cfg.checkpoint_dir.is_some(),
+        workers,
     };
     let faults = cfg.faults.clone().map(Arc::new);
     let resume = cfg.resume.clone().map(Arc::new);
@@ -615,6 +633,9 @@ fn attn_weight_grad(
     ChunkParams::accumulate(&mut g.wk, &out[2]);
     ChunkParams::accumulate(&mut g.wv, &out[3]);
     ChunkParams::accumulate(&mut g.wo, &out[4]);
+    for t in out {
+        backend.recycle(t);
+    }
     Ok(())
 }
 
@@ -634,6 +655,9 @@ fn mlp_weight_grad(
     ChunkParams::accumulate(&mut g.wg, &out[1]);
     ChunkParams::accumulate(&mut g.wu, &out[2]);
     ChunkParams::accumulate(&mut g.wd, &out[3]);
+    for t in out {
+        backend.recycle(t);
+    }
     Ok(())
 }
 
@@ -646,8 +670,13 @@ impl DeviceThread {
         bwd_rx: HashMap<usize, Receiver<Tensor>>,
         loss_tx: std::sync::mpsc::Sender<(usize, f32)>,
     ) -> Result<DeviceThread> {
-        let backend =
-            make_backend(ctx.run.backend, ctx.manifest.as_ref(), &ctx.dims, ctx.run.kernels)?;
+        let backend = make_backend(
+            ctx.run.backend,
+            ctx.manifest.as_ref(),
+            &ctx.dims,
+            ctx.run.kernels,
+            ctx.run.workers,
+        )?;
         let mut params = HashMap::new();
         for c in 0..ctx.compiled.n_chunks {
             if ctx.compiled.chunk_dev[c] as usize == ctx.stage {
@@ -846,11 +875,17 @@ impl DeviceThread {
             let tgt = Tensor::i32(targets, &[mb_rows, seq]);
             let wh = self.params[&chunk].head.as_ref().unwrap();
             let mut out = self.backend.run("head_loss_grad", &[&x, wh, &tgt])?;
+            // `x` (the chunk-out activation) dies here — back to the pool.
+            self.backend.recycle(x);
             let loss = out[0].scalar_f32()?;
-            let dx = out.remove(1);
-            let dwh = out.remove(1);
+            let dwh = out.pop().unwrap();
+            let dx = out.pop().unwrap();
+            for t in out {
+                self.backend.recycle(t);
+            }
             let pc = self.params.get_mut(&chunk).unwrap();
             ChunkParams::accumulate(pc.head_grad.as_mut().unwrap(), &dwh);
+            self.backend.recycle(dwh);
             if self.ctx.rank == 0 {
                 self.loss_tx.send((self.step, loss)).ok();
             }
@@ -874,7 +909,9 @@ impl DeviceThread {
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut dmid)?;
             if with_w {
                 mlp_weight_grad(&mut *self.backend, &mut self.params, chunk, l, y, &dy)?;
-                self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
+                let y = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
+                self.backend.recycle(y);
+                self.backend.recycle(dy);
             } else {
                 // `dy`'s last use on this path: move it into the stash.
                 self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad }, dy);
@@ -890,7 +927,9 @@ impl DeviceThread {
             self.ctx.tp.all_reduce_tensor(self.ctx.rank, &mut dx)?;
             if with_w {
                 attn_weight_grad(&mut *self.backend, &mut self.params, chunk, l, x, &dmid)?;
-                self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
+                let x = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
+                self.backend.recycle(x);
+                self.backend.recycle(dmid);
             } else {
                 self.store.put(ActKey { chunk, mb, layer: l, tag: ActTag::AttnGrad }, dmid);
             }
@@ -902,8 +941,10 @@ impl DeviceThread {
                 .store
                 .take(&ActKey { chunk, mb, layer: usize::MAX, tag: ActTag::ChunkOut })?;
             let demb = self.backend.run("embed_bwd", &[&tok, &dy])?.remove(0);
+            self.backend.recycle(dy);
             let pc = self.params.get_mut(&chunk).unwrap();
             ChunkParams::accumulate(pc.emb_grad.as_mut().unwrap(), &demb);
+            self.backend.recycle(demb);
         } else {
             self.bwd_tx
                 .get(&chunk)
@@ -920,9 +961,13 @@ impl DeviceThread {
             let y = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             let dz = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad })?;
             mlp_weight_grad(&mut *self.backend, &mut self.params, chunk, l, &y, &dz)?;
+            self.backend.recycle(y);
+            self.backend.recycle(dz);
             let x = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnIn })?;
             let dmid = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::AttnGrad })?;
             attn_weight_grad(&mut *self.backend, &mut self.params, chunk, l, &x, &dmid)?;
+            self.backend.recycle(x);
+            self.backend.recycle(dmid);
         }
         Ok(())
     }

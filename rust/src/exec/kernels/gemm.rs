@@ -3,32 +3,56 @@
 //!
 //! Classic three-level blocking (BLIS-style): B is packed into `KC×NC`
 //! panels and A into `MC×KC` panels (contiguous micro-panel access, one
-//! pass over each operand per block), and an `MR×NR` register tile
-//! accumulates the innermost product with the depth loop innermost. The
-//! three layouts the nine AOT units need — `A·B`, `Aᵀ·B` (weight grads)
-//! and `A·Bᵀ` (input grads) — share one core; transposition happens in
-//! the packing step, so the microkernel always streams contiguous panels.
+//! pass over each operand per block), and a register tile accumulates the
+//! innermost product with the depth loop innermost. The three layouts the
+//! nine AOT units need — `A·B`, `Aᵀ·B` (weight grads) and `A·Bᵀ` (input
+//! grads) — share one core; transposition happens in the packing step, so
+//! the microkernel always streams contiguous panels.
 //!
-//! **Determinism argument** (DESIGN.md §11): every output element keeps a
-//! *single* accumulator whose terms are added in strictly increasing
-//! depth order — the register tile loads the current `C` values, adds the
-//! block's `kc` terms in order, and stores back, so splitting the depth
-//! loop into `KC` blocks never re-associates the sum (an f32
+//! Two register tiles exist behind [`KernelCtx::simd`] (DESIGN.md §13):
+//!
+//! * the scalar `MR×NR` = 4×16 tile ([`micro_full`]) — the PR-5 blocked
+//!   path;
+//! * a portable-SIMD `MR_S×NR` = 6×16 tile ([`micro_full_simd`]) whose
+//!   accumulators are fixed-size `[f32; 8]` lane arrays. `std::simd` is
+//!   nightly-only at the crate's MSRV, but LLVM reliably vectorizes these
+//!   fixed-trip lane loops into packed AVX2/NEON mul+add — the classic
+//!   6×16 BLIS geometry that keeps 12 vector registers of C live.
+//!
+//! **Determinism argument** (DESIGN.md §11, §13): every output element
+//! keeps a *single* accumulator whose terms are added in strictly
+//! increasing depth order — each tile loads the current `C` values, adds
+//! the block's `kc` terms in order, and stores back, so splitting the
+//! depth loop into `KC` blocks never re-associates the sum (an f32
 //! store/reload is exact), and no `mul_add` is emitted (Rust does not
-//! contract `a*b + c`). The result is therefore **bit-equal** to the
-//! naive triple loops in [`super::reference`], which accumulate in the
-//! same order — `tests/kernel_parity.rs` pins that, and it is what keeps
-//! `stp train` bit-deterministic per seed with either kernel path.
+//! contract `a*b + c`). The tile *geometry* (4×16 vs 6×16, or the row
+//! banding the worker pool introduces) only partitions the `(i, j)` output
+//! space — it never touches any element's depth chain. The result is
+//! therefore **bit-equal** to the naive triple loops in
+//! [`super::reference`] on *every* path — scalar, SIMD, and any worker
+//! count — which `tests/kernel_parity.rs` pins, and which is what keeps
+//! `stp train` bit-deterministic per seed with any kernel selection.
 //!
-//! Packing buffers come from the caller's [`Workspace`], so steady-state
-//! calls allocate nothing.
+//! **Worker pool**: products big enough to amortize thread handoff
+//! (≥ [`PAR_FLOPS`], more rows than one `MC` band) are split into `MC`-row
+//! bands with a *fixed* band→worker assignment (`band i → worker i mod
+//! nw`), each worker packing its own panels from its own [`Workspace`]
+//! arena — parallel panel packing with no shared mutable state beyond the
+//! disjoint `C` bands. Packing buffers come from the caller's arenas, so
+//! steady-state calls allocate nothing on any path.
 
 use crate::exec::workspace::Workspace;
 
-/// Register-tile rows.
+use super::KernelCtx;
+
+/// Scalar register-tile rows.
 const MR: usize = 4;
-/// Register-tile columns (16 f32 = one cache line / two AVX vectors).
+/// SIMD register-tile rows (6×16 f32 = 12 AVX2 accumulator registers).
+const MR_S: usize = 6;
+/// Register-tile columns (16 f32 = one cache line / two 8-lane vectors).
 const NR: usize = 16;
+/// Lanes per SIMD accumulator row half.
+const LANES: usize = 8;
 /// A-panel rows per block.
 const MC: usize = 64;
 /// Depth (k) per block — A panel is MC·KC·4 = 64 KiB, inside L2.
@@ -40,12 +64,18 @@ const NC: usize = 512;
 /// the naive loops (bit-equal, so dispatch is invisible to numerics).
 const SMALL_FLOPS: usize = 1 << 14;
 
+/// Below this flop volume (or at ≤ one `MC` band) the worker-pool handoff
+/// costs more than it saves; run the band loop on the calling thread.
+/// The `test`-preset unit GEMMs all sit under this, so miniature runs
+/// never pay a spawn.
+const PAR_FLOPS: usize = 1 << 20;
+
 /// `C += A·B` with `A: [n,k]`, `B: [k,m]`, `C: [n,m]`.
 ///
 /// Accumulates into `out` (pass a zeroed buffer for a plain product).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul(
-    ws: &mut Workspace,
+    cx: &mut KernelCtx,
     a: &[f32],
     b: &[f32],
     n: usize,
@@ -59,13 +89,13 @@ pub fn matmul(
     if n * k * m <= SMALL_FLOPS {
         return naive(a, b, n, k, m, out);
     }
-    gemm_core(ws, n, k, m, out, a, k, false, b, m, false);
+    gemm_dispatch(cx, n, k, m, out, a, k, false, b, m, false);
 }
 
 /// `C += Aᵀ·B` with `A: [k,n]`, `B: [k,m]`, `C: [n,m]` (weight grads).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_at(
-    ws: &mut Workspace,
+    cx: &mut KernelCtx,
     a: &[f32],
     b: &[f32],
     k: usize,
@@ -79,13 +109,13 @@ pub fn matmul_at(
     if n * k * m <= SMALL_FLOPS {
         return naive_at(a, b, k, n, m, out);
     }
-    gemm_core(ws, n, k, m, out, a, n, true, b, m, false);
+    gemm_dispatch(cx, n, k, m, out, a, n, true, b, m, false);
 }
 
 /// `C += A·Bᵀ` with `A: [n,k]`, `B: [m,k]`, `C: [n,m]` (input grads).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_bt(
-    ws: &mut Workspace,
+    cx: &mut KernelCtx,
     a: &[f32],
     b: &[f32],
     n: usize,
@@ -99,16 +129,64 @@ pub fn matmul_bt(
     if n * k * m <= SMALL_FLOPS {
         return naive_bt(a, b, n, k, m, out);
     }
-    gemm_core(ws, n, k, m, out, a, k, false, b, k, true);
+    gemm_dispatch(cx, n, k, m, out, a, k, false, b, k, true);
 }
 
-/// The shared blocked core. `ta`/`tb` say whether the operand is stored
-/// transposed (`a` as `[k,n]` with leading dimension `lda = n`; `b` as
-/// `[m,k]` with `ldb = k`); packing normalizes both into row-major
-/// panels, so the micro loops never see a stride.
+/// Serial-vs-parallel dispatch. Small products (or contexts without a
+/// worker pool) run the band loop inline over the main arena; big ones
+/// split `C` into `MC`-row bands across the pool. Band→worker assignment
+/// is a pure function of the band index, so the partitioning — and with
+/// it every output bit — is identical at any worker count.
 #[allow(clippy::too_many_arguments)]
-fn gemm_core(
+fn gemm_dispatch(
+    cx: &mut KernelCtx,
+    n: usize,
+    k: usize,
+    m: usize,
+    out: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    ta: bool,
+    b: &[f32],
+    ldb: usize,
+    tb: bool,
+) {
+    let nw = cx.worker_ws.len();
+    if nw < 2 || n <= MC || n * k * m < PAR_FLOPS {
+        return gemm_band(&mut cx.ws, cx.simd, 0, n, k, m, out, a, lda, ta, b, ldb, tb);
+    }
+    let simd = cx.simd;
+    // Fixed tile→worker assignment: band i (rows [i·MC, (i+1)·MC)) goes
+    // to worker i mod nw. Each worker owns disjoint `C` bands and its own
+    // arena; A/B are shared read-only, and every worker packs its own
+    // panels (redundant B packing buys zero synchronization).
+    let mut per_worker: Vec<Vec<(usize, &mut [f32])>> = (0..nw).map(|_| Vec::new()).collect();
+    for (i, band) in out.chunks_mut(MC * m).enumerate() {
+        per_worker[i % nw].push((i, band));
+    }
+    std::thread::scope(|scope| {
+        for (ws, bands) in cx.worker_ws.iter_mut().zip(per_worker) {
+            scope.spawn(move || {
+                for (i, band) in bands {
+                    let nrows = band.len() / m;
+                    gemm_band(ws, simd, i * MC, nrows, k, m, band, a, lda, ta, b, ldb, tb);
+                }
+            });
+        }
+    });
+}
+
+/// The shared blocked core over one row band: computes `C[row0..row0+n,
+/// :] += A[row0.., :]·B` with `out` being the band's rows only. `ta`/`tb`
+/// say whether the operand is stored transposed (`a` as `[k,n]` with
+/// leading dimension `lda = n`; `b` as `[m,k]` with `ldb = k`); packing
+/// normalizes both into row-major panels, so the micro loops never see a
+/// stride. `row0 = 0, n = full` is exactly the serial whole-matrix call.
+#[allow(clippy::too_many_arguments)]
+fn gemm_band(
     ws: &mut Workspace,
+    simd: bool,
+    row0: usize,
     n: usize,
     k: usize,
     m: usize,
@@ -124,6 +202,7 @@ fn gemm_core(
     // zeroing memset a plain `take` would pay on each GEMM call.
     let mut apack = ws.take_uninit(MC * KC);
     let mut bpack = ws.take_uninit(KC * NC);
+    let step = if simd { MR_S } else { MR };
     let mut jc = 0;
     while jc < m {
         let nc = NC.min(m - jc);
@@ -134,21 +213,25 @@ fn gemm_core(
             let mut ic = 0;
             while ic < n {
                 let mc = MC.min(n - ic);
-                pack_a(&mut apack, a, lda, ta, ic, mc, pc, kc);
+                pack_a(&mut apack, a, lda, ta, row0 + ic, mc, pc, kc);
                 let mut i0 = 0;
                 while i0 < mc {
-                    let mr = MR.min(mc - i0);
+                    let mr = step.min(mc - i0);
                     let mut j0 = 0;
                     while j0 < nc {
                         let nr = NR.min(nc - j0);
-                        if mr == MR && nr == NR {
-                            micro_full(&apack, kc, i0, &bpack, nc, j0, out, m, ic, jc);
+                        if nr == NR && mr == step {
+                            if simd {
+                                micro_full_simd(&apack, kc, i0, &bpack, nc, j0, out, m, ic, jc);
+                            } else {
+                                micro_full(&apack, kc, i0, &bpack, nc, j0, out, m, ic, jc);
+                            }
                         } else {
                             micro_edge(&apack, kc, i0, mr, &bpack, nc, j0, nr, out, m, ic, jc);
                         }
                         j0 += NR;
                     }
-                    i0 += MR;
+                    i0 += step;
                 }
                 ic += MC;
             }
@@ -216,8 +299,8 @@ fn pack_b(
     }
 }
 
-/// Full `MR×NR` register tile: load the C tile, accumulate `kc` depth
-/// terms in order, store back.
+/// Full scalar `MR×NR` register tile: load the C tile, accumulate `kc`
+/// depth terms in order, store back.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 fn micro_full(
@@ -252,7 +335,55 @@ fn micro_full(
     }
 }
 
-/// Edge tile (`mr < MR` or `nr < NR`): accumulate straight into `C` in
+/// Full SIMD `MR_S×NR` register tile: 6 rows × two 8-lane halves of C
+/// held in fixed-size lane arrays. The lane loops have constant trip
+/// counts and no cross-lane dependency, so LLVM lowers them to packed
+/// vector mul+add; the per-element depth chain is the same single-
+/// accumulator in-order sum as the scalar tile, hence bit-equal.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_full_simd(
+    apack: &[f32],
+    kc: usize,
+    i0: usize,
+    bpack: &[f32],
+    nc: usize,
+    j0: usize,
+    out: &mut [f32],
+    ldc: usize,
+    ic: usize,
+    jc: usize,
+) {
+    let mut acc = [[[0.0f32; LANES]; 2]; MR_S];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        let row = (ic + i0 + r) * ldc + jc + j0;
+        accr[0].copy_from_slice(&out[row..row + LANES]);
+        accr[1].copy_from_slice(&out[row + LANES..row + NR]);
+    }
+    for p in 0..kc {
+        let brow = &bpack[p * nc + j0..p * nc + j0 + NR];
+        let mut b0 = [0.0f32; LANES];
+        let mut b1 = [0.0f32; LANES];
+        b0.copy_from_slice(&brow[..LANES]);
+        b1.copy_from_slice(&brow[LANES..]);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = apack[(i0 + r) * kc + p];
+            for j in 0..LANES {
+                accr[0][j] += av * b0[j];
+            }
+            for j in 0..LANES {
+                accr[1][j] += av * b1[j];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let row = (ic + i0 + r) * ldc + jc + j0;
+        out[row..row + LANES].copy_from_slice(&accr[0]);
+        out[row + LANES..row + NR].copy_from_slice(&accr[1]);
+    }
+}
+
+/// Edge tile (`mr < step` or `nr < NR`): accumulate straight into `C` in
 /// the same depth order.
 #[allow(clippy::too_many_arguments)]
 fn micro_edge(
@@ -341,65 +472,108 @@ mod tests {
 
     /// Shapes that force every code path: the small-product fallback,
     /// single-block, multi-block with exact tile fits, and ragged edges
-    /// in every dimension.
+    /// in every dimension — including tails that are not multiples of
+    /// MR (4), MR_S (6), NR (16) or KC (256).
     fn shapes() -> Vec<(usize, usize, usize)> {
         vec![
             (1, 1, 1),
             (3, 5, 7),
             (4, 16, 16),
+            (6, 256, 16),
             (32, 64, 48),
             (65, 257, 33),
             (64, 256, 512),
+            (66, 300, 18),
             (70, 300, 530),
+            (127, 255, 514),
             (128, 19, 1037),
         ]
     }
 
+    /// Contexts for both register tiles (scalar blocked + SIMD).
+    fn paths() -> [KernelCtx; 2] {
+        [KernelCtx::serial(false), KernelCtx::serial(true)]
+    }
+
     #[test]
     fn blocked_matmul_is_bit_equal_to_reference() {
-        for (n, k, m) in shapes() {
-            let mut ws = Workspace::new();
-            let a = randn(n as u64, n * k);
-            let b = randn(m as u64 + 100, k * m);
-            let want = reference::matmul(&a, &b, n, k, m);
-            let mut got = vec![0.0f32; n * m];
-            matmul(&mut ws, &a, &b, n, k, m, &mut got);
-            assert!(
-                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "matmul {n}x{k}x{m} diverged from reference"
-            );
+        for mut cx in paths() {
+            for (n, k, m) in shapes() {
+                let a = randn(n as u64, n * k);
+                let b = randn(m as u64 + 100, k * m);
+                let want = reference::matmul(&a, &b, n, k, m);
+                let mut got = vec![0.0f32; n * m];
+                matmul(&mut cx, &a, &b, n, k, m, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul {n}x{k}x{m} (simd={}) diverged from reference",
+                    cx.simd
+                );
+            }
         }
     }
 
     #[test]
     fn blocked_matmul_at_is_bit_equal_to_reference() {
-        for (n, k, m) in shapes() {
-            let mut ws = Workspace::new();
-            let a = randn(n as u64 + 7, k * n);
-            let b = randn(m as u64 + 200, k * m);
-            let want = reference::matmul_at(&a, &b, k, n, m);
-            let mut got = vec![0.0f32; n * m];
-            matmul_at(&mut ws, &a, &b, k, n, m, &mut got);
-            assert!(
-                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "matmul_at {k}x{n}x{m} diverged from reference"
-            );
+        for mut cx in paths() {
+            for (n, k, m) in shapes() {
+                let a = randn(n as u64 + 7, k * n);
+                let b = randn(m as u64 + 200, k * m);
+                let want = reference::matmul_at(&a, &b, k, n, m);
+                let mut got = vec![0.0f32; n * m];
+                matmul_at(&mut cx, &a, &b, k, n, m, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul_at {k}x{n}x{m} (simd={}) diverged from reference",
+                    cx.simd
+                );
+            }
         }
     }
 
     #[test]
     fn blocked_matmul_bt_is_bit_equal_to_reference() {
-        for (n, k, m) in shapes() {
-            let mut ws = Workspace::new();
-            let a = randn(n as u64 + 13, n * k);
-            let b = randn(m as u64 + 300, m * k);
-            let want = reference::matmul_bt(&a, &b, n, k, m);
+        for mut cx in paths() {
+            for (n, k, m) in shapes() {
+                let a = randn(n as u64 + 13, n * k);
+                let b = randn(m as u64 + 300, m * k);
+                let want = reference::matmul_bt(&a, &b, n, k, m);
+                let mut got = vec![0.0f32; n * m];
+                matmul_bt(&mut cx, &a, &b, n, k, m, &mut got);
+                assert!(
+                    want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "matmul_bt {n}x{k}x{m} (simd={}) diverged from reference",
+                    cx.simd
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_gemm_is_bit_equal_at_any_worker_count() {
+        // A shape big enough to engage the pool (> MC rows, ≥ PAR_FLOPS):
+        // every worker count must partition into the same fixed bands and
+        // reproduce the serial (and reference) bits exactly.
+        let (n, k, m) = (300, 200, 64);
+        assert!(n > MC && n * k * m >= PAR_FLOPS, "shape must engage the pool");
+        let a = randn(61, n * k);
+        let b = randn(62, k * m);
+        let want = reference::matmul(&a, &b, n, k, m);
+        for workers in [1, 2, 3, 8] {
+            let mut cx = KernelCtx::with_workers(true, workers);
+            let engaged = cx.worker_ws.len() >= 2;
+            assert_eq!(engaged, workers >= 2);
             let mut got = vec![0.0f32; n * m];
-            matmul_bt(&mut ws, &a, &b, n, k, m, &mut got);
+            matmul(&mut cx, &a, &b, n, k, m, &mut got);
             assert!(
                 want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
-                "matmul_bt {n}x{k}x{m} diverged from reference"
+                "parallel matmul {n}x{k}x{m} at {workers} workers diverged"
             );
+            if engaged {
+                let used: usize =
+                    cx.worker_ws.iter().map(|w| w.stats().takes as usize).sum();
+                assert!(used > 0, "worker arenas must have served the packing buffers");
+            }
         }
     }
 
@@ -408,34 +582,53 @@ mod tests {
         // C += A·B semantics: a second call continues the accumulation
         // chain — bit-identical to the naive accumulate run twice.
         let (n, k, m) = (65, 257, 33);
-        let mut ws = Workspace::new();
         let a = randn(1, n * k);
         let b = randn(2, k * m);
-        let mut got = vec![0.0f32; n * m];
-        matmul(&mut ws, &a, &b, n, k, m, &mut got);
-        matmul(&mut ws, &a, &b, n, k, m, &mut got);
-        let mut want = vec![0.0f32; n * m];
-        naive(&a, &b, n, k, m, &mut want);
-        naive(&a, &b, n, k, m, &mut want);
-        assert!(
-            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
-            "accumulation chain diverged"
-        );
+        for mut cx in paths() {
+            let mut got = vec![0.0f32; n * m];
+            matmul(&mut cx, &a, &b, n, k, m, &mut got);
+            matmul(&mut cx, &a, &b, n, k, m, &mut got);
+            let mut want = vec![0.0f32; n * m];
+            naive(&a, &b, n, k, m, &mut want);
+            naive(&a, &b, n, k, m, &mut want);
+            assert!(
+                want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "accumulation chain diverged (simd={})",
+                cx.simd
+            );
+        }
     }
 
     #[test]
     fn gemm_reuses_packing_buffers() {
-        let mut ws = Workspace::new();
         let (n, k, m) = (70, 300, 530);
         let a = randn(1, n * k);
         let b = randn(2, k * m);
-        let mut out = vec![0.0f32; n * m];
-        matmul(&mut ws, &a, &b, n, k, m, &mut out);
-        let warm = ws.stats().fresh_allocs;
-        for _ in 0..5 {
-            out.iter_mut().for_each(|v| *v = 0.0);
-            matmul(&mut ws, &a, &b, n, k, m, &mut out);
+        for mut cx in paths() {
+            let mut out = vec![0.0f32; n * m];
+            matmul(&mut cx, &a, &b, n, k, m, &mut out);
+            let warm = cx.stats().fresh_allocs;
+            for _ in 0..5 {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                matmul(&mut cx, &a, &b, n, k, m, &mut out);
+            }
+            assert_eq!(cx.stats().fresh_allocs, warm, "steady-state GEMM must not allocate");
         }
-        assert_eq!(ws.stats().fresh_allocs, warm, "steady-state GEMM must not allocate");
+    }
+
+    #[test]
+    fn parallel_gemm_reuses_worker_arenas() {
+        let (n, k, m) = (300, 200, 64);
+        let a = randn(3, n * k);
+        let b = randn(4, k * m);
+        let mut cx = KernelCtx::with_workers(true, 4);
+        let mut out = vec![0.0f32; n * m];
+        matmul(&mut cx, &a, &b, n, k, m, &mut out);
+        let warm = cx.stats().fresh_allocs;
+        for _ in 0..3 {
+            out.iter_mut().for_each(|v| *v = 0.0);
+            matmul(&mut cx, &a, &b, n, k, m, &mut out);
+        }
+        assert_eq!(cx.stats().fresh_allocs, warm, "steady-state parallel GEMM allocated");
     }
 }

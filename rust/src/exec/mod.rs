@@ -15,6 +15,17 @@
 //! scratch lives in a per-thread [`Workspace`] arena, and the GEMMs are
 //! cache-blocked microkernels ([`kernels::gemm`]) that stay bit-equal to
 //! the preserved naive oracle ([`kernels::reference`]).
+//!
+//! On top of that sits the vectorized tier (DESIGN.md §13): `--kernels
+//! simd` selects register-tiled SIMD GEMM microkernels with an optional
+//! bounded worker pool (deterministic at any width — fixed band→worker
+//! assignment, per-worker arenas) and a flash-style tiled attention core
+//! whose scratch is O(seq·block) instead of O(seq²). SIMD GEMMs stay
+//! bit-equal to the oracle (one accumulator per output element, depth
+//! order preserved); only flash attention reassociates, under a
+//! documented ≤1e-5 tolerance. Unit outputs are arena-backed too: the
+//! engine hands dead tensors back through [`Backend::recycle`], keeping
+//! steady-state allocations at zero end to end.
 
 mod backend;
 mod data;

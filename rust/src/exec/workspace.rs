@@ -38,6 +38,11 @@ pub struct Workspace {
     stats: WorkspaceStats,
 }
 
+/// Debug-build fill pattern for [`Workspace::take_uninit`]: a quiet NaN
+/// whose payload spells out where it came from. Any arithmetic on an
+/// unwritten slot propagates NaN straight into a test assertion.
+pub const POISON_BITS: u32 = 0x7fc0_dead;
+
 /// Class that can serve a request for `n` elements (`2^c >= n`).
 fn class_for_request(n: usize) -> usize {
     n.next_power_of_two().trailing_zeros() as usize
@@ -84,10 +89,19 @@ impl Workspace {
         };
         if zero {
             buf.clear();
+            buf.resize(n, 0.0);
+        } else if cfg!(debug_assertions) {
+            // Poison recycled contents with a recognizable signaling
+            // pattern so a read-before-write in a `take_uninit` consumer
+            // surfaces as NaN in debug builds instead of silently reusing
+            // stale values (the release fast path keeps them).
+            buf.clear();
+            buf.resize(n, f32::from_bits(POISON_BITS));
+        } else {
+            // Pads growth only (stale prefix kept) or truncates — no
+            // memset over contents the caller will overwrite.
+            buf.resize(n, 0.0);
         }
-        // Without `zero` this only pads growth (stale prefix kept) or
-        // truncates — no memset over contents the caller will overwrite.
-        buf.resize(n, 0.0);
         self.out += buf.capacity();
         self.stats.peak_bytes = self.stats.peak_bytes.max(4 * (self.pooled + self.out));
         buf
@@ -213,5 +227,23 @@ mod tests {
         let c = ws.take(64);
         assert!(c.iter().all(|&v| v == 0.0));
         assert_eq!(ws.stats().fresh_allocs, 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    fn take_uninit_is_poisoned_in_debug_builds() {
+        // Debug builds must hand out the NaN pattern, fresh and recycled
+        // alike — a consumer reading before writing cannot see stale
+        // (plausible-looking) values from an earlier kernel.
+        let mut ws = Workspace::new();
+        let mut a = ws.take_uninit(32);
+        assert!(a.iter().all(|v| v.to_bits() == POISON_BITS), "fresh take_uninit not poisoned");
+        a.iter_mut().for_each(|v| *v = 3.0);
+        ws.give(a);
+        let b = ws.take_uninit(32);
+        assert!(
+            b.iter().all(|v| v.to_bits() == POISON_BITS),
+            "recycled take_uninit not poisoned"
+        );
     }
 }

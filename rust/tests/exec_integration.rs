@@ -31,6 +31,7 @@ fn cfg(kind: ScheduleKind, steps: usize) -> TrainConfig {
         faults: None,
         checkpoint_dir: None,
         resume: None,
+        workers: 0,
     }
 }
 

@@ -1,15 +1,17 @@
-//! Golden parity suite: the cache-blocked, workspace-backed kernel path
-//! must match the preserved naive oracle (`kernels::reference`) on every
-//! AOT unit — the executor-side analogue of the `sim::reference`
-//! bit-equivalence suite (DESIGN.md §11).
+//! Golden parity suite: the fast, workspace-backed kernel paths must
+//! match the preserved naive oracle (`kernels::reference`) on every AOT
+//! unit — the executor-side analogue of the `sim::reference`
+//! bit-equivalence suite (DESIGN.md §11, §13).
 //!
-//! The contract the ISSUE states is ≤ 1e-5 relative for forwards (with
-//! the finite-difference backward checks living next to the kernels);
-//! the implementation is actually stronger — the blocked GEMMs preserve
-//! the naive per-element accumulation order, so outputs are **bit-equal**
-//! — and both properties are pinned here so a future, legitimately
-//! reassociating kernel relaxes the bit test deliberately, not by
-//! accident.
+//! Oracle policy (DESIGN.md §13): wherever the per-element accumulation
+//! order is preserved the fast path must be **bit-equal** — that covers
+//! every blocked-path unit and every simd-path unit except attention,
+//! whose flash (online-softmax) tiling legitimately reassociates and is
+//! held to a documented ≤ 1e-5 tolerance instead. Both properties are
+//! pinned here so a future reassociating kernel relaxes the bit test
+//! deliberately, not by accident. The simd path must also be
+//! **deterministic in the worker count**: fixed band→worker assignment
+//! means 1, 2 and 8 workers produce identical losses, asserted below.
 
 use stp::config::ManifestDims;
 use stp::exec::{train, Backend, KernelPath, Rng, TrainConfig, VirtualBackend};
@@ -63,10 +65,14 @@ fn test_preset_dims() -> ManifestDims {
     ManifestDims::test_preset()
 }
 
-/// Run all nine units on both kernel paths and compare outputs with
-/// `check` (called per (unit, output index, want, got)).
-fn compare_paths(dims: &ManifestDims, mut check: impl FnMut(&str, usize, &Tensor, &Tensor)) {
-    let mut blocked = VirtualBackend::with_path(dims.clone(), KernelPath::Blocked);
+/// Run all nine units on `path` and the reference oracle and compare
+/// outputs with `check` (called per (unit, output index, want, got)).
+fn compare_paths(
+    dims: &ManifestDims,
+    path: KernelPath,
+    mut check: impl FnMut(&str, usize, &Tensor, &Tensor),
+) {
+    let mut fast = VirtualBackend::with_path(dims.clone(), path);
     let mut reference = VirtualBackend::with_path(dims.clone(), KernelPath::Reference);
 
     let d = dims.d;
@@ -102,7 +108,7 @@ fn compare_paths(dims: &ManifestDims, mut check: impl FnMut(&str, usize, &Tensor
         ("head_loss_grad", vec![&x, &wh, &tok]),
     ];
     for (name, args) in units {
-        let got = blocked.run(name, &args).unwrap();
+        let got = fast.run(name, &args).unwrap();
         let want = reference.run(name, &args).unwrap();
         assert_eq!(got.len(), want.len(), "{name}: output arity");
         for (i, (w, g)) in want.iter().zip(&got).enumerate() {
@@ -120,19 +126,35 @@ fn assert_rel(name: &str, i: usize, want: &Tensor, got: &Tensor, tol: f32) {
     for (j, (a, b)) in w.iter().zip(g).enumerate() {
         assert!(
             (a - b).abs() <= tol * a.abs().max(1.0),
-            "{name} out {i}[{j}]: blocked {b} vs reference {a}"
+            "{name} out {i}[{j}]: fast {b} vs reference {a}"
         );
+    }
+}
+
+fn assert_bits(name: &str, i: usize, want: &Tensor, got: &Tensor) {
+    if let (Ok(ws), Ok(gs)) = (want.as_f32(), got.as_f32()) {
+        for (j, (a, b)) in ws.iter().zip(gs).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{name} out {i}[{j}]: fast {b} != reference {a}"
+            );
+        }
     }
 }
 
 #[test]
 fn units_match_reference_within_1e5_on_ragged_shapes() {
-    compare_paths(&ragged_dims(), |name, i, w, g| assert_rel(name, i, w, g, 1e-5));
+    compare_paths(&ragged_dims(), KernelPath::Blocked, |name, i, w, g| {
+        assert_rel(name, i, w, g, 1e-5)
+    });
 }
 
 #[test]
 fn units_match_reference_within_1e5_on_tiny_shapes() {
-    compare_paths(&tiny_dims(), |name, i, w, g| assert_rel(name, i, w, g, 1e-5));
+    compare_paths(&tiny_dims(), KernelPath::Blocked, |name, i, w, g| {
+        assert_rel(name, i, w, g, 1e-5)
+    });
 }
 
 #[test]
@@ -140,15 +162,30 @@ fn units_are_bit_equal_to_reference() {
     // The stronger property the blocked GEMMs are designed for: same
     // per-element accumulation order ⇒ identical bits (see gemm.rs).
     for dims in [tiny_dims(), ragged_dims(), test_preset_dims()] {
-        compare_paths(&dims, |name, i, w, g| {
-            if let (Ok(ws), Ok(gs)) = (w.as_f32(), g.as_f32()) {
-                for (j, (a, b)) in ws.iter().zip(gs).enumerate() {
-                    assert_eq!(
-                        a.to_bits(),
-                        b.to_bits(),
-                        "{name} out {i}[{j}]: blocked {b} != reference {a}"
-                    );
+        compare_paths(&dims, KernelPath::Blocked, assert_bits);
+    }
+}
+
+#[test]
+fn simd_units_bit_equal_except_flash_attention_within_1e5() {
+    // The simd oracle policy: GEMM-only units keep the accumulation
+    // order (one accumulator per element, depth order) ⇒ bit-equal; the
+    // attn units run the flash core, which reassociates the softmax ⇒
+    // mixed abs+rel ≤ 1e-5 (the denominator cancellations in the
+    // backward make a pure-relative bound too brittle near zero).
+    for dims in [tiny_dims(), ragged_dims(), test_preset_dims()] {
+        compare_paths(&dims, KernelPath::Simd, |name, i, w, g| {
+            if name.starts_with("attn") {
+                if let (Ok(ws), Ok(gs)) = (w.as_f32(), g.as_f32()) {
+                    for (j, (a, b)) in ws.iter().zip(gs).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-5 + 1e-5 * a.abs().max(b.abs()),
+                            "{name} out {i}[{j}]: simd {b} vs reference {a}"
+                        );
+                    }
                 }
+            } else {
+                assert_bits(name, i, w, g);
             }
         });
     }
@@ -183,4 +220,79 @@ fn training_losses_agree_across_kernel_paths() {
     // Only the blocked path touches the arena.
     assert!(blocked.workspace_peak_bytes.iter().all(|&b| b > 0));
     assert!(reference.workspace_peak_bytes.iter().all(|&b| b == 0));
+}
+
+#[test]
+fn simd_training_losses_track_reference_within_tolerance() {
+    // Whole-run parity for the reassociating path: flash attention's
+    // ≤ 1e-5 per-unit drift compounds through two SGD steps, so the
+    // bound loosens with depth — tight on the first loss (pre-update
+    // forward), looser once the updated weights diverge.
+    let run = |path: KernelPath| {
+        let mut cfg = TrainConfig::virtual_default();
+        cfg.kernels = path;
+        cfg.steps = 2;
+        cfg.dims = Some(test_preset_dims());
+        train(&cfg).unwrap()
+    };
+    let simd = run(KernelPath::Simd);
+    let reference = run(KernelPath::Reference);
+    assert_eq!(simd.steps.len(), reference.steps.len());
+    for (i, (a, b)) in simd.steps.iter().zip(&reference.steps).enumerate() {
+        let tol = if i == 0 { 2e-5 } else { 5e-4 };
+        let rel = (a.mean_loss - b.mean_loss).abs() / b.mean_loss.abs().max(1e-12);
+        assert!(
+            rel <= tol,
+            "step {}: simd loss {} vs reference {} (rel {rel:.2e} > {tol:.0e})",
+            a.step,
+            a.mean_loss,
+            b.mean_loss
+        );
+    }
+    assert!(simd.workspace_peak_bytes.iter().all(|&b| b > 0));
+}
+
+#[test]
+fn simd_training_is_invariant_in_the_worker_count() {
+    // Determinism at any pool width: band→worker assignment is fixed and
+    // each worker packs into its own arena, so 1, 2 and 8 workers must
+    // produce bit-identical losses. Dims are sized so the head GEMM
+    // (256×32×512 ≈ 4.2 MFLOP) clears the parallel-engagement floor and
+    // the pool genuinely runs.
+    let dims = ManifestDims {
+        vocab: 512,
+        d: 32,
+        q_heads: 4,
+        kv_heads: 2,
+        ffn: 96,
+        layers: 4,
+        seq: 64,
+        mb: 4,
+        tp: 1,
+        pp: 2,
+        vpp: 2,
+    };
+    let run = |workers: usize| {
+        let mut cfg = TrainConfig::virtual_default();
+        cfg.kernels = KernelPath::Simd;
+        cfg.workers = workers;
+        cfg.steps = 2;
+        cfg.dims = Some(dims.clone());
+        train(&cfg).unwrap()
+    };
+    let one = run(1);
+    for workers in [2usize, 8] {
+        let multi = run(workers);
+        assert_eq!(one.steps.len(), multi.steps.len());
+        for (a, b) in one.steps.iter().zip(&multi.steps) {
+            assert_eq!(
+                a.mean_loss.to_bits(),
+                b.mean_loss.to_bits(),
+                "step {}: 1 worker {} != {workers} workers {}",
+                a.step,
+                a.mean_loss,
+                b.mean_loss
+            );
+        }
+    }
 }
