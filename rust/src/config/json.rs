@@ -79,13 +79,6 @@ impl Json {
         self.as_arr().map(|a| a.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect())
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -121,6 +114,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact serialization; `to_string()` comes for free via [`ToString`].
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -35,9 +35,10 @@ USAGE:
                [--kernels blocked|simd|reference] [--workers N]
                [--virtual-scale auto|F]
                [--artifacts DIR] [--schedule KIND] [--steps N] [--mb N]
-               [--lr F] [--seed N] [--quiet]
+               [--dp N] [--lr F] [--seed N] [--quiet]
                [--faults FILE.json] [--checkpoint-dir DIR]
-               [--resume CKPT.json] [--replan [--beam-width N]]
+               [--keep-checkpoints K] [--resume CKPT.json|latest|DIR]
+               [--elastic] [--replan [--beam-width N]]
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
 Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
@@ -54,12 +55,20 @@ Training:  the virtual backend (default) runs everywhere on miniature
            --virtual-scale widens the proxy model by an integer width
            factor (fractional values round to the nearest factor;
            auto = match the host's core count).
-Elastic:   --faults injects a deterministic stp-faults-v1 script (a dead
-           rank halts the run at that step's cut and --checkpoint-dir
-           receives an stp-ckpt-v1 snapshot); --resume restarts from a
-           snapshot bit-identically; --replan additionally shrinks the
-           pool, re-searches the plan and migrates the checkpoint on
-           every device loss (requires --plan).
+Elastic:   --dp runs N data-parallel replicas of the pipeline (fixed
+           global batch dp*mb); --faults injects a deterministic
+           stp-faults-v1 script (events carry a DP replica; a dead rank
+           halts the run at that step's cut and --checkpoint-dir
+           receives a crash-safe stp-ckpt-v2 snapshot, with
+           --keep-checkpoints pruning all but the newest K);
+           --resume restarts bit-identically from a snapshot file, or
+           from the newest complete snapshot in a directory ('latest'
+           uses --checkpoint-dir; torn files fall back one step);
+           --elastic auto-recovers after each death: while dp > 1 the
+           dead replica is quarantined and the survivors continue at a
+           batch-preserving width; --replan additionally shrinks the
+           pool, re-searches the plan and migrates the checkpoint when
+           the last replica loses a pipeline stage (requires --plan).
 ";
 
 /// Parse `--key value` pairs after the subcommand.
@@ -397,7 +406,16 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         None => None,
     };
     let checkpoint_dir = flags.get("checkpoint-dir").map(PathBuf::from);
-    let resume = match flags.get("resume") {
+    let resume = match flags.get("resume").map(String::as_str) {
+        Some("latest") => {
+            let dir = checkpoint_dir
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("--resume latest needs --checkpoint-dir"))?;
+            Some(crate::elastic::Checkpoint::load_latest(dir)?)
+        }
+        Some(path) if std::path::Path::new(path).is_dir() => {
+            Some(crate::elastic::Checkpoint::load_latest(std::path::Path::new(path))?)
+        }
         Some(path) => Some(crate::elastic::Checkpoint::load(std::path::Path::new(path))?),
         None => None,
     };
@@ -413,6 +431,7 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
             .parse()
             .map_err(|e| anyhow::anyhow!("{e}"))?,
         n_mb: flag(flags, "mb", 4usize),
+        dp: flags.get("dp").and_then(|v| v.parse().ok()),
         steps: flag(flags, "steps", 20usize),
         lr: flag(flags, "lr", 0.1f32),
         seed: flag(flags, "seed", 42u64),
@@ -422,6 +441,7 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         plan: plan_artifact,
         faults,
         checkpoint_dir,
+        keep_checkpoints: flags.get("keep-checkpoints").and_then(|v| v.parse().ok()),
         resume,
         workers: flag(flags, "workers", 0usize),
     };
@@ -430,21 +450,24 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
         None => format!("{} schedule", cfg.schedule.name()),
     };
 
-    if flags.contains_key("replan") {
+    if flags.contains_key("replan") || flags.contains_key("elastic") {
         use crate::elastic::{run_elastic, ElasticConfig, ReplanContext};
-        let artifact = cfg
-            .plan
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("--replan needs --plan FILE.json to re-search from"))?;
-        let replan = ReplanContext {
-            model: plan_model_by_name(&artifact.model),
-            cluster: cluster_by_name(&artifact.cluster)?,
-            seq: artifact.seq,
-            mb_size: artifact.mb_size,
-            mem_cap_gib: flag(flags, "mem-gib", 0.0f64),
-            beam_width: flag(flags, "beam-width", 8usize),
+        let replan = if flags.contains_key("replan") {
+            let artifact = cfg.plan.clone().ok_or_else(|| {
+                anyhow::anyhow!("--replan needs --plan FILE.json to re-search from")
+            })?;
+            Some(ReplanContext {
+                model: plan_model_by_name(&artifact.model),
+                cluster: cluster_by_name(&artifact.cluster)?,
+                seq: artifact.seq,
+                mb_size: artifact.mb_size,
+                mem_cap_gib: flag(flags, "mem-gib", 0.0f64),
+                beam_width: flag(flags, "beam-width", 8usize),
+            })
+        } else {
+            None
         };
-        let ecfg = ElasticConfig { train: cfg, replan: Some(replan) };
+        let ecfg = ElasticConfig { train: cfg, replan };
         let report = run_elastic(&ecfg)?;
         println!(
             "elastic: {} segments, {} replans ({what}): loss {:.4} -> {:.4}",
@@ -453,6 +476,9 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
             report.first_loss(),
             report.last_loss(),
         );
+        for marker in &report.recoveries {
+            println!("recovered: {marker}");
+        }
         for plan in &report.replanned {
             println!("replanned onto {}", plan.label());
         }
@@ -487,7 +513,8 @@ fn run_train(flags: &HashMap<String, String>) -> Result<i32> {
     );
     if let Some(halt) = report.interrupted_at {
         println!(
-            "fault: stage {} died, halted at the step-{halt} cut{}",
+            "fault: replica {} stage {} died, halted at the step-{halt} cut{}",
+            report.fault_replica.map(|q| q.to_string()).unwrap_or_else(|| "?".into()),
             report.fault_stage.map(|s| s.to_string()).unwrap_or_else(|| "?".into()),
             report
                 .checkpoint_path

@@ -1,12 +1,20 @@
-//! Bit-exact training snapshots: the `stp-ckpt-v1` document.
+//! Bit-exact training snapshots: the `stp-ckpt-v2` document.
 //!
 //! A [`Checkpoint`] captures everything the virtual executor needs to
-//! continue a run as if it had never stopped: the per-(chunk, tp-rank)
-//! parameter shards ([`ChunkShard`]), the optimizer state (the SGD
-//! engine is momentless, so moments serialize empty — the field exists
-//! so Adam-class optimizers slot into the same schema), every device
-//! thread's `exec::rng` stream position, the data-loader cursor and the
-//! step counter.
+//! continue a run as if it had never stopped: the per-(replica, chunk,
+//! tp-rank) parameter shards ([`ChunkShard`]), the optimizer state (the
+//! SGD engine is momentless, so moments serialize empty — the field
+//! exists so Adam-class optimizers slot into the same schema), every
+//! device thread's `exec::rng` stream position, the data-loader cursor
+//! and the step counter.
+//!
+//! v2 grows the **replica axis** (DESIGN.md §14): shards key as
+//! `d{replica}c{chunk}r{rank}`, RNG streams as
+//! `d{replica}s{stage}r{rank}`, and the document records `dp` plus the
+//! per-chunk ViT layer split (`stage_vit_layers`) for MLLM plans. v1
+//! documents upgrade strictly on load — they describe one replica, so
+//! every shard lands on replica 0, `dp = 1`, and ViT counts are zero.
+//! This build always writes v2.
 //!
 //! **Bit-exactness is the contract**, not an aspiration: f32 tensors are
 //! serialized as their IEEE-754 bit patterns (`f32::to_bits`, printed as
@@ -14,8 +22,16 @@
 //! accumulators are provably zero at the step boundary the snapshot is
 //! taken on (`sgd_step` zeroes them), and `tests/elastic.rs` asserts
 //! save→restore→train equals an uninterrupted run bit-for-bit.
+//!
+//! **Crash-safety is also the contract**: [`Checkpoint::save`] writes to
+//! a `.tmp` sibling and renames into place, so a mid-write death never
+//! leaves a torn document under the final name, and
+//! [`Checkpoint::load_latest`] falls back over the `ckpt-step-N.json`
+//! chain (newest first) when `latest.json` is torn anyway (e.g. by an
+//! older writer or a filesystem that lost the rename).
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 use crate::config::json::Json;
 use crate::config::ManifestDims;
@@ -23,24 +39,32 @@ use crate::exec::LayerParams;
 use crate::runtime::Tensor;
 use crate::Result;
 
-/// Schema tag of the checkpoint format this crate reads and writes.
-pub const CKPT_SCHEMA: &str = "stp-ckpt-v1";
+/// Schema tag of the checkpoint format this crate writes.
+pub const CKPT_SCHEMA: &str = "stp-ckpt-v2";
 
-/// Map key for a (chunk, tp-rank) shard.
-pub fn shard_key(chunk: usize, rank: usize) -> String {
-    format!("c{chunk}r{rank}")
+/// The pre-DP schema this crate still reads (upgraded to v2 on load).
+pub const CKPT_SCHEMA_V1: &str = "stp-ckpt-v1";
+
+/// Map key for a (replica, chunk, tp-rank) shard.
+pub fn shard_key(replica: usize, chunk: usize, rank: usize) -> String {
+    format!("d{replica}c{chunk}r{rank}")
 }
 
-/// Map key for a (stage, tp-rank) device thread's RNG stream.
-pub fn rng_key(stage: usize, rank: usize) -> String {
-    format!("s{stage}r{rank}")
+/// Map key for a (replica, stage, tp-rank) device thread's RNG stream.
+pub fn rng_key(replica: usize, stage: usize, rank: usize) -> String {
+    format!("d{replica}s{stage}r{rank}")
 }
 
-/// One (chunk, tp-rank)'s parameters — the executor's ownership unit.
+/// One (replica, chunk, tp-rank)'s parameters — the executor's
+/// ownership unit.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChunkShard {
+    pub replica: usize,
     pub chunk: usize,
     pub rank: usize,
+    /// ViT layers (MLLM chunks only; run before `layers` in the walk).
+    pub vit_layers: Vec<LayerParams>,
+    /// LM layers.
     pub layers: Vec<LayerParams>,
     /// Embedding table (chunk 0 only; replicated across TP ranks).
     pub emb: Option<Tensor>,
@@ -54,15 +78,20 @@ pub struct Checkpoint {
     /// Next step to run (steps `0..step` are complete).
     pub step: usize,
     pub seed: u64,
+    /// Microbatches per replica per step (global batch = dp · n_mb · mb).
     pub n_mb: usize,
     /// Schedule kind name the segment ran ("stp", "zb-v", ...).
     pub schedule: String,
     pub tp: usize,
     pub pp: usize,
+    /// Data-parallel replica count the shards were trained under.
+    pub dp: usize,
     pub vpp: usize,
     pub dims: ManifestDims,
     /// LM layers per chunk (the split the shards were trained under).
     pub stage_layers: Vec<usize>,
+    /// ViT layers per chunk (all-zero for text-only plans).
+    pub stage_vit_layers: Vec<usize>,
     /// Data-loader cursor. The corpus keys batches by (step, mb) with a
     /// step-pinned stream today, so this equals `step`; recorded so a
     /// streaming loader can adopt the schema unchanged.
@@ -196,10 +225,43 @@ fn dims_from_json(v: &Json) -> Result<ManifestDims> {
     })
 }
 
+/// Step snapshots under `dir`, as `(step, path)` sorted newest first.
+fn step_snapshots(dir: &Path) -> Result<Vec<(usize, PathBuf)>> {
+    let mut out = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("listing checkpoint dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("listing {}: {e}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(step) = name
+            .strip_prefix("ckpt-step-")
+            .and_then(|s| s.strip_suffix(".json"))
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            out.push((step, entry.path()));
+        }
+    }
+    out.sort_by(|a, b| b.0.cmp(&a.0));
+    Ok(out)
+}
+
+/// Delete step snapshots beyond the `keep` newest (`latest.json` is
+/// never touched). Returns how many files were removed.
+pub fn prune_snapshots(dir: &Path, keep: usize) -> Result<usize> {
+    let snaps = step_snapshots(dir)?;
+    let mut removed = 0;
+    for (_, path) in snaps.iter().skip(keep.max(1)) {
+        std::fs::remove_file(path)
+            .map_err(|e| anyhow::anyhow!("pruning checkpoint {}: {e}", path.display()))?;
+        removed += 1;
+    }
+    Ok(removed)
+}
+
 impl Checkpoint {
-    /// The shard for a (chunk, rank), if present.
-    pub fn shard(&self, chunk: usize, rank: usize) -> Option<&ChunkShard> {
-        self.shards.get(&shard_key(chunk, rank))
+    /// The shard for a (replica, chunk, rank), if present.
+    pub fn shard(&self, replica: usize, chunk: usize, rank: usize) -> Option<&ChunkShard> {
+        self.shards.get(&shard_key(replica, chunk, rank))
     }
 
     pub fn n_chunks(&self) -> usize {
@@ -210,12 +272,17 @@ impl Checkpoint {
         self.stage_layers.iter().sum()
     }
 
-    /// Shape consistency: every (chunk, rank) shard present, layer
-    /// counts matching `stage_layers`, endpoints on the right chunks.
+    pub fn total_vit_layers(&self) -> usize {
+        self.stage_vit_layers.iter().sum()
+    }
+
+    /// Shape consistency: every (replica, chunk, rank) shard present,
+    /// layer counts matching the per-chunk splits, endpoints on the
+    /// right chunks.
     pub fn validate(&self) -> Result<()> {
         anyhow::ensure!(
-            self.tp >= 1 && self.pp >= 1 && self.vpp >= 1 && self.n_mb >= 1,
-            "checkpoint: tp/pp/vpp/n_mb must be positive"
+            self.tp >= 1 && self.pp >= 1 && self.dp >= 1 && self.vpp >= 1 && self.n_mb >= 1,
+            "checkpoint: tp/pp/dp/vpp/n_mb must be positive"
         );
         let chunks = self.n_chunks();
         anyhow::ensure!(
@@ -224,31 +291,56 @@ impl Checkpoint {
             self.stage_layers.len(),
             chunks
         );
-        for c in 0..chunks {
-            for r in 0..self.tp {
-                let s = self
-                    .shard(c, r)
-                    .ok_or_else(|| anyhow::anyhow!("checkpoint: missing shard c{c}r{r}"))?;
-                anyhow::ensure!(
-                    s.chunk == c && s.rank == r,
-                    "checkpoint: shard keyed c{c}r{r} claims (chunk {}, rank {})",
-                    s.chunk,
-                    s.rank
-                );
-                anyhow::ensure!(
-                    s.layers.len() == self.stage_layers[c],
-                    "checkpoint: shard c{c}r{r} has {} layers, stage_layers says {}",
-                    s.layers.len(),
-                    self.stage_layers[c]
-                );
-                anyhow::ensure!(
-                    s.emb.is_some() == (c == 0),
-                    "checkpoint: shard c{c}r{r}: embedding belongs to chunk 0 only"
-                );
-                anyhow::ensure!(
-                    s.head.is_some() == (c == chunks - 1),
-                    "checkpoint: shard c{c}r{r}: head belongs to the last chunk only"
-                );
+        anyhow::ensure!(
+            self.stage_vit_layers.len() == chunks,
+            "checkpoint: {} stage_vit_layers for {} chunks (pp·vpp)",
+            self.stage_vit_layers.len(),
+            chunks
+        );
+        anyhow::ensure!(
+            self.shards.len() == self.dp * chunks * self.tp,
+            "checkpoint: {} shards for a dp{} x {} chunks x tp{} grid",
+            self.shards.len(),
+            self.dp,
+            chunks,
+            self.tp
+        );
+        for q in 0..self.dp {
+            for c in 0..chunks {
+                for r in 0..self.tp {
+                    let s = self.shard(q, c, r).ok_or_else(|| {
+                        anyhow::anyhow!("checkpoint: missing shard d{q}c{c}r{r}")
+                    })?;
+                    anyhow::ensure!(
+                        s.replica == q && s.chunk == c && s.rank == r,
+                        "checkpoint: shard keyed d{q}c{c}r{r} claims (replica {}, chunk {}, \
+                         rank {})",
+                        s.replica,
+                        s.chunk,
+                        s.rank
+                    );
+                    anyhow::ensure!(
+                        s.layers.len() == self.stage_layers[c],
+                        "checkpoint: shard d{q}c{c}r{r} has {} layers, stage_layers says {}",
+                        s.layers.len(),
+                        self.stage_layers[c]
+                    );
+                    anyhow::ensure!(
+                        s.vit_layers.len() == self.stage_vit_layers[c],
+                        "checkpoint: shard d{q}c{c}r{r} has {} vit layers, stage_vit_layers \
+                         says {}",
+                        s.vit_layers.len(),
+                        self.stage_vit_layers[c]
+                    );
+                    anyhow::ensure!(
+                        s.emb.is_some() == (c == 0),
+                        "checkpoint: shard d{q}c{c}r{r}: embedding belongs to chunk 0 only"
+                    );
+                    anyhow::ensure!(
+                        s.head.is_some() == (c == chunks - 1),
+                        "checkpoint: shard d{q}c{c}r{r}: head belongs to the last chunk only"
+                    );
+                }
             }
         }
         Ok(())
@@ -263,11 +355,16 @@ impl Checkpoint {
         root.insert("schedule".into(), Json::Str(self.schedule.clone()));
         root.insert("tp".into(), Json::Num(self.tp as f64));
         root.insert("pp".into(), Json::Num(self.pp as f64));
+        root.insert("dp".into(), Json::Num(self.dp as f64));
         root.insert("vpp".into(), Json::Num(self.vpp as f64));
         root.insert("dims".into(), dims_to_json(&self.dims));
         root.insert(
             "stage_layers".into(),
             Json::Arr(self.stage_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
+        );
+        root.insert(
+            "stage_vit_layers".into(),
+            Json::Arr(self.stage_vit_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
         );
         root.insert("data_cursor".into(), Json::Num(self.data_cursor as f64));
         let mut opt = BTreeMap::new();
@@ -286,8 +383,13 @@ impl Checkpoint {
         let mut shards = BTreeMap::new();
         for (key, s) in &self.shards {
             let mut o = BTreeMap::new();
+            o.insert("replica".into(), Json::Num(s.replica as f64));
             o.insert("chunk".into(), Json::Num(s.chunk as f64));
             o.insert("rank".into(), Json::Num(s.rank as f64));
+            o.insert(
+                "vit_layers".into(),
+                Json::Arr(s.vit_layers.iter().map(layer_to_json).collect::<Result<_>>()?),
+            );
             o.insert(
                 "layers".into(),
                 Json::Arr(s.layers.iter().map(layer_to_json).collect::<Result<_>>()?),
@@ -305,16 +407,23 @@ impl Checkpoint {
     }
 
     /// Strict parse + validate (the plan-artifact idiom: a half-parsed
-    /// snapshot must never seed a training run).
+    /// snapshot must never seed a training run). Reads v2 natively and
+    /// upgrades v1 in place: a v1 document describes one replica, so its
+    /// `c{c}r{r}` shards become `d0c{c}r{r}`, its `s{s}r{r}` RNG streams
+    /// become `d0s{s}r{r}`, `dp = 1` and all ViT counts are zero.
     pub fn from_json(v: &Json) -> Result<Checkpoint> {
         let schema = v
             .get("schema")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("checkpoint: missing 'schema'"))?;
-        anyhow::ensure!(
-            schema == CKPT_SCHEMA,
-            "checkpoint: unsupported schema '{schema}' (this build reads '{CKPT_SCHEMA}')"
-        );
+        let v1 = match schema {
+            CKPT_SCHEMA => false,
+            CKPT_SCHEMA_V1 => true,
+            other => anyhow::bail!(
+                "checkpoint: unsupported schema '{other}' (this build reads '{CKPT_SCHEMA}' \
+                 and upgrades '{CKPT_SCHEMA_V1}')"
+            ),
+        };
         let req = |k: &str| -> Result<usize> {
             v.get(k)
                 .and_then(Json::as_usize)
@@ -329,16 +438,21 @@ impl Checkpoint {
         let dims = dims_from_json(
             v.get("dims").ok_or_else(|| anyhow::anyhow!("checkpoint: missing 'dims'"))?,
         )?;
-        let stage_layers: Vec<usize> = v
-            .get("stage_layers")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow::anyhow!("checkpoint: missing array 'stage_layers'"))?
-            .iter()
-            .map(|x| {
-                x.as_usize()
-                    .ok_or_else(|| anyhow::anyhow!("checkpoint: non-number in 'stage_layers'"))
-            })
-            .collect::<Result<_>>()?;
+        let usize_arr = |k: &str| -> Result<Vec<usize>> {
+            v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: missing array '{k}'"))?
+                .iter()
+                .map(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("checkpoint: non-number in '{k}'"))
+                })
+                .collect()
+        };
+        let stage_layers = usize_arr("stage_layers")?;
+        let dp = if v1 { 1 } else { req("dp")? };
+        let stage_vit_layers =
+            if v1 { vec![0; stage_layers.len()] } else { usize_arr("stage_vit_layers")? };
         let optimizer = v
             .get("optimizer")
             .and_then(|o| o.get("family"))
@@ -355,7 +469,8 @@ impl Checkpoint {
                 .as_f64()
                 .filter(|b| b.fract() == 0.0 && *b >= 0.0)
                 .ok_or_else(|| anyhow::anyhow!("checkpoint: rng_states['{k}'] not an integer"))?;
-            rng_states.insert(k.clone(), s as u64);
+            let key = if v1 { format!("d0{k}") } else { k.clone() };
+            rng_states.insert(key, s as u64);
         }
         let mut shards = BTreeMap::new();
         for (key, s) in v
@@ -371,14 +486,32 @@ impl Checkpoint {
                 .get("rank")
                 .and_then(Json::as_usize)
                 .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'rank'"))?;
+            let replica = if v1 {
+                0
+            } else {
+                s.get("replica").and_then(Json::as_usize).ok_or_else(|| {
+                    anyhow::anyhow!("checkpoint: shard '{key}': missing 'replica'")
+                })?
+            };
+            let layer_arr = |field: &str| -> Result<Vec<LayerParams>> {
+                match s.get(field) {
+                    Some(arr) => arr
+                        .as_arr()
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("checkpoint: shard '{key}': '{field}' not an array")
+                        })?
+                        .iter()
+                        .enumerate()
+                        .map(|(l, lv)| layer_from_json(lv, &format!("shard {key} {field} {l}")))
+                        .collect(),
+                    None => Ok(Vec::new()),
+                }
+            };
+            let vit_layers = layer_arr("vit_layers")?;
             let layers = s
                 .get("layers")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'layers'"))?
-                .iter()
-                .enumerate()
-                .map(|(l, lv)| layer_from_json(lv, &format!("shard {key} layer {l}")))
-                .collect::<Result<Vec<_>>>()?;
+                .ok_or_else(|| anyhow::anyhow!("checkpoint: shard '{key}': missing 'layers'"))
+                .and_then(|_| layer_arr("layers"))?;
             let emb = s
                 .get("emb")
                 .map(|t| tensor_from_json(t, &format!("shard {key} emb")))
@@ -387,7 +520,12 @@ impl Checkpoint {
                 .get("head")
                 .map(|t| tensor_from_json(t, &format!("shard {key} head")))
                 .transpose()?;
-            shards.insert(key.clone(), ChunkShard { chunk, rank, layers, emb, head });
+            // v1 keys are `c{c}r{r}`; re-key onto replica 0 of the grid.
+            let stored_key = if v1 { shard_key(0, chunk, rank) } else { key.clone() };
+            shards.insert(
+                stored_key,
+                ChunkShard { replica, chunk, rank, vit_layers, layers, emb, head },
+            );
         }
         let ck = Checkpoint {
             step: req("step")?,
@@ -400,9 +538,11 @@ impl Checkpoint {
                 .to_string(),
             tp: req("tp")?,
             pp: req("pp")?,
+            dp,
             vpp: req("vpp")?,
             dims,
             stage_layers,
+            stage_vit_layers,
             data_cursor: req("data_cursor")?,
             optimizer,
             rng_states,
@@ -412,18 +552,50 @@ impl Checkpoint {
         Ok(ck)
     }
 
-    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+    /// Crash-safe write: serialize to `{path}.tmp`, then rename into
+    /// place. A death mid-write leaves only the orphaned tmp file — the
+    /// final name is either absent or a complete document.
+    pub fn save(&self, path: &Path) -> Result<()> {
         let text = self.to_json()?.to_string();
-        std::fs::write(path, text)
-            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", path.display()))
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        std::fs::write(&tmp, text)
+            .map_err(|e| anyhow::anyhow!("writing checkpoint {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            anyhow::anyhow!("committing checkpoint {} -> {}: {e}", tmp.display(), path.display())
+        })
     }
 
-    pub fn load(path: &std::path::Path) -> Result<Checkpoint> {
+    pub fn load(path: &Path) -> Result<Checkpoint> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading checkpoint {}: {e}", path.display()))?;
         let v = Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))?;
         Self::from_json(&v).map_err(|e| anyhow::anyhow!("checkpoint {}: {e}", path.display()))
+    }
+
+    /// Load the newest usable snapshot under a checkpoint directory:
+    /// `latest.json` if it parses, else the `ckpt-step-N.json` chain in
+    /// descending step order (a torn file falls through to the previous
+    /// complete snapshot).
+    pub fn load_latest(dir: &Path) -> Result<Checkpoint> {
+        let latest = dir.join("latest.json");
+        if latest.exists() {
+            if let Ok(ck) = Self::load(&latest) {
+                return Ok(ck);
+            }
+        }
+        for (_, path) in step_snapshots(dir)? {
+            if let Ok(ck) = Self::load(&path) {
+                return Ok(ck);
+            }
+        }
+        anyhow::bail!(
+            "no usable checkpoint under {} (latest.json absent or torn, and no complete \
+             ckpt-step-N.json)",
+            dir.display()
+        )
     }
 }
 
@@ -449,12 +621,14 @@ mod tests {
         let mut shards = BTreeMap::new();
         for c in 0..2 {
             for r in 0..2 {
-                let p = ChunkParams::init(&dims, c, r, 1, c == 0, c == 1, 7);
+                let p = ChunkParams::init(&dims, c, r, 0, 1, c == 0, c == 1, 7);
                 shards.insert(
-                    shard_key(c, r),
+                    shard_key(0, c, r),
                     ChunkShard {
+                        replica: 0,
                         chunk: c,
                         rank: r,
+                        vit_layers: Vec::new(),
                         layers: p.layers.clone(),
                         emb: p.emb.clone(),
                         head: p.head.clone(),
@@ -463,7 +637,7 @@ mod tests {
             }
         }
         let mut rng_states = BTreeMap::new();
-        rng_states.insert(rng_key(0, 0), 0xDEAD_BEEFu64);
+        rng_states.insert(rng_key(0, 0, 0), 0xDEAD_BEEFu64);
         Checkpoint {
             step: 3,
             seed: 7,
@@ -471,9 +645,11 @@ mod tests {
             schedule: "stp".into(),
             tp: 2,
             pp: 2,
+            dp: 1,
             vpp: 1,
             dims,
             stage_layers: vec![1, 1],
+            stage_vit_layers: vec![0, 0],
             data_cursor: 3,
             optimizer: "sgd".into(),
             rng_states,
@@ -489,8 +665,8 @@ mod tests {
         // PartialEq on Tensor compares the f32 payloads exactly, so this
         // is the bit-exactness assertion (to_bits spot-check included).
         assert_eq!(ck, back);
-        let a = ck.shard(0, 0).unwrap().layers[0].wq.as_f32().unwrap();
-        let b = back.shard(0, 0).unwrap().layers[0].wq.as_f32().unwrap();
+        let a = ck.shard(0, 0, 0).unwrap().layers[0].wq.as_f32().unwrap();
+        let b = back.shard(0, 0, 0).unwrap().layers[0].wq.as_f32().unwrap();
         for (x, y) in a.iter().zip(b) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
@@ -515,7 +691,7 @@ mod tests {
         let ck = tiny();
         // Missing shard.
         let mut broken = ck.clone();
-        broken.shards.remove(&shard_key(1, 1));
+        broken.shards.remove(&shard_key(0, 1, 1));
         assert!(broken.validate().is_err());
         // Layer count mismatch.
         let mut broken = ck.clone();
@@ -527,13 +703,88 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip_on_disk() {
+    fn v1_documents_upgrade_to_replica_zero() {
+        // Demote tiny() to the v1 wire format by hand: strip the DP-era
+        // fields and keys, then parse — the upgrade path must land every
+        // shard on replica 0 with zero ViT layers.
+        let ck = tiny();
+        let Json::Obj(mut root) = ck.to_json().unwrap() else { unreachable!() };
+        root.insert("schema".into(), Json::Str(CKPT_SCHEMA_V1.into()));
+        root.remove("dp");
+        root.remove("stage_vit_layers");
+        let Some(Json::Obj(shards)) = root.remove("shards") else { unreachable!() };
+        let mut v1_shards = BTreeMap::new();
+        for (key, shard) in shards {
+            let Json::Obj(mut o) = shard else { unreachable!() };
+            o.remove("replica");
+            o.remove("vit_layers");
+            v1_shards.insert(key.strip_prefix("d0").unwrap().to_string(), Json::Obj(o));
+        }
+        root.insert("shards".into(), Json::Obj(v1_shards));
+        let Some(Json::Obj(rngs)) = root.remove("rng_states") else { unreachable!() };
+        let v1_rngs: BTreeMap<String, Json> = rngs
+            .into_iter()
+            .map(|(k, x)| (k.strip_prefix("d0").unwrap().to_string(), x))
+            .collect();
+        root.insert("rng_states".into(), Json::Obj(v1_rngs));
+
+        let text = Json::Obj(root).to_string();
+        let upgraded = Checkpoint::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(upgraded, ck);
+        // Re-serializing an upgraded snapshot writes v2.
+        let rewritten = upgraded.to_json().unwrap().to_string();
+        assert!(rewritten.contains(CKPT_SCHEMA));
+    }
+
+    #[test]
+    fn save_load_roundtrip_on_disk_leaves_no_tmp() {
         let dir = std::env::temp_dir().join(format!("stp-ckpt-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("ck.json");
         let ck = tiny();
         ck.save(&path).unwrap();
         assert_eq!(Checkpoint::load(&path).unwrap(), ck);
+        assert!(!dir.join("ck.json.tmp").exists(), "atomic save must clean up its tmp file");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_keeps_the_newest_snapshots_and_latest() {
+        let dir = std::env::temp_dir().join(format!("stp-ckpt-prune-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = tiny();
+        for step in [1usize, 2, 3, 4] {
+            ck.save(&dir.join(format!("ckpt-step-{step}.json"))).unwrap();
+        }
+        ck.save(&dir.join("latest.json")).unwrap();
+        let removed = prune_snapshots(&dir, 2).unwrap();
+        assert_eq!(removed, 2);
+        assert!(!dir.join("ckpt-step-1.json").exists());
+        assert!(!dir.join("ckpt-step-2.json").exists());
+        assert!(dir.join("ckpt-step-3.json").exists());
+        assert!(dir.join("ckpt-step-4.json").exists());
+        assert!(dir.join("latest.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_latest_falls_back_over_torn_files() {
+        let dir = std::env::temp_dir().join(format!("stp-ckpt-torn-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ck = tiny();
+        ck.step = 2;
+        ck.save(&dir.join("ckpt-step-2.json")).unwrap();
+        ck.step = 4;
+        ck.save(&dir.join("ckpt-step-4.json")).unwrap();
+        ck.save(&dir.join("latest.json")).unwrap();
+        // Healthy chain: latest.json wins.
+        assert_eq!(Checkpoint::load_latest(&dir).unwrap().step, 4);
+        // Tear latest.json and the newest snapshot mid-file: the scan
+        // must fall back to the previous complete snapshot.
+        let full = std::fs::read_to_string(dir.join("latest.json")).unwrap();
+        std::fs::write(dir.join("latest.json"), &full[..full.len() / 2]).unwrap();
+        std::fs::write(dir.join("ckpt-step-4.json"), &full[..full.len() / 3]).unwrap();
+        assert_eq!(Checkpoint::load_latest(&dir).unwrap().step, 2);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

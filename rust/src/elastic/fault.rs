@@ -11,7 +11,14 @@
 //!   and a `dead-rank` at step `k` halts the whole pipeline at the
 //!   step-`k` boundary — a consistent cut at which parameters equal the
 //!   post-step-`k-1` state and gradient accumulators are zero, which is
-//!   exactly what `stp-ckpt-v1` snapshots.
+//!   exactly what `stp-ckpt-v2` snapshots.
+//!
+//! Since the DP axis landed (DESIGN.md §14) every event also carries a
+//! `replica` coordinate: hand-written v1 scripts that omit the field
+//! parse as replica 0, so existing CI documents keep their meaning. The
+//! executor quarantines the replica a dead rank belongs to; only when
+//! the dying replica is the last one does the failure escalate to the
+//! pipeline re-split path.
 //!
 //! The fail-stop model is deliberate: real elastic runners (and the
 //! multi-controller design sketched in DESIGN.md §12) detect loss via
@@ -34,14 +41,15 @@ pub const FAULTS_SCHEMA: &str = "stp-faults-v1";
 /// One injected failure event.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FaultEvent {
-    /// A pipeline stage's device fails before executing `step`. The
-    /// simulator kills the device at `at_secs` into its iteration
-    /// instead (ops not yet *started* there never run).
-    DeadRank { step: usize, stage: usize, at_secs: f64 },
-    /// A stage computes `slowdown`× slower from `step` on (executor) /
-    /// from `from_secs` on (simulator). Wall-clock only — numerics are
-    /// untouched, so bit-determinism survives straggler injection.
-    Straggler { step: usize, stage: usize, slowdown: f64, from_secs: f64 },
+    /// A pipeline stage's device in `replica` fails before executing
+    /// `step`. The simulator kills the device at `at_secs` into its
+    /// iteration instead (ops not yet *started* there never run).
+    DeadRank { step: usize, stage: usize, replica: usize, at_secs: f64 },
+    /// A stage in `replica` computes `slowdown`× slower from `step` on
+    /// (executor) / from `from_secs` on (simulator). Wall-clock only —
+    /// numerics are untouched, so bit-determinism survives straggler
+    /// injection.
+    Straggler { step: usize, stage: usize, replica: usize, slowdown: f64, from_secs: f64 },
 }
 
 impl FaultEvent {
@@ -60,6 +68,15 @@ impl FaultEvent {
             FaultEvent::Straggler { step, .. } => step,
         }
     }
+
+    /// The data-parallel replica this event targets (0 when the script
+    /// predates the DP axis).
+    pub fn replica(&self) -> usize {
+        match *self {
+            FaultEvent::DeadRank { replica, .. } => replica,
+            FaultEvent::Straggler { replica, .. } => replica,
+        }
+    }
 }
 
 /// A deterministic, replayable failure script.
@@ -75,13 +92,20 @@ impl FaultPlan {
         FaultPlan { events: Vec::new() }
     }
 
-    /// A single dead-rank event: `stage` fails before executing `step`.
+    /// A single dead-rank event: `stage` of replica 0 fails before
+    /// executing `step`.
     pub fn dead_rank_at(step: usize, stage: usize) -> FaultPlan {
-        FaultPlan { events: vec![FaultEvent::DeadRank { step, stage, at_secs: 0.0 }] }
+        Self::dead_rank_in_replica(step, stage, 0)
     }
 
-    /// Seeded chaos preset: `n` events over `steps × stages`, roughly
-    /// one straggler per death, reproducible from the seed alone.
+    /// A single dead-rank event addressed at one replica of the DP grid.
+    pub fn dead_rank_in_replica(step: usize, stage: usize, replica: usize) -> FaultPlan {
+        FaultPlan { events: vec![FaultEvent::DeadRank { step, stage, replica, at_secs: 0.0 }] }
+    }
+
+    /// Seeded chaos preset: `n` events over `steps × stages` in replica
+    /// 0, roughly one straggler per death, reproducible from the seed
+    /// alone.
     pub fn seeded(seed: u64, n: usize, steps: usize, stages: usize) -> FaultPlan {
         let mut rng = Rng::for_purpose(seed, 0xFA, 0x17, 0);
         let events = (0..n)
@@ -89,11 +113,12 @@ impl FaultPlan {
                 let step = rng.below(steps.max(1));
                 let stage = rng.below(stages.max(1));
                 if rng.uniform() < 0.5 {
-                    FaultEvent::DeadRank { step, stage, at_secs: 0.0 }
+                    FaultEvent::DeadRank { step, stage, replica: 0, at_secs: 0.0 }
                 } else {
                     FaultEvent::Straggler {
                         step,
                         stage,
+                        replica: 0,
                         slowdown: 1.5 + 2.0 * rng.uniform(),
                         from_secs: 0.0,
                     }
@@ -107,28 +132,30 @@ impl FaultPlan {
         self.events.is_empty()
     }
 
-    /// Earliest dead-rank event in `[start, end)` as `(step, stage)` —
-    /// the executor's halt boundary for one segment.
-    pub fn first_death_in(&self, start: usize, end: usize) -> Option<(usize, usize)> {
+    /// Earliest dead-rank event in `[start, end)` as `(step, stage,
+    /// replica)` — the executor's halt boundary for one segment.
+    pub fn first_death_in(&self, start: usize, end: usize) -> Option<(usize, usize, usize)> {
         self.events
             .iter()
             .filter_map(|e| match *e {
-                FaultEvent::DeadRank { step, stage, .. } if (start..end).contains(&step) => {
-                    Some((step, stage))
+                FaultEvent::DeadRank { step, stage, replica, .. }
+                    if (start..end).contains(&step) =>
+                {
+                    Some((step, stage, replica))
                 }
                 _ => None,
             })
             .min()
     }
 
-    /// Combined slowdown factor for `stage` active at `step` (events
-    /// with `step' <= step` persist; 1.0 = healthy).
-    pub fn straggler_factor(&self, step: usize, stage: usize) -> f64 {
+    /// Combined slowdown factor for `stage` of `replica` active at
+    /// `step` (events with `step' <= step` persist; 1.0 = healthy).
+    pub fn straggler_factor(&self, step: usize, stage: usize, replica: usize) -> f64 {
         self.events
             .iter()
             .filter_map(|e| match *e {
-                FaultEvent::Straggler { step: s, stage: d, slowdown, .. }
-                    if d == stage && s <= step =>
+                FaultEvent::Straggler { step: s, stage: d, replica: q, slowdown, .. }
+                    if d == stage && q == replica && s <= step =>
                 {
                     Some(slowdown)
                 }
@@ -140,10 +167,25 @@ impl FaultPlan {
 
     /// The plan that remains after recovering from a halt at `step`:
     /// consumed events (step ≤ halt) are dropped so the resumed segment
-    /// does not re-fire them. Post-replan, surviving events address the
-    /// *new* stage numbering (documented in DESIGN.md §12).
+    /// does not re-fire them. Post-recovery, surviving events address
+    /// the *new* stage/replica numbering (documented in DESIGN.md §12
+    /// and §14).
     pub fn after(&self, step: usize) -> FaultPlan {
         FaultPlan { events: self.events.iter().filter(|e| e.step() > step).cloned().collect() }
+    }
+
+    /// Drop events that fell out of frame after a recovery reshaped the
+    /// grid (stage ≥ `pp` after a re-split, replica ≥ `dp` after a
+    /// shrink). Survivors address the new numbering.
+    pub fn retain_in_frame(&self, pp: usize, dp: usize) -> FaultPlan {
+        FaultPlan {
+            events: self
+                .events
+                .iter()
+                .filter(|e| e.stage() < pp && e.replica() < dp)
+                .cloned()
+                .collect(),
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -166,6 +208,34 @@ impl FaultPlan {
         Ok(())
     }
 
+    /// Reject events that can never fire on a `pp × dp` grid running
+    /// through step `end_step` (exclusive): a silently-dead fault script
+    /// is a test that always passes, so the executor surfaces the
+    /// mismatch before spawning a single thread.
+    pub fn validate_for(&self, pp: usize, dp: usize, end_step: usize) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            anyhow::ensure!(
+                e.stage() < pp,
+                "fault plan: event {i} targets stage {} but the run has {pp} stage(s) — \
+                 it can never fire",
+                e.stage()
+            );
+            anyhow::ensure!(
+                e.replica() < dp,
+                "fault plan: event {i} targets replica {} but the run has {dp} replica(s) — \
+                 it can never fire",
+                e.replica()
+            );
+            anyhow::ensure!(
+                e.step() < end_step,
+                "fault plan: event {i} fires at step {} but the run ends at step {end_step} — \
+                 it can never fire",
+                e.step()
+            );
+        }
+        Ok(())
+    }
+
     pub fn to_json(&self) -> Json {
         let events: Vec<Json> = self
             .events
@@ -173,16 +243,18 @@ impl FaultPlan {
             .map(|e| {
                 let mut o = BTreeMap::new();
                 match *e {
-                    FaultEvent::DeadRank { step, stage, at_secs } => {
+                    FaultEvent::DeadRank { step, stage, replica, at_secs } => {
                         o.insert("kind".into(), Json::Str("dead-rank".into()));
                         o.insert("step".into(), Json::Num(step as f64));
                         o.insert("stage".into(), Json::Num(stage as f64));
+                        o.insert("replica".into(), Json::Num(replica as f64));
                         o.insert("at_secs".into(), Json::Num(at_secs));
                     }
-                    FaultEvent::Straggler { step, stage, slowdown, from_secs } => {
+                    FaultEvent::Straggler { step, stage, replica, slowdown, from_secs } => {
                         o.insert("kind".into(), Json::Str("straggler".into()));
                         o.insert("step".into(), Json::Num(step as f64));
                         o.insert("stage".into(), Json::Num(stage as f64));
+                        o.insert("replica".into(), Json::Num(replica as f64));
                         o.insert("slowdown".into(), Json::Num(slowdown));
                         o.insert("from_secs".into(), Json::Num(from_secs));
                     }
@@ -198,7 +270,8 @@ impl FaultPlan {
 
     /// Strict parse: unknown schema, kinds or missing fields are hard
     /// errors (the plan-artifact idiom — a half-parsed fault script must
-    /// never drive a run).
+    /// never drive a run). `replica` is the one optional coordinate:
+    /// pre-DP scripts omit it and mean replica 0.
     pub fn from_json(v: &Json) -> Result<FaultPlan> {
         let schema = v
             .get("schema")
@@ -223,15 +296,18 @@ impl FaultPlan {
                 .get("kind")
                 .and_then(Json::as_str)
                 .ok_or_else(|| anyhow::anyhow!("fault plan: event {i}: missing 'kind'"))?;
+            let replica = e.get("replica").and_then(Json::as_usize).unwrap_or(0);
             match kind {
                 "dead-rank" => events.push(FaultEvent::DeadRank {
                     step: req("step")?,
                     stage: req("stage")?,
+                    replica,
                     at_secs: e.get("at_secs").and_then(Json::as_f64).unwrap_or(0.0),
                 }),
                 "straggler" => events.push(FaultEvent::Straggler {
                     step: req("step")?,
                     stage: req("stage")?,
+                    replica,
                     slowdown: e.get("slowdown").and_then(Json::as_f64).ok_or_else(|| {
                         anyhow::anyhow!("fault plan: event {i}: missing number 'slowdown'")
                     })?,
@@ -266,8 +342,14 @@ mod tests {
     fn roundtrips_through_json() {
         let p = FaultPlan {
             events: vec![
-                FaultEvent::DeadRank { step: 2, stage: 1, at_secs: 0.5 },
-                FaultEvent::Straggler { step: 0, stage: 0, slowdown: 3.0, from_secs: 0.1 },
+                FaultEvent::DeadRank { step: 2, stage: 1, replica: 1, at_secs: 0.5 },
+                FaultEvent::Straggler {
+                    step: 0,
+                    stage: 0,
+                    replica: 0,
+                    slowdown: 3.0,
+                    from_secs: 0.1,
+                },
             ],
         };
         let back = FaultPlan::from_json(&Json::parse(&p.to_json().to_string()).unwrap()).unwrap();
@@ -276,11 +358,13 @@ mod tests {
 
     #[test]
     fn hand_written_minimal_document_parses() {
-        // The CI heredoc format: sim-time fields are optional.
+        // The CI heredoc format: sim-time fields are optional, and a
+        // pre-DP script with no 'replica' coordinate means replica 0.
         let txt = r#"{"schema":"stp-faults-v1","events":[{"kind":"dead-rank","step":2,"stage":1}]}"#;
         let p = FaultPlan::from_json(&Json::parse(txt).unwrap()).unwrap();
-        assert_eq!(p.first_death_in(0, 10), Some((2, 1)));
+        assert_eq!(p.first_death_in(0, 10), Some((2, 1, 0)));
         assert_eq!(p.first_death_in(3, 10), None);
+        assert_eq!(p.events[0].replica(), 0);
     }
 
     #[test]
@@ -306,26 +390,62 @@ mod tests {
     fn straggler_factors_compose_and_persist() {
         let p = FaultPlan {
             events: vec![
-                FaultEvent::Straggler { step: 1, stage: 0, slowdown: 2.0, from_secs: 0.0 },
-                FaultEvent::Straggler { step: 3, stage: 0, slowdown: 1.5, from_secs: 0.0 },
+                FaultEvent::Straggler {
+                    step: 1,
+                    stage: 0,
+                    replica: 0,
+                    slowdown: 2.0,
+                    from_secs: 0.0,
+                },
+                FaultEvent::Straggler {
+                    step: 3,
+                    stage: 0,
+                    replica: 0,
+                    slowdown: 1.5,
+                    from_secs: 0.0,
+                },
             ],
         };
-        assert_eq!(p.straggler_factor(0, 0), 1.0);
-        assert_eq!(p.straggler_factor(1, 0), 2.0);
-        assert_eq!(p.straggler_factor(4, 0), 3.0);
-        assert_eq!(p.straggler_factor(4, 1), 1.0);
+        assert_eq!(p.straggler_factor(0, 0, 0), 1.0);
+        assert_eq!(p.straggler_factor(1, 0, 0), 2.0);
+        assert_eq!(p.straggler_factor(4, 0, 0), 3.0);
+        assert_eq!(p.straggler_factor(4, 1, 0), 1.0);
+        assert_eq!(p.straggler_factor(4, 0, 1), 1.0);
     }
 
     #[test]
     fn after_drops_consumed_events() {
         let p = FaultPlan {
             events: vec![
-                FaultEvent::DeadRank { step: 2, stage: 1, at_secs: 0.0 },
-                FaultEvent::DeadRank { step: 5, stage: 0, at_secs: 0.0 },
+                FaultEvent::DeadRank { step: 2, stage: 1, replica: 0, at_secs: 0.0 },
+                FaultEvent::DeadRank { step: 5, stage: 0, replica: 0, at_secs: 0.0 },
             ],
         };
         let rest = p.after(2);
         assert_eq!(rest.events.len(), 1);
-        assert_eq!(rest.first_death_in(0, 10), Some((5, 0)));
+        assert_eq!(rest.first_death_in(0, 10), Some((5, 0, 0)));
+    }
+
+    #[test]
+    fn validate_for_rejects_unfireable_events() {
+        let ok = FaultPlan::dead_rank_in_replica(2, 1, 1);
+        ok.validate_for(2, 2, 4).unwrap();
+        assert!(FaultPlan::dead_rank_at(2, 5).validate_for(2, 1, 4).is_err());
+        assert!(FaultPlan::dead_rank_in_replica(2, 0, 3).validate_for(2, 2, 4).is_err());
+        assert!(FaultPlan::dead_rank_at(4, 0).validate_for(2, 1, 4).is_err());
+    }
+
+    #[test]
+    fn retain_in_frame_drops_out_of_grid_events() {
+        let p = FaultPlan {
+            events: vec![
+                FaultEvent::DeadRank { step: 3, stage: 1, replica: 0, at_secs: 0.0 },
+                FaultEvent::DeadRank { step: 4, stage: 3, replica: 0, at_secs: 0.0 },
+                FaultEvent::DeadRank { step: 5, stage: 0, replica: 1, at_secs: 0.0 },
+            ],
+        };
+        let kept = p.retain_in_frame(2, 1);
+        assert_eq!(kept.events.len(), 1);
+        assert_eq!(kept.first_death_in(0, 10), Some((3, 1, 0)));
     }
 }

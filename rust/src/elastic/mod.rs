@@ -5,16 +5,20 @@
 //! loop. The three braided pieces:
 //!
 //! - [`fault`] — a deterministic, seeded [`FaultPlan`] (dead-rank and
-//!   straggler events; JSON `stp-faults-v1`) injected into both the
-//!   event-driven simulator and the virtual executor.
-//! - [`checkpoint`] — versioned `stp-ckpt-v1` snapshots of the engine
-//!   state, with save → restore → train proven *bit-identical* to an
+//!   straggler events with a DP replica coordinate; JSON `stp-faults-v1`)
+//!   injected into both the event-driven simulator and the virtual
+//!   executor.
+//! - [`checkpoint`] — versioned, crash-safe `stp-ckpt-v2` snapshots of
+//!   the engine state (atomic tmp+rename writes, torn-file fallback),
+//!   with save → restore → train proven *bit-identical* to an
 //!   uninterrupted run (`tests/elastic.rs`).
-//! - [`replan`] — on device loss, shrink the [`ClusterSpec`], re-invoke
-//!   the planner's beam search under the fixed global batch, migrate the
-//!   checkpoint onto the new stage split and resume.
+//! - [`replan`] — on device loss, quarantine the dying replica while
+//!   `dp > 1` ([`shrink_dp_checkpoint`]); only the last replica's loss
+//!   shrinks the [`ClusterSpec`], re-invokes the planner's beam search
+//!   under the fixed global batch and migrates the checkpoint onto the
+//!   new stage split.
 //!
-//! [`run_elastic`] is the driver state machine:
+//! [`run_elastic`] is the driver state machine (DESIGN.md §14):
 //!
 //! ```text
 //!   TRAIN ──(segment completes)──────────────────────────▶ DONE
@@ -22,8 +26,9 @@
 //!     └─(dead rank at step k: halt at the step-k cut,
 //!        snapshot written)
 //!          │
-//!          ├─ replan off: RESTORE(ckpt) ────────────────▶ TRAIN
-//!          └─ replan on:  SHRINK ▶ RE-SEARCH ▶ MIGRATE ──▶ TRAIN
+//!          ├─ dp > 1:     QUARANTINE replica ▶ SHRINK-DP ─▶ TRAIN
+//!          ├─ replan off: RESTORE(ckpt) ──────────────────▶ TRAIN
+//!          └─ replan on:  SHRINK ▶ RE-SEARCH ▶ MIGRATE ───▶ TRAIN
 //! ```
 //!
 //! Every transition is deterministic, so an elastic run is replayable
@@ -33,9 +38,13 @@ pub mod checkpoint;
 pub mod fault;
 pub mod replan;
 
-pub use checkpoint::{rng_key, shard_key, Checkpoint, ChunkShard, CKPT_SCHEMA};
+pub use checkpoint::{
+    prune_snapshots, rng_key, shard_key, Checkpoint, ChunkShard, CKPT_SCHEMA, CKPT_SCHEMA_V1,
+};
 pub use fault::{FaultEvent, FaultPlan, FAULTS_SCHEMA};
-pub use replan::{migrate_checkpoint, replan_after_loss, shrink_cluster};
+pub use replan::{
+    migrate_checkpoint, replan_after_loss, shrink_cluster, shrink_dp_checkpoint, shrink_dp_plan,
+};
 
 use crate::cluster::ClusterSpec;
 use crate::exec::{train, RunReport, StepStat, TrainConfig};
@@ -69,9 +78,13 @@ pub struct ElasticConfig {
 pub struct ElasticReport {
     /// One [`RunReport`] per segment, in order.
     pub segments: Vec<RunReport>,
-    /// The artifacts adopted at each replan (empty when replanning is
-    /// off or no device died).
+    /// The artifacts adopted at each pipeline re-split (empty when
+    /// replanning is off, no device died, or every loss was absorbed by
+    /// a DP shrink).
     pub replanned: Vec<PlanArtifact>,
+    /// One human-readable marker per recovery, in order — "shrink-dp
+    /// (…)", "re-split (…)" or "restore (…)" (CI greps these).
+    pub recoveries: Vec<String>,
     /// The surviving pool after all losses (replanning runs only).
     pub cluster: Option<ClusterSpec>,
     /// Concatenated per-step stats across segments — the continuous
@@ -89,9 +102,13 @@ impl ElasticReport {
 }
 
 /// Run training to the configured step target, surviving every injected
-/// dead-rank fault: each death halts the segment at a step-boundary cut,
-/// the snapshot is reloaded (after replan + migration when enabled) and
-/// training resumes until the target is reached.
+/// dead-rank fault: each death halts the segment at a step-boundary cut
+/// and a snapshot is written. Recovery is tiered: while the run has
+/// `dp > 1`, the dying replica is quarantined and the survivors continue
+/// at the widest batch-preserving DP width (no re-split); only the last
+/// replica's loss escalates to restore-in-place (replanning off) or
+/// shrink → re-search → migrate (replanning on). Training resumes until
+/// the target step is reached.
 pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
     let mut seg_cfg = cfg.train.clone();
     let start = seg_cfg.resume.as_ref().map(|c| c.step).unwrap_or(0);
@@ -105,6 +122,7 @@ pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
     let mut cluster = cfg.replan.as_ref().map(|r| r.cluster.clone());
     let mut segments: Vec<RunReport> = Vec::new();
     let mut replanned: Vec<PlanArtifact> = Vec::new();
+    let mut recoveries: Vec<String> = Vec::new();
     // Each segment consumes at least one fault event, so this bounds the
     // loop without ever cutting a legitimate run short.
     let max_segments = seg_cfg.faults.as_ref().map(|f| f.events.len()).unwrap_or(0) + 1;
@@ -112,6 +130,7 @@ pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
         let report = train(&seg_cfg)?;
         let halt = report.interrupted_at;
         let stage = report.fault_stage;
+        let replica = report.fault_replica;
         let ckpt_path = report.checkpoint_path.clone();
         segments.push(report);
         let Some(halt) = halt else { break };
@@ -120,7 +139,22 @@ pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
             anyhow::anyhow!("elastic: fault halted step {halt} but no checkpoint was written")
         })?;
         let mut ck = Checkpoint::load(&path)?;
-        if let Some(rc) = &cfg.replan {
+        if ck.dp > 1 {
+            // Tier 1: quarantine the dying replica, keep the pipeline.
+            let dead = replica.expect("interrupted segments report the dead replica");
+            let (old_dp, old_mb) = (ck.dp, ck.n_mb);
+            ck = shrink_dp_checkpoint(&ck, dead)?;
+            recoveries.push(format!(
+                "shrink-dp (step {halt}: replica {dead} quarantined; dp {old_dp} -> {}, \
+                 n_mb {old_mb} -> {})",
+                ck.dp, ck.n_mb
+            ));
+            seg_cfg.dp = Some(ck.dp);
+            seg_cfg.n_mb = ck.n_mb;
+            if let Some(p) = &seg_cfg.plan {
+                seg_cfg.plan = Some(shrink_dp_plan(p, ck.dp, ck.n_mb));
+            }
+        } else if let Some(rc) = &cfg.replan {
             let stage = stage.expect("interrupted segments report the dead stage");
             let pool = cluster.as_ref().expect("replan context carries the pool");
             let old = seg_cfg.plan.as_ref().ok_or_else(|| {
@@ -137,20 +171,30 @@ pub fn run_elastic(cfg: &ElasticConfig) -> Result<ElasticReport> {
                 rc.beam_width,
             )?;
             ck = migrate_checkpoint(&ck, &new_plan)?;
+            recoveries.push(format!(
+                "re-split (step {halt}: stage {stage} lost; pp {} -> {})",
+                old.pp, new_plan.pp
+            ));
             // The migrated dims carry the new (pp, vpp); pin them so the
             // engine cannot re-derive a mismatching grid.
             seg_cfg.dims = Some(ck.dims.clone());
             seg_cfg.plan = Some(new_plan.clone());
             replanned.push(new_plan);
             cluster = Some(shrunk);
+        } else {
+            recoveries.push(format!("restore (step {halt}: same shape)"));
         }
-        seg_cfg.faults = seg_cfg.faults.as_ref().map(|f| f.after(halt));
+        // Consumed events go; so do events the reshaped grid can no
+        // longer host (a quarantined replica, a folded stage) — the
+        // next segment's validation would otherwise reject them.
+        seg_cfg.faults =
+            seg_cfg.faults.as_ref().map(|f| f.after(halt).retain_in_frame(ck.pp, ck.dp));
         seg_cfg.steps = target_end - halt;
         seg_cfg.resume = Some(ck);
     }
 
     let steps = segments.iter().flat_map(|r| r.steps.iter().cloned()).collect();
-    Ok(ElasticReport { segments, replanned, cluster, steps })
+    Ok(ElasticReport { segments, replanned, recoveries, cluster, steps })
 }
 
 #[cfg(test)]

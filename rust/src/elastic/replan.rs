@@ -1,19 +1,29 @@
-//! Mid-run replanning: device loss → shrink the pool → re-search → migrate.
+//! Mid-run replanning: device loss → shrink → (maybe) re-search → migrate.
 //!
-//! When a dead-rank fault halts a segment, the elastic driver (1) shrinks
-//! the [`ClusterSpec`] by the node that hosted the dead stage
-//! ([`shrink_cluster`]), (2) re-invokes the planner's beam search on the
-//! surviving pool under the **fixed global batch** (`n_mb` is pinned —
-//! elasticity must not silently change the optimization trajectory's
-//! batch size) and (3) re-buckets the last checkpoint's parameter shards
-//! across the new plan's stage split ([`migrate_checkpoint`]).
+//! Recovery is tiered (DESIGN.md §14). While `dp > 1`, losing a rank
+//! quarantines its whole replica: [`shrink_dp_checkpoint`] drops to the
+//! widest surviving DP width that divides the **fixed global batch**
+//! (`dp · n_mb` is pinned — elasticity must not silently change the
+//! optimization trajectory's batch size), rescaling the per-replica
+//! microbatch count to compensate. No re-search, no re-split: replica
+//! weights are bit-identical at step boundaries, so the survivor's
+//! shards simply clone across the shrunk grid.
+//!
+//! Only when the *last* replica loses a rank does the pipeline itself
+//! reshape: the driver (1) shrinks the [`ClusterSpec`] by the node that
+//! hosted the dead stage ([`shrink_cluster`]), (2) re-invokes the
+//! planner's beam search on the surviving pool under the same pinned
+//! batch and (3) re-buckets the checkpoint's parameter shards across the
+//! new plan's stage split ([`migrate_checkpoint`]).
 //!
 //! One invariant makes migration a pure re-bucketing instead of a
 //! resharding: **TP width is fixed across replans**. Shards are
 //! Megatron-partitioned by `(tp_rank, dims)` only — the chunk a layer
 //! lives in never affects its rank slice — so moving layers between
-//! chunks is a move of whole `LayerParams`, bit-exact by construction.
-//! The replanner therefore only considers candidates with the old `tp`.
+//! chunks is a move of whole `LayerParams`, bit-exact by construction
+//! (ViT prefixes re-bucket the same way, along their own chunk-major
+//! order). The replanner therefore only considers candidates with the
+//! old `tp`.
 
 use crate::cluster::ClusterSpec;
 use crate::plan::{plan, PlanArtifact, PlanModel, PlanQuery, SearchMode};
@@ -117,12 +127,15 @@ pub fn replan_after_loss(
     Ok((shrunk, PlanArtifact::for_evaluation(&ctx, e)))
 }
 
-/// Re-bucket a checkpoint's shards onto `new`'s stage split. The global
-/// layer order is chunk-index-major, so per rank this concatenates the
-/// old chunks' layer lists and re-splits them at `new.stage_layers`'
-/// prefix sums; the embedding moves to the new chunk 0 and the head to
-/// the new last chunk. RNG stream positions are dropped (stages are
-/// renumbered — device threads re-derive and fast-forward on resume).
+/// Re-bucket a checkpoint's shards onto `new`'s stage split, replica by
+/// replica. The global layer order is chunk-index-major, so per
+/// (replica, rank) this concatenates the old chunks' layer lists and
+/// re-splits them at `new.stage_layers`' prefix sums — and likewise the
+/// ViT prefixes at `new.stage_vit_layers`' (the two stacks re-bucket
+/// independently along their own chunk-major orders). The embedding
+/// moves to the new chunk 0 and the head to the new last chunk. RNG
+/// stream positions are dropped (stages are renumbered — device threads
+/// re-derive and fast-forward on resume).
 pub fn migrate_checkpoint(ck: &Checkpoint, new: &PlanArtifact) -> Result<Checkpoint> {
     anyhow::ensure!(
         new.tp == ck.tp,
@@ -137,39 +150,52 @@ pub fn migrate_checkpoint(ck: &Checkpoint, new: &PlanArtifact) -> Result<Checkpo
         ck.total_layers()
     );
     anyhow::ensure!(
-        new.total_vit_layers() == 0,
-        "migrate: ViT chunks are not supported by the virtual executor"
+        new.total_vit_layers() == ck.total_vit_layers(),
+        "migrate: plan carries {} ViT layers, checkpoint holds {}",
+        new.total_vit_layers(),
+        ck.total_vit_layers()
     );
     ck.validate()?;
 
     let old_chunks = ck.n_chunks();
     let new_chunks = new.n_chunks();
     let mut shards = std::collections::BTreeMap::new();
-    for rank in 0..ck.tp {
-        let mut flat: Vec<crate::exec::LayerParams> = Vec::with_capacity(ck.total_layers());
-        for c in 0..old_chunks {
-            let s = ck
-                .shard(c, rank)
-                .ok_or_else(|| anyhow::anyhow!("migrate: missing shard c{c}r{rank}"))?;
-            flat.extend(s.layers.iter().cloned());
-        }
-        let emb = ck.shard(0, rank).and_then(|s| s.emb.clone());
-        let head = ck.shard(old_chunks - 1, rank).and_then(|s| s.head.clone());
+    for q in 0..ck.dp {
+        for rank in 0..ck.tp {
+            let mut flat: Vec<crate::exec::LayerParams> = Vec::with_capacity(ck.total_layers());
+            let mut flat_vit: Vec<crate::exec::LayerParams> =
+                Vec::with_capacity(ck.total_vit_layers());
+            for c in 0..old_chunks {
+                let s = ck
+                    .shard(q, c, rank)
+                    .ok_or_else(|| anyhow::anyhow!("migrate: missing shard d{q}c{c}r{rank}"))?;
+                flat_vit.extend(s.vit_layers.iter().cloned());
+                flat.extend(s.layers.iter().cloned());
+            }
+            let emb = ck.shard(q, 0, rank).and_then(|s| s.emb.clone());
+            let head = ck.shard(q, old_chunks - 1, rank).and_then(|s| s.head.clone());
 
-        let mut taken = 0;
-        for (c, &n) in new.stage_layers.iter().enumerate() {
-            let layers = flat[taken..taken + n].to_vec();
-            taken += n;
-            shards.insert(
-                shard_key(c, rank),
-                ChunkShard {
-                    chunk: c,
-                    rank,
-                    layers,
-                    emb: if c == 0 { emb.clone() } else { None },
-                    head: if c == new_chunks - 1 { head.clone() } else { None },
-                },
-            );
+            let (mut taken, mut taken_vit) = (0, 0);
+            for c in 0..new_chunks {
+                let n = new.stage_layers[c];
+                let nv = new.stage_vit_layers[c];
+                let layers = flat[taken..taken + n].to_vec();
+                let vit_layers = flat_vit[taken_vit..taken_vit + nv].to_vec();
+                taken += n;
+                taken_vit += nv;
+                shards.insert(
+                    shard_key(q, c, rank),
+                    ChunkShard {
+                        replica: q,
+                        chunk: c,
+                        rank,
+                        vit_layers,
+                        layers,
+                        emb: if c == 0 { emb.clone() } else { None },
+                        head: if c == new_chunks - 1 { head.clone() } else { None },
+                    },
+                );
+            }
         }
     }
 
@@ -183,9 +209,11 @@ pub fn migrate_checkpoint(ck: &Checkpoint, new: &PlanArtifact) -> Result<Checkpo
         schedule: new.kind.name().to_string(),
         tp: ck.tp,
         pp: new.pp,
+        dp: ck.dp,
         vpp: new.vpp,
         dims,
         stage_layers: new.stage_layers.clone(),
+        stage_vit_layers: new.stage_vit_layers.clone(),
         data_cursor: ck.data_cursor,
         optimizer: ck.optimizer.clone(),
         rng_states: std::collections::BTreeMap::new(),
@@ -193,6 +221,67 @@ pub fn migrate_checkpoint(ck: &Checkpoint, new: &PlanArtifact) -> Result<Checkpo
     };
     migrated.validate()?;
     Ok(migrated)
+}
+
+/// Quarantine `dead_replica` and shrink to the widest data-parallel
+/// width that both fits the survivors and divides the fixed global batch
+/// `dp · n_mb` (the per-replica microbatch count rescales to keep the
+/// product — and therefore the optimization trajectory — unchanged).
+///
+/// The DP gradient all-reduce hands every replica the identical summed
+/// update each step, so replica weights are bit-identical at every step
+/// boundary: shrinking is cloning the lowest surviving replica's shards
+/// across the new grid — no arithmetic touches a tensor. RNG stream
+/// positions are dropped (replicas are renumbered — device threads
+/// re-derive and fast-forward on resume).
+pub fn shrink_dp_checkpoint(ck: &Checkpoint, dead_replica: usize) -> Result<Checkpoint> {
+    anyhow::ensure!(
+        ck.dp > 1,
+        "shrink-dp: dp 1 has no replica to quarantine (that loss needs a pipeline re-split)"
+    );
+    anyhow::ensure!(
+        dead_replica < ck.dp,
+        "shrink-dp: dead replica {dead_replica} out of range (dp {})",
+        ck.dp
+    );
+    ck.validate()?;
+
+    let global = ck.dp * ck.n_mb;
+    // dp' = 1 always divides, so the search cannot come up empty.
+    let dp = (1..ck.dp).rev().find(|d| global % d == 0).unwrap_or(1);
+    let n_mb = global / dp;
+    let survivor = usize::from(dead_replica == 0);
+    let mut shards = std::collections::BTreeMap::new();
+    for q in 0..dp {
+        for c in 0..ck.n_chunks() {
+            for r in 0..ck.tp {
+                let s = ck.shard(survivor, c, r).ok_or_else(|| {
+                    anyhow::anyhow!("shrink-dp: missing shard d{survivor}c{c}r{r}")
+                })?;
+                shards.insert(shard_key(q, c, r), ChunkShard { replica: q, ..s.clone() });
+            }
+        }
+    }
+    let shrunk = Checkpoint {
+        n_mb,
+        dp,
+        rng_states: std::collections::BTreeMap::new(),
+        shards,
+        ..ck.clone()
+    };
+    shrunk.validate()?;
+    Ok(shrunk)
+}
+
+/// The plan artifact for continuing at a shrunk DP width: the same
+/// schedule, topology and layer split — only the replica count and the
+/// per-replica microbatch count change (their product is pinned, which
+/// [`shrink_dp_checkpoint`] guarantees by construction).
+pub fn shrink_dp_plan(old: &PlanArtifact, dp: usize, n_mb: usize) -> PlanArtifact {
+    let mut out = old.clone();
+    out.dp = dp;
+    out.n_mb = n_mb;
+    out
 }
 
 #[cfg(test)]
@@ -233,7 +322,7 @@ mod tests {
         assert!(shrink_cluster(&pool, 9).is_err());
     }
 
-    fn tiny_ckpt(stage_layers: &[usize], tp: usize) -> Checkpoint {
+    fn tiny_ckpt_dp(stage_layers: &[usize], tp: usize, dp: usize) -> Checkpoint {
         let n_chunks = stage_layers.len();
         let dims = ManifestDims {
             vocab: 32,
@@ -249,27 +338,32 @@ mod tests {
             vpp: 1,
         };
         let mut shards = BTreeMap::new();
-        for c in 0..n_chunks {
-            for r in 0..tp {
-                let p = ChunkParams::init(
-                    &dims,
-                    c,
-                    r,
-                    stage_layers[c],
-                    c == 0,
-                    c == n_chunks - 1,
-                    7,
-                );
-                shards.insert(
-                    shard_key(c, r),
-                    ChunkShard {
-                        chunk: c,
-                        rank: r,
-                        layers: p.layers,
-                        emb: p.emb,
-                        head: p.head,
-                    },
-                );
+        for q in 0..dp {
+            for c in 0..n_chunks {
+                for r in 0..tp {
+                    let p = ChunkParams::init(
+                        &dims,
+                        c,
+                        r,
+                        0,
+                        stage_layers[c],
+                        c == 0,
+                        c == n_chunks - 1,
+                        7,
+                    );
+                    shards.insert(
+                        shard_key(q, c, r),
+                        ChunkShard {
+                            replica: q,
+                            chunk: c,
+                            rank: r,
+                            vit_layers: Vec::new(),
+                            layers: p.layers,
+                            emb: p.emb,
+                            head: p.head,
+                        },
+                    );
+                }
             }
         }
         Checkpoint {
@@ -279,14 +373,20 @@ mod tests {
             schedule: "stp".into(),
             tp,
             pp: n_chunks,
+            dp,
             vpp: 1,
             dims,
             stage_layers: stage_layers.to_vec(),
+            stage_vit_layers: vec![0; n_chunks],
             data_cursor: 2,
             optimizer: "sgd".into(),
             rng_states: BTreeMap::new(),
             shards,
         }
+    }
+
+    fn tiny_ckpt(stage_layers: &[usize], tp: usize) -> Checkpoint {
+        tiny_ckpt_dp(stage_layers, tp, 1)
     }
 
     fn artifact(tp: usize, pp: usize, vpp: usize, stage_layers: Vec<usize>) -> PlanArtifact {
@@ -320,13 +420,13 @@ mod tests {
         let ck = tiny_ckpt(&[2, 2], 2);
         let m = migrate_checkpoint(&ck, &artifact(2, 2, 1, vec![3, 1])).unwrap();
         for r in 0..2 {
-            let new0 = &m.shard(0, r).unwrap().layers;
+            let new0 = &m.shard(0, 0, r).unwrap().layers;
             assert_eq!(new0.len(), 3);
-            assert_eq!(new0[2], ck.shard(1, r).unwrap().layers[0]);
-            assert_eq!(new0[0], ck.shard(0, r).unwrap().layers[0]);
+            assert_eq!(new0[2], ck.shard(0, 1, r).unwrap().layers[0]);
+            assert_eq!(new0[0], ck.shard(0, 0, r).unwrap().layers[0]);
             // Endpoints rode along to the new first/last chunks.
-            assert_eq!(m.shard(0, r).unwrap().emb, ck.shard(0, r).unwrap().emb);
-            assert_eq!(m.shard(1, r).unwrap().head, ck.shard(1, r).unwrap().head);
+            assert_eq!(m.shard(0, 0, r).unwrap().emb, ck.shard(0, 0, r).unwrap().emb);
+            assert_eq!(m.shard(0, 1, r).unwrap().head, ck.shard(0, 1, r).unwrap().head);
         }
         assert_eq!(m.step, ck.step);
         assert!(m.rng_states.is_empty(), "stage renumbering invalidates RNG keys");
@@ -339,7 +439,7 @@ mod tests {
         let ck = tiny_ckpt(&[1, 1], 2);
         let m = migrate_checkpoint(&ck, &artifact(2, 1, 1, vec![2])).unwrap();
         for r in 0..2 {
-            let s = m.shard(0, r).unwrap();
+            let s = m.shard(0, 0, r).unwrap();
             assert_eq!(s.layers.len(), 2);
             assert!(s.emb.is_some() && s.head.is_some());
         }
@@ -405,14 +505,23 @@ mod tests {
                     &dims,
                     c,
                     r,
+                    0,
                     a.stage_layers[c],
                     c == 0,
                     c == a.n_chunks() - 1,
                     7,
                 );
                 shards.insert(
-                    shard_key(c, r),
-                    ChunkShard { chunk: c, rank: r, layers: p.layers, emb: p.emb, head: p.head },
+                    shard_key(0, c, r),
+                    ChunkShard {
+                        replica: 0,
+                        chunk: c,
+                        rank: r,
+                        vit_layers: Vec::new(),
+                        layers: p.layers,
+                        emb: p.emb,
+                        head: p.head,
+                    },
                 );
             }
         }
@@ -420,8 +529,50 @@ mod tests {
         ck.pp = a.pp;
         ck.vpp = a.vpp;
         ck.stage_layers = a.stage_layers.clone();
+        ck.stage_vit_layers = vec![0; a.n_chunks()];
         ck.shards = shards;
         ck.validate().unwrap();
         ck
+    }
+
+    #[test]
+    fn shrink_dp_clones_the_survivor_and_preserves_the_global_batch() {
+        // dp=2 × n_mb=4 → dp=1 × n_mb=8 after replica 1 dies.
+        let ck = tiny_ckpt_dp(&[1, 1], 2, 2);
+        let s = shrink_dp_checkpoint(&ck, 1).unwrap();
+        assert_eq!((s.dp, s.n_mb), (1, 8));
+        assert_eq!(s.dp * s.n_mb, ck.dp * ck.n_mb, "global batch is pinned");
+        for c in 0..2 {
+            for r in 0..2 {
+                let got = s.shard(0, c, r).unwrap();
+                let want = ck.shard(0, c, r).unwrap();
+                assert_eq!(got.layers, want.layers);
+                assert_eq!(got.emb, want.emb);
+                assert_eq!(got.head, want.head);
+            }
+        }
+        assert!(s.rng_states.is_empty(), "replica renumbering invalidates RNG keys");
+        s.validate().unwrap();
+
+        // Killing replica 0 clones from the lowest survivor (replica 1).
+        let s0 = shrink_dp_checkpoint(&ck, 0).unwrap();
+        assert_eq!(s0.shard(0, 0, 0).unwrap().layers, ck.shard(1, 0, 0).unwrap().layers);
+
+        // dp=1 is pipeline-resplit territory; off-grid replicas rejected.
+        assert!(shrink_dp_checkpoint(&s, 0).is_err());
+        assert!(shrink_dp_checkpoint(&ck, 2).is_err());
+
+        // dp=3 × n_mb=4: the widest width under 3 dividing 12 is 2, so
+        // one replica loss only costs one replica.
+        let ck3 = tiny_ckpt_dp(&[1, 1], 1, 3);
+        let s3 = shrink_dp_checkpoint(&ck3, 2).unwrap();
+        assert_eq!((s3.dp, s3.n_mb), (2, 6));
+
+        // And the plan rides along with only (dp, n_mb) changed.
+        let a = artifact(2, 2, 1, vec![1, 1]);
+        let shrunk_plan = shrink_dp_plan(&a, 1, 8);
+        assert_eq!((shrunk_plan.dp, shrunk_plan.n_mb), (1, 8));
+        assert_eq!(shrunk_plan.stage_layers, a.stage_layers);
+        assert_eq!(shrunk_plan.kind, a.kind);
     }
 }

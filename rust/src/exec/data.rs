@@ -8,6 +8,20 @@
 
 use super::rng::Rng;
 
+/// Global microbatch id for replica `replica`'s local microbatch `mb`
+/// when every replica runs `n_mb` microbatches per step.
+///
+/// Data-parallel replicas partition the fixed global batch
+/// `dp · n_mb · mb_size` contiguously: replica q consumes global ids
+/// `q·n_mb .. (q+1)·n_mb`. Because the corpus keys batches by the
+/// global id (not by replica), shrinking `dp` and rescaling `n_mb`
+/// under the same product re-covers exactly the same sample set — the
+/// invariant the elastic shrink-dp recovery relies on (DESIGN.md §14).
+/// At `dp = 1` this is the identity, preserving pre-DP batch streams.
+pub fn global_mb_index(replica: usize, n_mb: usize, mb: usize) -> usize {
+    replica * n_mb + mb
+}
+
 /// Deterministic bigram corpus generator.
 pub struct Corpus {
     vocab: usize,
@@ -91,6 +105,17 @@ mod tests {
             .count();
         let frac = follows as f64 / tok.len() as f64;
         assert!(frac > 0.8, "only {frac:.2} follow the bigram rule");
+    }
+
+    #[test]
+    fn global_ids_cover_the_batch_once_at_any_dp_split() {
+        // dp=2 × n_mb=4 and dp=1 × n_mb=8 enumerate the same global ids.
+        let mut wide: Vec<usize> = (0..2)
+            .flat_map(|q| (0..4).map(move |j| global_mb_index(q, 4, j)))
+            .collect();
+        wide.sort_unstable();
+        let narrow: Vec<usize> = (0..8).map(|j| global_mb_index(0, 8, j)).collect();
+        assert_eq!(wide, narrow);
     }
 
     #[test]

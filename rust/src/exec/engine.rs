@@ -2,11 +2,15 @@
 //! [`Backend`] with genuine TP All-Reduce and pipeline P2P between
 //! threads.
 //!
-//! One OS thread per (pp stage, tp rank). Every TP rank of a stage walks
-//! the same per-device op list (collectives stay aligned, the NCCL
-//! contract); cross-stage edges are bounded channels; the braided blocks'
-//! TP boundary is exactly where [`crate::comm::TpGroup::all_reduce`] runs,
-//! so the executor validates the paper's Eq. 1–2 numerics end-to-end.
+//! One OS thread per (dp replica, pp stage, tp rank). Every TP rank of a
+//! stage walks the same per-device op list (collectives stay aligned, the
+//! NCCL contract); cross-stage edges are bounded channels per replica; the
+//! braided blocks' TP boundary is exactly where
+//! [`crate::comm::TpGroup::all_reduce`] runs, so the executor validates
+//! the paper's Eq. 1–2 numerics end-to-end. DP replicas each walk their
+//! own copy of the compiled schedule over a disjoint shard of the fixed
+//! global batch and meet at `optimizer_step`'s gradient all-reduce
+//! (replica-index summation order — bit-deterministic, DESIGN.md §14).
 //!
 //! The op walk consumes [`crate::schedule::CompiledSchedule`] — the same
 //! lowered IR the event-driven simulator replays — so sim and exec agree
@@ -29,6 +33,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::backend::{make_backend, virtual_dims_scaled, Backend, BackendKind, KernelPath};
+use super::data::global_mb_index;
 use super::rng::Rng;
 use super::{ChunkParams, Corpus, LayerGrads};
 use crate::cluster::{partition_llm, StagePlan, Topology};
@@ -53,8 +58,13 @@ pub struct TrainConfig {
     pub artifacts_dir: PathBuf,
     /// Schedule to build when no plan artifact is given.
     pub schedule: ScheduleKind,
-    /// Microbatches per optimizer step (overridden by a plan artifact).
+    /// Microbatches per replica per optimizer step (overridden by a
+    /// plan artifact).
     pub n_mb: usize,
+    /// Data-parallel replica count. `None` follows the plan artifact's
+    /// `dp` (1 without a plan); `Some(d)` overrides it — dp never
+    /// changes the per-replica schedule, only how many copies walk it.
+    pub dp: Option<usize>,
     pub steps: usize,
     pub lr: f32,
     pub seed: u64,
@@ -74,9 +84,13 @@ pub struct TrainConfig {
     /// that step's boundary (a consistent cut — no step is half-applied);
     /// stragglers stretch wall-clock at op boundaries, numerics untouched.
     pub faults: Option<FaultPlan>,
-    /// Write an `stp-ckpt-v1` snapshot here when the segment ends,
+    /// Write an `stp-ckpt-v2` snapshot here when the segment ends,
     /// whether it ran to completion or halted at a fault.
     pub checkpoint_dir: Option<PathBuf>,
+    /// Keep only the newest K `ckpt-step-N.json` snapshots after a
+    /// successful write (`latest.json` is never pruned). `None`: keep
+    /// all.
+    pub keep_checkpoints: Option<usize>,
     /// Resume from this snapshot instead of initializing at step 0.
     pub resume: Option<Checkpoint>,
     /// GEMM worker-pool threads per device thread (virtual backend,
@@ -95,6 +109,7 @@ impl TrainConfig {
             artifacts_dir: PathBuf::from("artifacts/e2e"),
             schedule: ScheduleKind::Stp,
             n_mb: 4,
+            dp: None,
             steps: 4,
             lr: 0.1,
             seed: 42,
@@ -104,6 +119,7 @@ impl TrainConfig {
             plan: None,
             faults: None,
             checkpoint_dir: None,
+            keep_checkpoints: None,
             resume: None,
             workers: 0,
         }
@@ -146,6 +162,9 @@ pub struct RunReport {
     pub interrupted_at: Option<usize>,
     /// Pipeline stage whose device died, when `interrupted_at` is set.
     pub fault_stage: Option<usize>,
+    /// DP replica whose device died, when `interrupted_at` is set — the
+    /// coordinate the shrink-dp recovery quarantines.
+    pub fault_replica: Option<usize>,
     /// The snapshot written at segment end (requires `checkpoint_dir`).
     pub checkpoint_path: Option<PathBuf>,
 }
@@ -178,7 +197,11 @@ impl RunReport {
 struct RunParams {
     backend: BackendKind,
     kernels: KernelPath,
+    /// Microbatches per replica per step.
     n_mb: usize,
+    /// Data-parallel replica count (gradient all-reduce divisor is
+    /// `dp · n_mb` — the fixed global batch).
+    dp: usize,
     /// First step this segment runs (the resume point; 0 for fresh runs).
     start_step: usize,
     /// One past the last step (already clamped to any dead-rank halt).
@@ -228,11 +251,6 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     let (topo, schedule, plan, n_mb) = match &cfg.plan {
         Some(p) => {
             anyhow::ensure!(
-                p.total_vit_layers() == 0,
-                "plan '{}' has ViT chunks — MLLM plans are not executable yet",
-                p.label()
-            );
-            anyhow::ensure!(
                 dims.tp == p.tp,
                 "dims carry tp={} but the plan needs tp={}",
                 dims.tp,
@@ -271,18 +289,11 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     let sched_kind = schedule.kind;
     let compiled = Arc::new(schedule.compile());
 
-    // Elastic envelope: resume point, fault-clamped end, snapshotting.
-    if let Some(f) = &cfg.faults {
-        f.validate()?;
-        for ev in &f.events {
-            anyhow::ensure!(
-                ev.stage() < topo.pp,
-                "fault plan: stage {} out of range (pp {})",
-                ev.stage(),
-                topo.pp
-            );
-        }
-    }
+    // DP replica count: explicit override, else the plan artifact's dp
+    // (1 without a plan — `topo.dp` is 1 on the no-plan path). The
+    // schedule above is per-replica either way.
+    let dp = cfg.dp.unwrap_or(topo.dp).max(1);
+
     let start_step = cfg.resume.as_ref().map(|ck| ck.step).unwrap_or(0);
     if let Some(ck) = &cfg.resume {
         ck.validate()?;
@@ -296,6 +307,7 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
             topo.pp,
             topo.vpp
         );
+        anyhow::ensure!(ck.dp == dp, "resume: checkpoint dp {} != run dp {dp}", ck.dp);
         anyhow::ensure!(
             ck.n_mb == n_mb,
             "resume: checkpoint n_mb {} != run n_mb {n_mb}",
@@ -317,25 +329,41 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
             "resume: checkpoint split {:?} != run split {split:?}",
             ck.stage_layers
         );
+        let vit_split: Vec<usize> = plan.chunks.iter().map(|c| c.vit_layers).collect();
+        anyhow::ensure!(
+            ck.stage_vit_layers == vit_split,
+            "resume: checkpoint ViT split {:?} != run ViT split {vit_split:?}",
+            ck.stage_vit_layers
+        );
     }
     let end_step = start_step + cfg.steps;
+
+    // Elastic envelope: fault feasibility, fault-clamped end, snapshots.
+    // An unfireable event (stage/replica off-grid, step past the end) is
+    // rejected here — before any thread spawns — instead of silently
+    // never triggering.
+    if let Some(f) = &cfg.faults {
+        f.validate()?;
+        f.validate_for(topo.pp, dp, end_step)?;
+    }
     let halt = cfg.faults.as_ref().and_then(|f| f.first_death_in(start_step, end_step));
-    let run_end = halt.map(|(s, _)| s).unwrap_or(end_step);
+    let run_end = halt.map(|(s, _, _)| s).unwrap_or(end_step);
 
     // Worker-pool width per device thread: explicit, or the host's cores
-    // spread over the (pp × tp) thread grid so the pools never oversubscribe
-    // the machine.
+    // spread over the (dp × pp × tp) thread grid so the pools never
+    // oversubscribe the machine.
     let workers = if cfg.workers > 0 {
         cfg.workers
     } else {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        (cores / (topo.pp * topo.tp).max(1)).clamp(1, 8)
+        (cores / (dp * topo.pp * topo.tp).max(1)).clamp(1, 8)
     };
 
     let run = RunParams {
         backend: cfg.backend,
         kernels: cfg.kernels,
         n_mb,
+        dp,
         start_step,
         end_step: run_end,
         lr: cfg.lr,
@@ -348,99 +376,131 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
 
     let corpus = Arc::new(Corpus::new(dims.vocab, cfg.seed));
 
-    // Communication fabric.
+    // Communication fabric, one P2P mesh + TP-group row per replica.
+    // Channel maps key by (replica, chunk, rank).
     let n_chunks = compiled.n_chunks;
-    let mut fwd_tx: HashMap<(usize, usize), SyncSender<Tensor>> = HashMap::new();
-    let mut fwd_rx: HashMap<(usize, usize), Receiver<Tensor>> = HashMap::new();
-    let mut bwd_tx: HashMap<(usize, usize), SyncSender<Tensor>> = HashMap::new();
-    let mut bwd_rx: HashMap<(usize, usize), Receiver<Tensor>> = HashMap::new();
-    for c in 0..n_chunks - 1 {
-        for r in 0..topo.tp {
-            let (tx, rx) = crate::comm::P2p::channel(n_mb.max(4));
-            fwd_tx.insert((c, r), tx);
-            fwd_rx.insert((c, r), rx);
-            let (tx, rx) = crate::comm::P2p::channel(n_mb.max(4));
-            bwd_tx.insert((c + 1, r), tx);
-            bwd_rx.insert((c + 1, r), rx);
+    let mut fwd_tx: HashMap<(usize, usize, usize), SyncSender<Tensor>> = HashMap::new();
+    let mut fwd_rx: HashMap<(usize, usize, usize), Receiver<Tensor>> = HashMap::new();
+    let mut bwd_tx: HashMap<(usize, usize, usize), SyncSender<Tensor>> = HashMap::new();
+    let mut bwd_rx: HashMap<(usize, usize, usize), Receiver<Tensor>> = HashMap::new();
+    for q in 0..dp {
+        for c in 0..n_chunks - 1 {
+            for r in 0..topo.tp {
+                let (tx, rx) = crate::comm::P2p::channel(n_mb.max(4));
+                fwd_tx.insert((q, c, r), tx);
+                fwd_rx.insert((q, c, r), rx);
+                let (tx, rx) = crate::comm::P2p::channel(n_mb.max(4));
+                bwd_tx.insert((q, c + 1, r), tx);
+                bwd_rx.insert((q, c + 1, r), rx);
+            }
         }
     }
-    let tp_groups: Vec<Arc<crate::comm::TpGroup>> =
-        (0..topo.pp).map(|_| crate::comm::TpGroup::new(topo.tp)).collect();
-    let (loss_tx, loss_rx) = std::sync::mpsc::channel::<(usize, f32)>();
+    // TP groups: [replica][stage]. DP groups: [stage][rank], each of
+    // size dp — its member rank IS the replica index, so the summation
+    // order inside `TpGroup::all_reduce` is replica-index order: fixed,
+    // interleaving-independent, bit-deterministic. At dp = 1 every DP
+    // group is size 1 and `all_reduce` returns before touching bytes or
+    // counters, so single-replica runs stay bit- and metrics-identical
+    // to the pre-DP engine.
+    let tp_groups: Vec<Vec<Arc<crate::comm::TpGroup>>> = (0..dp)
+        .map(|_| (0..topo.pp).map(|_| crate::comm::TpGroup::new(topo.tp)).collect())
+        .collect();
+    let dp_groups: Vec<Vec<Arc<crate::comm::TpGroup>>> = (0..topo.pp)
+        .map(|_| (0..topo.tp).map(|_| crate::comm::TpGroup::new(dp)).collect())
+        .collect();
+    let (loss_tx, loss_rx) = std::sync::mpsc::channel::<(usize, usize, f32)>();
     // (stage, activation-store peak bytes, workspace peak bytes)
     let (stat_tx, stat_rx) = std::sync::mpsc::channel::<(usize, usize, usize)>();
     let (ops_tx, ops_rx) = std::sync::mpsc::channel::<(usize, Vec<Op>)>();
-    // (stage, rank, the thread's chunk shards, RNG stream position)
+    // (replica, stage, rank, the thread's chunk shards, RNG position)
     let (ckpt_tx, ckpt_rx) =
-        std::sync::mpsc::channel::<(usize, usize, Vec<ChunkShard>, u64)>();
+        std::sync::mpsc::channel::<(usize, usize, usize, Vec<ChunkShard>, u64)>();
 
     let t0 = Instant::now();
     let mut handles = Vec::new();
-    for stage in 0..topo.pp {
-        for rank in 0..topo.tp {
-            let ctx = DeviceCtx {
-                stage,
-                rank,
-                dims: dims.clone(),
-                manifest: manifest.clone(),
-                compiled: compiled.clone(),
-                plan: plan.clone(),
-                tp: tp_groups[stage].clone(),
-                corpus: corpus.clone(),
-                run,
-                faults: faults.clone(),
-                resume: resume.clone(),
-            };
-            // Move this thread's channel endpoints in.
-            let mut my_fwd_tx = HashMap::new();
-            let mut my_fwd_rx = HashMap::new();
-            let mut my_bwd_tx = HashMap::new();
-            let mut my_bwd_rx = HashMap::new();
-            for c in 0..n_chunks {
-                if compiled.chunk_dev[c] as usize == stage {
-                    if c + 1 < n_chunks {
-                        my_fwd_tx.insert(c, fwd_tx.remove(&(c, rank)).unwrap());
-                        my_bwd_rx.insert(c, bwd_rx.remove(&(c + 1, rank)).unwrap());
-                    }
-                    if c > 0 {
-                        my_fwd_rx.insert(c, fwd_rx.remove(&(c - 1, rank)).unwrap());
-                        my_bwd_tx.insert(c, bwd_tx.remove(&(c, rank)).unwrap());
+    for replica in 0..dp {
+        for stage in 0..topo.pp {
+            for rank in 0..topo.tp {
+                let ctx = DeviceCtx {
+                    replica,
+                    stage,
+                    rank,
+                    dims: dims.clone(),
+                    manifest: manifest.clone(),
+                    compiled: compiled.clone(),
+                    plan: plan.clone(),
+                    tp: tp_groups[replica][stage].clone(),
+                    dp_group: dp_groups[stage][rank].clone(),
+                    corpus: corpus.clone(),
+                    run,
+                    faults: faults.clone(),
+                    resume: resume.clone(),
+                };
+                // Move this thread's channel endpoints in.
+                let mut my_fwd_tx = HashMap::new();
+                let mut my_fwd_rx = HashMap::new();
+                let mut my_bwd_tx = HashMap::new();
+                let mut my_bwd_rx = HashMap::new();
+                for c in 0..n_chunks {
+                    if compiled.chunk_dev[c] as usize == stage {
+                        if c + 1 < n_chunks {
+                            my_fwd_tx.insert(c, fwd_tx.remove(&(replica, c, rank)).unwrap());
+                            my_bwd_rx.insert(c, bwd_rx.remove(&(replica, c + 1, rank)).unwrap());
+                        }
+                        if c > 0 {
+                            my_fwd_rx.insert(c, fwd_rx.remove(&(replica, c - 1, rank)).unwrap());
+                            my_bwd_tx.insert(c, bwd_tx.remove(&(replica, c, rank)).unwrap());
+                        }
                     }
                 }
+                let loss_tx = loss_tx.clone();
+                let stat_tx = stat_tx.clone();
+                let ops_tx = ops_tx.clone();
+                let ckpt_tx = ckpt_tx.clone();
+                handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
+                    let mut dev = DeviceThread::new(
+                        ctx,
+                        my_fwd_tx,
+                        my_fwd_rx,
+                        my_bwd_tx,
+                        my_bwd_rx,
+                        loss_tx,
+                    )?;
+                    let stats = dev.run()?;
+                    let ws = dev.backend.workspace_stats();
+                    let ws_peak = ws.map(|s| s.peak_bytes).unwrap_or(0);
+                    stat_tx.send((dev.ctx.stage, dev.store.peak_bytes(), ws_peak)).ok();
+                    if dev.ctx.replica == 0 && dev.ctx.rank == 0 {
+                        ops_tx.send((dev.ctx.stage, std::mem::take(&mut dev.op_log))).ok();
+                    }
+                    if dev.ctx.run.snapshot {
+                        let mut shards: Vec<ChunkShard> = dev
+                            .params
+                            .iter()
+                            .map(|(&c, p)| ChunkShard {
+                                replica: dev.ctx.replica,
+                                chunk: c,
+                                rank: dev.ctx.rank,
+                                vit_layers: p.layers[..p.n_vit].to_vec(),
+                                layers: p.layers[p.n_vit..].to_vec(),
+                                emb: p.emb.clone(),
+                                head: p.head.clone(),
+                            })
+                            .collect();
+                        shards.sort_by_key(|s| s.chunk);
+                        ckpt_tx
+                            .send((
+                                dev.ctx.replica,
+                                dev.ctx.stage,
+                                dev.ctx.rank,
+                                shards,
+                                dev.rng.state(),
+                            ))
+                            .ok();
+                    }
+                    Ok(stats)
+                }));
             }
-            let loss_tx = loss_tx.clone();
-            let stat_tx = stat_tx.clone();
-            let ops_tx = ops_tx.clone();
-            let ckpt_tx = ckpt_tx.clone();
-            handles.push(std::thread::spawn(move || -> Result<ThreadStats> {
-                let mut dev =
-                    DeviceThread::new(ctx, my_fwd_tx, my_fwd_rx, my_bwd_tx, my_bwd_rx, loss_tx)?;
-                let stats = dev.run()?;
-                let ws_peak =
-                    dev.backend.workspace_stats().map(|s| s.peak_bytes).unwrap_or(0);
-                stat_tx.send((dev.ctx.stage, dev.store.peak_bytes(), ws_peak)).ok();
-                if dev.ctx.rank == 0 {
-                    ops_tx.send((dev.ctx.stage, std::mem::take(&mut dev.op_log))).ok();
-                }
-                if dev.ctx.run.snapshot {
-                    let mut shards: Vec<ChunkShard> = dev
-                        .params
-                        .iter()
-                        .map(|(&c, p)| ChunkShard {
-                            chunk: c,
-                            rank: dev.ctx.rank,
-                            layers: p.layers.clone(),
-                            emb: p.emb.clone(),
-                            head: p.head.clone(),
-                        })
-                        .collect();
-                    shards.sort_by_key(|s| s.chunk);
-                    ckpt_tx
-                        .send((dev.ctx.stage, dev.ctx.rank, shards, dev.rng.state()))
-                        .ok();
-                }
-                Ok(stats)
-            }));
         }
     }
     drop(loss_tx);
@@ -448,23 +508,31 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
     drop(ops_tx);
     drop(ckpt_tx);
 
-    // Collect per-step losses from the head owner (tp rank 0 of the last
-    // chunk's stage reports every microbatch loss). Steps are absolute;
-    // a resumed segment's first entry is `start_step`.
+    // Collect per-step losses from every replica's head owner (tp rank 0
+    // of the last chunk's stage reports each microbatch loss). Losses
+    // bucket per (step, replica) in arrival order, and the step mean sums
+    // the per-replica partial sums in replica-index order — so the value
+    // is interleaving-independent, and at dp = 1 it reduces bit-exactly
+    // to the single-replica arrival-order sum. Steps are absolute; a
+    // resumed segment's first entry is `start_step`.
     let seg_steps = run_end - start_step;
-    let mut step_losses: Vec<Vec<f32>> = vec![Vec::new(); seg_steps];
+    let mut step_losses: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); dp]; seg_steps];
+    let mut step_n: Vec<usize> = vec![0; seg_steps];
     let mut step_t: Vec<f64> = vec![0.0; seg_steps];
     let mut last = t0.elapsed().as_secs_f64();
-    for (step, loss) in loss_rx {
+    let step_mean = |buckets: &[Vec<f32>], n: usize| -> f32 {
+        buckets.iter().map(|ls| ls.iter().sum::<f32>()).sum::<f32>() / n.max(1) as f32
+    };
+    for (step, replica, loss) in loss_rx {
         let i = step - start_step;
-        step_losses[i].push(loss);
-        if step_losses[i].len() == n_mb {
+        step_losses[i][replica].push(loss);
+        step_n[i] += 1;
+        if step_n[i] == dp * n_mb {
             let now = t0.elapsed().as_secs_f64();
             step_t[i] = now - last;
             last = now;
             if cfg.verbose {
-                let mean: f32 =
-                    step_losses[i].iter().sum::<f32>() / step_losses[i].len() as f32;
+                let mean = step_mean(&step_losses[i], step_n[i]);
                 eprintln!("step {step:4}  loss {mean:.4}  ({:.2}s)", step_t[i]);
             }
         }
@@ -488,29 +556,31 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         device_ops[stage] = ops;
     }
 
-    // Assemble and write the `stp-ckpt-v1` snapshot. Threads stopped at
+    // Assemble and write the `stp-ckpt-v2` snapshot. Threads stopped at
     // the `run_end` step boundary (sgd_step zeroed every accumulator),
     // so parameters + RNG positions are the complete engine state.
     let mut checkpoint_path = None;
     if let Some(dir) = &cfg.checkpoint_dir {
         let mut shard_map = BTreeMap::new();
         let mut rng_states = BTreeMap::new();
-        for (stage, rank, shards, rng_state) in ckpt_rx {
-            rng_states.insert(rng_key(stage, rank), rng_state);
+        for (replica, stage, rank, shards, rng_state) in ckpt_rx {
+            rng_states.insert(rng_key(replica, stage, rank), rng_state);
             for s in shards {
-                shard_map.insert(shard_key(s.chunk, s.rank), s);
+                shard_map.insert(shard_key(s.replica, s.chunk, s.rank), s);
             }
         }
         let ck = Checkpoint {
             step: run_end,
             seed: cfg.seed,
             n_mb,
+            dp,
             schedule: sched_kind.name().to_string(),
             tp: topo.tp,
             pp: topo.pp,
             vpp: topo.vpp,
             dims: dims.clone(),
             stage_layers: plan.chunks.iter().map(|c| c.lm_layers).collect(),
+            stage_vit_layers: plan.chunks.iter().map(|c| c.vit_layers).collect(),
             data_cursor: run_end,
             optimizer: "sgd".into(),
             rng_states,
@@ -523,31 +593,39 @@ pub fn train(cfg: &TrainConfig) -> Result<RunReport> {
         ck.save(&path)?;
         // A stable alias the CLI's `--resume latest` convention reads.
         ck.save(&dir.join("latest.json"))?;
+        // Retention runs only after both writes landed — a failed write
+        // never costs an older, still-good snapshot.
+        if let Some(keep) = cfg.keep_checkpoints {
+            crate::elastic::prune_snapshots(dir, keep)?;
+        }
         checkpoint_path = Some(path);
     }
 
     let steps = step_losses
         .iter()
         .enumerate()
-        .map(|(i, ls)| StepStat {
+        .map(|(i, buckets)| StepStat {
             step: start_step + i,
-            mean_loss: ls.iter().sum::<f32>() / ls.len().max(1) as f32,
+            mean_loss: step_mean(buckets, step_n[i]),
             secs: step_t[i],
         })
         .collect();
 
+    let tp_bytes: u64 = tp_groups.iter().flatten().map(|g| g.bytes_reduced()).sum();
+    let dp_bytes: u64 = dp_groups.iter().flatten().map(|g| g.bytes_reduced()).sum();
     Ok(RunReport {
         backend: cfg.backend,
         steps,
         peak_activation_bytes: peaks,
         workspace_peak_bytes: ws_peaks,
         workspace_steady_allocs: steady_allocs,
-        allreduce_bytes: tp_groups.iter().map(|g| g.bytes_reduced()).sum(),
+        allreduce_bytes: tp_bytes + dp_bytes,
         executions,
         wall_secs: t0.elapsed().as_secs_f64(),
         device_ops,
-        interrupted_at: halt.map(|(s, _)| s),
-        fault_stage: halt.map(|(_, st)| st),
+        interrupted_at: halt.map(|(s, _, _)| s),
+        fault_stage: halt.map(|(_, st, _)| st),
+        fault_replica: halt.map(|(_, _, q)| q),
         checkpoint_path,
     })
 }
@@ -569,6 +647,8 @@ fn even_plan(mc: &ModelConfig, n_chunks: usize) -> StagePlan {
 }
 
 struct DeviceCtx {
+    /// DP replica this thread belongs to (0 at dp = 1).
+    replica: usize,
     stage: usize,
     rank: usize,
     dims: ManifestDims,
@@ -576,6 +656,9 @@ struct DeviceCtx {
     compiled: Arc<CompiledSchedule>,
     plan: StagePlan,
     tp: Arc<crate::comm::TpGroup>,
+    /// DP gradient all-reduce group for this (stage, rank); the member
+    /// rank is `replica`. Size 1 (a no-op) at dp = 1.
+    dp_group: Arc<crate::comm::TpGroup>,
     corpus: Arc<Corpus>,
     run: RunParams,
     faults: Option<Arc<FaultPlan>>,
@@ -592,26 +675,29 @@ struct DeviceThread {
     fwd_rx: HashMap<usize, Receiver<Tensor>>,
     bwd_tx: HashMap<usize, SyncSender<Tensor>>,
     bwd_rx: HashMap<usize, Receiver<Tensor>>,
-    loss_tx: std::sync::mpsc::Sender<(usize, f32)>,
+    loss_tx: std::sync::mpsc::Sender<(usize, usize, f32)>,
     step: usize,
     /// Ops executed in step 0 (rank 0 reports them for the handoff check).
     op_log: Vec<Op>,
     /// This thread's reserved stream: one draw per step, position
-    /// snapshotted into `stp-ckpt-v1` and restored bit-exactly on resume.
+    /// snapshotted into `stp-ckpt-v2` and restored bit-exactly on resume.
     rng: Rng,
 }
 
-/// Rebuild one chunk's parameters from a checkpoint shard. Gradient
-/// accumulators come back as zeros: snapshots are taken at step
-/// boundaries, where `sgd_step` has just zeroed them.
+/// Rebuild one chunk's parameters from a checkpoint shard (ViT prefix
+/// first, then LM layers — the in-memory layout `ChunkParams::init`
+/// produces). Gradient accumulators come back as zeros: snapshots are
+/// taken at step boundaries, where `sgd_step` has just zeroed them.
 fn restore_chunk(shard: &ChunkShard) -> ChunkParams {
-    let layers: Vec<_> = shard.layers.clone();
+    let n_vit = shard.vit_layers.len();
+    let mut layers: Vec<_> = shard.vit_layers.clone();
+    layers.extend(shard.layers.iter().cloned());
     let grads = layers.iter().map(LayerGrads::zeros_like).collect();
     let emb = shard.emb.clone();
     let head = shard.head.clone();
     let emb_grad = emb.as_ref().map(|t| vec![0.0; t.len()]);
     let head_grad = head.as_ref().map(|t| vec![0.0; t.len()]);
-    ChunkParams { layers, grads, emb, emb_grad, head, head_grad }
+    ChunkParams { layers, n_vit, grads, emb, emb_grad, head, head_grad }
 }
 
 /// Accumulate one attention unit's weight gradients. A free function
@@ -668,7 +754,7 @@ impl DeviceThread {
         fwd_rx: HashMap<usize, Receiver<Tensor>>,
         bwd_tx: HashMap<usize, SyncSender<Tensor>>,
         bwd_rx: HashMap<usize, Receiver<Tensor>>,
-        loss_tx: std::sync::mpsc::Sender<(usize, f32)>,
+        loss_tx: std::sync::mpsc::Sender<(usize, usize, f32)>,
     ) -> Result<DeviceThread> {
         let backend = make_backend(
             ctx.run.backend,
@@ -682,13 +768,23 @@ impl DeviceThread {
             if ctx.compiled.chunk_dev[c] as usize == ctx.stage {
                 let content = ctx.plan.chunks[c];
                 let cp = match &ctx.resume {
-                    Some(ck) => restore_chunk(ck.shard(c, ctx.rank).ok_or_else(|| {
-                        anyhow::anyhow!("resume: checkpoint missing shard c{c}r{}", ctx.rank)
-                    })?),
+                    Some(ck) => {
+                        restore_chunk(ck.shard(ctx.replica, c, ctx.rank).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "resume: checkpoint missing shard d{}c{c}r{}",
+                                ctx.replica,
+                                ctx.rank
+                            )
+                        })?)
+                    }
+                    // Seed keying is replica-independent: every replica
+                    // initializes bit-identical weights, the invariant
+                    // that lets shrink-dp clone a survivor's shards.
                     None => ChunkParams::init(
                         &ctx.dims,
                         c,
                         ctx.rank,
+                        content.vit_layers,
                         content.lm_layers,
                         content.has_embed,
                         content.has_head,
@@ -699,18 +795,22 @@ impl DeviceThread {
             }
         }
         // Saved stream position if the checkpoint has one for this
-        // (stage, rank); otherwise derive and fast-forward — a migrated
-        // checkpoint renumbers stages, so its RNG map is empty and the
-        // two paths must land on the same position.
+        // (replica, stage, rank); otherwise derive and fast-forward — a
+        // migrated checkpoint renumbers coordinates, so its RNG map is
+        // empty and the two paths must land on the same position.
         let rng = match ctx
             .resume
             .as_ref()
-            .and_then(|ck| ck.rng_states.get(&rng_key(ctx.stage, ctx.rank)))
+            .and_then(|ck| ck.rng_states.get(&rng_key(ctx.replica, ctx.stage, ctx.rank)))
         {
             Some(&state) => Rng::from_state(state),
             None => {
-                let mut r =
-                    Rng::for_purpose(ctx.run.seed, ctx.stage as u64, ctx.rank as u64, 99);
+                let mut r = Rng::for_purpose(
+                    ctx.run.seed,
+                    ctx.stage as u64,
+                    ctx.rank as u64,
+                    99 + ctx.replica as u64,
+                );
                 r.advance(ctx.run.start_step as u64);
                 r
             }
@@ -751,7 +851,7 @@ impl DeviceThread {
                 .ctx
                 .faults
                 .as_ref()
-                .map(|f| f.straggler_factor(step, self.ctx.stage))
+                .map(|f| f.straggler_factor(step, self.ctx.stage, self.ctx.replica))
                 .unwrap_or(1.0);
             for j in lo..hi {
                 let op = self.ctx.compiled.ops[j];
@@ -767,7 +867,7 @@ impl DeviceThread {
             }
             self.optimizer_step()?;
             // One reserved draw per step: the position (not the values)
-            // is the state `stp-ckpt-v1` must round-trip.
+            // is the state `stp-ckpt-v2` must round-trip.
             self.rng.advance(1);
             if step == start {
                 // The segment's first step populates the workspace pools;
@@ -810,13 +910,24 @@ impl DeviceThread {
         }
     }
 
+    /// The global microbatch id this thread's local `mb` maps to — the
+    /// corpus keys on it, so DP replicas shard the fixed global batch.
+    fn global_mb(&self, mb: usize) -> usize {
+        global_mb_index(self.ctx.replica, self.ctx.run.n_mb, mb)
+    }
+
+    /// Total layers in a chunk's parameter table: ViT prefix + LM.
+    fn chunk_layers(content: crate::cluster::ChunkContent) -> usize {
+        content.vit_layers + content.lm_layers
+    }
+
     fn forward(&mut self, chunk: usize, mb: usize) -> Result<()> {
         let content = self.ctx.plan.chunks[chunk];
         let mut x = if content.has_embed {
             // Fixed tiny corpus: the e2e demo overfits a constant set of
             // microbatches so the loss curve is step-comparable.
             let (mb_rows, seq) = (self.ctx.dims.mb, self.ctx.dims.seq);
-            let (tokens, _) = self.ctx.corpus.batch(0, mb, mb_rows, seq);
+            let (tokens, _) = self.ctx.corpus.batch(0, self.global_mb(mb), mb_rows, seq);
             let tok = Tensor::i32(tokens, &[mb_rows, seq]);
             let emb = self.params[&chunk].emb.as_ref().unwrap();
             let out = self.backend.run("embed_fwd", &[&tok, emb])?.remove(0);
@@ -831,7 +942,7 @@ impl DeviceThread {
                 .map_err(|_| anyhow::anyhow!("fwd channel into chunk {chunk} closed"))?
         };
 
-        for l in 0..content.lm_layers {
+        for l in 0..Self::chunk_layers(content) {
             let p = &self.params[&chunk].layers[l];
             let mut partial = self
                 .backend
@@ -871,7 +982,7 @@ impl DeviceThread {
                 .store
                 .take(&ActKey { chunk, mb, layer: usize::MAX - 1, tag: ActTag::ChunkOut })?;
             let (mb_rows, seq) = (self.ctx.dims.mb, self.ctx.dims.seq);
-            let (_, targets) = self.ctx.corpus.batch(0, mb, mb_rows, seq);
+            let (_, targets) = self.ctx.corpus.batch(0, self.global_mb(mb), mb_rows, seq);
             let tgt = Tensor::i32(targets, &[mb_rows, seq]);
             let wh = self.params[&chunk].head.as_ref().unwrap();
             let mut out = self.backend.run("head_loss_grad", &[&x, wh, &tgt])?;
@@ -887,7 +998,7 @@ impl DeviceThread {
             ChunkParams::accumulate(pc.head_grad.as_mut().unwrap(), &dwh);
             self.backend.recycle(dwh);
             if self.ctx.rank == 0 {
-                self.loss_tx.send((self.step, loss)).ok();
+                self.loss_tx.send((self.step, self.ctx.replica, loss)).ok();
             }
             dx
         } else {
@@ -898,7 +1009,7 @@ impl DeviceThread {
                 .map_err(|_| anyhow::anyhow!("bwd channel into chunk {chunk} closed"))?
         };
 
-        for l in (0..content.lm_layers).rev() {
+        for l in (0..Self::chunk_layers(content)).rev() {
             // MLP unit backward — `y` stays borrowed from the store.
             let y = self.store.get(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             let p = &self.params[&chunk].layers[l];
@@ -957,7 +1068,7 @@ impl DeviceThread {
 
     fn weight_pass(&mut self, chunk: usize, mb: usize) -> Result<()> {
         let content = self.ctx.plan.chunks[chunk];
-        for l in (0..content.lm_layers).rev() {
+        for l in (0..Self::chunk_layers(content)).rev() {
             let y = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpIn })?;
             let dz = self.store.take(&ActKey { chunk, mb, layer: l, tag: ActTag::MlpGrad })?;
             mlp_weight_grad(&mut *self.backend, &mut self.params, chunk, l, &y, &dz)?;
@@ -977,15 +1088,43 @@ impl DeviceThread {
         // them across the TP group before stepping (Megatron's layernorm
         // gradient all-reduce). The collectives run on the accumulators
         // in place; every rank walks chunks and layers in the same order.
+        //
+        // Then the DP gradient all-reduce: every accumulator, in a fixed
+        // (chunk, layer, field) order, across this (stage, rank)'s DP
+        // group. The group rank is the replica index, so the f32
+        // summation tree is replica-index order — deterministic at any
+        // worker interleaving — and every replica applies the identical
+        // summed update, keeping replica weights bit-identical at every
+        // step boundary (the shrink-dp invariant, DESIGN.md §14). The
+        // SGD divisor is the fixed global batch `dp · n_mb`.
         let mut chunks: Vec<usize> = self.params.keys().copied().collect();
         chunks.sort_unstable();
+        let q = self.ctx.replica;
         for c in chunks {
             let p = self.params.get_mut(&c).unwrap();
             for g in p.grads.iter_mut() {
                 self.ctx.tp.all_reduce(self.ctx.rank, &mut g.gamma1)?;
                 self.ctx.tp.all_reduce(self.ctx.rank, &mut g.gamma2)?;
             }
-            p.sgd_step(self.ctx.run.lr, self.ctx.run.n_mb);
+            let dpg = &self.ctx.dp_group;
+            for g in p.grads.iter_mut() {
+                dpg.all_reduce(q, &mut g.gamma1)?;
+                dpg.all_reduce(q, &mut g.gamma2)?;
+                dpg.all_reduce(q, &mut g.wq)?;
+                dpg.all_reduce(q, &mut g.wk)?;
+                dpg.all_reduce(q, &mut g.wv)?;
+                dpg.all_reduce(q, &mut g.wo)?;
+                dpg.all_reduce(q, &mut g.wg)?;
+                dpg.all_reduce(q, &mut g.wu)?;
+                dpg.all_reduce(q, &mut g.wd)?;
+            }
+            if let Some(eg) = p.emb_grad.as_mut() {
+                dpg.all_reduce(q, eg)?;
+            }
+            if let Some(hg) = p.head_grad.as_mut() {
+                dpg.all_reduce(q, hg)?;
+            }
+            p.sgd_step(self.ctx.run.lr, self.ctx.run.dp * self.ctx.run.n_mb);
         }
         Ok(())
     }

@@ -39,7 +39,7 @@ pub use backend::{
     host_virtual_scale, virtual_dims, virtual_dims_scaled, Backend, BackendKind, KernelPath,
     VirtualBackend,
 };
-pub use data::Corpus;
+pub use data::{global_mb_index, Corpus};
 pub use engine::{train, RunReport, StepStat, TrainConfig};
 pub use params::{ChunkParams, LayerGrads, LayerParams};
 pub use rng::Rng;

@@ -72,7 +72,14 @@ impl LayerGrads {
 
 /// All parameters a device thread owns for one chunk.
 pub struct ChunkParams {
+    /// Transformer layers in walk order: the chunk's ViT layers (MLLM
+    /// plans; `n_vit` of them) followed by its LM layers. The executor
+    /// treats both identically — vision towers are proxied as extra
+    /// transformer depth on the hidden stream (DESIGN.md §14).
     pub layers: Vec<LayerParams>,
+    /// How many leading entries of `layers` are ViT layers (checkpoint
+    /// snapshots split the vector here).
+    pub n_vit: usize,
     pub grads: Vec<LayerGrads>,
     /// Embedding table (chunk 0 only); replicated across TP ranks.
     pub emb: Option<Tensor>,
@@ -99,13 +106,16 @@ fn row_slice(rng: &mut Rng, rows: usize, cols: usize, r0: usize, r1: usize, scal
 }
 
 impl ChunkParams {
-    /// Initialize the rank's shard of `chunk`: `n_layers` transformer
-    /// layers (the chunk's share under the run's stage plan — uniform or
-    /// weighted) plus the embed/head endpoints this chunk owns.
+    /// Initialize the rank's shard of `chunk`: `n_vit` ViT layers then
+    /// `n_layers` LM transformer layers (the chunk's share under the
+    /// run's stage plan — uniform or weighted) plus the embed/head
+    /// endpoints this chunk owns. ViT layers draw from a disjoint seed
+    /// key space so adding vision depth never perturbs the LM weights.
     pub fn init(
         dims: &ManifestDims,
         chunk: usize,
         tp_rank: usize,
+        n_vit: usize,
         n_layers: usize,
         has_embed: bool,
         has_head: bool,
@@ -128,8 +138,13 @@ impl ChunkParams {
         let s_res = s_d / (2.0 * dims.layers as f32).sqrt();
 
         let mut layers = Vec::new();
-        for l in 0..n_layers {
-            let key = (chunk * 1000 + l) as u64;
+        // ViT layers key from a disjoint id range (500_000 + ...) so a
+        // chunk's LM weights are identical with or without a vision
+        // prefix of any depth.
+        let layer_keys = (0..n_vit)
+            .map(|l| (500_000 + chunk * 1000 + l) as u64)
+            .chain((0..n_layers).map(|l| (chunk * 1000 + l) as u64));
+        for key in layer_keys {
             let r = |m: u64| Rng::for_purpose(seed, key, m, 0);
             layers.push(LayerParams {
                 gamma1: Tensor::f32(vec![1.0; d], &[d]),
@@ -166,7 +181,7 @@ impl ChunkParams {
         let emb_grad = emb.as_ref().map(|t| vec![0.0; t.len()]);
         let head_grad = head.as_ref().map(|t| vec![0.0; t.len()]);
 
-        ChunkParams { layers, grads, emb, emb_grad, head, head_grad }
+        ChunkParams { layers, n_vit, grads, emb, emb_grad, head, head_grad }
     }
 
     /// Accumulate `g` into the accumulator slice.
@@ -238,7 +253,7 @@ mod tests {
     #[test]
     fn shard_shapes() {
         let d = dims();
-        let p = ChunkParams::init(&d, 0, 0, 1, true, false, 7);
+        let p = ChunkParams::init(&d, 0, 0, 0, 1, true, false, 7);
         assert_eq!(p.layers.len(), 1);
         assert_eq!(p.layers[0].wq.shape(), &[16, 8]); // qr = 2 heads * 4
         assert_eq!(p.layers[0].wk.shape(), &[16, 4]); // kr = 1 head * 4
@@ -252,8 +267,8 @@ mod tests {
     #[test]
     fn ranks_slice_the_same_full_matrix() {
         let d = dims();
-        let p0 = ChunkParams::init(&d, 1, 0, 1, false, false, 7);
-        let p1 = ChunkParams::init(&d, 1, 1, 1, false, false, 7);
+        let p0 = ChunkParams::init(&d, 1, 0, 0, 1, false, false, 7);
+        let p1 = ChunkParams::init(&d, 1, 1, 0, 1, false, false, 7);
         // Different shards of the same full wq (no overlap expected, but
         // deterministically regenerated from the same stream).
         assert_ne!(
@@ -261,7 +276,7 @@ mod tests {
             p1.layers[0].wq.as_f32().unwrap()
         );
         // And the same (chunk, rank) shard reproduces bit-for-bit.
-        let p0b = ChunkParams::init(&d, 1, 0, 1, false, false, 7);
+        let p0b = ChunkParams::init(&d, 1, 0, 0, 1, false, false, 7);
         assert_eq!(
             p0.layers[0].wq.as_f32().unwrap(),
             p0b.layers[0].wq.as_f32().unwrap()
@@ -269,9 +284,23 @@ mod tests {
     }
 
     #[test]
+    fn vit_prefix_never_perturbs_lm_weights() {
+        let d = dims();
+        let plain = ChunkParams::init(&d, 1, 0, 0, 1, false, false, 7);
+        let mixed = ChunkParams::init(&d, 1, 0, 2, 1, false, false, 7);
+        assert_eq!(mixed.n_vit, 2);
+        assert_eq!(mixed.layers.len(), 3);
+        // The LM layer after the ViT prefix is bit-identical to the
+        // text-only init (disjoint seed key spaces).
+        assert_eq!(mixed.layers[2], plain.layers[0]);
+        // And the ViT layers differ from the LM layer they precede.
+        assert_ne!(mixed.layers[0].wq, mixed.layers[2].wq);
+    }
+
+    #[test]
     fn sgd_moves_params_and_clears_grads() {
         let d = dims();
-        let mut p = ChunkParams::init(&d, 0, 0, 1, false, false, 7);
+        let mut p = ChunkParams::init(&d, 0, 0, 0, 1, false, false, 7);
         let before = p.layers[0].wq.as_f32().unwrap()[0];
         // Small gradients (below the RMS clip): exact SGD step expected.
         p.grads[0].wq.iter_mut().for_each(|g| *g = 0.02);
@@ -284,7 +313,7 @@ mod tests {
     #[test]
     fn sgd_clips_large_updates() {
         let d = dims();
-        let mut p = ChunkParams::init(&d, 0, 0, 1, false, false, 7);
+        let mut p = ChunkParams::init(&d, 0, 0, 0, 1, false, false, 7);
         let before = p.layers[0].wq.as_f32().unwrap()[0];
         p.grads[0].wq.iter_mut().for_each(|g| *g = 100.0);
         p.sgd_step(0.1, 1);

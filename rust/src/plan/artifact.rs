@@ -38,7 +38,9 @@ pub struct PlanArtifact {
     pub kind: ScheduleKind,
     pub tp: usize,
     pub pp: usize,
-    /// DP replica count the planner chose; the executor runs one replica.
+    /// DP replica count the planner chose; the executor spawns this many
+    /// replicas, each walking the same per-replica schedule (`stp train
+    /// --dp` can override it).
     pub dp: usize,
     pub vpp: usize,
     /// Microbatches per iteration per replica.
@@ -98,10 +100,11 @@ impl PlanArtifact {
         format!("tp{}-pp{}-dp{} {} m{}", self.tp, self.pp, self.dp, self.kind.name(), self.n_mb)
     }
 
-    /// The single-replica topology the executor runs (DP is a planner
-    /// dimension; each replica runs this schedule independently).
+    /// The topology the executor runs. `dp` rides along for the replica
+    /// count; the schedule builders only consume the (tp, pp, vpp) grid,
+    /// so each replica runs the same per-replica schedule independently.
     pub fn topology(&self) -> Topology {
-        Topology::new(self.tp, self.pp, 1).with_vpp(self.vpp)
+        Topology::new(self.tp, self.pp, self.dp.max(1)).with_vpp(self.vpp)
     }
 
     /// The chunk → content split the executor partitions parameters by.

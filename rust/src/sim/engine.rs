@@ -179,6 +179,8 @@ impl<'a> Simulator<'a> {
     /// existing stuck-device [`SimError`] — that error *is* the
     /// detection signal. Stragglers stretch op durations (event-time)
     /// from their onset; an empty plan changes nothing, bit-for-bit.
+    /// The replay models a single DP replica, so only replica-0 events
+    /// apply; events aimed at other replicas are the executor's concern.
     pub fn with_faults(mut self, f: FaultPlan) -> Self {
         self.faults = Some(f);
         self
@@ -301,10 +303,14 @@ impl<'a> Simulator<'a> {
             let mut slow: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_dev];
             for ev in &f.events {
                 match *ev {
-                    FaultEvent::DeadRank { stage, at_secs, .. } if stage < n_dev => {
+                    FaultEvent::DeadRank { stage, replica, at_secs, .. }
+                        if stage < n_dev && replica == 0 =>
+                    {
                         dead_at[stage] = dead_at[stage].min(at_secs);
                     }
-                    FaultEvent::Straggler { stage, slowdown, from_secs, .. } if stage < n_dev => {
+                    FaultEvent::Straggler { stage, replica, slowdown, from_secs, .. }
+                        if stage < n_dev && replica == 0 =>
+                    {
                         slow[stage].push((from_secs, slowdown));
                     }
                     _ => {}
@@ -754,6 +760,7 @@ mod tests {
         faults.events.push(FaultEvent::Straggler {
             step: 0,
             stage: 1,
+            replica: 0,
             slowdown: 1.5,
             from_secs: 0.0,
         });
@@ -772,7 +779,12 @@ mod tests {
         let mut faults = FaultPlan::none();
         // Kill stage 1 halfway through the iteration: everything it had
         // not started stays unexecuted and its peers starve.
-        faults.events.push(FaultEvent::DeadRank { step: 0, stage: 1, at_secs: base / 2.0 });
+        faults.events.push(FaultEvent::DeadRank {
+            step: 0,
+            stage: 1,
+            replica: 0,
+            at_secs: base / 2.0,
+        });
         let err = Simulator::new(&cost).with_faults(faults).try_run(&s).unwrap_err();
         assert!(err.ops_left > 0);
     }

@@ -1,9 +1,14 @@
-//! Elastic-training acceptance (DESIGN.md §12): checkpoint/restore is
-//! bit-exact, dead-rank faults trigger replanning onto a shrunk pool,
-//! and the fault machinery is invisible when no fault fires.
+//! Elastic-training acceptance (DESIGN.md §12, §14): checkpoint/restore
+//! is bit-exact, a dead replica shrinks dp without re-splitting the
+//! pipeline, dead-rank faults on the last replica trigger replanning
+//! onto a shrunk pool, torn snapshots fall back to a complete one, v1
+//! documents upgrade, and the fault machinery is invisible when no
+//! fault fires.
 
 use stp::cluster::{ClusterSpec, GroupOrder, HardwareProfile, NodeGroup};
-use stp::elastic::{run_elastic, Checkpoint, ElasticConfig, FaultPlan, ReplanContext};
+use stp::elastic::{
+    run_elastic, shrink_dp_checkpoint, Checkpoint, ElasticConfig, FaultPlan, ReplanContext,
+};
 use stp::exec::{train, TrainConfig};
 use stp::model::ModelConfig;
 use stp::plan::{PlanArtifact, PlanModel, PlanQuery};
@@ -130,6 +135,229 @@ fn dead_rank_replans_onto_the_shrunk_pool_and_finishes() {
         report.first_loss(),
         report.last_loss()
     );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The tentpole acceptance (DESIGN.md §14): at dp=2, killing replica 1
+/// mid-run must quarantine it at the step-2 cut and continue at dp=1
+/// with the global batch preserved (4 mb x 2 replicas -> 8 mb x 1) —
+/// no pipeline re-split, and the survivors' continuation bit-identical
+/// to a fresh dp=1 run seeded from the quarantine-shrunk snapshot.
+#[test]
+fn dead_replica_shrinks_dp_and_matches_a_fresh_resume_bit_for_bit() {
+    let dir = tmp_dir("shrink-dp");
+    let mut cfg = TrainConfig::virtual_default();
+    cfg.steps = 4;
+    cfg.seed = 13;
+    cfg.dp = Some(2);
+    cfg.faults = Some(FaultPlan::dead_rank_in_replica(2, 0, 1));
+    cfg.checkpoint_dir = Some(dir.clone());
+    let report = run_elastic(&ElasticConfig { train: cfg, replan: None }).unwrap();
+
+    assert_eq!(report.segments.len(), 2, "one fault, two segments");
+    assert!(report.replanned.is_empty(), "a replica loss must not re-split the pipeline");
+    assert_eq!(report.recoveries.len(), 1);
+    assert!(report.recoveries[0].starts_with("shrink-dp"), "{}", report.recoveries[0]);
+    let steps: Vec<usize> = report.steps.iter().map(|s| s.step).collect();
+    assert_eq!(steps, vec![0, 1, 2, 3], "steps must be contiguous across the shrink");
+    assert!(report.steps.iter().all(|s| s.mean_loss.is_finite()));
+
+    // Reference: shrink the halt snapshot by hand and resume a fresh
+    // dp=1 run from it — the elastic continuation must match it bit for
+    // bit (replica-identical weights make the shrink a pure re-label).
+    let ck = Checkpoint::load(&dir.join("ckpt-step-2.json")).unwrap();
+    assert_eq!((ck.dp, ck.n_mb), (2, 4), "halt snapshot must predate the shrink");
+    let shrunk = shrink_dp_checkpoint(&ck, 1).unwrap();
+    assert_eq!((shrunk.dp, shrunk.n_mb), (1, 8), "global batch must be preserved");
+    let mut fresh = TrainConfig::virtual_default();
+    fresh.steps = 2;
+    fresh.seed = 13;
+    fresh.dp = Some(1);
+    fresh.n_mb = 8;
+    fresh.resume = Some(shrunk);
+    let reference = train(&fresh).unwrap();
+    assert_eq!(
+        loss_bits(&report.steps[2..]),
+        loss_bits(&reference.steps),
+        "post-recovery losses diverged from the from-scratch dp=1 resume"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Killing replica 0 must shift survivorship to replica 1 (the lowest
+/// surviving index becomes the canonical replica 0), and `--keep-checkpoints 1`
+/// must prune the halt snapshot once the final one lands, leaving a
+/// loadable chain.
+#[test]
+fn killing_replica_zero_survives_and_retention_prunes_old_snapshots() {
+    let dir = tmp_dir("retention");
+    let mut cfg = TrainConfig::virtual_default();
+    cfg.steps = 4;
+    cfg.seed = 29;
+    cfg.dp = Some(2);
+    cfg.faults = Some(FaultPlan::dead_rank_in_replica(2, 0, 0));
+    cfg.checkpoint_dir = Some(dir.clone());
+    cfg.keep_checkpoints = Some(1);
+    let report = run_elastic(&ElasticConfig { train: cfg, replan: None }).unwrap();
+    assert_eq!(report.segments.len(), 2);
+    assert!(report.recoveries[0].contains("replica 0 quarantined"), "{}", report.recoveries[0]);
+    assert!(report.steps.iter().all(|s| s.mean_loss.is_finite()));
+
+    assert!(!dir.join("ckpt-step-2.json").exists(), "K=1 retention must prune the halt snapshot");
+    assert!(dir.join("ckpt-step-4.json").exists());
+    let latest = Checkpoint::load_latest(&dir).unwrap();
+    assert_eq!((latest.step, latest.dp, latest.n_mb), (4, 1, 8));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Crash-safety end to end: tear `latest.json` mid-file (as a dirty
+/// shutdown would) — `load_latest` must fall back to the complete
+/// `ckpt-step-2.json`, and resuming from it must stay bit-identical to
+/// the uninterrupted run.
+#[test]
+fn torn_latest_checkpoint_falls_back_and_resumes_bit_identically() {
+    let mut base = TrainConfig::virtual_default();
+    base.steps = 4;
+    base.seed = 17;
+    let uninterrupted = train(&base).unwrap();
+
+    let dir = tmp_dir("torn");
+    let mut first = base.clone();
+    first.steps = 2;
+    first.checkpoint_dir = Some(dir.clone());
+    let seg1 = train(&first).unwrap();
+
+    let full = std::fs::read_to_string(dir.join("latest.json")).unwrap();
+    std::fs::write(dir.join("latest.json"), &full[..full.len() / 2]).unwrap();
+    let ck = Checkpoint::load_latest(&dir).unwrap();
+    assert_eq!(ck.step, 2, "the fallback must land on the complete snapshot");
+
+    let mut second = base.clone();
+    second.steps = 2;
+    second.resume = Some(ck);
+    let seg2 = train(&second).unwrap();
+    let mut stitched = loss_bits(&seg1.steps);
+    stitched.extend(loss_bits(&seg2.steps));
+    assert_eq!(stitched, loss_bits(&uninterrupted.steps));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Schema migration end to end: demote a real snapshot to the v1 wire
+/// format an older binary wrote, load it (upgrading to replica 0 of a
+/// dp=1 grid), re-save it as v2, and resume training from it — all
+/// bit-identical to the uninterrupted run.
+#[test]
+fn v1_checkpoints_upgrade_and_resume_bit_identically() {
+    use std::collections::BTreeMap;
+
+    use stp::config::Json;
+
+    let mut base = TrainConfig::virtual_default();
+    base.steps = 4;
+    base.seed = 23;
+    let uninterrupted = train(&base).unwrap();
+
+    let dir = tmp_dir("v1-upgrade");
+    let mut first = base.clone();
+    first.steps = 2;
+    first.checkpoint_dir = Some(dir.clone());
+    let seg1 = train(&first).unwrap();
+
+    // Strip the DP-era fields and keys: no `dp`, no ViT splits, shards
+    // keyed `c{c}r{r}`, RNG streams keyed `s{s}r{r}`.
+    let text = std::fs::read_to_string(dir.join("latest.json")).unwrap();
+    let Json::Obj(mut root) = Json::parse(&text).unwrap() else { unreachable!() };
+    root.insert("schema".into(), Json::Str("stp-ckpt-v1".into()));
+    root.remove("dp");
+    root.remove("stage_vit_layers");
+    let Some(Json::Obj(shards)) = root.remove("shards") else { unreachable!() };
+    let mut v1_shards = BTreeMap::new();
+    for (key, shard) in shards {
+        let Json::Obj(mut o) = shard else { unreachable!() };
+        o.remove("replica");
+        o.remove("vit_layers");
+        v1_shards.insert(key.strip_prefix("d0").unwrap().to_string(), Json::Obj(o));
+    }
+    root.insert("shards".into(), Json::Obj(v1_shards));
+    let Some(Json::Obj(rngs)) = root.remove("rng_states") else { unreachable!() };
+    let v1_rngs: BTreeMap<String, Json> =
+        rngs.into_iter().map(|(k, x)| (k.strip_prefix("d0").unwrap().to_string(), x)).collect();
+    root.insert("rng_states".into(), Json::Obj(v1_rngs));
+    let v1_path = dir.join("v1.json");
+    std::fs::write(&v1_path, Json::Obj(root).to_string()).unwrap();
+
+    // Load upgrades in place; re-saving always writes v2.
+    let ck = Checkpoint::load(&v1_path).unwrap();
+    assert_eq!((ck.step, ck.dp), (2, 1));
+    let v2_path = dir.join("rewritten.json");
+    ck.save(&v2_path).unwrap();
+    assert!(std::fs::read_to_string(&v2_path).unwrap().contains("stp-ckpt-v2"));
+    assert_eq!(Checkpoint::load(&v2_path).unwrap(), ck);
+
+    let mut second = base.clone();
+    second.steps = 2;
+    second.resume = Some(ck);
+    let seg2 = train(&second).unwrap();
+    let mut stitched = loss_bits(&seg1.steps);
+    stitched.extend(loss_bits(&seg2.steps));
+    assert_eq!(stitched, loss_bits(&uninterrupted.steps));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// MLLM plans are executable: a hand-built tp1-pp2 artifact with a ViT
+/// prefix on chunk 0 trains with a finite loss, snapshots the ViT split
+/// and restores bit-identically through the v2 schema.
+#[test]
+fn mllm_vit_chunk_plan_trains_and_restores_bit_identically() {
+    let artifact = PlanArtifact {
+        model: "mllm-proxy".into(),
+        cluster: "a800-sxm4-80g".into(),
+        seq: 512,
+        mb_size: 1,
+        kind: ScheduleKind::GPipe,
+        tp: 1,
+        pp: 2,
+        dp: 1,
+        vpp: 1,
+        n_mb: 2,
+        order: GroupOrder::Declared,
+        offload: OffloadParams::default(),
+        stage_layers: vec![2, 2],
+        stage_vit_layers: vec![2, 0],
+        chunk_scales: vec![1.0, 1.0],
+        throughput: 0.0,
+    };
+    artifact.validate().unwrap();
+
+    let mut base = TrainConfig::virtual_default();
+    base.steps = 4;
+    base.seed = 31;
+    base.plan = Some(artifact);
+    let uninterrupted = train(&base).unwrap();
+    assert!(uninterrupted.steps.iter().all(|s| s.mean_loss.is_finite()));
+    assert!(
+        uninterrupted.last_loss() < uninterrupted.first_loss(),
+        "the ViT-prefixed proxy must train: {} -> {}",
+        uninterrupted.first_loss(),
+        uninterrupted.last_loss()
+    );
+
+    let dir = tmp_dir("mllm");
+    let mut first = base.clone();
+    first.steps = 2;
+    first.checkpoint_dir = Some(dir.clone());
+    let seg1 = train(&first).unwrap();
+    let ck = Checkpoint::load(&dir.join("latest.json")).unwrap();
+    assert_eq!(ck.stage_vit_layers, vec![2, 0], "the snapshot must carry the ViT split");
+    assert_eq!(ck.shard(0, 0, 0).unwrap().vit_layers.len(), 2);
+
+    let mut second = base.clone();
+    second.steps = 2;
+    second.resume = Some(ck);
+    let seg2 = train(&second).unwrap();
+    let mut stitched = loss_bits(&seg1.steps);
+    stitched.extend(loss_bits(&seg2.steps));
+    assert_eq!(stitched, loss_bits(&uninterrupted.steps));
     std::fs::remove_dir_all(&dir).ok();
 }
 
