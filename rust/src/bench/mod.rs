@@ -527,12 +527,17 @@ pub fn plan16() -> String {
 /// candidates/sec, and write the machine-readable trajectory record
 /// `BENCH_plan_search.json` at the repo root. `quick` limits the sweep
 /// to {16, 128} GPUs (the CI perf-smoke mode); the full sweep adds 64
-/// and 256.
+/// and 256. A second, fleet-scale sweep ({16, 256, 1024, 4096} devices,
+/// beam search) measures symmetry-folded vs per-replica simulation —
+/// the unfolded baseline replays every DP replica, so it is skipped
+/// beyond 1024 devices in quick mode — and records per size whether the
+/// two reports are byte-identical.
 pub fn plan_perf(quick: bool) -> String {
     use std::time::Instant;
 
     use crate::config::json::Json;
     use crate::plan::{plan, PlanModel, PlanQuery, SearchMode};
+    use crate::sim::SimMode;
     use std::collections::BTreeMap;
 
     let budgets: Vec<usize> = if quick { vec![16, 128] } else { vec![16, 64, 128, 256] };
@@ -591,6 +596,66 @@ pub fn plan_perf(quick: bool) -> String {
         }
     }
 
+    // Fleet-scale sweep (the folding measurement): symmetry-folded vs
+    // per-replica beam search at growing device counts. The folded path
+    // replays one representative per replica class — wall-clock flat in
+    // dp — while the unfolded baseline replays every replica, so it is
+    // skipped beyond `unfold_cap` (it would dominate the bench).
+    let fleet_sizes: Vec<usize> = vec![16, 256, 1024, 4096];
+    let unfold_cap = if quick { 1024 } else { 4096 };
+    let mut fleet_entries: Vec<Json> = Vec::new();
+    for &gpus in &fleet_sizes {
+        let fleet_query = |sim: SimMode| {
+            let mut q = PlanQuery::new(
+                PlanModel::Llm(ModelConfig::qwen2_12b()),
+                ClusterSpec::uniform(HardwareProfile::a800()),
+                gpus,
+            );
+            q.n_mb_options = vec![16, 64];
+            q.search = SearchMode::Beam { width: beam_width };
+            q.sim = sim;
+            q
+        };
+        let t0 = Instant::now();
+        let folded = plan(&fleet_query(SimMode::Folded));
+        let folded_secs = t0.elapsed().as_secs_f64();
+        let best = folded
+            .best()
+            .map(|b| b.candidate.label())
+            .unwrap_or_else(|| "no feasible plan".into());
+        let mut o = BTreeMap::new();
+        o.insert("gpus".to_string(), Json::Num(gpus as f64));
+        o.insert("folded_wall_secs".to_string(), Json::Num(folded_secs));
+        o.insert("simulated".to_string(), Json::Num(folded.n_simulated() as f64));
+        o.insert("best".to_string(), Json::Str(best.clone()));
+        let speedup_cell = if gpus <= unfold_cap {
+            let t1 = Instant::now();
+            let unfolded = plan(&fleet_query(SimMode::Unfolded));
+            let unfolded_secs = t1.elapsed().as_secs_f64();
+            let speedup = unfolded_secs / folded_secs.max(1e-9);
+            o.insert("unfolded_wall_secs".to_string(), Json::Num(unfolded_secs));
+            o.insert("speedup".to_string(), Json::Num(speedup));
+            o.insert(
+                "reports_identical".to_string(),
+                Json::Bool(folded.to_json().to_string() == unfolded.to_json().to_string()),
+            );
+            format!("{speedup:.1}x vs unfolded")
+        } else {
+            o.insert("unfolded_skipped".to_string(), Json::Bool(true));
+            "- (unfolded skipped)".to_string()
+        };
+        t.row(vec![
+            gpus.to_string(),
+            format!("fleet beam-{beam_width}"),
+            folded.n_simulated().to_string(),
+            format!("{folded_secs:.3}"),
+            format!("{:.0}", folded.n_simulated() as f64 / folded_secs.max(1e-9)),
+            speedup_cell,
+            best,
+        ]);
+        fleet_entries.push(Json::Obj(o));
+    }
+
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("plan_search".into()));
     root.insert("quick".to_string(), Json::Bool(quick));
@@ -599,14 +664,20 @@ pub fn plan_perf(quick: bool) -> String {
         "gpus_swept".to_string(),
         Json::Arr(budgets.iter().map(|&g| Json::Num(g as f64)).collect()),
     );
+    root.insert(
+        "fleet_sizes".to_string(),
+        Json::Arr(fleet_sizes.iter().map(|&g| Json::Num(g as f64)).collect()),
+    );
     root.insert("entries".to_string(), Json::Arr(entries));
+    root.insert("fleet".to_string(), Json::Arr(fleet_entries));
     let path = "BENCH_plan_search.json";
     let note = match std::fs::write(path, Json::Obj(root).to_string()) {
         Ok(()) => format!("wrote {path}"),
         Err(e) => format!("could not write {path}: {e}"),
     };
     format!(
-        "== plan-search perf: exhaustive vs beam-{beam_width} (12.1B, A800, planner defaults)\n{}\n{note}",
+        "== plan-search perf: exhaustive vs beam-{beam_width}, plus the fleet-scale \
+         folded-vs-unfolded sweep (12.1B, A800)\n{}\n{note}",
         t.render()
     )
 }

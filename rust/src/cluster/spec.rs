@@ -71,6 +71,15 @@ pub struct DeviceView {
 }
 
 impl DeviceView {
+    /// Build a view from an explicit stage→group assignment. Normal code
+    /// obtains views from [`ClusterSpec::device_view`]; this constructor
+    /// exists for tests and for the symmetry-folding probe
+    /// ([`ClusterSpec::replica_device_views`]), which assembles
+    /// per-replica views out of finer-grained packings.
+    pub fn from_groups(groups: Vec<usize>) -> DeviceView {
+        DeviceView { groups }
+    }
+
     /// Group index of a PP rank.
     pub fn group_of(&self, dev: usize) -> usize {
         self.groups[dev]
@@ -197,11 +206,48 @@ impl ClusterSpec {
     /// pool cannot host the topology.
     pub fn device_view(&self, topo: &Topology, order: GroupOrder) -> Option<DeviceView> {
         let per_stage = topo.tp * topo.cp * topo.dp;
-        if per_stage == 0 {
+        self.assign_units(order, topo.pp, per_stage).map(|groups| DeviceView { groups })
+    }
+
+    /// Per-replica stage→group resolution at `tp·cp` granularity. When the
+    /// stage-granular [`Self::device_view`] succeeds, every replica sees
+    /// that same view (the whole `tp·cp·dp` block of a stage sits in one
+    /// group), so the two resolutions agree by construction. The finer
+    /// packing only engages on pools that cannot host whole stages: units
+    /// are placed in replica-major rank order (matching the Megatron rank
+    /// layout, dp outermost), so replicas of the same stage may land on
+    /// different groups — the asymmetry the symmetry fold must detect.
+    /// `None` when even per-replica packing fails.
+    pub fn replica_device_views(
+        &self,
+        topo: &Topology,
+        order: GroupOrder,
+    ) -> Option<Vec<DeviceView>> {
+        if let Some(view) = self.device_view(topo, order) {
+            return Some(vec![view; topo.dp.max(1)]);
+        }
+        let per_unit = topo.tp * topo.cp;
+        let slots = self.assign_units(order, topo.pp.checked_mul(topo.dp)?, per_unit)?;
+        Some(
+            (0..topo.dp)
+                .map(|r| DeviceView { groups: slots[r * topo.pp..(r + 1) * topo.pp].to_vec() })
+                .collect(),
+        )
+    }
+
+    /// Greedy group assignment shared by the stage-granular and
+    /// replica-granular views: place `n_units` units of `per_unit` GPUs
+    /// each, visiting groups in the requested order.
+    fn assign_units(
+        &self,
+        order: GroupOrder,
+        n_units: usize,
+        per_unit: usize,
+    ) -> Option<Vec<usize>> {
+        if per_unit == 0 {
             return None;
         }
-        let mut caps: Vec<usize> =
-            self.groups.iter().map(|g| g.devices() / per_stage).collect();
+        let mut caps: Vec<usize> = self.groups.iter().map(|g| g.devices() / per_unit).collect();
         let seq: Vec<usize> = match order {
             GroupOrder::Declared | GroupOrder::Interleaved => (0..self.groups.len()).collect(),
             GroupOrder::FastFirst => {
@@ -218,13 +264,13 @@ impl ClusterSpec {
             }
         };
 
-        let mut assigned = Vec::with_capacity(topo.pp);
+        let mut assigned = Vec::with_capacity(n_units);
         match order {
             GroupOrder::Interleaved => {
-                while assigned.len() < topo.pp {
+                while assigned.len() < n_units {
                     let before = assigned.len();
                     for &g in &seq {
-                        if assigned.len() == topo.pp {
+                        if assigned.len() == n_units {
                             break;
                         }
                         if caps[g] > 0 {
@@ -239,17 +285,17 @@ impl ClusterSpec {
             }
             _ => {
                 for &g in &seq {
-                    while caps[g] > 0 && assigned.len() < topo.pp {
+                    while caps[g] > 0 && assigned.len() < n_units {
                         caps[g] -= 1;
                         assigned.push(g);
                     }
                 }
-                if assigned.len() < topo.pp {
+                if assigned.len() < n_units {
                     return None;
                 }
             }
         }
-        Some(DeviceView { groups: assigned })
+        Some(assigned)
     }
 
     /// Point-to-point time for one pipeline hop between PP ranks under a
@@ -406,6 +452,37 @@ mod tests {
         assert!(spec.device_view(&Topology::new(8, 4, 1), GroupOrder::FastFirst).is_none());
         // Exactly fits.
         assert!(spec.device_view(&Topology::new(8, 2, 1), GroupOrder::FastFirst).is_some());
+    }
+
+    #[test]
+    fn replica_views_match_stage_view_when_it_exists() {
+        // Whenever the stage-granular view resolves, every replica gets
+        // exactly that view — the fold's symmetric fast path.
+        let spec = ClusterSpec::mixed_a800_h20();
+        let topo = Topology::new(4, 2, 2); // 8 GPUs per stage: one stage per node
+        for order in spec.group_orders() {
+            let stage = spec.device_view(&topo, order).unwrap();
+            let views = spec.replica_device_views(&topo, order).unwrap();
+            assert_eq!(views.len(), topo.dp);
+            assert!(views.iter().all(|v| *v == stage));
+        }
+    }
+
+    #[test]
+    fn replica_views_pack_finer_than_stage_blocks() {
+        // 2 GPUs per (tp·cp) unit, 6 replicas of a 1-stage pipeline:
+        // the stage-granular view needs 12 contiguous GPUs in one group
+        // (impossible on 8+8), but per-replica packing fits 4 replicas
+        // on the A800 node and 2 on the H20 node — replicas straddle
+        // groups, which is exactly what the fold must detect.
+        let spec = ClusterSpec::mixed_a800_h20();
+        let topo = Topology::new(2, 1, 6);
+        assert!(spec.device_view(&topo, GroupOrder::Declared).is_none());
+        let views = spec.replica_device_views(&topo, GroupOrder::Declared).unwrap();
+        let groups: Vec<usize> = views.iter().map(|v| v.group_of(0)).collect();
+        assert_eq!(groups, vec![0, 0, 0, 0, 1, 1]);
+        // A pool that cannot host the replicas at all still declines.
+        assert!(spec.replica_device_views(&Topology::new(8, 4, 1), GroupOrder::Declared).is_none());
     }
 
     #[test]

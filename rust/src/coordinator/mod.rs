@@ -30,7 +30,8 @@ USAGE:
                mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
                [--seq N] [--mbsize N] [--topk N] [--threads N]
                [--search exhaustive|beam] [--beam-width N]
-               [--emit-plan FILE.json] [--verbose]
+               [--emit-plan FILE.json] [--verbose] [--json]
+  stp serve    [--threads N]
   stp train    [--plan FILE.json] [--backend virtual|pjrt]
                [--kernels blocked|simd|reference] [--workers N]
                [--virtual-scale auto|F]
@@ -41,6 +42,13 @@ USAGE:
                [--elastic] [--replan [--beam-width N]]
 
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
+Serve:     planning-as-a-service — one JSON query object per stdin line
+           (keys: model, cluster, hw, gpus, mem_gib, seq, mbsize,
+           search, beam_width), one PlanReport JSON per stdout line,
+           byte-identical to `stp plan --json` for the same query.
+           Reports are cached by canonical query key; cluster/budget
+           deltas re-simulate only candidates whose resolved hardware
+           changed. Diagnostics go to stderr.
 Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
            without it the pool is uniform over --hw.
 Training:  the virtual backend (default) runs everywhere on miniature
@@ -314,6 +322,7 @@ pub fn run_cli(args: Vec<String>) -> Result<i32> {
             Ok(if bad == 0 { 0 } else { 1 })
         }
         "plan" => run_plan(&flags),
+        "serve" => run_serve(&flags),
         "train" => run_train(&flags),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -345,16 +354,28 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
         other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam)"),
     };
     let topk = flag(flags, "topk", 10usize);
+    let json = flags.contains_key("json");
     let report = plan(&q);
-    println!("{}", report.render(topk));
-    if flags.contains_key("verbose") {
-        println!("{}", report.reject_tally_line());
+    if json {
+        // One machine-readable line; exactly the bytes `stp serve`
+        // answers for the same query, so the CI smoke can `cmp` them.
+        println!("{}", report.to_json());
+    } else {
+        println!("{}", report.render(topk));
+        if flags.contains_key("verbose") {
+            println!("{}", report.reject_tally_line());
+        }
     }
     if let Some(path) = flags.get("emit-plan") {
         match &report.best_artifact {
             Some(a) => {
                 a.save(path)?;
-                println!("wrote plan artifact {path} ({})", a.label());
+                let note = format!("wrote plan artifact {path} ({})", a.label());
+                if json {
+                    eprintln!("{note}");
+                } else {
+                    println!("{note}");
+                }
             }
             None => anyhow::bail!("no memory-feasible plan to emit"),
         }
@@ -366,6 +387,114 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
             Ok(1)
         }
     }
+}
+
+/// Resolve a serve query's device pool: a preset/path name string, an
+/// inline `ClusterSpec` JSON object, or (absent) a uniform pool over
+/// the query's `hw` field — the same ladder as the `stp plan` flags.
+fn serve_cluster(spec: Option<&crate::config::Json>, hw: &str) -> Result<ClusterSpec> {
+    use crate::config::Json;
+    match spec {
+        None => Ok(ClusterSpec::uniform(hw_by_name(hw))),
+        Some(Json::Str(name)) => cluster_by_name(name),
+        Some(obj @ Json::Obj(_)) => {
+            ClusterSpec::from_json(obj).map_err(|e| anyhow::anyhow!("inline cluster spec: {e}"))
+        }
+        Some(other) => {
+            anyhow::bail!("'cluster' must be a preset name or an inline spec object, got {other}")
+        }
+    }
+}
+
+/// Build the [`PlanQuery`](crate::plan::PlanQuery) for one serve line —
+/// field for field the same construction as the `stp plan` flags, so
+/// the answer is byte-identical to `stp plan --json`.
+fn serve_query(
+    line: &crate::config::Json,
+    flags: &HashMap<String, String>,
+) -> Result<crate::plan::PlanQuery> {
+    use crate::config::Json;
+    use crate::plan::{PlanQuery, SearchMode};
+
+    let str_of = |key: &str, default: &str| -> String {
+        line.get(key).and_then(Json::as_str).unwrap_or(default).to_string()
+    };
+    let model = plan_model_by_name(&str_of("model", "12b"));
+    let cluster = serve_cluster(line.get("cluster"), &str_of("hw", "a800"))?;
+    let gpus = line.get("gpus").and_then(Json::as_usize).unwrap_or(16);
+    let mut q = PlanQuery::new(model, cluster, gpus);
+    if let Some(v) = line.get("mem_gib").and_then(Json::as_f64) {
+        q.mem_cap_gib = v;
+    }
+    if let Some(v) = line.get("seq").and_then(Json::as_usize) {
+        q.seq = v;
+    }
+    if let Some(v) = line.get("mbsize").and_then(Json::as_usize) {
+        q.mb_size = v;
+    }
+    q.threads = flag(flags, "threads", q.threads);
+    let width = line.get("beam_width").and_then(Json::as_usize).unwrap_or(8);
+    q.search = match str_of("search", "exhaustive").as_str() {
+        "beam" => SearchMode::Beam { width },
+        "exhaustive" | "full" => SearchMode::Exhaustive,
+        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam)"),
+    };
+    Ok(q)
+}
+
+/// `stp serve`: the planning daemon — one JSON query per stdin line,
+/// one `PlanReport` JSON line on stdout, answered through the keyed
+/// [`PlanCache`](crate::plan::PlanCache): exact repeats come from the
+/// report store, cluster/budget deltas re-search with memoized
+/// evaluations. Malformed queries answer `{"error": ...}` and keep the
+/// daemon alive; diagnostics go to stderr.
+fn run_serve(flags: &HashMap<String, String>) -> Result<i32> {
+    use std::io::{BufRead, Write};
+
+    use crate::config::Json;
+    use crate::plan::PlanCache;
+
+    let mut cache = PlanCache::new();
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let mut n = 0usize;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        n += 1;
+        let t0 = std::time::Instant::now();
+        let parsed = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("bad query JSON: {e}"))
+            .and_then(|j| serve_query(&j, flags));
+        match parsed {
+            Ok(q) => {
+                let a = cache.query(&q);
+                out.write_all(a.json.as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                eprintln!(
+                    "serve: query {n} {} in {:.1} ms ({} sims run, {} reused)",
+                    if a.hit { "cache-hit" } else { "planned" },
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    a.sims_run,
+                    a.sims_reused,
+                );
+            }
+            Err(e) => {
+                let mut obj = std::collections::BTreeMap::new();
+                obj.insert("error".to_string(), Json::Str(e.to_string()));
+                out.write_all(Json::Obj(obj).to_string().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                eprintln!("serve: query {n} rejected: {e}");
+            }
+        }
+    }
+    eprintln!("serve: answered {n} queries ({} cached reports)", cache.len());
+    Ok(0)
 }
 
 /// `stp train`: pipeline training through the backend-abstract executor —
@@ -540,6 +669,31 @@ mod tests {
         assert_eq!(f.get("quiet").unwrap(), "true");
         assert_eq!(f.get("schedule").unwrap(), "zb-v");
         assert_eq!(flag(&f, "missing", 7usize), 7);
+    }
+
+    #[test]
+    fn serve_query_matches_the_plan_flag_construction() {
+        use crate::config::Json;
+        use crate::plan::{canonical_key, PlanQuery};
+
+        let j = Json::parse("{\"model\":\"tiny\",\"gpus\":4,\"seq\":1024}").unwrap();
+        let q = serve_query(&j, &HashMap::new()).unwrap();
+        let mut want = PlanQuery::new(
+            plan_model_by_name("tiny"),
+            ClusterSpec::uniform(hw_by_name("a800")),
+            4,
+        );
+        want.seq = 1024;
+        assert_eq!(canonical_key(&q), canonical_key(&want), "defaults must mirror `stp plan`");
+
+        let delta =
+            Json::parse("{\"model\":\"tiny\",\"gpus\":4,\"seq\":1024,\"cluster\":\"h20\"}")
+                .unwrap();
+        let q2 = serve_query(&delta, &HashMap::new()).unwrap();
+        assert_ne!(canonical_key(&q), canonical_key(&q2), "cluster deltas must re-key");
+
+        assert!(serve_query(&Json::parse("{\"search\":\"sideways\"}").unwrap(), &HashMap::new())
+            .is_err());
     }
 
     #[test]

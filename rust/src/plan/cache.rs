@@ -1,0 +1,511 @@
+//! The keyed plan cache and the per-search memos behind it
+//! (DESIGN.md §15).
+//!
+//! Three layers, coarsest first:
+//!
+//! 1. [`PlanCache`] — exact-query memoization: a canonical key over
+//!    model dims × [`ClusterSpec`] × budget × search mode maps to the
+//!    stored [`PlanReport`](super::report::PlanReport) JSON, so a repeat
+//!    what-if query is answered byte-identically without re-searching.
+//! 2. [`EvalMemo`] — cross-query simulation reuse: evaluations are keyed
+//!    by a fingerprint of the candidate's *resolved* cost content (unit
+//!    timings, per-device profiles, per-hop P2P costs), not the raw
+//!    query, so an incremental re-search after a cluster delta replays
+//!    only the candidates whose resolved physics actually changed. Hits
+//!    never alter the search trajectory — the searched set and ranking
+//!    are those of a cold run, so reports stay byte-identical.
+//! 3. [`CostMemo`] — the per-search cost-model memo (satellite perf
+//!    fix): beam rounds and the exhaustive sweep share one `CostModel`
+//!    per (tp, pp, dp, vpp, order, placement) instead of rebuilding it
+//!    per candidate.
+//!
+//! All keys are content-derived (FNV-1a over canonical little-endian
+//! bytes, `f64::to_bits` for floats) — no hasher randomization, so keys
+//! are stable across processes and platforms.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::cluster::ClusterSpec;
+use crate::sim::CostModel;
+
+use super::evaluate::{EvalContext, Evaluation};
+use super::search::{plan_with_memo, PlanQuery};
+use super::space::Candidate;
+
+/// FNV-1a, 64-bit: tiny, dependency-free, deterministic across runs.
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    fn write_str(&mut self, s: &str) {
+        self.write_usize(s.len());
+        for &b in s.as_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint of everything the replay and the DP/MFU arithmetic read
+/// from a [`CostModel`]: the *resolved* quantities (per-chunk unit
+/// timings, per-device profiles, per-hop P2P costs, the group-ordered
+/// FLOPs aggregation), not the raw [`ClusterSpec`]. Two cost models with
+/// equal fingerprints replay bit-identically, so a cluster delta that
+/// leaves a candidate's resolved devices untouched (say, a node group
+/// its view never lands on) still reuses that candidate's evaluation.
+pub fn cost_fingerprint(cost: &CostModel) -> u64 {
+    let mut h = Fnv64::new();
+    let t = &cost.topo;
+    for v in [t.tp, t.pp, t.dp, t.cp, t.vpp, cost.mb_size, cost.p2p_bytes, cost.static_bytes] {
+        h.write_usize(v);
+    }
+    h.write_f64(cost.w_frac);
+    h.write_f64(cost.model_flops_per_sample);
+    h.write_usize(cost.chunks.len());
+    for cu in &cost.chunks {
+        for units in [&cu.fwd, &cu.bwd, &cu.wgrad] {
+            h.write_usize(units.len());
+            for u in units {
+                h.write_f64(u.compute);
+                h.write_f64(u.ar);
+                h.write_u64(u.stream as u64);
+            }
+        }
+    }
+    for &b in &cost.act_bytes {
+        h.write_usize(b);
+    }
+    for &b in &cost.static_bytes_per_dev {
+        h.write_usize(b);
+    }
+    for &d in &cost.chunk_dev {
+        h.write_usize(d);
+    }
+    h.write_usize(cost.stage_plan.chunks.len());
+    for ch in &cost.stage_plan.chunks {
+        h.write_usize(ch.lm_layers);
+        h.write_usize(ch.vit_layers);
+        h.write_u64(ch.has_embed as u64);
+        h.write_u64(ch.has_head as u64);
+    }
+    // Resolved device pool: per-PP-rank profile fields (compute, link
+    // tiers, collective constants, PCIe, memory cap) and the uniformity
+    // flag the DP gradient ring's span rule reads.
+    let n_dev = cost.view.n_devices();
+    h.write_usize(n_dev);
+    h.write_u64(cost.cluster.is_uniform() as u64);
+    for d in 0..n_dev {
+        h.write_usize(cost.view.group_of(d));
+        let hw = cost.cluster.profile_of(&cost.view, d);
+        for v in [
+            hw.bf16_tflops,
+            hw.matmul_efficiency,
+            hw.hbm_gbps,
+            hw.nvlink_gbps,
+            hw.allreduce_efficiency,
+            hw.collective_latency,
+            hw.p2p_latency,
+            hw.internode_gbps,
+            hw.pcie_gbps,
+            hw.mem_gib,
+        ] {
+            h.write_f64(v);
+        }
+        h.write_usize(hw.gpus_per_node);
+    }
+    // Per-hop P2P costs exactly as the HopTable resolves them: along the
+    // chunk chain's device pairs, both directions.
+    for c in 0..cost.chunk_dev.len().saturating_sub(1) {
+        let (a, b) = (cost.chunk_dev[c], cost.chunk_dev[c + 1]);
+        h.write_f64(cost.cluster.p2p_secs(&cost.view, &cost.topo, a, b, cost.p2p_bytes));
+        h.write_f64(cost.cluster.p2p_secs(&cost.view, &cost.topo, b, a, cost.p2p_bytes));
+    }
+    // MFU aggregation: (ranks, peak FLOPs) per group in group-index
+    // order — the exact fp summation order of `aggregate_peak_flops`.
+    let ranks = cost.view.ranks_per_group(cost.cluster.groups.len());
+    for (g, &n) in ranks.iter().enumerate() {
+        h.write_usize(n);
+        h.write_f64(cost.cluster.groups[g].hw.bf16_tflops);
+    }
+    h.finish()
+}
+
+/// Query-context fingerprint: the evaluation inputs that live outside
+/// the cost model (model identity for the DP gradient volume, caps,
+/// simulation mode).
+fn ctx_fingerprint(ctx: &EvalContext) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_str(ctx.model.name());
+    h.write_usize(ctx.model.total_params());
+    h.write_usize(ctx.mem_cap_bytes);
+    h.write_usize(ctx.seq);
+    h.write_usize(ctx.vit_tokens);
+    h.write_usize(ctx.mb_size);
+    h.write_str(ctx.sim.label());
+    h.finish()
+}
+
+/// Identity of one memoized evaluation: the resolved-content and context
+/// fingerprints plus the exact candidate coordinates that pick the
+/// schedule. Candidate `id` is deliberately absent — ids are
+/// per-enumeration labels, not physics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EvalKey {
+    cost_fp: u64,
+    ctx_fp: u64,
+    tp: usize,
+    pp: usize,
+    dp: usize,
+    vpp: usize,
+    kind: u8,
+    order: u8,
+    n_mb: usize,
+    offload_warmup: u32,
+    offload_steady: u32,
+    reload_lead: usize,
+}
+
+impl EvalKey {
+    pub fn new(cost_fp: u64, ctx: &EvalContext, c: &Candidate) -> EvalKey {
+        EvalKey {
+            cost_fp,
+            ctx_fp: ctx_fingerprint(ctx),
+            tp: c.tp,
+            pp: c.pp,
+            dp: c.dp,
+            vpp: c.vpp(),
+            kind: c.kind as u8,
+            order: c.order as u8,
+            n_mb: c.n_mb,
+            offload_warmup: c.offload.alpha_warmup.to_bits(),
+            offload_steady: c.offload.alpha_steady.to_bits(),
+            reload_lead: c.offload.reload_lead,
+        }
+    }
+}
+
+/// Per-search cost-model memo: one [`CostModel`] (plus its fingerprint)
+/// per (tp, pp, dp, vpp, order, placement). `Arc`-shared so the
+/// sequential pre-filter pass and the parallel simulation workers read
+/// the same instance without cloning model-sized data.
+#[derive(Default)]
+pub struct CostMemo {
+    map: BTreeMap<(usize, usize, usize, usize, u8, u8), (Arc<CostModel>, u64)>,
+}
+
+impl CostMemo {
+    pub fn new() -> CostMemo {
+        CostMemo::default()
+    }
+
+    fn key(c: &Candidate) -> (usize, usize, usize, usize, u8, u8) {
+        (c.tp, c.pp, c.dp, c.vpp(), c.order as u8, c.placement() as u8)
+    }
+
+    pub fn get(&self, c: &Candidate) -> Option<&(Arc<CostModel>, u64)> {
+        self.map.get(&Self::key(c))
+    }
+
+    /// The memoized cost model for `c`, building (and fingerprinting) it
+    /// on first sight.
+    pub fn get_or_build(&mut self, ctx: &EvalContext, c: &Candidate) -> (Arc<CostModel>, u64) {
+        self.map
+            .entry(Self::key(c))
+            .or_insert_with(|| {
+                let cost = Arc::new(ctx.cost_model(c));
+                let fp = cost_fingerprint(&cost);
+                (cost, fp)
+            })
+            .clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Cross-query evaluation memo. A hit re-labels the stored evaluation
+/// with the requesting candidate (ids are per-enumeration); everything
+/// else is bit-identical to a fresh simulation by the fingerprint
+/// argument above, so memoized searches rank — and serialize — exactly
+/// like cold ones.
+#[derive(Default)]
+pub struct EvalMemo {
+    map: BTreeMap<EvalKey, Evaluation>,
+    /// Evaluations answered from the memo (for serve diagnostics).
+    pub hits: usize,
+    /// Evaluations that had to be simulated.
+    pub misses: usize,
+}
+
+impl EvalMemo {
+    pub fn new() -> EvalMemo {
+        EvalMemo::default()
+    }
+
+    pub fn lookup(&mut self, key: &EvalKey, c: &Candidate) -> Option<Evaluation> {
+        match self.map.get(key) {
+            Some(e) => {
+                self.hits += 1;
+                let mut e = *e;
+                e.candidate = *c;
+                Some(e)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn record(&mut self, key: EvalKey, e: Evaluation) {
+        self.map.insert(key, e);
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Canonical cache key for a whole [`PlanQuery`]: model dims × cluster
+/// spec (full JSON, sorted keys) × budget × caps × candidate-space knobs
+/// × search mode. `threads` is deliberately excluded — results are
+/// bit-identical at any thread count, so queries differing only in
+/// worker count share one entry.
+pub fn canonical_key(q: &PlanQuery) -> String {
+    use std::fmt::Write as _;
+    let mut k = String::new();
+    let _ = write!(
+        k,
+        "model={};params={};chunks={}-{};cluster={};gpus={};mem={:016x};seq={};mb={};vit={}",
+        q.model.name(),
+        q.model.total_params(),
+        q.model.min_chunks(),
+        q.model.max_chunks(),
+        q.cluster.to_json(),
+        q.gpus,
+        q.mem_cap_gib.to_bits(),
+        q.seq,
+        q.mb_size,
+        q.vit_tokens,
+    );
+    let _ = write!(
+        k,
+        ";slack={:016x};keep={};search={};sim={};n_mb={:?}",
+        q.prune_slack.to_bits(),
+        q.min_keep,
+        q.search.label(),
+        q.sim.label(),
+        q.n_mb_options,
+    );
+    for o in &q.offload_variants {
+        let _ = write!(
+            k,
+            ";off={:08x},{:08x},{}",
+            o.alpha_warmup.to_bits(),
+            o.alpha_steady.to_bits(),
+            o.reload_lead
+        );
+    }
+    for kind in &q.kinds {
+        let _ = write!(k, ";kind={}", kind.name());
+    }
+    k
+}
+
+/// One answered cache query (the serve loop's unit of work).
+#[derive(Debug, Clone)]
+pub struct CacheAnswer {
+    /// The `PlanReport` JSON line — byte-identical to what a cold
+    /// `plan(&q)` would serialize.
+    pub json: String,
+    /// Answered from the report store without searching?
+    pub hit: bool,
+    /// On a miss: simulations answered from the evaluation memo.
+    pub sims_reused: usize,
+    /// On a miss: simulations actually replayed.
+    pub sims_run: usize,
+}
+
+/// The long-lived planning cache behind `stp serve`: a report store over
+/// [`canonical_key`] plus a shared [`EvalMemo`] for incremental
+/// re-search on cluster (or budget) deltas.
+#[derive(Default)]
+pub struct PlanCache {
+    reports: BTreeMap<String, String>,
+    evals: EvalMemo,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Answer a query: exact hits return the stored report; misses run a
+    /// memoized search (reusing every evaluation whose resolved physics
+    /// is unchanged) and store the result.
+    pub fn query(&mut self, q: &PlanQuery) -> CacheAnswer {
+        let key = canonical_key(q);
+        if let Some(json) = self.reports.get(&key) {
+            return CacheAnswer { json: json.clone(), hit: true, sims_reused: 0, sims_run: 0 };
+        }
+        let (h0, m0) = (self.evals.hits, self.evals.misses);
+        let report = plan_with_memo(q, Some(&mut self.evals));
+        let json = report.to_json().to_string();
+        self.reports.insert(key, json.clone());
+        CacheAnswer {
+            json,
+            hit: false,
+            sims_reused: self.evals.hits - h0,
+            sims_run: self.evals.misses - m0,
+        }
+    }
+
+    /// Stored reports (exact-key entries).
+    pub fn len(&self) -> usize {
+        self.reports.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reports.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{GroupOrder, HardwareProfile};
+    use crate::model::ModelConfig;
+    use crate::plan::space::PlanModel;
+    use crate::schedule::{OffloadParams, ScheduleKind};
+    use crate::sim::SimMode;
+
+    fn ctx(cluster: ClusterSpec) -> EvalContext {
+        EvalContext {
+            model: PlanModel::Llm(ModelConfig::qwen2_12b()),
+            cluster,
+            mem_cap_bytes: (80.0 * (1u64 << 30) as f64) as usize,
+            seq: 2048,
+            vit_tokens: 0,
+            mb_size: 1,
+            sim: SimMode::Folded,
+        }
+    }
+
+    fn cand(tp: usize, pp: usize, dp: usize) -> Candidate {
+        Candidate {
+            id: 7,
+            tp,
+            pp,
+            dp,
+            kind: ScheduleKind::Stp,
+            n_mb: 16,
+            order: GroupOrder::Declared,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+        }
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_content_sensitive() {
+        let a = ctx(ClusterSpec::uniform(HardwareProfile::a800()));
+        let c = cand(2, 2, 2);
+        let fp1 = cost_fingerprint(&a.cost_model(&c));
+        let fp2 = cost_fingerprint(&a.cost_model(&c));
+        assert_eq!(fp1, fp2, "same content must fingerprint identically");
+        let h = ctx(ClusterSpec::uniform(HardwareProfile::h20()));
+        assert_ne!(
+            fp1,
+            cost_fingerprint(&h.cost_model(&c)),
+            "different hardware must change the fingerprint"
+        );
+        assert_ne!(
+            fp1,
+            cost_fingerprint(&a.cost_model(&cand(4, 2, 1))),
+            "different topology must change the fingerprint"
+        );
+    }
+
+    #[test]
+    fn cost_memo_shares_one_model_per_shape() {
+        let ctx = ctx(ClusterSpec::uniform(HardwareProfile::a800()));
+        let mut memo = CostMemo::new();
+        assert!(memo.is_empty());
+        let (m1, fp1) = memo.get_or_build(&ctx, &cand(2, 2, 2));
+        // Same shape, different kind/n_mb: the cost model is reused.
+        let mut c2 = cand(2, 2, 2);
+        c2.kind = ScheduleKind::ZbV;
+        c2.n_mb = 32;
+        let (m2, fp2) = memo.get_or_build(&ctx, &c2);
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(fp1, fp2);
+        assert_eq!(memo.len(), 1);
+        memo.get_or_build(&ctx, &cand(4, 2, 1));
+        assert_eq!(memo.len(), 2);
+    }
+
+    #[test]
+    fn eval_memo_relabels_hits_with_the_requesting_candidate() {
+        let ctx = ctx(ClusterSpec::uniform(HardwareProfile::a800()));
+        let c = cand(2, 2, 2);
+        let mut costs = CostMemo::new();
+        let (_, fp) = costs.get_or_build(&ctx, &c);
+        let key = EvalKey::new(fp, &ctx, &c);
+        let mut memo = EvalMemo::new();
+        assert!(memo.lookup(&key, &c).is_none());
+        assert_eq!(memo.misses, 1);
+        let e = crate::plan::evaluate::evaluate(&ctx, &c);
+        memo.record(key, e);
+        let mut relabeled = c;
+        relabeled.id = 99;
+        let hit = memo.lookup(&key, &relabeled).expect("recorded key must hit");
+        assert_eq!(memo.hits, 1);
+        assert_eq!(hit.candidate.id, 99);
+        assert_eq!(hit.throughput.to_bits(), e.throughput.to_bits());
+    }
+
+    #[test]
+    fn canonical_key_ignores_threads_but_not_budget() {
+        let model = PlanModel::Llm(ModelConfig::qwen2_12b());
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let q = PlanQuery::new(model.clone(), cluster.clone(), 8);
+        let mut same = q.clone();
+        same.threads = 7;
+        assert_eq!(canonical_key(&q), canonical_key(&same));
+        let mut bigger = q.clone();
+        bigger.gpus = 16;
+        assert_ne!(canonical_key(&q), canonical_key(&bigger));
+        let mut unfolded = q.clone();
+        unfolded.sim = SimMode::Unfolded;
+        assert_ne!(canonical_key(&q), canonical_key(&unfolded));
+    }
+}

@@ -8,8 +8,9 @@
 
 use crate::cluster::ClusterSpec;
 use crate::schedule::{build_schedule_scaled, stp, theory, ScheduleKind, ShapeCosts};
-use crate::sim::{CostModel, SimArena, SimReport, Simulator};
+use crate::sim::{CostModel, FleetSim, FoldedTopology, SimArena, SimMode, SimReport, Simulator};
 
+use super::cache::CostMemo;
 use super::space::{Candidate, PlanModel};
 
 /// Everything the planner needs to evaluate candidates for one query.
@@ -26,6 +27,10 @@ pub struct EvalContext {
     pub vit_tokens: usize,
     /// Samples per microbatch.
     pub mb_size: usize,
+    /// Replica replay strategy: symmetry-folded (default) or the full
+    /// per-replica sweep. Bit-identical results either way (DESIGN.md
+    /// §15) — `Unfolded` exists for the bench's baseline measurement.
+    pub sim: SimMode,
 }
 
 impl EvalContext {
@@ -163,8 +168,47 @@ pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
 /// `sim_failed` set instead of aborting the whole `plan` run.
 pub fn evaluate_in(ctx: &EvalContext, c: &Candidate, arena: &mut SimArena) -> Evaluation {
     let cost = ctx.cost_model(c);
-    let s = build_candidate_schedule(&cost, c);
-    let r = match Simulator::new(&cost).without_trace().try_run_in(&s, arena) {
+    evaluate_with_cost(ctx, c, &cost, arena)
+}
+
+/// [`evaluate_in`] against a prebuilt (memoized) cost model: candidates
+/// whose (tp, pp, dp, vpp, order, placement) repeat share one
+/// `CostModel` instead of rebuilding it per candidate. The memo is
+/// read-only here, so parallel workers can share it.
+pub fn evaluate_in_memo(
+    ctx: &EvalContext,
+    c: &Candidate,
+    arena: &mut SimArena,
+    costs: &CostMemo,
+) -> Evaluation {
+    match costs.get(c) {
+        Some((cost, _)) => evaluate_with_cost(ctx, c, cost, arena),
+        None => evaluate_in(ctx, c, arena),
+    }
+}
+
+fn evaluate_with_cost(
+    ctx: &EvalContext,
+    c: &Candidate,
+    cost: &CostModel,
+    arena: &mut SimArena,
+) -> Evaluation {
+    let s = build_candidate_schedule(cost, c);
+    // Replica replay: the fold derives the replica equivalence classes
+    // (always one on the planner's fault-free admissible candidates —
+    // this is the path that keeps fleet-scale dp free), the unfolded
+    // baseline replays every replica; both merge by slowest replica and
+    // agree to the bit (DESIGN.md §15).
+    let fleet = FleetSim::new(cost).without_trace();
+    let replay = match ctx.sim {
+        SimMode::Folded => {
+            let fold = FoldedTopology::derive(&ctx.cluster, &cost.topo, c.order, None)
+                .expect("evaluate: candidate admitted without a hostable view");
+            fleet.run_folded(&s, &fold, arena)
+        }
+        SimMode::Unfolded => fleet.run_unfolded(&s, c.dp, arena),
+    };
+    let r = match replay {
         Ok(r) => r,
         Err(_) => {
             return Evaluation {
@@ -217,6 +261,7 @@ mod tests {
             seq: 3072,
             vit_tokens: 0,
             mb_size: 1,
+            sim: SimMode::Folded,
         }
     }
 
@@ -292,6 +337,25 @@ mod tests {
             assert_eq!(fresh.peak_mem_bytes, reused.peak_mem_bytes, "{kind:?}");
             assert_eq!(fresh.feasible, reused.feasible, "{kind:?}");
             assert!(!reused.sim_failed, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn unfolded_mode_is_bit_identical_to_folded() {
+        // The fold's headline invariant at the evaluation layer: on a
+        // symmetric pool the folded replay (one representative) and the
+        // unfolded sweep (every replica) agree to the bit for all kinds.
+        let fctx = ctx();
+        let mut uctx = ctx();
+        uctx.sim = SimMode::Unfolded;
+        for kind in ScheduleKind::all() {
+            let c = cand(2, 2, 4, kind, 16);
+            let f = evaluate(&fctx, &c);
+            let u = evaluate(&uctx, &c);
+            assert_eq!(f.iteration_secs.to_bits(), u.iteration_secs.to_bits(), "{kind:?}");
+            assert_eq!(f.throughput.to_bits(), u.throughput.to_bits(), "{kind:?}");
+            assert_eq!(f.mfu.to_bits(), u.mfu.to_bits(), "{kind:?}");
+            assert_eq!(f.peak_mem_bytes, u.peak_mem_bytes, "{kind:?}");
         }
     }
 

@@ -26,10 +26,15 @@
 //!    to JSON and traceable via `trace::write_chrome_trace` ([`report`]).
 //!
 //! Entry points: [`plan`] for one-shot queries (the `stp plan`
-//! subcommand and `examples/auto_plan.rs`), [`evaluate::evaluate`] /
+//! subcommand and `examples/auto_plan.rs`), [`PlanCache`] for query
+//! streams (`stp serve`) — a keyed report cache over [`canonical_key`]
+//! plus a cross-query [`EvalMemo`] so cluster-delta re-searches only
+//! simulate candidates whose resolved hardware actually changed
+//! ([`cache`], DESIGN.md §15) — and [`evaluate::evaluate`] /
 //! [`evaluate::simulate_candidate`] for inspecting individual candidates.
 
 pub mod artifact;
+pub mod cache;
 pub mod constraints;
 pub mod evaluate;
 pub mod report;
@@ -37,10 +42,13 @@ pub mod search;
 pub mod space;
 
 pub use artifact::{PlanArtifact, PLAN_SCHEMA};
+pub use cache::{canonical_key, cost_fingerprint, CacheAnswer, CostMemo, EvalKey, EvalMemo};
+pub use cache::PlanCache;
 pub use constraints::Reject;
-pub use evaluate::{evaluate, simulate_candidate, EvalContext, Evaluation};
+pub use evaluate::{evaluate, evaluate_in_memo, simulate_candidate, EvalContext, Evaluation};
 pub use report::PlanReport;
-pub use search::{evaluate_parallel, plan, PlanQuery, SearchMode};
+pub use search::{evaluate_parallel, evaluate_parallel_memo, plan, plan_with_memo};
+pub use search::{PlanQuery, SearchMode};
 pub use space::{Candidate, PlanModel};
 
 #[cfg(test)]

@@ -29,10 +29,11 @@ use std::sync::mpsc;
 
 use crate::cluster::ClusterSpec;
 use crate::schedule::{OffloadParams, ScheduleKind};
-use crate::sim::{CostModel, SimArena};
+use crate::sim::{SimArena, SimMode};
 
+use super::cache::{CostMemo, EvalKey, EvalMemo};
 use super::constraints::{admissible, memory_feasible, Reject};
-use super::evaluate::{estimated_throughput, evaluate_in, EvalContext, Evaluation};
+use super::evaluate::{estimated_throughput, evaluate_in_memo, EvalContext, Evaluation};
 use super::report::PlanReport;
 use super::space::{enumerate, Candidate, PlanModel};
 
@@ -98,6 +99,10 @@ pub struct PlanQuery {
     /// Exploration strategy (exhaustive by default; beam for large
     /// budgets).
     pub search: SearchMode,
+    /// Replica replay strategy: symmetry-folded (default, fleet-scale
+    /// dp is free) or the full per-replica sweep (the bench baseline).
+    /// Results are bit-identical either way.
+    pub sim: SimMode,
 }
 
 impl PlanQuery {
@@ -124,6 +129,7 @@ impl PlanQuery {
             prune_slack: 0.5,
             min_keep: 192,
             search: SearchMode::Exhaustive,
+            sim: SimMode::Folded,
         }
     }
 
@@ -139,6 +145,7 @@ impl PlanQuery {
             seq: self.seq,
             vit_tokens: self.vit_tokens,
             mb_size: self.mb_size,
+            sim: self.sim,
         }
     }
 
@@ -153,6 +160,14 @@ impl PlanQuery {
 
 /// Run the full search and return the ranked report.
 pub fn plan(q: &PlanQuery) -> PlanReport {
+    plan_with_memo(q, None)
+}
+
+/// [`plan`] with an optional cross-query evaluation memo (the
+/// [`super::cache::PlanCache`] threads one through). Memo hits skip the
+/// replay but still enter the ranked list, so the funnel counters and
+/// the report bytes are identical to a cold search.
+pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport {
     let ctx = q.eval_context();
     let orders = q.cluster.group_orders();
     let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants);
@@ -177,22 +192,22 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
     }
 
     // Stage 2+3: memory pre-filter and theory estimates. The cost model
-    // depends on (tp, pp, dp, vpp, order, placement) — cache it per key.
-    // On mixed pools the group order and the schedule family's placement
-    // change which device a chunk is costed against, and DP changes how
-    // many GPUs a stage consumes (and so which group it lands in).
-    let mut cost_cache: BTreeMap<(usize, usize, usize, usize, u8, u8), CostModel> =
-        BTreeMap::new();
+    // depends on (tp, pp, dp, vpp, order, placement) — the CostMemo
+    // builds each shape once and stage 4 reuses the same models (and
+    // their fingerprints) for simulation and eval memoization. On mixed
+    // pools the group order and the schedule family's placement change
+    // which device a chunk is costed against, and DP changes how many
+    // GPUs a stage consumes (and so which group it lands in).
+    let mut costs = CostMemo::new();
     let mut scored: Vec<(Candidate, f64)> = Vec::with_capacity(shaped.len());
     let mut n_pruned_memory = 0;
     for c in shaped {
-        let key = (c.tp, c.pp, c.dp, c.vpp(), c.order as u8, c.placement() as u8);
-        let cost = cost_cache.entry(key).or_insert_with(|| ctx.cost_model(&c));
-        if !memory_feasible(cost, c.kind, c.n_mb, ctx.mem_cap_bytes) {
+        let (cost, _fp) = costs.get_or_build(&ctx, &c);
+        if !memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes) {
             n_pruned_memory += 1;
             continue;
         }
-        scored.push((c, estimated_throughput(&ctx, cost, &c)));
+        scored.push((c, estimated_throughput(&ctx, &cost, &c)));
     }
 
     // Stage 4: simulate — every theory-bound survivor (exhaustive) or
@@ -223,9 +238,11 @@ pub fn plan(q: &PlanQuery) -> PlanReport {
                     survivors.push(x.0);
                 }
             }
-            evaluate_parallel(&ctx, &survivors, threads)
+            evaluate_batch(&ctx, &survivors, threads, &mut costs, memo)
         }
-        SearchMode::Beam { width } => beam_evaluate(&ctx, &scored, width, threads),
+        SearchMode::Beam { width } => {
+            beam_evaluate(&ctx, &scored, width, threads, &mut costs, memo)
+        }
     };
     let n_pruned_theory = scored.len() - evals.len();
 
@@ -299,6 +316,8 @@ fn beam_evaluate(
     scored: &[(Candidate, f64)],
     width: usize,
     threads: usize,
+    costs: &mut CostMemo,
+    mut memo: Option<&mut EvalMemo>,
 ) -> Vec<Evaluation> {
     if scored.is_empty() {
         return Vec::new();
@@ -348,18 +367,7 @@ fn beam_evaluate(
     }
 
     let mut simulated: BTreeMap<usize, Evaluation> = BTreeMap::new();
-    let simulate_batch = |idxs: &[usize], simulated: &mut BTreeMap<usize, Evaluation>| {
-        // `evaluate_parallel` returns evaluations sorted by candidate id;
-        // `scored` is in enumeration (id) order, so sorting the batch
-        // indices keeps the zip aligned.
-        let mut idxs: Vec<usize> = idxs.to_vec();
-        idxs.sort_unstable();
-        let cands: Vec<Candidate> = idxs.iter().map(|&i| scored[i].0).collect();
-        for (i, e) in idxs.iter().zip(evaluate_parallel(ctx, &cands, threads)) {
-            simulated.insert(*i, e);
-        }
-    };
-    simulate_batch(&seeds, &mut simulated);
+    simulate_into(ctx, scored, &seeds, threads, costs, memo.as_deref_mut(), &mut simulated);
 
     // (feasible, throughput) with deterministic id tiebreak.
     let beam_rank = |a: &Evaluation, b: &Evaluation| {
@@ -422,7 +430,7 @@ fn beam_evaluate(
             break;
         }
 
-        simulate_batch(&frontier, &mut simulated);
+        simulate_into(ctx, scored, &frontier, threads, costs, memo.as_deref_mut(), &mut simulated);
         let new_best = best_of(&simulated);
         if new_best <= best {
             // The frontier stalled: no neighbor beat the incumbent plan.
@@ -434,6 +442,66 @@ fn beam_evaluate(
     simulated.into_values().collect()
 }
 
+/// Evaluate a batch, consulting the cross-query memo first. Hits are
+/// settled sequentially (relabeled with the requesting candidate);
+/// only the misses hit the thread pool. Fresh evaluations are recorded
+/// back under their (cost, context, coordinates) key. The returned
+/// list is sorted by candidate id, exactly like [`evaluate_parallel`].
+fn evaluate_batch(
+    ctx: &EvalContext,
+    cands: &[Candidate],
+    threads: usize,
+    costs: &mut CostMemo,
+    mut memo: Option<&mut EvalMemo>,
+) -> Vec<Evaluation> {
+    let mut out: Vec<Evaluation> = Vec::with_capacity(cands.len());
+    let mut to_sim: Vec<Candidate> = Vec::new();
+    if let Some(memo) = memo.as_deref_mut() {
+        for c in cands {
+            let (_, fp) = costs.get_or_build(ctx, c);
+            let key = EvalKey::new(fp, ctx, c);
+            match memo.lookup(&key, c) {
+                Some(e) => out.push(e),
+                None => to_sim.push(*c),
+            }
+        }
+    } else {
+        to_sim.extend_from_slice(cands);
+    }
+    let fresh = evaluate_parallel_memo(ctx, &to_sim, threads, costs);
+    if let Some(memo) = memo {
+        for e in &fresh {
+            let (_, fp) = costs.get_or_build(ctx, &e.candidate);
+            memo.record(EvalKey::new(fp, ctx, &e.candidate), *e);
+        }
+    }
+    out.extend(fresh);
+    out.sort_by_key(|e| e.candidate.id);
+    out
+}
+
+/// Simulate the `scored` entries at `idxs` (beam seeds or a frontier)
+/// and insert the evaluations into `simulated` keyed by index.
+/// [`evaluate_batch`] returns evaluations sorted by candidate id and
+/// `scored` is in enumeration (id) order, so sorting the indices keeps
+/// the zip aligned.
+fn simulate_into(
+    ctx: &EvalContext,
+    scored: &[(Candidate, f64)],
+    idxs: &[usize],
+    threads: usize,
+    costs: &mut CostMemo,
+    memo: Option<&mut EvalMemo>,
+    simulated: &mut BTreeMap<usize, Evaluation>,
+) {
+    let mut idxs: Vec<usize> = idxs.to_vec();
+    idxs.sort_unstable();
+    let cands: Vec<Candidate> = idxs.iter().map(|&i| scored[i].0).collect();
+    for (i, e) in idxs.iter().zip(evaluate_batch(ctx, &cands, threads, costs, memo)) {
+        simulated.insert(*i, e);
+    }
+}
+
 /// Evaluate candidates concurrently; deterministic regardless of thread
 /// count (exposed for the `plan_search` bench's scaling measurement).
 /// Each worker owns one [`SimArena`], so a candidate evaluation reuses
@@ -442,6 +510,19 @@ pub fn evaluate_parallel(
     ctx: &EvalContext,
     candidates: &[Candidate],
     threads: usize,
+) -> Vec<Evaluation> {
+    evaluate_parallel_memo(ctx, candidates, threads, &CostMemo::new())
+}
+
+/// [`evaluate_parallel`] with a shared per-search cost-model memo:
+/// workers reuse the models stage 2 already built instead of rebuilding
+/// one per candidate (shapes repeat across kinds, n_mb and offload
+/// variants, so most lookups hit).
+pub fn evaluate_parallel_memo(
+    ctx: &EvalContext,
+    candidates: &[Candidate],
+    threads: usize,
+    costs: &CostMemo,
 ) -> Vec<Evaluation> {
     let n_threads = threads.max(1).min(candidates.len().max(1));
     let cursor = AtomicUsize::new(0);
@@ -457,7 +538,8 @@ pub fn evaluate_parallel(
                     if i >= candidates.len() {
                         break;
                     }
-                    if tx.send(evaluate_in(ctx, &candidates[i], &mut arena)).is_err() {
+                    let e = evaluate_in_memo(ctx, &candidates[i], &mut arena, costs);
+                    if tx.send(e).is_err() {
                         break;
                     }
                 }
@@ -587,5 +669,74 @@ mod tests {
         let bb = rb.best().expect("beam best");
         assert_eq!(eb.candidate.id, bb.candidate.id, "beam best != exhaustive best");
         assert_eq!(eb.throughput.to_bits(), bb.throughput.to_bits());
+    }
+
+    #[test]
+    fn memoized_replan_is_byte_identical_and_reuses_evals() {
+        let q = small_query();
+        let cold = plan(&q);
+        let mut memo = EvalMemo::new();
+        let warm1 = plan_with_memo(&q, Some(&mut memo));
+        let misses = memo.misses;
+        assert!(misses > 0, "first memoized search must simulate");
+        assert_eq!(memo.hits, 0);
+        let warm2 = plan_with_memo(&q, Some(&mut memo));
+        assert_eq!(memo.hits, misses, "second search must hit for every survivor");
+        assert_eq!(memo.misses, misses, "second search must not re-simulate");
+        let bytes = |r: &PlanReport| r.to_json().to_string();
+        assert_eq!(bytes(&cold), bytes(&warm1));
+        assert_eq!(bytes(&cold), bytes(&warm2));
+    }
+
+    #[test]
+    fn beam_with_memo_is_byte_identical_to_cold_beam() {
+        let mut q = small_query();
+        q.search = SearchMode::Beam { width: 4 };
+        let cold = plan(&q);
+        let mut memo = EvalMemo::new();
+        let w1 = plan_with_memo(&q, Some(&mut memo));
+        let w2 = plan_with_memo(&q, Some(&mut memo));
+        assert!(memo.hits > 0, "replayed beam search must hit the memo");
+        assert_eq!(cold.to_json().to_string(), w1.to_json().to_string());
+        assert_eq!(cold.to_json().to_string(), w2.to_json().to_string());
+    }
+
+    #[test]
+    fn unfolded_search_is_byte_identical_to_folded() {
+        let q = small_query();
+        let mut uq = q.clone();
+        uq.sim = SimMode::Unfolded;
+        let folded = plan(&q);
+        let unfolded = plan(&uq);
+        assert_eq!(folded.to_json().to_string(), unfolded.to_json().to_string());
+    }
+
+    #[test]
+    fn memoized_cost_models_do_not_change_evaluations() {
+        let q = small_query();
+        let ctx = q.eval_context();
+        let orders = q.cluster.group_orders();
+        let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants);
+        let survivors: Vec<Candidate> = all
+            .into_iter()
+            .filter(|c| admissible(&q.model, &q.cluster, c).is_ok())
+            .filter(|c| {
+                let cost = ctx.cost_model(c);
+                memory_feasible(&cost, c.kind, c.n_mb, ctx.mem_cap_bytes)
+            })
+            .take(12)
+            .collect();
+        let mut costs = CostMemo::new();
+        for c in &survivors {
+            costs.get_or_build(&ctx, c);
+        }
+        let plain = evaluate_parallel(&ctx, &survivors, 2);
+        let memoed = evaluate_parallel_memo(&ctx, &survivors, 2, &costs);
+        assert_eq!(plain.len(), memoed.len());
+        for (a, b) in plain.iter().zip(&memoed) {
+            assert_eq!(a.candidate.id, b.candidate.id);
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.peak_mem_bytes, b.peak_mem_bytes);
+        }
     }
 }

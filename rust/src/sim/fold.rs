@@ -1,0 +1,382 @@
+//! Symmetry folding: simulate one representative replica per
+//! equivalence class instead of the whole fleet (DESIGN.md §15).
+//!
+//! The replay core models a single DP replica; a fleet-scale result is
+//! the slowest replica's timeline. When every replica is *symmetric* —
+//! same per-stage hardware, same fault script — all dp replays are
+//! bit-identical, so one replay stands for all of them. A
+//! [`FoldedTopology`] partitions the replicas of a `(ClusterSpec,
+//! Topology, GroupOrder, FaultPlan)` tuple into equivalence classes:
+//!
+//! * one class → fully folded, one replay, `dp×` less work;
+//! * several classes → the fold *declines* ([`FoldDecline`]) and
+//!   [`FleetSim`] replays one representative per class.
+//!
+//! Folding invariants (pinned by `tests/sim_equivalence.rs`):
+//!
+//! 1. **Bit-equality.** `run_folded` and `run_unfolded` return the same
+//!    [`SimReport`] to the bit wherever the class partition is exact:
+//!    symmetric replicas replay with identical arithmetic, and the
+//!    slowest-class merge keeps the earliest replica on ties, which is
+//!    exactly what the unfolded max-merge over all `dp` replays does.
+//! 2. **Transparency.** On a symmetric fault-free pool the folded replay
+//!    *is* the single-replica [`Simulator`] replay — same bits, so every
+//!    pre-fold golden vector still pins this path.
+//! 3. **Honest decline.** Replica-targeted faults
+//!    ([`FoldDecline::ReplicaFaults`]) and replicas straddling
+//!    heterogeneous node groups ([`FoldDecline::HeterogeneousReplicas`])
+//!    break symmetry; the fold must detect both and fall back to
+//!    per-class replay rather than extrapolate.
+
+use crate::cluster::{ClusterSpec, DeviceView, GroupOrder, Topology};
+use crate::elastic::{FaultEvent, FaultPlan};
+use crate::schedule::Schedule;
+
+use super::cost::CostModel;
+use super::engine::{SimArena, Simulator};
+use super::report::SimReport;
+use super::SimError;
+
+/// How the planner's evaluation loop replays multi-replica candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimMode {
+    /// Simulate one representative per replica equivalence class
+    /// (the default; bit-equal to [`SimMode::Unfolded`] by invariant 1).
+    Folded,
+    /// Replay every DP replica — the pre-fold baseline the bench and
+    /// the golden suite compare against.
+    Unfolded,
+}
+
+impl SimMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SimMode::Folded => "folded",
+            SimMode::Unfolded => "unfolded",
+        }
+    }
+}
+
+/// Why a pool could not be folded to a single representative replica.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldDecline {
+    /// The fault script targets specific replicas, so their timelines
+    /// diverge (stragglers, dead ranks addressed at `replica > 0`).
+    ReplicaFaults,
+    /// Replicas resolve to different node groups (the stage-granular
+    /// view failed and the per-replica packing straddles hardware
+    /// tiers), so their unit timings differ.
+    HeterogeneousReplicas,
+}
+
+impl FoldDecline {
+    pub fn reason(&self) -> &'static str {
+        match self {
+            FoldDecline::ReplicaFaults => "replica-targeted faults",
+            FoldDecline::HeterogeneousReplicas => "replicas straddle node groups",
+        }
+    }
+}
+
+/// One equivalence class of time-identical replicas.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaClass {
+    /// The replica whose replay stands for the whole class (its lowest
+    /// member, so ties in the merge resolve to the earliest replica).
+    pub representative: usize,
+    /// All replica indices in the class, ascending.
+    pub members: Vec<usize>,
+}
+
+/// The fold of a concrete (cluster, topology, order, faults) tuple:
+/// which replicas share a timeline, and therefore how few replays a
+/// fleet-exact report needs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FoldedTopology {
+    /// Data-parallel width being folded.
+    pub dp: usize,
+    /// Equivalence classes in order of their first member; their union
+    /// is exactly `0..dp`.
+    pub classes: Vec<ReplicaClass>,
+    /// `None` when fully folded to one class.
+    pub decline: Option<FoldDecline>,
+}
+
+impl FoldedTopology {
+    /// Partition the `dp` replicas into time-identical classes. Two
+    /// replicas are equivalent iff they resolve to the same per-stage
+    /// node groups *and* the fault script addresses them identically.
+    /// `None` when the pool cannot host the topology even at
+    /// per-replica granularity.
+    pub fn derive(
+        cluster: &ClusterSpec,
+        topo: &Topology,
+        order: GroupOrder,
+        faults: Option<&FaultPlan>,
+    ) -> Option<FoldedTopology> {
+        let dp = topo.dp.max(1);
+        // Hot-path shortcut (the planner's no-fault evaluation loop): a
+        // stage-granular view hosts every replica on identical hardware,
+        // so with no faults the fold is total — skip the per-replica
+        // view materialization entirely.
+        let no_faults = faults.map(|f| f.events.is_empty()).unwrap_or(true);
+        if no_faults && cluster.device_view(topo, order).is_some() {
+            return Some(FoldedTopology {
+                dp,
+                classes: vec![ReplicaClass { representative: 0, members: (0..dp).collect() }],
+                decline: None,
+            });
+        }
+        let views = cluster.replica_device_views(topo, order)?;
+        let fault_sigs: Vec<Vec<usize>> = (0..dp)
+            .map(|r| {
+                faults
+                    .map(|f| {
+                        f.events
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, ev)| ev.replica() == r)
+                            .map(|(i, _)| i)
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            })
+            .collect();
+
+        let mut classes: Vec<ReplicaClass> = Vec::new();
+        let mut keys: Vec<(&DeviceView, &Vec<usize>)> = Vec::new();
+        for r in 0..dp {
+            let key = (&views[r], &fault_sigs[r]);
+            match keys.iter().position(|k| *k == key) {
+                Some(i) => classes[i].members.push(r),
+                None => {
+                    keys.push(key);
+                    classes.push(ReplicaClass { representative: r, members: vec![r] });
+                }
+            }
+        }
+
+        let decline = if classes.len() <= 1 {
+            None
+        } else if classes.iter().any(|c| views[c.representative] != views[0]) {
+            Some(FoldDecline::HeterogeneousReplicas)
+        } else {
+            Some(FoldDecline::ReplicaFaults)
+        };
+        Some(FoldedTopology { dp, classes, decline })
+    }
+
+    /// Whether one replay covers the whole fleet.
+    pub fn is_folded(&self) -> bool {
+        self.classes.len() == 1
+    }
+
+    /// Replays needed for a fleet-exact report.
+    pub fn n_replays(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Replica-replay reduction factor (`dp / n_replays`).
+    pub fn fold_factor(&self) -> f64 {
+        self.dp as f64 / self.classes.len().max(1) as f64
+    }
+}
+
+/// The fault script as replica `r` experiences it: events addressed at
+/// `r`, relabeled to replica 0 so the single-replica replay core (which
+/// only applies replica-0 events) injects them unchanged.
+pub fn replica_fault_plan(faults: &FaultPlan, replica: usize) -> FaultPlan {
+    FaultPlan {
+        events: faults
+            .events
+            .iter()
+            .filter(|ev| ev.replica() == replica)
+            .map(|ev| match *ev {
+                FaultEvent::DeadRank { step, stage, at_secs, .. } => {
+                    FaultEvent::DeadRank { step, stage, replica: 0, at_secs }
+                }
+                FaultEvent::Straggler { step, stage, slowdown, from_secs, .. } => {
+                    FaultEvent::Straggler { step, stage, replica: 0, slowdown, from_secs }
+                }
+            })
+            .collect(),
+    }
+}
+
+/// Fleet-scale replay driver: runs one [`Simulator`] replay per replica
+/// equivalence class (folded) or per replica (unfolded) and merges by
+/// keeping the slowest replica's report — the fleet's iteration time is
+/// its laggard's. Ties keep the earliest replay, which makes the two
+/// paths bit-identical whenever the class partition is exact.
+pub struct FleetSim<'a> {
+    cost: &'a CostModel,
+    faults: Option<FaultPlan>,
+    trace: bool,
+}
+
+impl<'a> FleetSim<'a> {
+    pub fn new(cost: &'a CostModel) -> Self {
+        FleetSim { cost, faults: None, trace: true }
+    }
+
+    /// Inject a fleet-wide fault plan (replica coordinates respected).
+    pub fn with_faults(mut self, f: FaultPlan) -> Self {
+        self.faults = Some(f);
+        self
+    }
+
+    /// Skip trace collection (planner mode).
+    pub fn without_trace(mut self) -> Self {
+        self.trace = false;
+        self
+    }
+
+    fn replica_sim(&self, replica: usize) -> Simulator<'a> {
+        let mut sim = match &self.faults {
+            Some(f) => Simulator::new(self.cost).with_faults(replica_fault_plan(f, replica)),
+            None => Simulator::new(self.cost),
+        };
+        if !self.trace {
+            sim = sim.without_trace();
+        }
+        sim
+    }
+
+    fn run_replicas<I>(
+        &self,
+        s: &Schedule,
+        replicas: I,
+        arena: &mut SimArena,
+    ) -> Result<SimReport, SimError>
+    where
+        I: IntoIterator<Item = usize>,
+    {
+        let mut slowest: Option<SimReport> = None;
+        for r in replicas {
+            let report = self.replica_sim(r).try_run_in(s, arena)?;
+            slowest = Some(match slowest {
+                Some(cur) if cur.iteration_secs >= report.iteration_secs => cur,
+                _ => report,
+            });
+        }
+        Ok(slowest.expect("at least one replica to replay"))
+    }
+
+    /// Replay one representative per equivalence class and merge.
+    pub fn run_folded(
+        &self,
+        s: &Schedule,
+        fold: &FoldedTopology,
+        arena: &mut SimArena,
+    ) -> Result<SimReport, SimError> {
+        self.run_replicas(s, fold.classes.iter().map(|c| c.representative), arena)
+    }
+
+    /// Replay every replica and merge — the pre-fold baseline.
+    pub fn run_unfolded(
+        &self,
+        s: &Schedule,
+        dp: usize,
+        arena: &mut SimArena,
+    ) -> Result<SimReport, SimError> {
+        self.run_replicas(s, 0..dp.max(1), arena)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::HardwareProfile;
+
+    #[test]
+    fn symmetric_pool_folds_to_one_class() {
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let topo = Topology::new(2, 2, 4);
+        let fold = FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, None).unwrap();
+        assert!(fold.is_folded());
+        assert_eq!(fold.n_replays(), 1);
+        assert_eq!(fold.fold_factor(), 4.0);
+        assert_eq!(fold.decline, None);
+        assert_eq!(fold.classes[0].members, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn replica_targeted_faults_split_classes() {
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let topo = Topology::new(2, 2, 4);
+        let mut faults = FaultPlan::none();
+        faults.events.push(FaultEvent::Straggler {
+            step: 0,
+            stage: 1,
+            replica: 2,
+            slowdown: 3.0,
+            from_secs: 0.0,
+        });
+        let fold =
+            FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, Some(&faults)).unwrap();
+        assert!(!fold.is_folded());
+        assert_eq!(fold.decline, Some(FoldDecline::ReplicaFaults));
+        assert_eq!(fold.n_replays(), 2);
+        assert_eq!(fold.classes[0].members, vec![0, 1, 3]);
+        assert_eq!(fold.classes[1].members, vec![2]);
+        assert_eq!(fold.classes[1].representative, 2);
+    }
+
+    #[test]
+    fn replica_zero_faults_still_split_at_dp_above_one() {
+        // A replica-0 fault breaks symmetry too: the other replicas are
+        // clean. Two classes, and the fleet merge picks the slower.
+        let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+        let topo = Topology::new(2, 2, 2);
+        let faults = FaultPlan::dead_rank_at(0, 0);
+        let fold =
+            FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, Some(&faults)).unwrap();
+        assert_eq!(fold.n_replays(), 2);
+        assert_eq!(fold.decline, Some(FoldDecline::ReplicaFaults));
+    }
+
+    #[test]
+    fn straddling_replicas_decline_as_heterogeneous() {
+        // 12 GPUs of (tp=2, pp=1, dp=6) on the 8+8 mixed pool: replicas
+        // 0–3 pack onto the A800 node, 4–5 onto the H20 node.
+        let cluster = ClusterSpec::mixed_a800_h20();
+        let topo = Topology::new(2, 1, 6);
+        let fold = FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, None).unwrap();
+        assert!(!fold.is_folded());
+        assert_eq!(fold.decline, Some(FoldDecline::HeterogeneousReplicas));
+        assert_eq!(fold.classes.len(), 2);
+        assert_eq!(fold.classes[0].members, vec![0, 1, 2, 3]);
+        assert_eq!(fold.classes[1].members, vec![4, 5]);
+        // An unhostable topology has no fold at all.
+        let big = Topology::new(8, 4, 1);
+        assert!(FoldedTopology::derive(&cluster, &big, GroupOrder::Declared, None).is_none());
+    }
+
+    #[test]
+    fn relabeled_fault_plans_keep_only_their_replica() {
+        let mut faults = FaultPlan::none();
+        faults.events.push(FaultEvent::Straggler {
+            step: 0,
+            stage: 1,
+            replica: 1,
+            slowdown: 2.0,
+            from_secs: 0.5,
+        });
+        faults.events.push(FaultEvent::DeadRank { step: 3, stage: 0, replica: 2, at_secs: 1.0 });
+        let r1 = replica_fault_plan(&faults, 1);
+        assert_eq!(r1.events.len(), 1);
+        assert_eq!(r1.events[0].replica(), 0);
+        assert_eq!(r1.events[0].stage(), 1);
+        let r2 = replica_fault_plan(&faults, 2);
+        assert_eq!(r2.events.len(), 1);
+        assert!(matches!(r2.events[0], FaultEvent::DeadRank { replica: 0, at_secs, .. }
+            if at_secs == 1.0));
+        assert!(replica_fault_plan(&faults, 0).events.is_empty());
+    }
+
+    #[test]
+    fn sim_mode_labels() {
+        assert_eq!(SimMode::Folded.label(), "folded");
+        assert_eq!(SimMode::Unfolded.label(), "unfolded");
+    }
+}

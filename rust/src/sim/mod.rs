@@ -19,16 +19,23 @@
 //! * [`reference::Simulator`] — the original **polling** replay, kept as
 //!   the oracle: the golden suite (`tests/sim_equivalence.rs`) asserts
 //!   the event-driven core reproduces its [`SimReport`]s bit-for-bit.
+//!
+//! [`FoldedTopology`] + [`FleetSim`] (`fold`) lift the event core to
+//! fleet scale via symmetry folding: time-identical DP replicas are
+//! replayed once per equivalence class and merged by slowest replica,
+//! bit-equal to replaying every replica (DESIGN.md §15).
 
 pub mod block;
 mod cost;
 mod engine;
+mod fold;
 pub mod reference;
 mod report;
 
 pub use block::{braid, time_block, BlockTiming, ChunkUnits, Unit};
 pub use cost::{AcMode, CostModel, HopTable};
 pub use engine::{SimArena, Simulator};
+pub use fold::{replica_fault_plan, FleetSim, FoldDecline, FoldedTopology, ReplicaClass, SimMode};
 pub use report::{DeviceReport, SimReport, TraceEvent};
 
 /// Fraction of a pipeline hop that blocks the producer's compute stream

@@ -338,3 +338,81 @@ fn mixed_pool_planner_searches_orderings_and_flips_the_partition() {
         r.n_rejected_shape + r.n_pruned_memory + r.n_pruned_theory + r.n_simulated()
     );
 }
+
+// ---------------------------------------------------------------------------
+// The keyed plan cache (`stp serve`'s engine): exact repeats answer from
+// the report store, cluster deltas re-search with memoized evaluations —
+// and every answer is byte-identical to a cold `plan()`.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn plan_cache_repeats_and_deltas_are_byte_identical_to_cold_plans() {
+    use stp::plan::PlanCache;
+
+    let mut q = query_16();
+    q.n_mb_options = vec![16, 32];
+    let cold = plan(&q).to_json().to_string();
+    let mut cache = PlanCache::new();
+    let first = cache.query(&q);
+    assert!(!first.hit);
+    assert!(first.sims_run > 0);
+    assert_eq!(first.json, cold);
+    let second = cache.query(&q);
+    assert!(second.hit, "exact repeat must answer from the report store");
+    assert_eq!(second.json, cold);
+    assert_eq!(cache.len(), 1);
+
+    // Pool swap: a fresh canonical key, a fresh search — and still
+    // byte-identical to that query's own cold plan.
+    let mut dq = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::uniform(HardwareProfile::h20()),
+        16,
+    );
+    dq.seq = q.seq;
+    dq.n_mb_options = q.n_mb_options.clone();
+    dq.threads = q.threads;
+    let delta = cache.query(&dq);
+    assert!(!delta.hit);
+    assert_eq!(delta.json, plan(&dq).to_json().to_string());
+    assert_eq!(cache.len(), 2);
+}
+
+#[test]
+fn cluster_deltas_reuse_untouched_evaluations() {
+    use stp::plan::PlanCache;
+
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::mixed_a800_h20(),
+        8,
+    );
+    q.seq = 2048;
+    q.n_mb_options = vec![16];
+    q.threads = 2;
+    let mut cache = PlanCache::new();
+    let first = cache.query(&q);
+    assert!(!first.hit && first.sims_run > 0);
+
+    // Slow down the inter-group fabric: only candidates whose pipeline
+    // actually crosses node groups resolve to different physics; the
+    // rest must answer from the evaluation memo.
+    let mut dq = q.clone();
+    dq.cluster.intergroup_gbps /= 2.0;
+    let delta = cache.query(&dq);
+    assert!(!delta.hit, "a changed pool is a new canonical key");
+    assert!(delta.sims_reused > 0, "intra-group candidates must be reused");
+    assert_eq!(delta.json, plan(&dq).to_json().to_string());
+}
+
+#[test]
+fn folded_and_unfolded_plans_serialize_identically() {
+    use stp::sim::SimMode;
+
+    let mut q = query_16();
+    q.n_mb_options = vec![16, 32];
+    let folded = plan(&q).to_json().to_string();
+    q.sim = SimMode::Unfolded;
+    let unfolded = plan(&q).to_json().to_string();
+    assert_eq!(folded, unfolded, "sim mode must never leak into the report");
+}

@@ -5,15 +5,24 @@
 //! uniform and mixed clusters, MLLM chunk imbalance and offload
 //! variants. Plus the planner-level contract: beam search finds the
 //! exhaustive best plan at 16 GPUs while simulating fewer candidates.
+//!
+//! The symmetry-fold section pins DESIGN.md §15's invariants: the folded
+//! fleet replay is bit-identical to replaying every DP replica across
+//! all schedule kinds, uniform and mixed pools and dp ∈ {1, 2, 4};
+//! transparent over the plain single-replica replay; and declines
+//! honestly on replica-targeted faults and group-straddling replicas.
 
 use stp::cluster::{partition_mllm, ClusterSpec, GroupOrder, HardwareProfile, Topology};
+use stp::elastic::{FaultEvent, FaultPlan};
 use stp::model::{MllmConfig, ModelConfig};
 use stp::plan::{plan, PlanModel, PlanQuery, SearchMode};
 use stp::schedule::{
     build_schedule_scaled, stp::build_stp_offload, OffloadParams, Placement, Schedule,
     ScheduleKind, ShapeCosts,
 };
-use stp::sim::{reference, CostModel, SimReport, Simulator};
+use stp::sim::{
+    reference, CostModel, FleetSim, FoldDecline, FoldedTopology, SimArena, SimReport, Simulator,
+};
 
 /// Assert two reports are bit-identical: scalars, per-device accounting,
 /// and the per-device event sequences (the engines may interleave
@@ -233,6 +242,96 @@ fn duplicate_producers_across_stages_match_the_oracle() {
     let oracle = reference::Simulator::new(&cost).run(&s);
     let event = Simulator::new(&cost).run(&s);
     assert_bit_identical(&oracle, &event, "duplicate producers across stages");
+}
+
+#[test]
+fn folded_matches_unfolded_across_kinds_clusters_and_dp() {
+    let m = ModelConfig::qwen2_12b();
+    let pools = [
+        (ClusterSpec::uniform(HardwareProfile::a800()), GroupOrder::Declared),
+        (ClusterSpec::mixed_a800_h20(), GroupOrder::FastFirst),
+    ];
+    for (cluster, order) in &pools {
+        for dp in [1usize, 2, 4] {
+            let topo = Topology::new(2, 2, dp);
+            for kind in ScheduleKind::all() {
+                let cost =
+                    CostModel::analytic_for(&m, &topo, cluster, *order, kind.placement(), 3072, 1);
+                let s = build_schedule_scaled(kind, &topo, 16, cost.chunk_scales());
+                let fold = FoldedTopology::derive(cluster, &topo, *order, None)
+                    .expect("symmetric pool must fold");
+                assert!(fold.is_folded(), "{}: dp{dp} must fold to one class", cluster.name);
+                let fleet = FleetSim::new(&cost);
+                let mut arena = SimArena::default();
+                let folded = fleet.run_folded(&s, &fold, &mut arena).unwrap();
+                let unfolded = fleet.run_unfolded(&s, dp, &mut arena).unwrap();
+                assert_bit_identical(
+                    &folded,
+                    &unfolded,
+                    &format!("{kind:?} dp{dp} {} fold", cluster.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn folded_replay_is_transparent_over_the_plain_simulator() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(2, 2, 4);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 3072, 1);
+    let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 16, cost.chunk_scales());
+    let plain = Simulator::new(&cost).run(&s);
+    let fold = FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, None).unwrap();
+    let mut arena = SimArena::default();
+    let folded = FleetSim::new(&cost).run_folded(&s, &fold, &mut arena).unwrap();
+    assert_bit_identical(&plain, &folded, "fold transparency");
+}
+
+#[test]
+fn replica_faults_decline_the_fold_but_stay_bit_exact() {
+    let m = ModelConfig::qwen2_12b();
+    let cluster = ClusterSpec::uniform(HardwareProfile::a800());
+    let topo = Topology::new(2, 2, 2);
+    let cost = CostModel::analytic(&m, &topo, &cluster, 3072, 1);
+    let s = build_schedule_scaled(ScheduleKind::Stp, &topo, 16, cost.chunk_scales());
+    let mut faults = FaultPlan::none();
+    faults.events.push(FaultEvent::Straggler {
+        step: 0,
+        stage: 1,
+        replica: 1,
+        slowdown: 2.0,
+        from_secs: 0.0,
+    });
+    let fold = FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, Some(&faults))
+        .expect("uniform pool still partitions under faults");
+    assert!(!fold.is_folded());
+    assert_eq!(fold.decline, Some(FoldDecline::ReplicaFaults));
+    let fleet = FleetSim::new(&cost).with_faults(faults);
+    let mut arena = SimArena::default();
+    let folded = fleet.run_folded(&s, &fold, &mut arena).unwrap();
+    let unfolded = fleet.run_unfolded(&s, 2, &mut arena).unwrap();
+    assert_bit_identical(&folded, &unfolded, "replica-faulted fleet");
+    let clean = Simulator::new(&cost).run(&s);
+    assert!(
+        folded.iteration_secs > clean.iteration_secs,
+        "the straggler replica must set the fleet's pace"
+    );
+}
+
+#[test]
+fn straddling_mixed_pool_declines_as_heterogeneous() {
+    // (tp=2, pp=1, dp=6) on the 8+8 mixed pool: no stage-granular view
+    // exists, and the per-replica packing puts replicas 0–3 on A800s and
+    // 4–5 on H20s — different physics, so the fold must not collapse
+    // them into one replay.
+    let cluster = ClusterSpec::mixed_a800_h20();
+    let topo = Topology::new(2, 1, 6);
+    let fold = FoldedTopology::derive(&cluster, &topo, GroupOrder::Declared, None).unwrap();
+    assert!(!fold.is_folded());
+    assert_eq!(fold.decline, Some(FoldDecline::HeterogeneousReplicas));
+    assert_eq!(fold.n_replays(), 2);
 }
 
 #[test]
