@@ -542,57 +542,85 @@ pub fn plan_perf(quick: bool) -> String {
 
     let budgets: Vec<usize> = if quick { vec![16, 128] } else { vec![16, 64, 128, 256] };
     let beam_width = 8usize;
+    // The CLI's evo defaults, so the bench row answers "what does
+    // `--search evo` buy me out of the box".
+    let (evo_gens, evo_pop, evo_seed) = (12usize, 24usize, 42u64);
     let mut t = Table::new(vec![
-        "gpus", "search", "simulated", "wall s", "cands/s", "speedup", "best plan",
+        "pool", "gpus", "search", "simulated", "wall s", "cands/s", "speedup", "best plan",
     ]);
     let mut entries: Vec<Json> = Vec::new();
-    for &gpus in &budgets {
-        let mut exhaustive_secs = 0.0f64;
-        for mode in [SearchMode::Exhaustive, SearchMode::Beam { width: beam_width }] {
-            let mut q = PlanQuery::new(
-                PlanModel::Llm(ModelConfig::qwen2_12b()),
-                ClusterSpec::uniform(HardwareProfile::a800()),
-                gpus,
-            );
-            q.search = mode;
-            let t0 = Instant::now();
-            let r = plan(&q);
-            let secs = t0.elapsed().as_secs_f64();
-            let speedup = match mode {
-                SearchMode::Exhaustive => {
-                    exhaustive_secs = secs;
-                    1.0
+    let pools =
+        [ClusterSpec::uniform(HardwareProfile::a800()), ClusterSpec::mixed_a800_h20_large()];
+    for cluster in &pools {
+        for &gpus in &budgets {
+            if gpus > cluster.total_devices() {
+                continue; // the mixed preset tops out at 128 devices
+            }
+            let mut exhaustive_secs = 0.0f64;
+            let mut exhaustive_enumerated = 0usize;
+            for mode in [
+                SearchMode::Exhaustive,
+                SearchMode::Beam { width: beam_width },
+                SearchMode::Evo { generations: evo_gens, population: evo_pop, seed: evo_seed },
+            ] {
+                let mut q = PlanQuery::new(
+                    PlanModel::Llm(ModelConfig::qwen2_12b()),
+                    cluster.clone(),
+                    gpus,
+                );
+                q.search = mode;
+                let t0 = Instant::now();
+                let r = plan(&q);
+                let secs = t0.elapsed().as_secs_f64();
+                let speedup = match mode {
+                    SearchMode::Exhaustive => {
+                        exhaustive_secs = secs;
+                        exhaustive_enumerated = r.n_enumerated;
+                        1.0
+                    }
+                    _ => exhaustive_secs / secs.max(1e-9),
+                };
+                let best = r
+                    .best()
+                    .map(|b| b.candidate.label())
+                    .unwrap_or_else(|| "no feasible plan".into());
+                let best_thr = r.best().map(|b| b.throughput).unwrap_or(0.0);
+                let best_iter = r.best().map(|b| b.iteration_secs).unwrap_or(0.0);
+                t.row(vec![
+                    cluster.name.clone(),
+                    gpus.to_string(),
+                    r.search_mode.clone(),
+                    r.n_simulated().to_string(),
+                    format!("{secs:.3}"),
+                    format!("{:.0}", r.n_simulated() as f64 / secs.max(1e-9)),
+                    format!("{speedup:.1}x"),
+                    best.clone(),
+                ]);
+                let mut o = BTreeMap::new();
+                o.insert("cluster".to_string(), Json::Str(cluster.name.clone()));
+                o.insert("gpus".to_string(), Json::Num(gpus as f64));
+                o.insert("mode".to_string(), Json::Str(r.search_mode.clone()));
+                o.insert("wall_secs".to_string(), Json::Num(secs));
+                o.insert("enumerated".to_string(), Json::Num(r.n_enumerated as f64));
+                o.insert("simulated".to_string(), Json::Num(r.n_simulated() as f64));
+                o.insert(
+                    "candidates_per_sec".to_string(),
+                    Json::Num(r.n_simulated() as f64 / secs.max(1e-9)),
+                );
+                o.insert("speedup_vs_exhaustive".to_string(), Json::Num(speedup));
+                o.insert("best".to_string(), Json::Str(best));
+                o.insert("best_throughput".to_string(), Json::Num(best_thr));
+                o.insert("best_iteration_secs".to_string(), Json::Num(best_iter));
+                if matches!(mode, SearchMode::Evo { .. }) && exhaustive_enumerated > 0 {
+                    // The acceptance ratio: what slice of the exhaustive
+                    // candidate space did evolution actually simulate.
+                    o.insert(
+                        "space_fraction_simulated".to_string(),
+                        Json::Num(r.n_simulated() as f64 / exhaustive_enumerated as f64),
+                    );
                 }
-                SearchMode::Beam { .. } => exhaustive_secs / secs.max(1e-9),
-            };
-            let best = r
-                .best()
-                .map(|b| b.candidate.label())
-                .unwrap_or_else(|| "no feasible plan".into());
-            let best_thr = r.best().map(|b| b.throughput).unwrap_or(0.0);
-            t.row(vec![
-                gpus.to_string(),
-                r.search_mode.clone(),
-                r.n_simulated().to_string(),
-                format!("{secs:.3}"),
-                format!("{:.0}", r.n_simulated() as f64 / secs.max(1e-9)),
-                format!("{speedup:.1}x"),
-                best.clone(),
-            ]);
-            let mut o = BTreeMap::new();
-            o.insert("gpus".to_string(), Json::Num(gpus as f64));
-            o.insert("mode".to_string(), Json::Str(r.search_mode.clone()));
-            o.insert("wall_secs".to_string(), Json::Num(secs));
-            o.insert("enumerated".to_string(), Json::Num(r.n_enumerated as f64));
-            o.insert("simulated".to_string(), Json::Num(r.n_simulated() as f64));
-            o.insert(
-                "candidates_per_sec".to_string(),
-                Json::Num(r.n_simulated() as f64 / secs.max(1e-9)),
-            );
-            o.insert("speedup_vs_exhaustive".to_string(), Json::Num(speedup));
-            o.insert("best".to_string(), Json::Str(best));
-            o.insert("best_throughput".to_string(), Json::Num(best_thr));
-            entries.push(Json::Obj(o));
+                entries.push(Json::Obj(o));
+            }
         }
     }
 
@@ -645,6 +673,7 @@ pub fn plan_perf(quick: bool) -> String {
             "- (unfolded skipped)".to_string()
         };
         t.row(vec![
+            "a800-uniform".to_string(),
             gpus.to_string(),
             format!("fleet beam-{beam_width}"),
             folded.n_simulated().to_string(),
@@ -660,6 +689,9 @@ pub fn plan_perf(quick: bool) -> String {
     root.insert("bench".to_string(), Json::Str("plan_search".into()));
     root.insert("quick".to_string(), Json::Bool(quick));
     root.insert("beam_width".to_string(), Json::Num(beam_width as f64));
+    root.insert("evo_generations".to_string(), Json::Num(evo_gens as f64));
+    root.insert("evo_population".to_string(), Json::Num(evo_pop as f64));
+    root.insert("evo_seed".to_string(), Json::Num(evo_seed as f64));
     root.insert(
         "gpus_swept".to_string(),
         Json::Arr(budgets.iter().map(|&g| Json::Num(g as f64)).collect()),
@@ -676,8 +708,9 @@ pub fn plan_perf(quick: bool) -> String {
         Err(e) => format!("could not write {path}: {e}"),
     };
     format!(
-        "== plan-search perf: exhaustive vs beam-{beam_width}, plus the fleet-scale \
-         folded-vs-unfolded sweep (12.1B, A800)\n{}\n{note}",
+        "== plan-search perf: exhaustive vs beam-{beam_width} vs \
+         evo-{evo_gens}-{evo_pop}-{evo_seed} on uniform A800 and the large mixed pool, \
+         plus the fleet-scale folded-vs-unfolded sweep (12.1B)\n{}\n{note}",
         t.render()
     )
 }

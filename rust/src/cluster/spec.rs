@@ -163,6 +163,20 @@ impl ClusterSpec {
         }
     }
 
+    /// The fleet-scale mixed preset: 8 A800 nodes + 8 H20 nodes
+    /// (128 GPUs) on the same shared IB tier — the pool the evo planner's
+    /// stage→group placement search is benchmarked on (DESIGN.md §16).
+    pub fn mixed_a800_h20_large() -> ClusterSpec {
+        ClusterSpec {
+            name: "mixed-a800-h20-large".into(),
+            groups: vec![
+                NodeGroup { nodes: 8, hw: HardwareProfile::a800() },
+                NodeGroup { nodes: 8, hw: HardwareProfile::h20() },
+            ],
+            intergroup_gbps: 25.0,
+        }
+    }
+
     /// Whether every device shares one profile (the fast path that keeps
     /// all legacy arithmetic bit-for-bit identical).
     pub fn is_uniform(&self) -> bool {

@@ -29,7 +29,8 @@ USAGE:
   stp plan     --gpus N [--mem-gib F] [--model 12b|26b|tiny|mllm-14.9b|
                mllm-28.8b] [--hw a800|h20] [--cluster mixed|FILE.json]
                [--seq N] [--mbsize N] [--topk N] [--threads N]
-               [--search exhaustive|beam] [--beam-width N]
+               [--search exhaustive|beam|evo] [--beam-width N]
+               [--generations N] [--population N] [--evo-seed N]
                [--emit-plan FILE.json] [--verbose] [--json]
   stp serve    [--threads N]
   stp train    [--plan FILE.json] [--backend virtual|pjrt]
@@ -44,13 +45,15 @@ USAGE:
 Schedules: gpipe 1f1b 1f1b-i zb-v zb-h1 stp stp-memeff stp-offload
 Serve:     planning-as-a-service — one JSON query object per stdin line
            (keys: model, cluster, hw, gpus, mem_gib, seq, mbsize,
-           search, beam_width), one PlanReport JSON per stdout line,
+           search, beam_width, generations, population, evo_seed),
+           one PlanReport JSON per stdout line,
            byte-identical to `stp plan --json` for the same query.
            Reports are cached by canonical query key; cluster/budget
            deltas re-simulate only candidates whose resolved hardware
            changed. Diagnostics go to stderr.
-Clusters:  --cluster mixed (1 A800 node + 1 H20 node) or a JSON spec file;
-           without it the pool is uniform over --hw.
+Clusters:  --cluster mixed (1 A800 node + 1 H20 node), mixed-large
+           (8 + 8 nodes) or a JSON spec file; without it the pool is
+           uniform over --hw.
 Training:  the virtual backend (default) runs everywhere on miniature
            deterministic tensors; --backend pjrt executes AOT artifacts
            from --artifacts and needs the `pjrt` feature. --plan replays
@@ -141,6 +144,7 @@ pub fn hw_by_name(name: &str) -> HardwareProfile {
 pub fn cluster_by_name(name: &str) -> Result<ClusterSpec> {
     match name {
         "mixed" | "mixed-a800-h20" | "a800+h20" => Ok(ClusterSpec::mixed_a800_h20()),
+        "mixed-large" | "mixed-a800-h20-large" => Ok(ClusterSpec::mixed_a800_h20_large()),
         path if path.ends_with(".json") => {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| anyhow::anyhow!("cluster spec {path}: {e}"))?;
@@ -154,7 +158,8 @@ pub fn cluster_by_name(name: &str) -> Result<ClusterSpec> {
             Ok(ClusterSpec::uniform(hw_by_name(name)))
         }
         other => Err(anyhow::anyhow!(
-            "unknown cluster '{other}' (expected 'mixed', a .json spec path, or a800|h20|cpu)"
+            "unknown cluster '{other}' (expected 'mixed', 'mixed-large', a .json spec path, \
+             or a800|h20|cpu)"
         )),
     }
 }
@@ -348,10 +353,21 @@ fn run_plan(flags: &HashMap<String, String>) -> Result<i32> {
     q.mb_size = flag(flags, "mbsize", q.mb_size);
     q.threads = flag(flags, "threads", q.threads);
     let width = flag(flags, "beam-width", 8usize);
+    let generations = flag(flags, "generations", 12usize);
+    let population = flag(flags, "population", 24usize);
+    let evo_seed = flag(flags, "evo-seed", 42u64);
     q.search = match flag::<String>(flags, "search", "exhaustive".into()).as_str() {
-        "beam" => SearchMode::Beam { width },
+        "beam" => {
+            anyhow::ensure!(width >= 1, "--beam-width must be at least 1");
+            SearchMode::Beam { width }
+        }
+        "evo" | "evolutionary" => {
+            anyhow::ensure!(generations >= 1, "--generations must be at least 1");
+            anyhow::ensure!(population >= 1, "--population must be at least 1");
+            SearchMode::Evo { generations, population, seed: evo_seed }
+        }
         "exhaustive" | "full" => SearchMode::Exhaustive,
-        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam)"),
+        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam|evo)"),
     };
     let topk = flag(flags, "topk", 10usize);
     let json = flags.contains_key("json");
@@ -434,10 +450,21 @@ fn serve_query(
     }
     q.threads = flag(flags, "threads", q.threads);
     let width = line.get("beam_width").and_then(Json::as_usize).unwrap_or(8);
+    let generations = line.get("generations").and_then(Json::as_usize).unwrap_or(12);
+    let population = line.get("population").and_then(Json::as_usize).unwrap_or(24);
+    let evo_seed = line.get("evo_seed").and_then(Json::as_usize).unwrap_or(42) as u64;
     q.search = match str_of("search", "exhaustive").as_str() {
-        "beam" => SearchMode::Beam { width },
+        "beam" => {
+            anyhow::ensure!(width >= 1, "beam_width must be at least 1");
+            SearchMode::Beam { width }
+        }
+        "evo" | "evolutionary" => {
+            anyhow::ensure!(generations >= 1, "generations must be at least 1");
+            anyhow::ensure!(population >= 1, "population must be at least 1");
+            SearchMode::Evo { generations, population, seed: evo_seed }
+        }
         "exhaustive" | "full" => SearchMode::Exhaustive,
-        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam)"),
+        other => anyhow::bail!("unknown search mode '{other}' (expected exhaustive|beam|evo)"),
     };
     Ok(q)
 }
@@ -694,6 +721,56 @@ mod tests {
 
         assert!(serve_query(&Json::parse("{\"search\":\"sideways\"}").unwrap(), &HashMap::new())
             .is_err());
+    }
+
+    #[test]
+    fn serve_query_accepts_and_guards_the_evo_mode() {
+        use crate::config::Json;
+        use crate::plan::SearchMode;
+
+        let j = Json::parse(
+            "{\"model\":\"tiny\",\"gpus\":4,\"search\":\"evo\",\
+             \"generations\":5,\"population\":9,\"evo_seed\":3}",
+        )
+        .unwrap();
+        let q = serve_query(&j, &HashMap::new()).unwrap();
+        assert_eq!(q.search, SearchMode::Evo { generations: 5, population: 9, seed: 3 });
+
+        // Defaults mirror the `stp plan` flag defaults.
+        let j = Json::parse("{\"model\":\"tiny\",\"gpus\":4,\"search\":\"evo\"}").unwrap();
+        let q = serve_query(&j, &HashMap::new()).unwrap();
+        assert_eq!(q.search, SearchMode::Evo { generations: 12, population: 24, seed: 42 });
+
+        // Degenerate budgets are one-line errors, not silent clamps.
+        for bad in [
+            "{\"search\":\"evo\",\"generations\":0}",
+            "{\"search\":\"evo\",\"population\":0}",
+            "{\"search\":\"beam\",\"beam_width\":0}",
+        ] {
+            assert!(
+                serve_query(&Json::parse(bad).unwrap(), &HashMap::new()).is_err(),
+                "{bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn plan_subcommand_rejects_bad_search_flags() {
+        // Unknown modes and zero-valued budgets must error out (the
+        // binary maps the Err to exit code 1), never fall back silently.
+        for args in [
+            vec!["plan", "--gpus", "4", "--model", "tiny", "--search", "sideways"],
+            vec!["plan", "--gpus", "4", "--model", "tiny", "--search", "beam", "--beam-width", "0"],
+            vec!["plan", "--gpus", "4", "--model", "tiny", "--search", "evo", "--population", "0"],
+            vec!["plan", "--gpus", "4", "--model", "tiny", "--search", "evo", "--generations", "0"],
+        ] {
+            let owned: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+            let err = run_cli(owned).expect_err("bad search flags must error");
+            assert!(
+                err.to_string().contains("search mode") || err.to_string().contains("at least 1"),
+                "unhelpful error: {err}"
+            );
+        }
     }
 
     #[test]

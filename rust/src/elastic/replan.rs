@@ -405,6 +405,7 @@ mod tests {
             n_mb: 4,
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
+            ac: crate::sim::AcMode::None,
             stage_layers,
             stage_vit_layers: vec![0; chunks],
             chunk_scales: vec![1.0; chunks],
@@ -471,6 +472,9 @@ mod tests {
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
+            ac: crate::sim::AcMode::None,
+            map: None,
+            vpp_gene: 0,
         };
         let e = crate::plan::evaluate(&ctx, &c);
         assert!(e.feasible, "tiny model at tp2-pp4 must fit");

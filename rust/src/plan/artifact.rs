@@ -19,6 +19,7 @@ use crate::config::json::Json;
 use crate::schedule::{
     build_schedule_scaled, stp, OffloadParams, Schedule, ScheduleKind, ShapeCosts,
 };
+use crate::sim::AcMode;
 use crate::Result;
 
 use super::evaluate::{EvalContext, Evaluation};
@@ -47,6 +48,9 @@ pub struct PlanArtifact {
     pub n_mb: usize,
     pub order: GroupOrder,
     pub offload: OffloadParams,
+    /// Activation-checkpointing mode the planner chose (`None` outside
+    /// the evo search; the executor recomputes the checkpointed units).
+    pub ac: AcMode,
     /// LM layers per chunk (the candidate's weighted split).
     pub stage_layers: Vec<usize>,
     /// ViT layers per chunk (MLLM plans; all zero for LLMs).
@@ -76,6 +80,7 @@ impl PlanArtifact {
             n_mb: c.n_mb,
             order: c.order,
             offload: c.offload,
+            ac: c.ac,
             stage_layers: cost.stage_plan.chunks.iter().map(|ch| ch.lm_layers).collect(),
             stage_vit_layers: cost.stage_plan.chunks.iter().map(|ch| ch.vit_layers).collect(),
             chunk_scales: cost.chunk_scales(),
@@ -162,6 +167,7 @@ impl PlanArtifact {
         off.insert("alpha_steady".into(), Json::Num(self.offload.alpha_steady as f64));
         off.insert("reload_lead".into(), Json::Num(self.offload.reload_lead as f64));
         o.insert("offload".into(), Json::Obj(off));
+        o.insert("ac".into(), Json::Str(self.ac.name().into()));
         o.insert(
             "stage_layers".into(),
             Json::Arr(self.stage_layers.iter().map(|&n| Json::Num(n as f64)).collect()),
@@ -228,6 +234,16 @@ impl PlanArtifact {
             "interleaved" => GroupOrder::Interleaved,
             other => anyhow::bail!("plan artifact: unknown order '{other}'"),
         };
+        // Optional for older documents (pre-evo plans never checkpoint);
+        // present-but-unknown values are still hard errors.
+        let ac = match v.get("ac").and_then(Json::as_str) {
+            None => AcMode::None,
+            Some("none") => AcMode::None,
+            Some("mlp") => AcMode::Mlp,
+            Some("attn+mlp") => AcMode::AttnMlp,
+            Some("all") => AcMode::All,
+            Some(other) => anyhow::bail!("plan artifact: unknown ac mode '{other}'"),
+        };
         let off = v
             .get("offload")
             .ok_or_else(|| anyhow::anyhow!("plan artifact: missing 'offload'"))?;
@@ -266,6 +282,7 @@ impl PlanArtifact {
             n_mb: req_usize("n_mb")?,
             order,
             offload,
+            ac,
             stage_layers: usize_arr("stage_layers")?,
             stage_vit_layers: usize_arr("stage_vit_layers")?,
             chunk_scales,

@@ -31,7 +31,7 @@ use crate::sim::CostModel;
 
 use super::evaluate::{EvalContext, Evaluation};
 use super::search::{plan_with_memo, PlanQuery};
-use super::space::Candidate;
+use super::space::{Candidate, StageMap};
 
 /// FNV-1a, 64-bit: tiny, dependency-free, deterministic across runs.
 struct Fnv64(u64);
@@ -184,6 +184,25 @@ pub struct EvalKey {
     offload_warmup: u32,
     offload_steady: u32,
     reload_lead: usize,
+    ac: u8,
+    /// Fingerprint of the explicit stage→group map (0 = unmapped).
+    map_fp: u64,
+}
+
+/// Content fingerprint of a [`StageMap`] (0 is reserved for "no map":
+/// the hash seeds non-zero and every real map writes bytes).
+fn map_fingerprint(map: Option<&StageMap>) -> u64 {
+    let Some(map) = map else { return 0 };
+    let mut h = Fnv64::new();
+    h.write_usize(map.rows.len());
+    for (row, &w) in map.rows.iter().zip(&map.dp_widths) {
+        h.write_usize(w);
+        h.write_usize(row.len());
+        for &g in row {
+            h.write_usize(g);
+        }
+    }
+    h.finish()
 }
 
 impl EvalKey {
@@ -201,17 +220,30 @@ impl EvalKey {
             offload_warmup: c.offload.alpha_warmup.to_bits(),
             offload_steady: c.offload.alpha_steady.to_bits(),
             reload_lead: c.offload.reload_lead,
+            ac: c.ac as u8,
+            map_fp: map_fingerprint(c.map.as_deref()),
         }
     }
 }
 
-/// Per-search cost-model memo: one [`CostModel`] (plus its fingerprint)
-/// per (tp, pp, dp, vpp, order, placement). `Arc`-shared so the
-/// sequential pre-filter pass and the parallel simulation workers read
-/// the same instance without cloning model-sized data.
+/// Per-search cost-model memo: the cost models of one *shape* —
+/// (tp, pp, dp, vpp, order, placement, ac) plus the optional stage→group
+/// map — shared by the pre-filter pass and the parallel simulation
+/// workers via `Arc`. Unmapped shapes hold one model; mapped shapes hold
+/// one per replica class (each with its own view and DP width).
+#[derive(Clone)]
+pub struct CostEntry {
+    pub models: Vec<Arc<CostModel>>,
+    /// Combined resolved-content fingerprint (for unmapped shapes,
+    /// exactly [`cost_fingerprint`] of the single model).
+    pub fp: u64,
+}
+
+type CostShapeKey = ((usize, usize, usize, usize, u8, u8, u8), Option<Arc<StageMap>>);
+
 #[derive(Default)]
 pub struct CostMemo {
-    map: BTreeMap<(usize, usize, usize, usize, u8, u8), (Arc<CostModel>, u64)>,
+    map: BTreeMap<CostShapeKey, CostEntry>,
 }
 
 impl CostMemo {
@@ -219,25 +251,50 @@ impl CostMemo {
         CostMemo::default()
     }
 
-    fn key(c: &Candidate) -> (usize, usize, usize, usize, u8, u8) {
-        (c.tp, c.pp, c.dp, c.vpp(), c.order as u8, c.placement() as u8)
+    fn key(c: &Candidate) -> CostShapeKey {
+        (
+            (c.tp, c.pp, c.dp, c.vpp(), c.order as u8, c.placement() as u8, c.ac as u8),
+            c.map.clone(),
+        )
     }
 
-    pub fn get(&self, c: &Candidate) -> Option<&(Arc<CostModel>, u64)> {
-        self.map.get(&Self::key(c))
+    /// The memoized primary model (class 0 for mapped shapes) and the
+    /// shape fingerprint.
+    pub fn get(&self, c: &Candidate) -> Option<(Arc<CostModel>, u64)> {
+        self.map.get(&Self::key(c)).map(|e| (e.models[0].clone(), e.fp))
     }
 
-    /// The memoized cost model for `c`, building (and fingerprinting) it
-    /// on first sight.
+    /// Every per-class model of a mapped shape (`None` when the shape was
+    /// never built or the candidate is unmapped with no entry).
+    pub fn models_of(&self, c: &Candidate) -> Option<Vec<Arc<CostModel>>> {
+        self.map.get(&Self::key(c)).map(|e| e.models.clone())
+    }
+
+    /// The memoized cost model(s) for `c`, building (and fingerprinting)
+    /// them on first sight.
     pub fn get_or_build(&mut self, ctx: &EvalContext, c: &Candidate) -> (Arc<CostModel>, u64) {
-        self.map
-            .entry(Self::key(c))
-            .or_insert_with(|| {
-                let cost = Arc::new(ctx.cost_model(c));
-                let fp = cost_fingerprint(&cost);
-                (cost, fp)
-            })
-            .clone()
+        let e = self.map.entry(Self::key(c)).or_insert_with(|| {
+            let models: Vec<Arc<CostModel>> = match c.map.as_deref() {
+                Some(map) => (0..map.n_classes())
+                    .map(|k| Arc::new(ctx.class_cost_model(c, k)))
+                    .collect(),
+                None => vec![Arc::new(ctx.cost_model(c))],
+            };
+            let fp = match c.map.as_deref() {
+                None => cost_fingerprint(&models[0]),
+                Some(map) => {
+                    let mut h = Fnv64::new();
+                    h.write_usize(models.len());
+                    for m in &models {
+                        h.write_u64(cost_fingerprint(m));
+                    }
+                    h.write_u64(map_fingerprint(Some(map)));
+                    h.finish()
+                }
+            };
+            CostEntry { models, fp }
+        });
+        (e.models[0].clone(), e.fp)
     }
 
     pub fn len(&self) -> usize {
@@ -272,8 +329,8 @@ impl EvalMemo {
         match self.map.get(key) {
             Some(e) => {
                 self.hits += 1;
-                let mut e = *e;
-                e.candidate = *c;
+                let mut e = e.clone();
+                e.candidate = c.clone();
                 Some(e)
             }
             None => {
@@ -432,6 +489,9 @@ mod tests {
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
+            ac: crate::sim::AcMode::None,
+            map: None,
+            vpp_gene: 0,
         }
     }
 
@@ -484,8 +544,8 @@ mod tests {
         assert!(memo.lookup(&key, &c).is_none());
         assert_eq!(memo.misses, 1);
         let e = crate::plan::evaluate::evaluate(&ctx, &c);
-        memo.record(key, e);
-        let mut relabeled = c;
+        memo.record(key, e.clone());
+        let mut relabeled = c.clone();
         relabeled.id = 99;
         let hit = memo.lookup(&key, &relabeled).expect("recorded key must hit");
         assert_eq!(memo.hits, 1);

@@ -80,10 +80,57 @@ pub fn admissible(model: &PlanModel, cluster: &ClusterSpec, c: &Candidate) -> Re
         return Err(Reject::MicrobatchShape);
     }
 
-    // The pool must host the topology: every stage (tp·cp GPUs × dp
-    // replicas) must land inside a single node group with capacity left.
-    if cluster.device_view(&c.topo(), c.order).is_none() {
+    // The pool must host the topology. Mapped candidates pin each replica
+    // class's stages onto explicit node groups, so capacity is checked
+    // against the map; everything else must resolve an ordinary
+    // `device_view` (every stage's tp·cp·dp block inside one group).
+    match c.map.as_deref() {
+        Some(map) => map_admissible(cluster, c, map)?,
+        None => {
+            if cluster.device_view(&c.topo(), c.order).is_none() {
+                return Err(Reject::ClusterShape);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Structural + capacity validation of an explicit stage→group map: every
+/// class row covers the pp stages with in-range group indices, the class
+/// widths are positive and sum to `dp`, and no node group is asked for
+/// more GPUs than it has (an unbounded group — 0 nodes — hosts anything).
+fn map_admissible(
+    cluster: &ClusterSpec,
+    c: &Candidate,
+    map: &super::space::StageMap,
+) -> Result<(), Reject> {
+    let n_groups = cluster.groups.len();
+    if map.rows.is_empty()
+        || map.rows.len() != map.dp_widths.len()
+        || map.dp_widths.iter().any(|&w| w == 0)
+        || map.dp_widths.iter().sum::<usize>() != c.dp
+        || map.rows.iter().any(|row| row.len() != c.pp)
+        || map.rows.iter().flatten().any(|&g| g >= n_groups)
+    {
         return Err(Reject::ClusterShape);
+    }
+    let topo = c.topo();
+    for (g, group) in cluster.groups.iter().enumerate() {
+        let cap = group.devices();
+        if cap == 0 {
+            continue; // unbounded group
+        }
+        let demand: usize = map
+            .rows
+            .iter()
+            .zip(&map.dp_widths)
+            .map(|(row, w)| {
+                row.iter().filter(|&&rg| rg == g).count() * c.tp * topo.cp * w
+            })
+            .sum();
+        if demand > cap {
+            return Err(Reject::ClusterShape);
+        }
     }
     Ok(())
 }
@@ -107,11 +154,11 @@ pub fn predicted_peak_bytes(cost: &CostModel, kind: ScheduleKind, n_mb: usize) -
     };
     let ma = cost.act_bytes.iter().copied().max().unwrap_or(0) as f64;
     // Table 1 states peaks in half-device (vpp = 2) `M_a` units — the
-    // OneF1B/ZB-H1 rows read "2p" with chunks of 2x size. Their cost
-    // models carry full-device chunks, so halve the unit to match or the
-    // filter would double-count and falsely reject feasible candidates.
-    let single_chunk = matches!(kind, ScheduleKind::OneF1B | ScheduleKind::ZbH1);
-    let ma_unit = if single_chunk { ma / 2.0 } else { ma };
+    // single-chunk rows (OneF1B/ZB-H1, and vpp-overridden generics at
+    // vpp = 1) read "2p" with chunks of 2x size. Their cost models carry
+    // full-device chunks, so halve the unit to match or the filter would
+    // double-count and falsely reject feasible candidates.
+    let ma_unit = if cost.topo.vpp == 1 { ma / 2.0 } else { ma };
     cost.static_bytes + (peak_ma * ma_unit) as usize
 }
 
@@ -143,6 +190,9 @@ mod tests {
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
+            ac: crate::sim::AcMode::None,
+            map: None,
+            vpp_gene: 0,
         }
     }
 

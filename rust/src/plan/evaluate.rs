@@ -6,12 +6,12 @@
 //! (ring over the `dp` replicas of each shard, on the interconnect tier
 //! the replica stride lands on).
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, DeviceView, Topology};
 use crate::schedule::{build_schedule_scaled, stp, theory, ScheduleKind, ShapeCosts};
 use crate::sim::{CostModel, FleetSim, FoldedTopology, SimArena, SimMode, SimReport, Simulator};
 
 use super::cache::CostMemo;
-use super::space::{Candidate, PlanModel};
+use super::space::{Candidate, PlanModel, StageMap};
 
 /// Everything the planner needs to evaluate candidates for one query.
 #[derive(Debug, Clone)]
@@ -34,21 +34,51 @@ pub struct EvalContext {
 }
 
 impl EvalContext {
+    /// The candidate's cost model, activation checkpointing applied. For
+    /// mapped candidates (explicit stage→group placement) this is the
+    /// class-0 model — callers that need every class use
+    /// [`EvalContext::class_cost_model`] per class.
     pub fn cost_model(&self, c: &Candidate) -> CostModel {
-        self.model.cost_model(
-            &c.topo(),
-            &self.cluster,
-            c.order,
-            c.placement(),
-            self.seq,
-            self.vit_tokens,
-            self.mb_size,
-        )
+        if c.map.is_some() {
+            return self.class_cost_model(c, 0);
+        }
+        self.model
+            .cost_model(
+                &c.topo(),
+                &self.cluster,
+                c.order,
+                c.placement(),
+                self.seq,
+                self.vit_tokens,
+                self.mb_size,
+            )
+            .with_activation_checkpoint(c.ac)
+    }
+
+    /// Cost model for replica class `k` of a mapped candidate: the class
+    /// topology carries that class's DP width (so per-class aggregate
+    /// FLOPs are exact) and the view pins each PP rank onto the mapped
+    /// node group.
+    pub fn class_cost_model(&self, c: &Candidate, k: usize) -> CostModel {
+        let map = c.map.as_deref().expect("class_cost_model: unmapped candidate");
+        let topo = Topology::new(c.tp, c.pp, map.dp_widths[k]).with_vpp(c.vpp());
+        let view = DeviceView::from_groups(map.rows[k].clone());
+        self.model
+            .cost_model_view(
+                &topo,
+                &self.cluster,
+                view,
+                c.placement(),
+                self.seq,
+                self.vit_tokens,
+                self.mb_size,
+            )
+            .with_activation_checkpoint(c.ac)
     }
 }
 
 /// One simulated candidate, summarized for ranking and reporting.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Evaluation {
     pub candidate: Candidate,
     /// Simulated single-replica iteration time (seconds).
@@ -81,6 +111,9 @@ pub fn dp_gradient_secs(ctx: &EvalContext, c: &Candidate) -> f64 {
     if c.dp <= 1 {
         return 0.0;
     }
+    if let Some(map) = c.map.as_deref() {
+        return dp_gradient_secs_mapped(ctx, c, map);
+    }
     let grad_bytes = ctx.model.total_params() as f64 * 2.0 / (c.tp * c.pp) as f64;
     let factor = 2.0 * (c.dp as f64 - 1.0) / c.dp as f64;
     let topo = c.topo();
@@ -102,6 +135,46 @@ pub fn dp_gradient_secs(ctx: &EvalContext, c: &Candidate) -> f64 {
             let cross_node = span > hw.gpus_per_node;
             let bw = if cross_node { hw.internode_gbps } else { hw.nvlink_gbps };
             factor * grad_bytes / (bw * hw.allreduce_efficiency * 1e9) + hw.collective_latency
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Mapped-candidate DP gradient ring: the replicas of stage `d` live on
+/// the node groups `{rows[k][d]}` across the replica classes. A stage
+/// whose replicas share one group rings inside that group's fabric under
+/// the usual packing rule; a stage straddling groups pays the slowest
+/// path — the inter-group link (when capped) at the worst member's
+/// efficiency and latency. Concurrent stage rings: the charge is the
+/// slowest stage's, as on the unmapped path.
+fn dp_gradient_secs_mapped(ctx: &EvalContext, c: &Candidate, map: &StageMap) -> f64 {
+    let grad_bytes = ctx.model.total_params() as f64 * 2.0 / (c.tp * c.pp) as f64;
+    let factor = 2.0 * (c.dp as f64 - 1.0) / c.dp as f64;
+    let topo = c.topo();
+    (0..c.pp)
+        .map(|d| {
+            let mut groups: Vec<usize> = map.rows.iter().map(|row| row[d]).collect();
+            groups.sort_unstable();
+            groups.dedup();
+            if groups.len() == 1 {
+                let hw = &ctx.cluster.groups[groups[0]].hw;
+                let cross_node = c.tp * topo.cp * c.dp > hw.gpus_per_node;
+                let bw = if cross_node { hw.internode_gbps } else { hw.nvlink_gbps };
+                factor * grad_bytes / (bw * hw.allreduce_efficiency * 1e9) + hw.collective_latency
+            } else {
+                let mut bw = f64::INFINITY;
+                let mut eff = f64::INFINITY;
+                let mut lat = 0.0f64;
+                for &g in &groups {
+                    let hw = &ctx.cluster.groups[g].hw;
+                    bw = bw.min(hw.internode_gbps);
+                    eff = eff.min(hw.allreduce_efficiency);
+                    lat = lat.max(hw.collective_latency);
+                }
+                if ctx.cluster.intergroup_gbps > 0.0 {
+                    bw = bw.min(ctx.cluster.intergroup_gbps);
+                }
+                factor * grad_bytes / (bw * eff * 1e9) + lat
+            }
         })
         .fold(0.0, f64::max)
 }
@@ -167,6 +240,9 @@ pub fn evaluate(ctx: &EvalContext, c: &Candidate) -> Evaluation {
 /// (malformed candidate) comes back as an infeasible [`Evaluation`] with
 /// `sim_failed` set instead of aborting the whole `plan` run.
 pub fn evaluate_in(ctx: &EvalContext, c: &Candidate, arena: &mut SimArena) -> Evaluation {
+    if c.map.is_some() {
+        return evaluate_mapped(ctx, c, arena, None);
+    }
     let cost = ctx.cost_model(c);
     evaluate_with_cost(ctx, c, &cost, arena)
 }
@@ -181,9 +257,96 @@ pub fn evaluate_in_memo(
     arena: &mut SimArena,
     costs: &CostMemo,
 ) -> Evaluation {
+    if c.map.is_some() {
+        return evaluate_mapped(ctx, c, arena, Some(costs));
+    }
     match costs.get(c) {
-        Some((cost, _)) => evaluate_with_cost(ctx, c, cost, arena),
+        Some((cost, _)) => evaluate_with_cost(ctx, c, &cost, arena),
         None => evaluate_in(ctx, c, arena),
+    }
+}
+
+/// The infeasible, ranked-last evaluation a deadlocked replay maps to.
+fn sim_failed_evaluation(c: &Candidate) -> Evaluation {
+    Evaluation {
+        candidate: c.clone(),
+        iteration_secs: f64::INFINITY,
+        dp_grad_secs: 0.0,
+        throughput: 0.0,
+        mfu: 0.0,
+        tp_bubble_per_dev: 0.0,
+        pp_bubble_per_dev: 0.0,
+        peak_mem_bytes: 0,
+        feasible: false,
+        sim_failed: true,
+    }
+}
+
+/// Mapped-candidate evaluation: each replica class carries its own cost
+/// model (own view + per-class DP width) and is symmetric within itself
+/// by construction, so one representative replay per class is exact —
+/// the mapped analogue of the symmetry fold. The job's iteration time is
+/// the slowest class's (first class kept on exact ties), aggregate peak
+/// FLOPs sum over the classes, peak memory is the worst device anywhere,
+/// and any per-class OOM or deadlock marks the whole candidate.
+fn evaluate_mapped(
+    ctx: &EvalContext,
+    c: &Candidate,
+    arena: &mut SimArena,
+    costs: Option<&CostMemo>,
+) -> Evaluation {
+    let map = c.map.as_deref().expect("evaluate_mapped: unmapped candidate");
+    let memo_models = costs.and_then(|m| m.models_of(c));
+    let mut iter = -1.0f64;
+    let mut tp_bubble = 0.0f64;
+    let mut pp_bubble = 0.0f64;
+    let mut agg_flops = 0.0f64;
+    let mut flops_per_sample = 0.0f64;
+    let mut peak = 0usize;
+    let mut oom = false;
+    for k in 0..map.n_classes() {
+        let built;
+        let cost: &CostModel = match memo_models.as_deref() {
+            Some(models) => &models[k],
+            None => {
+                built = ctx.class_cost_model(c, k);
+                &built
+            }
+        };
+        let s = build_candidate_schedule(cost, c);
+        let fleet = FleetSim::new(cost).without_trace();
+        let r = match fleet.run_unfolded(&s, 1, arena) {
+            Ok(r) => r,
+            Err(_) => return sim_failed_evaluation(c),
+        };
+        if r.iteration_secs > iter {
+            iter = r.iteration_secs;
+            tp_bubble = r.tp_bubble_per_device();
+            pp_bubble = r.pp_bubble_per_device();
+        }
+        agg_flops += r.aggregate_peak_flops;
+        peak = peak.max(r.peak_memory_bytes());
+        oom |= r.is_oom();
+        if k == 0 {
+            flops_per_sample = r.model_flops_per_sample;
+        }
+    }
+    let dp_grad_secs = dp_gradient_secs(ctx, c);
+    let total = iter + dp_grad_secs;
+    let samples = (c.dp * c.n_mb * ctx.mb_size) as f64;
+    let throughput = samples / total.max(1e-12);
+    let mfu = flops_per_sample * samples / (total * agg_flops).max(1e-12);
+    Evaluation {
+        candidate: c.clone(),
+        iteration_secs: iter,
+        dp_grad_secs,
+        throughput,
+        mfu,
+        tp_bubble_per_dev: tp_bubble,
+        pp_bubble_per_dev: pp_bubble,
+        peak_mem_bytes: peak,
+        feasible: peak <= ctx.mem_cap_bytes && !oom,
+        sim_failed: false,
     }
 }
 
@@ -210,20 +373,7 @@ fn evaluate_with_cost(
     };
     let r = match replay {
         Ok(r) => r,
-        Err(_) => {
-            return Evaluation {
-                candidate: *c,
-                iteration_secs: f64::INFINITY,
-                dp_grad_secs: 0.0,
-                throughput: 0.0,
-                mfu: 0.0,
-                tp_bubble_per_dev: 0.0,
-                pp_bubble_per_dev: 0.0,
-                peak_mem_bytes: 0,
-                feasible: false,
-                sim_failed: true,
-            }
-        }
+        Err(_) => return sim_failed_evaluation(c),
     };
     let dp_grad_secs = dp_gradient_secs(ctx, c);
     let total = r.iteration_secs + dp_grad_secs;
@@ -233,7 +383,7 @@ fn evaluate_with_cost(
     let mfu = useful / (total * r.aggregate_peak_flops).max(1e-12);
     let peak_mem_bytes = r.peak_memory_bytes();
     Evaluation {
-        candidate: *c,
+        candidate: c.clone(),
         iteration_secs: r.iteration_secs,
         dp_grad_secs,
         throughput,
@@ -276,6 +426,9 @@ mod tests {
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
+            ac: crate::sim::AcMode::None,
+            map: None,
+            vpp_gene: 0,
         }
     }
 

@@ -1,0 +1,631 @@
+//! Evolutionary search over the *full* co-optimization space
+//! (DESIGN.md §16).
+//!
+//! The exhaustive and beam searches walk the enumerated candidate space:
+//! (tp, pp, dp) factorizations × schedule kind × n_mb × group order ×
+//! offload variant. The genome here spans strictly more — per-candidate
+//! activation checkpointing ([`AcMode`]), virtual-pipeline overrides for
+//! the vpp-generic families, and (on mixed pools) explicit stage→group
+//! placements with per-class DP widths ([`StageMap`]) — axes whose cross
+//! product would be hopeless to enumerate. Mutation and crossover move
+//! through that space; fitness is the exact same arena-backed simulation
+//! pipeline ([`evaluate_batch`]) the other modes use, so evo inherits
+//! cost-model memoization, cross-query eval reuse and thread-count
+//! determinism without any new machinery.
+//!
+//! Determinism argument: the only randomness is one explicitly-threaded
+//! xorshift64* stream seeded by `--evo-seed`; populations are plain
+//! `Vec`s mutated in a fixed order; every set/map is a BTree keyed by
+//! the canonical [`Candidate::genome_key`]; fitness ties break on that
+//! key; and each generation's simulations go through one
+//! `evaluate_batch` call, which is already bit-deterministic at any
+//! thread count. Same seed, same report — `--threads` only changes the
+//! wall clock.
+//!
+//! Funnel accounting: every *novel* genome (never enumerated, never seen
+//! before) increments `generated` and lands in exactly one bucket —
+//! shape-rejected, memory-pruned, or simulated. Revisits of a seen
+//! genome are free (the seen-set answers them); offspring that collide
+//! with an enumerated-but-unsimulated candidate simply promote it into
+//! the simulated set under its original id. Infeasible genomes become
+//! ranked-last rejects, never aborts.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::cluster::GroupOrder;
+use crate::schedule::{OffloadParams, ScheduleKind};
+use crate::sim::AcMode;
+
+use super::cache::{CostMemo, EvalMemo};
+use super::constraints::{admissible, memory_feasible, Reject};
+use super::evaluate::{EvalContext, Evaluation};
+use super::search::{evaluate_batch, PlanQuery};
+use super::space::{divisors, Candidate, StageMap};
+
+/// Virtual-pipeline override options for the vpp-generic families
+/// (0 = the family default of 2 chunks/device).
+const VPP_OPTIONS: [usize; 4] = [0, 1, 2, 4];
+
+/// What the evolutionary search hands back to the planner funnel.
+pub struct EvoOutcome {
+    /// Every simulated evaluation (seeds, promoted enumerated
+    /// candidates, and novel genomes) — the caller ranks them.
+    pub evals: Vec<Evaluation>,
+    /// Novel genomes generated beyond the enumerated space (each is in
+    /// exactly one funnel bucket: shape-rejected, memory-pruned, or
+    /// simulated).
+    pub generated: usize,
+    /// Shape-rejection tallies over the novel genomes.
+    pub shape_rejects: Vec<(Reject, usize)>,
+    /// Novel genomes dropped by the closed-form memory pre-filter.
+    pub pruned_memory: usize,
+}
+
+/// xorshift64* — tiny, seedable, and good enough to drive a GA. The
+/// `| 1` guarantees a non-zero state for every seed (xorshift fixes 0).
+struct XorShift64(u64);
+
+impl XorShift64 {
+    fn new(seed: u64) -> XorShift64 {
+        XorShift64(seed | 1)
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform-ish draw in `0..n` (`n > 0`).
+    fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    fn coin(&mut self) -> bool {
+        self.next_u64() & 1 == 0
+    }
+}
+
+/// The gene pools mutation draws from (fixed per search).
+struct Genes<'a> {
+    /// Every (tp, pp, dp) with product = the GPU budget, enumeration
+    /// order.
+    factorizations: Vec<(usize, usize, usize)>,
+    kinds: &'a [ScheduleKind],
+    n_mbs: &'a [usize],
+    orders: Vec<GroupOrder>,
+    offload_variants: &'a [OffloadParams],
+    n_groups: usize,
+    uniform: bool,
+    /// Reshape keeps each genome's global batch (dp·n_mb·mb) fixed, but
+    /// bounds the resulting per-replica n_mb so a dp collapse cannot
+    /// explode the replay cost.
+    max_n_mb: usize,
+}
+
+/// Canonicalize a genome after mutation/crossover so every gene is
+/// meaningful for its schedule kind and pool — the "repair" step that
+/// keeps the operators closed over the valid space (full validity is
+/// still [`admissible`]'s call).
+fn repair(c: &mut Candidate, g: &Genes) {
+    if !matches!(c.kind, ScheduleKind::GPipe | ScheduleKind::OneF1BInterleaved) {
+        c.vpp_gene = 0;
+    }
+    if c.kind != ScheduleKind::StpOffload {
+        c.offload = OffloadParams::default();
+        c.offload_variant = 0;
+    } else if c.offload_variant >= g.offload_variants.len() {
+        c.offload_variant = 0;
+        c.offload = g.offload_variants[0];
+    }
+    if g.uniform {
+        c.order = GroupOrder::Declared;
+        c.map = None;
+    }
+    if let Some(map) = c.map.as_deref() {
+        // A map inherited across a reshape no longer matches (pp, dp):
+        // drop it rather than carry a structurally-invalid gene.
+        if map.dp_widths.iter().sum::<usize>() != c.dp
+            || map.rows.iter().any(|r| r.len() != c.pp)
+        {
+            c.map = None;
+        }
+    }
+}
+
+/// A fresh random stage→group map for the candidate's (pp, dp): one or
+/// two replica classes, each pinned either wholly onto one group or
+/// round-robin across the groups.
+fn random_map(c: &Candidate, g: &Genes, rng: &mut XorShift64) -> StageMap {
+    let n_classes = if c.dp >= 2 && rng.coin() { 2 } else { 1 };
+    let dp_widths = if n_classes == 2 {
+        let w0 = 1 + rng.below(c.dp - 1);
+        vec![w0, c.dp - w0]
+    } else {
+        vec![c.dp]
+    };
+    let rows = (0..n_classes)
+        .map(|_| {
+            if rng.coin() {
+                vec![rng.below(g.n_groups); c.pp]
+            } else {
+                let offset = rng.below(g.n_groups);
+                (0..c.pp).map(|d| (d + offset) % g.n_groups).collect()
+            }
+        })
+        .collect();
+    StageMap { rows, dp_widths }
+}
+
+/// One mutation: pick an applicable operator, apply it, repair.
+fn mutate(parent: &Candidate, g: &Genes, rng: &mut XorShift64) -> Candidate {
+    let mut c = parent.clone();
+    // Operator menu, rebuilt per call because applicability depends on
+    // the parent (fixed order keeps the RNG stream deterministic).
+    let mut ops: Vec<u8> = Vec::with_capacity(8);
+    if g.kinds.len() > 1 {
+        ops.push(0); // schedule kind
+    }
+    ops.push(1); // reshape (tp, pp, dp) under the fixed global batch
+    if g.n_mbs.len() > 1 {
+        ops.push(2); // microbatch count (changes the global batch)
+    }
+    if g.orders.len() > 1 {
+        ops.push(3); // group order
+    }
+    if c.kind == ScheduleKind::StpOffload && g.offload_variants.len() > 1 {
+        ops.push(4); // offload variant
+    }
+    ops.push(5); // activation checkpointing
+    if matches!(c.kind, ScheduleKind::GPipe | ScheduleKind::OneF1BInterleaved) {
+        ops.push(6); // vpp override
+    }
+    if !g.uniform && g.n_groups >= 2 {
+        ops.push(7); // stage→group map
+        if c.map.is_some() {
+            ops.push(8); // drop the map
+        }
+    }
+    match ops[rng.below(ops.len())] {
+        0 => {
+            let others: Vec<ScheduleKind> =
+                g.kinds.iter().copied().filter(|&k| k != c.kind).collect();
+            c.kind = others[rng.below(others.len())];
+        }
+        1 => {
+            // Reshape preserving this genome's global batch: dp' must
+            // divide dp·n_mb, and the implied n_mb' stays bounded.
+            let batch = c.dp * c.n_mb;
+            let opts: Vec<(usize, usize, usize)> = g
+                .factorizations
+                .iter()
+                .copied()
+                .filter(|&(tp, pp, dp)| {
+                    (tp, pp, dp) != (c.tp, c.pp, c.dp)
+                        && batch % dp == 0
+                        && batch / dp <= g.max_n_mb
+                })
+                .collect();
+            if !opts.is_empty() {
+                let (tp, pp, dp) = opts[rng.below(opts.len())];
+                c.tp = tp;
+                c.pp = pp;
+                c.dp = dp;
+                c.n_mb = batch / dp;
+            }
+        }
+        2 => {
+            let others: Vec<usize> =
+                g.n_mbs.iter().copied().filter(|&m| m != c.n_mb).collect();
+            c.n_mb = others[rng.below(others.len())];
+        }
+        3 => {
+            let others: Vec<GroupOrder> =
+                g.orders.iter().copied().filter(|&o| o != c.order).collect();
+            c.order = others[rng.below(others.len())];
+        }
+        4 => {
+            let others: Vec<usize> =
+                (0..g.offload_variants.len()).filter(|&v| v != c.offload_variant).collect();
+            c.offload_variant = others[rng.below(others.len())];
+            c.offload = g.offload_variants[c.offload_variant];
+        }
+        5 => {
+            let others: Vec<AcMode> =
+                AcMode::all().into_iter().filter(|&a| a != c.ac).collect();
+            c.ac = others[rng.below(others.len())];
+        }
+        6 => {
+            let others: Vec<usize> =
+                VPP_OPTIONS.into_iter().filter(|&v| v != c.vpp_gene).collect();
+            c.vpp_gene = others[rng.below(others.len())];
+        }
+        7 => {
+            c.map = Some(Arc::new(random_map(&c, g, rng)));
+        }
+        _ => {
+            c.map = None;
+        }
+    }
+    repair(&mut c, g);
+    c
+}
+
+/// Uniform crossover: the (tp, pp, dp, n_mb) block travels *jointly*
+/// from one parent (it encodes a consistent factorization and global
+/// batch); every other gene flips a coin.
+fn crossover(a: &Candidate, b: &Candidate, g: &Genes, rng: &mut XorShift64) -> Candidate {
+    let shape = if rng.coin() { a } else { b };
+    let mut c = shape.clone();
+    c.kind = if rng.coin() { a.kind } else { b.kind };
+    c.order = if rng.coin() { a.order } else { b.order };
+    let off = if rng.coin() { a } else { b };
+    c.offload = off.offload;
+    c.offload_variant = off.offload_variant;
+    c.ac = if rng.coin() { a.ac } else { b.ac };
+    c.vpp_gene = if rng.coin() { a.vpp_gene } else { b.vpp_gene };
+    // The map gene only makes sense with the shape it was built for;
+    // inherit from either parent and let repair drop mismatches.
+    c.map = if rng.coin() { a.map.clone() } else { b.map.clone() };
+    repair(&mut c, g);
+    c
+}
+
+/// Fitness of a seen genome: simulated candidates rank by (feasible,
+/// throughput); rejected genomes sit strictly below every simulated one
+/// (throughput is never negative).
+fn fitness(
+    key: &str,
+    evaluated: &BTreeMap<String, Evaluation>,
+    rejected: &BTreeSet<String>,
+) -> (bool, f64) {
+    match evaluated.get(key) {
+        Some(e) => (e.feasible, e.throughput),
+        None => {
+            debug_assert!(rejected.contains(key), "fitness of unseen genome");
+            (false, -1.0)
+        }
+    }
+}
+
+/// `a` strictly fitter than `b` (key breaks exact ties, so tournament
+/// outcomes are deterministic).
+fn fitter(fa: (bool, f64), ka: &str, fb: (bool, f64), kb: &str) -> bool {
+    match fa.0.cmp(&fb.0) {
+        std::cmp::Ordering::Greater => true,
+        std::cmp::Ordering::Less => false,
+        std::cmp::Ordering::Equal => match fa.1.partial_cmp(&fb.1) {
+            Some(std::cmp::Ordering::Greater) => true,
+            Some(std::cmp::Ordering::Less) => false,
+            _ => ka < kb,
+        },
+    }
+}
+
+/// Size-3 tournament over the population.
+fn tournament<'a>(
+    pop: &'a [String],
+    rng: &mut XorShift64,
+    evaluated: &BTreeMap<String, Evaluation>,
+    rejected: &BTreeSet<String>,
+) -> &'a String {
+    let mut best = &pop[rng.below(pop.len())];
+    for _ in 0..2 {
+        let challenger = &pop[rng.below(pop.len())];
+        if fitter(
+            fitness(challenger, evaluated, rejected),
+            challenger,
+            fitness(best, evaluated, rejected),
+            best,
+        ) {
+            best = challenger;
+        }
+    }
+    best
+}
+
+/// Run the evolutionary search. `scored` is stage 2+3's output (the
+/// memory-feasible, theory-estimated slice of the enumerated space, in
+/// id order); `next_id` is the first free candidate id for novel
+/// genomes; the rest mirrors [`evaluate_batch`].
+#[allow(clippy::too_many_arguments)]
+pub(super) fn evolve(
+    ctx: &EvalContext,
+    q: &PlanQuery,
+    scored: &[(Candidate, f64)],
+    next_id: usize,
+    generations: usize,
+    population: usize,
+    seed: u64,
+    threads: usize,
+    costs: &mut CostMemo,
+    mut memo: Option<&mut EvalMemo>,
+) -> EvoOutcome {
+    let mut shape_rejects: Vec<(Reject, usize)> =
+        Reject::SHAPE_KINDS.iter().map(|&r| (r, 0)).collect();
+    if scored.is_empty() {
+        return EvoOutcome { evals: Vec::new(), generated: 0, shape_rejects, pruned_memory: 0 };
+    }
+    let population = population.max(2);
+    let mut rng = XorShift64::new(seed);
+    let genes = Genes {
+        factorizations: {
+            let mut f = Vec::new();
+            for tp in divisors(q.gpus) {
+                for pp in divisors(q.gpus / tp) {
+                    f.push((tp, pp, q.gpus / (tp * pp)));
+                }
+            }
+            f
+        },
+        kinds: &q.kinds,
+        n_mbs: &q.n_mb_options,
+        orders: q.cluster.group_orders(),
+        offload_variants: &q.offload_variants,
+        n_groups: q.cluster.groups.len(),
+        uniform: q.cluster.is_uniform(),
+        max_n_mb: 2 * q.n_mb_options.iter().copied().max().unwrap_or(1),
+    };
+
+    // Seen-set state. `evaluated` holds every simulated genome (outcome);
+    // `rejected` the infeasible ones; `scored_index` the enumerated
+    // candidates evo may still promote into simulation; `genomes` the
+    // concrete candidate behind each population key.
+    let mut evaluated: BTreeMap<String, Evaluation> = BTreeMap::new();
+    let mut rejected: BTreeSet<String> = BTreeSet::new();
+    let mut genomes: BTreeMap<String, Candidate> = BTreeMap::new();
+    let mut scored_index: BTreeMap<String, usize> =
+        scored.iter().enumerate().map(|(i, (c, _))| (c.genome_key(), i)).collect();
+    let mut generated = 0usize;
+    let mut pruned_memory = 0usize;
+    let mut next_id = next_id;
+
+    // Seed generation: the top-`population` theory estimates, plus the
+    // best estimate of every uncovered schedule kind and microbatch
+    // option — no family or batch regime is written off unsampled.
+    let mut by_est: Vec<usize> = (0..scored.len()).collect();
+    by_est.sort_by(|&a, &b| {
+        scored[b]
+            .1
+            .partial_cmp(&scored[a].1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(scored[a].0.id.cmp(&scored[b].0.id))
+    });
+    let mut seed_idxs: Vec<usize> = by_est.iter().copied().take(population).collect();
+    let mut kinds_seen: BTreeSet<u8> =
+        seed_idxs.iter().map(|&i| scored[i].0.kind as u8).collect();
+    for &i in &by_est {
+        if kinds_seen.insert(scored[i].0.kind as u8) {
+            seed_idxs.push(i);
+        }
+    }
+    let mut mbs_seen: BTreeSet<usize> = seed_idxs.iter().map(|&i| scored[i].0.n_mb).collect();
+    for &i in &by_est {
+        if mbs_seen.insert(scored[i].0.n_mb) {
+            seed_idxs.push(i);
+        }
+    }
+    seed_idxs.sort_unstable();
+    seed_idxs.dedup();
+
+    let seeds: Vec<Candidate> = seed_idxs.iter().map(|&i| scored[i].0.clone()).collect();
+    for e in evaluate_batch(ctx, &seeds, threads, costs, memo.as_deref_mut()) {
+        evaluated.insert(e.candidate.genome_key(), e);
+    }
+    for c in seeds {
+        let key = c.genome_key();
+        scored_index.remove(&key);
+        genomes.insert(key, c);
+    }
+    let mut pop: Vec<String> = evaluated.keys().cloned().collect();
+    let truncate = |pop: &mut Vec<String>,
+                    evaluated: &BTreeMap<String, Evaluation>,
+                    rejected: &BTreeSet<String>| {
+        pop.sort();
+        pop.dedup();
+        pop.sort_by(|a, b| {
+            let (fa, fb) = (fitness(a, evaluated, rejected), fitness(b, evaluated, rejected));
+            fb.0.cmp(&fa.0)
+                .then(fb.1.partial_cmp(&fa.1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.cmp(b))
+        });
+        pop.truncate(population);
+    };
+    truncate(&mut pop, &evaluated, &rejected);
+
+    for _gen in 0..generations {
+        let mut offspring_keys: Vec<String> = Vec::with_capacity(population);
+        let mut to_eval: Vec<Candidate> = Vec::new();
+        let mut pending: BTreeSet<String> = BTreeSet::new();
+        for _ in 0..population {
+            // ~40% crossover, else mutation; parents by 3-way tournament.
+            let child = if pop.len() >= 2 && rng.below(5) < 2 {
+                let a = tournament(&pop, &mut rng, &evaluated, &rejected).clone();
+                let b = tournament(&pop, &mut rng, &evaluated, &rejected).clone();
+                crossover(&genomes[&a], &genomes[&b], &genes, &mut rng)
+            } else {
+                let p = tournament(&pop, &mut rng, &evaluated, &rejected).clone();
+                mutate(&genomes[&p], &genes, &mut rng)
+            };
+            let key = child.genome_key();
+            offspring_keys.push(key.clone());
+            genomes.entry(key.clone()).or_insert_with(|| child.clone());
+            if evaluated.contains_key(&key) || rejected.contains(&key) || pending.contains(&key)
+            {
+                continue; // seen genome: revisit is free
+            }
+            if let Some(i) = scored_index.remove(&key) {
+                // Enumerated and memory-feasible but never simulated:
+                // promote it under its original id (not a novel genome).
+                to_eval.push(scored[i].0.clone());
+                pending.insert(key);
+                continue;
+            }
+            generated += 1;
+            match admissible(&q.model, &q.cluster, &child) {
+                Err(r) => {
+                    if let Some(t) = shape_rejects.iter_mut().find(|(k, _)| *k == r) {
+                        t.1 += 1;
+                    }
+                    rejected.insert(key);
+                }
+                Ok(()) => {
+                    costs.get_or_build(ctx, &child);
+                    let models = costs.models_of(&child).expect("shape just built");
+                    let fits = models.iter().all(|m| {
+                        memory_feasible(m, child.kind, child.n_mb, ctx.mem_cap_bytes)
+                    });
+                    if fits {
+                        let mut child = child;
+                        child.id = next_id;
+                        next_id += 1;
+                        genomes.insert(key.clone(), child.clone());
+                        to_eval.push(child);
+                        pending.insert(key);
+                    } else {
+                        pruned_memory += 1;
+                        rejected.insert(key);
+                    }
+                }
+            }
+        }
+        if !to_eval.is_empty() {
+            to_eval.sort_by_key(|c| c.id);
+            for e in evaluate_batch(ctx, &to_eval, threads, costs, memo.as_deref_mut()) {
+                evaluated.insert(e.candidate.genome_key(), e);
+            }
+        }
+        // Elitist survivor selection over parents ∪ offspring.
+        pop.extend(offspring_keys);
+        truncate(&mut pop, &evaluated, &rejected);
+    }
+
+    EvoOutcome { evals: evaluated.into_values().collect(), generated, shape_rejects, pruned_memory }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{ClusterSpec, HardwareProfile};
+    use crate::model::ModelConfig;
+    use crate::plan::space::PlanModel;
+
+    #[test]
+    fn xorshift_streams_are_seed_deterministic() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        let mut c = XorShift64::new(43);
+        let xs: Vec<u64> = (0..16).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..16).map(|_| b.next_u64()).collect();
+        assert_eq!(xs, ys);
+        assert!((0..16).any(|_| c.next_u64() != b.next_u64()));
+        // Seed 0 must not collapse to the all-zero fixed point.
+        let mut z = XorShift64::new(0);
+        assert_ne!(z.next_u64(), 0);
+    }
+
+    fn genes(q: &PlanQuery) -> Genes<'_> {
+        let mut f = Vec::new();
+        for tp in divisors(q.gpus) {
+            for pp in divisors(q.gpus / tp) {
+                f.push((tp, pp, q.gpus / (tp * pp)));
+            }
+        }
+        Genes {
+            factorizations: f,
+            kinds: &q.kinds,
+            n_mbs: &q.n_mb_options,
+            orders: q.cluster.group_orders(),
+            offload_variants: &q.offload_variants,
+            n_groups: q.cluster.groups.len(),
+            uniform: q.cluster.is_uniform(),
+            max_n_mb: 2 * q.n_mb_options.iter().copied().max().unwrap_or(1),
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_the_budget_and_repairs_genes() {
+        let q = PlanQuery::new(
+            PlanModel::Llm(ModelConfig::qwen2_12b()),
+            ClusterSpec::mixed_a800_h20(),
+            16,
+        );
+        let g = genes(&q);
+        let parent = Candidate {
+            id: 0,
+            tp: 2,
+            pp: 4,
+            dp: 2,
+            kind: ScheduleKind::Stp,
+            n_mb: 16,
+            order: GroupOrder::FastFirst,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+            ac: AcMode::None,
+            map: None,
+            vpp_gene: 0,
+        };
+        let mut rng = XorShift64::new(7);
+        for _ in 0..200 {
+            let c = mutate(&parent, &g, &mut rng);
+            assert_eq!(c.tp * c.pp * c.dp, 16, "{}", c.label());
+            if !matches!(c.kind, ScheduleKind::GPipe | ScheduleKind::OneF1BInterleaved) {
+                assert_eq!(c.vpp_gene, 0, "{}", c.label());
+            }
+            if c.kind != ScheduleKind::StpOffload {
+                assert_eq!(c.offload_variant, 0, "{}", c.label());
+            }
+            if let Some(map) = c.map.as_deref() {
+                assert_eq!(map.dp_widths.iter().sum::<usize>(), c.dp);
+                assert!(map.rows.iter().all(|r| r.len() == c.pp));
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_inherits_a_consistent_shape_block() {
+        let q = PlanQuery::new(
+            PlanModel::Llm(ModelConfig::qwen2_12b()),
+            ClusterSpec::uniform(HardwareProfile::a800()),
+            8,
+        );
+        let g = genes(&q);
+        let mk = |tp: usize, pp: usize, dp: usize, n_mb: usize, kind: ScheduleKind| Candidate {
+            id: 0,
+            tp,
+            pp,
+            dp,
+            kind,
+            n_mb,
+            order: GroupOrder::Declared,
+            offload: OffloadParams::default(),
+            offload_variant: 0,
+            ac: AcMode::None,
+            map: None,
+            vpp_gene: 0,
+        };
+        let a = mk(8, 1, 1, 16, ScheduleKind::Stp);
+        let b = mk(2, 2, 2, 32, ScheduleKind::ZbV);
+        let mut rng = XorShift64::new(3);
+        for _ in 0..100 {
+            let c = crossover(&a, &b, &g, &mut rng);
+            let shape = (c.tp, c.pp, c.dp, c.n_mb);
+            assert!(
+                shape == (8, 1, 1, 16) || shape == (2, 2, 2, 32),
+                "shape block must come jointly from one parent, got {shape:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn fitter_breaks_ties_on_genome_key() {
+        assert!(fitter((true, 1.0), "a", (false, 9.0), "b"));
+        assert!(fitter((true, 2.0), "b", (true, 1.0), "a"));
+        assert!(fitter((true, 1.0), "a", (true, 1.0), "b"));
+        assert!(!fitter((true, 1.0), "b", (true, 1.0), "a"));
+    }
+}

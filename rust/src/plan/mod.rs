@@ -17,10 +17,14 @@
 //! 3. **simulates** under the event-driven no-trace replay on a thread
 //!    pool with per-worker scratch arenas ([`search`]) —
 //!    deterministically, regardless of thread count — either every
-//!    theory-bound survivor ([`SearchMode::Exhaustive`]) or a
+//!    theory-bound survivor ([`SearchMode::Exhaustive`]), a
 //!    theory-seeded beam walk over (tp, pp, n_mb, order) neighbors
 //!    ([`SearchMode::Beam`], for budgets of hundreds of GPUs where
-//!    exhaustive simulation stops scaling);
+//!    exhaustive simulation stops scaling), or an evolutionary search
+//!    ([`SearchMode::Evo`], [`evo`]) whose genome additionally spans
+//!    activation checkpointing, virtual-pipeline overrides and explicit
+//!    stage→group maps with per-class DP widths on mixed pools
+//!    (DESIGN.md §16);
 //! 4. **reports** a ranked [`PlanReport`] with throughput, MFU, TP/PP
 //!    bubble decomposition and peak memory per candidate, serializable
 //!    to JSON and traceable via `trace::write_chrome_trace` ([`report`]).
@@ -37,6 +41,7 @@ pub mod artifact;
 pub mod cache;
 pub mod constraints;
 pub mod evaluate;
+pub mod evo;
 pub mod report;
 pub mod search;
 pub mod space;
@@ -49,7 +54,7 @@ pub use evaluate::{evaluate, evaluate_in_memo, simulate_candidate, EvalContext, 
 pub use report::PlanReport;
 pub use search::{evaluate_parallel, evaluate_parallel_memo, plan, plan_with_memo};
 pub use search::{PlanQuery, SearchMode};
-pub use space::{Candidate, PlanModel};
+pub use space::{Candidate, PlanModel, StageMap};
 
 #[cfg(test)]
 mod tests {

@@ -193,6 +193,13 @@ impl PlanReport {
                 o.insert("n_mb".into(), Json::Num(c.n_mb as f64));
                 o.insert("order".into(), Json::Str(c.order.name().into()));
                 o.insert("offload_variant".into(), Json::Num(c.offload_variant as f64));
+                o.insert("ac".into(), Json::Str(c.ac.name().into()));
+                if let Some(map) = &c.map {
+                    o.insert("map".into(), Json::Str(map.label()));
+                }
+                if c.vpp_gene > 0 {
+                    o.insert("vpp".into(), Json::Num(c.vpp() as f64));
+                }
                 o.insert("throughput".into(), Json::Num(e.throughput));
                 o.insert("mfu".into(), Json::Num(e.mfu));
                 o.insert("iteration_secs".into(), Json::Num(e.iteration_secs));
@@ -229,6 +236,9 @@ mod tests {
                 order: GroupOrder::Declared,
                 offload: OffloadParams::default(),
                 offload_variant: 0,
+                ac: crate::sim::AcMode::None,
+                map: None,
+                vpp_gene: 0,
             },
             iteration_secs: 1.0,
             dp_grad_secs: 0.0,

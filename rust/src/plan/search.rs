@@ -22,6 +22,13 @@
 //! fails to improve the best simulated plan. Everything is ordered by
 //! (estimate, candidate id), so beam results are as deterministic as the
 //! exhaustive ones.
+//!
+//! [`SearchMode::Evo`] goes further: a seeded evolutionary search (the
+//! [`super::evo`] module) whose genome also spans activation
+//! checkpointing, virtual-pipeline overrides and explicit stage→group
+//! maps — co-optimization axes the enumerated space never visits. Its
+//! fitness passes run through the same [`evaluate_batch`] pipeline, so
+//! evo inherits the memoization and thread-count determinism for free.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::AtomicUsize;
@@ -52,14 +59,31 @@ pub enum SearchMode {
         /// Beam width: candidates simulated per frontier round.
         width: usize,
     },
+    /// Evolutionary search over the full co-optimization space —
+    /// schedule kind, (tp, pp, dp, vpp, n_mb), group order, offload
+    /// variant, activation checkpointing, and (on mixed pools) explicit
+    /// stage→group placements with per-class DP widths (DESIGN.md §16).
+    Evo {
+        /// Evolution rounds after the seed generation.
+        generations: usize,
+        /// Individuals carried between rounds (and offspring per round).
+        population: usize,
+        /// RNG seed — same seed, same report, at any thread count.
+        seed: u64,
+    },
 }
 
 impl SearchMode {
-    /// Stable label for reports and JSON ("exhaustive", "beam-8").
+    /// Stable label for reports and JSON ("exhaustive", "beam-8",
+    /// "evo-12-24-42"). The evo label carries every search parameter, so
+    /// `canonical_key` distinguishes evo budgets for free.
     pub fn label(&self) -> String {
         match self {
             SearchMode::Exhaustive => "exhaustive".to_string(),
             SearchMode::Beam { width } => format!("beam-{width}"),
+            SearchMode::Evo { generations, population, seed } => {
+                format!("evo-{generations}-{population}-{seed}")
+            }
         }
     }
 }
@@ -171,7 +195,11 @@ pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport 
     let ctx = q.eval_context();
     let orders = q.cluster.group_orders();
     let all = enumerate(q.gpus, &q.kinds, &q.n_mb_options, &orders, &q.offload_variants);
-    let n_enumerated = all.len();
+    // Evolutionary search grows the population beyond the enumerated
+    // space (novel genomes: AC modes, vpp overrides, stage maps), so the
+    // total is mutable — every novel genome lands in exactly one funnel
+    // bucket and the invariant below still balances.
+    let mut n_enumerated = all.len();
 
     // Stage 1: shape admissibility (TP divisibility, pipeline depth,
     // microbatch rules, cluster capacity under the candidate's order).
@@ -181,7 +209,7 @@ pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport 
         Reject::SHAPE_KINDS.iter().map(|&r| (r, 0)).collect();
     for c in &all {
         match admissible(&q.model, &q.cluster, c) {
-            Ok(()) => shaped.push(*c),
+            Ok(()) => shaped.push(c.clone()),
             Err(r) => {
                 n_rejected_shape += 1;
                 if let Some(t) = shape_reject_tallies.iter_mut().find(|(k, _)| *k == r) {
@@ -207,7 +235,8 @@ pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport 
             n_pruned_memory += 1;
             continue;
         }
-        scored.push((c, estimated_throughput(&ctx, &cost, &c)));
+        let est = estimated_throughput(&ctx, &cost, &c);
+        scored.push((c, est));
     }
 
     // Stage 4: simulate — every theory-bound survivor (exhaustive) or
@@ -235,7 +264,7 @@ pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport 
             let mut survivors: Vec<Candidate> = Vec::with_capacity(scored.len());
             for (i, x) in scored.iter().enumerate() {
                 if keep[i] {
-                    survivors.push(x.0);
+                    survivors.push(x.0.clone());
                 }
             }
             evaluate_batch(&ctx, &survivors, threads, &mut costs, memo)
@@ -243,8 +272,35 @@ pub fn plan_with_memo(q: &PlanQuery, memo: Option<&mut EvalMemo>) -> PlanReport 
         SearchMode::Beam { width } => {
             beam_evaluate(&ctx, &scored, width, threads, &mut costs, memo)
         }
+        SearchMode::Evo { generations, population, seed } => {
+            let out = super::evo::evolve(
+                &ctx,
+                q,
+                &scored,
+                n_enumerated,
+                generations,
+                population,
+                seed,
+                threads,
+                &mut costs,
+                memo,
+            );
+            n_enumerated += out.generated;
+            for (r, n) in out.shape_rejects {
+                n_rejected_shape += n;
+                if let Some(t) = shape_reject_tallies.iter_mut().find(|(k, _)| *k == r) {
+                    t.1 += n;
+                }
+            }
+            n_pruned_memory += out.pruned_memory;
+            out.evals
+        }
     };
-    let n_pruned_theory = scored.len() - evals.len();
+    // Universal funnel identity: whatever the strategy left unsimulated
+    // counts as theory-pruned. For exhaustive/beam this reduces to the
+    // historical `scored.len() - evals.len()`; for evo it also absorbs
+    // the scored-but-never-visited part of the enumerated space.
+    let n_pruned_theory = n_enumerated - n_rejected_shape - n_pruned_memory - evals.len();
 
     let mut ranked = evals;
     ranked.sort_by(|a, b| {
@@ -389,7 +445,7 @@ fn beam_evaluate(
         let mut ranked: Vec<&Evaluation> = simulated.values().collect();
         ranked.sort_by(|a, b| beam_rank(a, b));
         let beam: Vec<Candidate> =
-            ranked.iter().take(width).map(|e| e.candidate).collect();
+            ranked.iter().take(width).map(|e| e.candidate.clone()).collect();
 
         // Frontier: unsimulated one-step neighbors of the beam.
         let mut frontier: BTreeSet<usize> = BTreeSet::new();
@@ -447,7 +503,9 @@ fn beam_evaluate(
 /// only the misses hit the thread pool. Fresh evaluations are recorded
 /// back under their (cost, context, coordinates) key. The returned
 /// list is sorted by candidate id, exactly like [`evaluate_parallel`].
-fn evaluate_batch(
+/// `pub(super)` so the evo module's per-generation fitness pass shares
+/// the exact same memoized, thread-deterministic pipeline.
+pub(super) fn evaluate_batch(
     ctx: &EvalContext,
     cands: &[Candidate],
     threads: usize,
@@ -462,7 +520,7 @@ fn evaluate_batch(
             let key = EvalKey::new(fp, ctx, c);
             match memo.lookup(&key, c) {
                 Some(e) => out.push(e),
-                None => to_sim.push(*c),
+                None => to_sim.push(c.clone()),
             }
         }
     } else {
@@ -472,7 +530,7 @@ fn evaluate_batch(
     if let Some(memo) = memo {
         for e in &fresh {
             let (_, fp) = costs.get_or_build(ctx, &e.candidate);
-            memo.record(EvalKey::new(fp, ctx, &e.candidate), *e);
+            memo.record(EvalKey::new(fp, ctx, &e.candidate), e.clone());
         }
     }
     out.extend(fresh);
@@ -496,7 +554,7 @@ fn simulate_into(
 ) {
     let mut idxs: Vec<usize> = idxs.to_vec();
     idxs.sort_unstable();
-    let cands: Vec<Candidate> = idxs.iter().map(|&i| scored[i].0).collect();
+    let cands: Vec<Candidate> = idxs.iter().map(|&i| scored[i].0.clone()).collect();
     for (i, e) in idxs.iter().zip(evaluate_batch(ctx, &cands, threads, costs, memo)) {
         simulated.insert(*i, e);
     }
@@ -669,6 +727,19 @@ mod tests {
         let bb = rb.best().expect("beam best");
         assert_eq!(eb.candidate.id, bb.candidate.id, "beam best != exhaustive best");
         assert_eq!(eb.throughput.to_bits(), bb.throughput.to_bits());
+    }
+
+    #[test]
+    fn evo_funnel_counts_stay_consistent() {
+        let mut q = small_query();
+        q.search = SearchMode::Evo { generations: 3, population: 8, seed: 11 };
+        let r = plan(&q);
+        assert_eq!(r.search_mode, "evo-3-8-11");
+        assert_eq!(
+            r.n_enumerated,
+            r.n_rejected_shape + r.n_pruned_memory + r.n_pruned_theory + r.ranked.len()
+        );
+        assert!(r.best().is_some(), "evo on 8 GPUs must land a feasible plan");
     }
 
     #[test]

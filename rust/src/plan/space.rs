@@ -6,10 +6,12 @@
 //! loops in a fixed order assign stable candidate ids); *pruning* is the
 //! job of [`super::constraints`] and [`super::search`].
 
-use crate::cluster::{partition_mllm, ClusterSpec, GroupOrder, Topology};
+use std::sync::Arc;
+
+use crate::cluster::{partition_mllm, ClusterSpec, DeviceView, GroupOrder, Topology};
 use crate::model::{MllmConfig, ModelConfig};
 use crate::schedule::{OffloadParams, Placement, ScheduleKind};
-use crate::sim::CostModel;
+use crate::sim::{AcMode, CostModel};
 
 /// The workload the planner optimizes for: a dense LLM (uniform layer
 /// split, paper §5.1) or an MLLM (ViT on the first virtual stage —
@@ -86,10 +88,73 @@ impl PlanModel {
             }
         }
     }
+
+    /// [`PlanModel::cost_model`] with an explicit, already-resolved
+    /// [`DeviceView`] — used for the per-class models of mapped
+    /// candidates (see [`super::evo`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn cost_model_view(
+        &self,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        view: DeviceView,
+        placement: Placement,
+        seq: usize,
+        vit_tokens: usize,
+        mb_size: usize,
+    ) -> CostModel {
+        match self {
+            PlanModel::Llm(m) => {
+                CostModel::analytic_for_view(m, topo, cluster, view, placement, seq, mb_size)
+            }
+            PlanModel::Mllm(m) => {
+                let plan = partition_mllm(m, topo.chunks());
+                CostModel::analytic_mllm_for_view(
+                    &m.lm, &m.vit, &plan, topo, cluster, view, placement, seq, vit_tokens,
+                    mb_size,
+                )
+            }
+        }
+    }
+}
+
+/// Explicit stage→group placement with per-class DP widths on mixed
+/// pools — the evo planner's placement gene (DESIGN.md §16). The `dp`
+/// replicas are partitioned into `rows.len()` classes: class `k` holds
+/// `dp_widths[k]` replicas, and each of those replicas pins its PP rank
+/// `d` onto node group `rows[k][d]`. `None` on a [`Candidate`] means the
+/// ordinary [`ClusterSpec::device_view`] resolution applies.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct StageMap {
+    /// Per class: node-group index of each PP rank (`rows[k].len() == pp`).
+    pub rows: Vec<Vec<usize>>,
+    /// Replicas per class (sums to the candidate's `dp`).
+    pub dp_widths: Vec<usize>,
+}
+
+impl StageMap {
+    pub fn n_classes(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Compact deterministic label fragment: "0.0.1.1x2|0.1.0.1x1"
+    /// (per class: the group of each PP rank, then `x` replica width).
+    pub fn label(&self) -> String {
+        self.rows
+            .iter()
+            .zip(&self.dp_widths)
+            .map(|(row, w)| {
+                let gs =
+                    row.iter().map(|g| g.to_string()).collect::<Vec<_>>().join(".");
+                format!("{gs}x{w}")
+            })
+            .collect::<Vec<_>>()
+            .join("|")
+    }
 }
 
 /// One point of the search space.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct Candidate {
     /// Stable id in enumeration order (ties in ranking break on it).
     pub id: usize,
@@ -105,6 +170,15 @@ pub struct Candidate {
     pub offload: OffloadParams,
     /// Which offload variant this is (0 for non-offload kinds).
     pub offload_variant: usize,
+    /// Activation-checkpointing mode (searched by the evo planner;
+    /// `AcMode::None` everywhere else keeps the historical behavior).
+    pub ac: AcMode,
+    /// Explicit stage→group placement + per-class DP widths on mixed
+    /// pools (`None` = ordinary `device_view` resolution).
+    pub map: Option<Arc<StageMap>>,
+    /// Virtual-stage override for the vpp-generic schedule families
+    /// (GPipe, interleaved 1F1B). 0 = the family default.
+    pub vpp_gene: usize,
 }
 
 impl Candidate {
@@ -114,6 +188,9 @@ impl Candidate {
     pub fn vpp(&self) -> usize {
         match self.kind {
             ScheduleKind::OneF1B | ScheduleKind::ZbH1 => 1,
+            ScheduleKind::GPipe | ScheduleKind::OneF1BInterleaved if self.vpp_gene > 0 => {
+                self.vpp_gene
+            }
             _ => 2,
         }
     }
@@ -147,6 +224,39 @@ impl Candidate {
         }
         if self.order != GroupOrder::Declared {
             s.push_str(&format!(" [{}]", self.order.name()));
+        }
+        if self.ac != AcMode::None {
+            s.push_str(&format!(" ac:{}", self.ac.name()));
+        }
+        if self.vpp_gene > 0
+            && matches!(self.kind, ScheduleKind::GPipe | ScheduleKind::OneF1BInterleaved)
+        {
+            s.push_str(&format!(" v{}", self.vpp_gene));
+        }
+        if let Some(map) = &self.map {
+            s.push_str(&format!(" map[{}]", map.label()));
+        }
+        s
+    }
+
+    /// Canonical genome key: every searched gene, `id` excluded. The evo
+    /// planner's seen-set and deterministic tie-breaks are keyed on it.
+    pub fn genome_key(&self) -> String {
+        let mut s = format!(
+            "t{}p{}d{}k{}m{}o{}f{}a{}v{}",
+            self.tp,
+            self.pp,
+            self.dp,
+            self.kind.name(),
+            self.n_mb,
+            self.order.name(),
+            self.offload_variant,
+            self.ac as u8,
+            self.vpp_gene,
+        );
+        if let Some(map) = &self.map {
+            s.push('M');
+            s.push_str(&map.label());
         }
         s
     }
@@ -200,6 +310,9 @@ pub fn enumerate(
                                 order,
                                 offload,
                                 offload_variant: v,
+                                ac: AcMode::None,
+                                map: None,
+                                vpp_gene: 0,
                             });
                             id += 1;
                         }
@@ -288,6 +401,9 @@ mod tests {
             order: GroupOrder::Declared,
             offload: OffloadParams::default(),
             offload_variant: 0,
+            ac: AcMode::None,
+            map: None,
+            vpp_gene: 0,
         };
         assert_eq!(c.vpp(), 1);
         assert_eq!(c.topo().chunks(), 4);

@@ -42,6 +42,22 @@ pub enum AcMode {
     All,
 }
 
+impl AcMode {
+    /// All modes in a fixed order (the evo planner cycles through it).
+    pub fn all() -> [AcMode; 4] {
+        [AcMode::None, AcMode::Mlp, AcMode::AttnMlp, AcMode::All]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AcMode::None => "none",
+            AcMode::Mlp => "mlp",
+            AcMode::AttnMlp => "attn+mlp",
+            AcMode::All => "all",
+        }
+    }
+}
+
 /// Precomputed per-chunk pipeline-hop P2P costs for one schedule's
 /// chunk→device placement. Hoisted out of the simulator's readiness
 /// paths: the polling replay used to recompute `p2p_secs(dev, dev±1)`
@@ -122,6 +138,23 @@ impl CostModel {
         mb_size: usize,
     ) -> CostModel {
         let view = resolve_view(cluster, topo, order);
+        Self::analytic_for_view(model, topo, cluster, view, placement, seq, mb_size)
+    }
+
+    /// [`CostModel::analytic_for`] with an explicit, already-resolved
+    /// [`DeviceView`] — the evo planner's mapped candidates pin each PP
+    /// rank of each replica class onto an arbitrary node group, so the
+    /// view does not come from [`ClusterSpec::device_view`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn analytic_for_view(
+        model: &ModelConfig,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        view: DeviceView,
+        placement: Placement,
+        seq: usize,
+        mb_size: usize,
+    ) -> CostModel {
         let plan = if cluster.is_uniform() {
             crate::cluster::partition_llm(model, topo.chunks())
         } else {
@@ -193,6 +226,27 @@ impl CostModel {
         mb_size: usize,
     ) -> CostModel {
         let view = resolve_view(cluster, topo, order);
+        Self::analytic_mllm_for_view(
+            lm, vit, plan, topo, cluster, view, placement, lm_seq, vit_tokens, mb_size,
+        )
+    }
+
+    /// [`CostModel::analytic_mllm_for`] with an explicit, already-resolved
+    /// [`DeviceView`] (mapped-candidate counterpart, see
+    /// [`CostModel::analytic_for_view`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn analytic_mllm_for_view(
+        lm: &ModelConfig,
+        vit: &VitConfig,
+        plan: &StagePlan,
+        topo: &Topology,
+        cluster: &ClusterSpec,
+        view: DeviceView,
+        placement: Placement,
+        lm_seq: usize,
+        vit_tokens: usize,
+        mb_size: usize,
+    ) -> CostModel {
         Self::from_plan(
             lm,
             Some(vit),

@@ -95,6 +95,9 @@ fn dead_rank_replans_onto_the_shrunk_pool_and_finishes() {
         order: GroupOrder::Declared,
         offload: OffloadParams::default(),
         offload_variant: 0,
+        ac: stp::sim::AcMode::None,
+        map: None,
+        vpp_gene: 0,
     };
     let e = stp::plan::evaluate(&ctx, &c);
     assert!(e.feasible, "tiny model at tp2-pp4 must fit");
@@ -322,6 +325,7 @@ fn mllm_vit_chunk_plan_trains_and_restores_bit_identically() {
         n_mb: 2,
         order: GroupOrder::Declared,
         offload: OffloadParams::default(),
+        ac: stp::sim::AcMode::None,
         stage_layers: vec![2, 2],
         stage_vit_layers: vec![2, 0],
         chunk_scales: vec![1.0, 1.0],

@@ -111,6 +111,9 @@ fn chosen_plan_beats_fixed_baselines() {
                 order: GroupOrder::Declared,
                 offload: stp::schedule::OffloadParams::default(),
                 offload_variant: 0,
+                ac: stp::sim::AcMode::None,
+                map: None,
+                vpp_gene: 0,
             };
             let e = evaluate(&ctx, &c);
             if e.feasible {
@@ -403,6 +406,145 @@ fn cluster_deltas_reuse_untouched_evaluations() {
     assert!(!delta.hit, "a changed pool is a new canonical key");
     assert!(delta.sims_reused > 0, "intra-group candidates must be reused");
     assert_eq!(delta.json, plan(&dq).to_json().to_string());
+}
+
+// ---------------------------------------------------------------------------
+// Evolutionary search (`SearchMode::Evo`): bit-deterministic at any
+// thread count, never worse than the enumerated field it seeds from,
+// and competitive with beam at fleet scale while simulating a small
+// fraction of the exhaustive space (DESIGN.md §16).
+// ---------------------------------------------------------------------------
+
+use stp::plan::SearchMode;
+
+#[test]
+fn evo_reports_are_byte_deterministic_across_runs_and_threads() {
+    let mut q = query_16();
+    q.n_mb_options = vec![16, 32];
+    q.search = SearchMode::Evo { generations: 4, population: 10, seed: 5 };
+    let a = plan(&q).to_json().to_string();
+    let b = plan(&q).to_json().to_string();
+    assert_eq!(a, b, "same seed, same bytes");
+    let mut q1 = q.clone();
+    q1.threads = 1;
+    let c = plan(&q1).to_json().to_string();
+    assert_eq!(a, c, "thread count must only change wall clock");
+
+    // A different seed is a different (valid) search.
+    let mut q2 = q.clone();
+    q2.search = SearchMode::Evo { generations: 4, population: 10, seed: 6 };
+    let r2 = plan(&q2);
+    assert!(r2.best().is_some());
+    assert_eq!(
+        r2.n_enumerated,
+        r2.n_rejected_shape + r2.n_pruned_memory + r2.n_pruned_theory + r2.n_simulated()
+    );
+}
+
+#[test]
+fn evo_finds_the_exhaustive_best_on_a_tiny_space() {
+    // A space small enough that the seed generation covers every scored
+    // candidate: evo's winner can then never rank below the exhaustive
+    // winner, and its extra genes (AC, vpp, maps) may only improve it.
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::uniform(HardwareProfile::a800()),
+        8,
+    );
+    q.seq = 2048;
+    q.n_mb_options = vec![8, 16];
+    q.kinds = vec![ScheduleKind::OneF1B, ScheduleKind::ZbV, ScheduleKind::Stp];
+    q.offload_variants = vec![stp::schedule::OffloadParams::default()];
+    q.threads = 2;
+    let ex = plan(&q);
+    let best_ex = ex.best().expect("exhaustive best at 8 GPUs");
+
+    // Seed the whole scored field (everything past shape/memory checks).
+    let scored = ex.n_enumerated - ex.n_rejected_shape - ex.n_pruned_memory;
+    let mut evo_q = q.clone();
+    evo_q.search = SearchMode::Evo { generations: 4, population: scored, seed: 9 };
+    let evo = plan(&evo_q);
+    let best_evo = evo.best().expect("evo best at 8 GPUs");
+    assert!(
+        best_evo.throughput + 1e-12 >= best_ex.throughput,
+        "evo best {:.4} ({}) below exhaustive best {:.4} ({})",
+        best_evo.throughput,
+        best_evo.candidate.label(),
+        best_ex.throughput,
+        best_ex.candidate.label()
+    );
+    assert_eq!(
+        evo.n_enumerated,
+        evo.n_rejected_shape + evo.n_pruned_memory + evo.n_pruned_theory + evo.n_simulated()
+    );
+}
+
+#[test]
+fn evo_matches_beam_at_fleet_scale_with_a_fraction_of_the_sims() {
+    // The acceptance criterion: on the 128-GPU mixed preset the evo
+    // winner's step time is no worse than the beam winner's, while evo
+    // simulates at most a quarter of the exhaustive candidate count.
+    let mut q = PlanQuery::new(
+        PlanModel::Llm(ModelConfig::qwen2_12b()),
+        ClusterSpec::mixed_a800_h20_large(),
+        128,
+    );
+    q.seq = 2048;
+    q.n_mb_options = vec![16, 32];
+    q.threads = 2;
+    let mut bq = q.clone();
+    bq.search = SearchMode::Beam { width: 8 };
+    let mut eq = q.clone();
+    eq.search = SearchMode::Evo { generations: 8, population: 16, seed: 42 };
+
+    let beam = plan(&bq);
+    let evo = plan(&eq);
+    let best_beam = beam.best().expect("beam best at 128 GPUs");
+    let best_evo = evo.best().expect("evo best at 128 GPUs");
+    assert!(
+        best_evo.throughput + 1e-12 >= best_beam.throughput,
+        "evo best {:.4} ({}) below beam best {:.4} ({})",
+        best_evo.throughput,
+        best_evo.candidate.label(),
+        best_beam.throughput,
+        best_beam.candidate.label()
+    );
+    // `beam.n_enumerated` is the pure enumerated-space size (evo's own
+    // counter additionally includes the genomes it generated).
+    assert!(
+        evo.n_simulated() * 4 <= beam.n_enumerated,
+        "evo simulated {} of an exhaustive space of {}",
+        evo.n_simulated(),
+        beam.n_enumerated
+    );
+    assert_eq!(
+        evo.n_enumerated,
+        evo.n_rejected_shape + evo.n_pruned_memory + evo.n_pruned_theory + evo.n_simulated()
+    );
+}
+
+#[test]
+fn plan_cache_keys_distinguish_evo_budgets() {
+    use stp::plan::PlanCache;
+
+    let mut q = query_16();
+    q.n_mb_options = vec![16];
+    q.search = SearchMode::Evo { generations: 3, population: 8, seed: 7 };
+    let cold = plan(&q).to_json().to_string();
+    let mut cache = PlanCache::new();
+    let first = cache.query(&q);
+    assert!(!first.hit);
+    assert_eq!(first.json, cold);
+    let second = cache.query(&q);
+    assert!(second.hit, "identical evo budget must answer from the report store");
+    assert_eq!(second.json, cold);
+
+    // A different evo seed is a different canonical key — a fresh search.
+    let mut dq = q.clone();
+    dq.search = SearchMode::Evo { generations: 3, population: 8, seed: 8 };
+    let delta = cache.query(&dq);
+    assert!(!delta.hit, "evo params must be part of the canonical key");
+    assert_eq!(cache.len(), 2);
 }
 
 #[test]

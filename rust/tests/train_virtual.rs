@@ -43,6 +43,9 @@ fn braided_artifact() -> PlanArtifact {
         order: GroupOrder::Declared,
         offload: OffloadParams::default(),
         offload_variant: 0,
+        ac: stp::sim::AcMode::None,
+        map: None,
+        vpp_gene: 0,
     };
     let e = stp::plan::evaluate(&ctx, &candidate);
     assert!(e.feasible, "tiny model at tp2-pp2 must fit");
